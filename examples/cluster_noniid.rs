@@ -1,0 +1,78 @@
+//! Cluster-level data heterogeneity (the Fig. 5 scenario + Remark 3).
+//!
+//! Compares CE-FedAvg under cluster-IID vs cluster-non-IID(C) splits at a
+//! fixed device-level skew (2 shards/device), demonstrating the paper's
+//! grouping insight: if you can choose which devices attach to which edge
+//! server, group them so the *cluster-level* distribution is IID — the
+//! global divergence ε̂² is fixed by the devices, but pushing it into the
+//! intra-cluster term (ε_i²) costs far less than the inter-cluster term
+//! ε² (Theorem 1: the ε² coefficient carries the extra q²Ω₂ factor).
+//!
+//! ```sh
+//! cargo run --release --example cluster_noniid -- --rounds 20
+//! ```
+
+use cfel::config::{DataScheme, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy, History};
+use cfel::util::cli::Command;
+
+fn run(scheme: DataScheme, rounds: usize, seed: u64) -> anyhow::Result<History> {
+    let mut cfg = ExperimentConfig::paper_system(cfel::config::AlgorithmKind::CeFedAvg);
+    cfg.rounds = rounds;
+    cfg.seed = seed;
+    cfg.data = scheme;
+    let mut coord = Coordinator::from_config(&cfg)?;
+    Ok(coord.run()?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("cluster_noniid", "Fig. 5: cluster-level distribution sweep")
+        .flag_default("rounds", "20", "global rounds")
+        .flag_default("seed", "1", "seed");
+    let args = match cmd.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let rounds = args.get_usize("rounds", 20);
+    let seed = args.get_usize("seed", 1) as u64;
+
+    let mut results: Vec<(String, History)> = Vec::new();
+    results.push(("cluster-iid".into(), run(DataScheme::ClusterIid, rounds, seed)?));
+    for c in [8usize, 5, 2] {
+        results.push((
+            format!("cluster-noniid C={c}"),
+            run(DataScheme::ClusterNonIid { c_labels: c }, rounds, seed)?,
+        ));
+    }
+
+    let target = results
+        .iter()
+        .map(|(_, h)| best_accuracy(h))
+        .fold(0.0f64, f64::max)
+        * 0.9;
+    println!(
+        "{:<22} {:>10} {:>18} {:>14}",
+        "cluster distribution", "best_acc", "rounds_to_target", "consensus"
+    );
+    for (name, h) in &results {
+        let hit = time_to_accuracy(h, target)
+            .map(|(r, _)| r.to_string())
+            .unwrap_or("-".into());
+        println!(
+            "{:<22} {:>10.4} {:>18} {:>14.3e}",
+            name,
+            best_accuracy(h),
+            hit,
+            h.last().unwrap().consensus
+        );
+    }
+    println!(
+        "\ncluster-IID converges fastest; shrinking C (more skewed clusters, \
+         larger inter-cluster divergence) slows convergence — Remark 3 / Fig. 5."
+    );
+    Ok(())
+}

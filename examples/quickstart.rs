@@ -1,0 +1,47 @@
+//! Quickstart: a complete CE-FedAvg run on the pure-Rust mock backend.
+//!
+//! Runs in a couple of seconds with no artifacts needed:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! What it shows: 16 devices in 4 edge clusters on a ring backhaul, τ=2
+//! local epochs per edge round, q=2 edge rounds per global round, π=10
+//! gossip steps — accuracy climbing per round plus the Eq. 8 simulated
+//! wall-clock, and a comparison against the cloud-FedAvg baseline.
+
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.rounds = 20;
+
+    println!("== CE-FedAvg (cooperative edge) ==");
+    let mut coord = Coordinator::from_config(&cfg)?;
+    coord.verbose = true;
+    let ce = coord.run()?;
+
+    println!("\n== FedAvg (cloud baseline) ==");
+    let mut cloud_cfg = cfg.clone();
+    cloud_cfg.algorithm = AlgorithmKind::FedAvg;
+    let mut coord = Coordinator::from_config(&cloud_cfg)?;
+    coord.verbose = true;
+    let cloud = coord.run()?;
+
+    let target = best_accuracy(&ce).min(best_accuracy(&cloud)) * 0.95;
+    println!("\n== time-to-{target:.3}-accuracy (Eq. 8 simulated seconds) ==");
+    for (name, h) in [("ce-fedavg", &ce), ("fedavg", &cloud)] {
+        match time_to_accuracy(h, target) {
+            Some((round, t)) => println!("  {name:<10} round {round:>3}   {t:>8.1} s"),
+            None => println!("  {name:<10} never reached"),
+        }
+    }
+    println!(
+        "\nCE-FedAvg avoids the 1 Mbps device→cloud bottleneck by gossiping \
+         over the 50 Mbps edge backhaul (paper Fig. 2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 step functions to HLO text + manifest.
+
+Run once via ``make artifacts`` (no-op if inputs unchanged); Python never
+appears on the Rust request path. For each model in model.MODELS this writes
+
+    artifacts/<model>.train.hlo.txt
+    artifacts/<model>.eval.hlo.txt
+    artifacts/aggregate.mix.hlo.txt       (shared Pallas gossip kernel)
+    artifacts/aggregate.wavg.hlo.txt      (shared Pallas weighted average)
+    artifacts/manifest.json               (schema consumed by rust/src/runtime)
+
+Interchange format is HLO *text*, not ``lowered.compile().serialize()`` and
+not a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import aggregate as agg
+
+DEFAULT_BATCH = 50        # paper §6.1
+AGG_ROWS = 16             # max stack rows for the shared aggregate artifacts
+AGG_DIM = 1 << 14         # flat-model tile the aggregate artifacts operate on
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the only proto-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(spec: M.ParamSpec) -> dict:
+    return {
+        "name": spec.name,
+        "shape": list(spec.shape),
+        "size": spec.size,
+        "init": spec.init,
+        "fan_in": spec.fan_in,
+        "fan_out": spec.fan_out,
+    }
+
+
+def _write(path: str, text: str) -> str:
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build_model_artifacts(model: M.ModelDef, batch: int, out_dir: str) -> dict:
+    train = jax.jit(M.make_train_step(model))
+    ev = jax.jit(M.make_eval_step(model))
+
+    train_txt = to_hlo_text(train.lower(*M.example_args_train(model, batch)))
+    eval_txt = to_hlo_text(ev.lower(*M.example_args_eval(model, batch)))
+
+    train_file = f"{model.name}.train.hlo.txt"
+    eval_file = f"{model.name}.eval.hlo.txt"
+    h1 = _write(os.path.join(out_dir, train_file), train_txt)
+    h2 = _write(os.path.join(out_dir, eval_file), eval_txt)
+
+    return {
+        "name": model.name,
+        "train_hlo": train_file,
+        "eval_hlo": eval_file,
+        "train_sha256": h1,
+        "eval_sha256": h2,
+        "batch_size": batch,
+        "input_dim": list(model.input_dim),
+        "flat_dim": model.flat_dim,
+        "num_classes": model.num_classes,
+        "param_count": model.param_count,
+        "momentum": M.MOMENTUM,
+        "flops_per_sample": model.flops_per_sample,
+        "params": [_spec_json(s) for s in model.specs],
+    }
+
+
+def build_aggregate_artifacts(out_dir: str) -> dict:
+    """Shared Pallas aggregation executables over a fixed [R, D] tile."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    mix_l = jax.jit(agg.mix).lower(sd((AGG_ROWS, AGG_ROWS), f32),
+                                   sd((AGG_ROWS, AGG_DIM), f32))
+    wavg_l = jax.jit(agg.weighted_average).lower(sd((AGG_ROWS,), f32),
+                                                 sd((AGG_ROWS, AGG_DIM), f32))
+    h1 = _write(os.path.join(out_dir, "aggregate.mix.hlo.txt"), to_hlo_text(mix_l))
+    h2 = _write(os.path.join(out_dir, "aggregate.wavg.hlo.txt"), to_hlo_text(wavg_l))
+    return {
+        "mix_hlo": "aggregate.mix.hlo.txt",
+        "wavg_hlo": "aggregate.wavg.hlo.txt",
+        "mix_sha256": h1,
+        "wavg_sha256": h2,
+        "rows": AGG_ROWS,
+        "dim": AGG_DIM,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp_synth,femnist_cnn,cifar_cnn",
+                    help="comma-separated subset of model.MODELS")
+    ap.add_argument("--batch-size", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    for n in names:
+        if n not in M.MODELS:
+            raise SystemExit(f"unknown model {n!r}; have {sorted(M.MODELS)}")
+
+    manifest = {
+        "version": 1,
+        "batch_size": args.batch_size,
+        "models": {},
+        "aggregate": build_aggregate_artifacts(args.out_dir),
+    }
+    for n in names:
+        print(f"[aot] lowering {n} ...", flush=True)
+        manifest["models"][n] = build_model_artifacts(
+            M.MODELS[n], args.batch_size, args.out_dir
+        )
+        print(f"[aot] {n}: {manifest['models'][n]['param_count']} params", flush=True)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

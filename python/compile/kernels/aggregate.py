@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: model aggregation (weighted average / gossip mix).
+
+CE-FedAvg's two aggregation primitives are both weighted sums over a stack of
+flattened model vectors:
+
+  * intra-cluster aggregation (paper Eq. 6):  y = sum_k (n_k / n_i) x_k
+  * one gossip application   (paper Eq. 7):  y_i = sum_j H^pi[j, i] y_j
+
+Both reduce to `out[r, :] = sum_s W[s, r] * X[s, :]`, i.e. a skinny
+(R x R) x (R x D) matmul with tiny R (devices-per-cluster or cluster count)
+and huge D (parameter count). The kernel therefore tiles D and keeps the full
+mixing matrix resident — the natural TPU schedule (stream the model axis
+through VMEM, broadcast the mixing weights).
+
+This artifact is the optional PJRT fast path for aggregation; the default
+Rust-native implementation in `aggregation/` is bit-compared against it in
+tests (and against ref.py here).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 4096
+_INTERPRET = True
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    # w: (R, R) resident; x: (R, bd) tile; o: (R, bd) tile.
+    o_ref[...] = jnp.dot(w_ref[...].T, x_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+def mix(weights, x, *, bd: int = BLOCK_D):
+    """out[r, :] = sum_s weights[s, r] * x[s, :]  (column-stochastic mixing).
+
+    weights: f32[R, R] (e.g. H^pi), x: f32[R, D] stacked flat models.
+    Matches the paper's Eq. 7 orientation: H[j, i] is the weight server i
+    assigns to server j's model.
+    """
+    r, d = x.shape
+    if weights.shape != (r, r):
+        raise ValueError(f"mixing matrix {weights.shape} does not match x {x.shape}")
+    bd = min(bd, max(d, 1))
+    dp = (d + bd - 1) // bd * bd
+    xp = jnp.pad(x, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, bd), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((r, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, dp), x.dtype),
+        interpret=_INTERPRET,
+    )(weights, xp)
+    return out[:, :d]
+
+
+def _wavg_kernel(w_ref, x_ref, o_ref):
+    # w: (1, R); x: (R, bd); o: (1, bd)
+    o_ref[...] = jnp.dot(w_ref[...], x_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+def weighted_average(weights, x, *, bd: int = BLOCK_D):
+    """out[:] = sum_r weights[r] * x[r, :] — intra-cluster aggregation.
+
+    weights: f32[R] (normalised sample fractions), x: f32[R, D].
+    """
+    r, d = x.shape
+    if weights.shape != (r,):
+        raise ValueError(f"weights {weights.shape} do not match x {x.shape}")
+    bd = min(bd, max(d, 1))
+    dp = (d + bd - 1) // bd * bd
+    xp = jnp.pad(x, ((0, 0), (0, dp - d)))
+    wp = weights.reshape(1, r)
+    out = pl.pallas_call(
+        _wavg_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, bd), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), x.dtype),
+        interpret=_INTERPRET,
+    )(wp, xp)
+    return out[0, :d]

@@ -1,0 +1,192 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation.
+
+This is the compute hot spot of every model in the reproduction: dense layers
+call it directly and convolutions call it through im2col (see model.py), so
+the full FLOP volume of forward *and* backward passes flows through this
+kernel (the backward matmuls are expressed with the same kernel via a
+custom VJP).
+
+TPU-shaped structure (see DESIGN.md §Hardware-Adaptation):
+  * 3-D grid (M/bm, N/bn, K/bk) — MXU-tile blocking, K innermost so the
+    revisited output block acts as the accumulator (VMEM-resident between
+    sequential K steps).
+  * BlockSpec index maps express the HBM<->VMEM schedule that a CUDA port
+    would hand-write with threadblock staging.
+  * bias-add + activation are fused into the final K step: one HBM round
+    trip less per dense layer.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; interpret mode lowers the same kernel to
+plain HLO so one artifact runs on any backend. Correctness is pinned against
+the pure-jnp oracle in ref.py by python/tests/test_kernels.py.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-ish tile sizes; clamped per problem by _pick_block.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+_INTERPRET = True  # CPU PJRT target; see module docstring.
+
+
+# VMEM budget per grid step (floats). Real TPU cores have ~16 MiB VMEM;
+# 2 MiB of f32 working set (x, w, out tiles) leaves headroom for
+# double-buffering and keeps the CPU-interpret loop count low for the
+# skinny im2col matmuls (perf pass §Perf-1: growing bm for small K·N cut
+# the femnist train step ~5x on the CPU PJRT client).
+VMEM_BUDGET_F32 = 512 * 1024
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two tile <= preferred that is not wasteful for dim.
+
+    Keeps tiles MXU-aligned when the dimension allows it and shrinks for
+    small problems so the zero-padding overhead stays bounded.
+    """
+    b = preferred
+    while b > 8 and b // 2 >= dim:
+        b //= 2
+    return b
+
+
+def _grow_bm(m: int, bm: int, bk: int, bn: int) -> int:
+    """Grow the M tile for skinny problems (small K and N).
+
+    Convolutions lowered through im2col produce (huge M) x (tiny K, N)
+    matmuls; with a fixed bm=128 the grid walks hundreds of steps whose
+    per-step dot is far too small to amortise the loop/slice overhead
+    (and, on TPU, far too small to fill the MXU pipeline). Grow bm while
+    the (bm, bk) + (bk, bn) + (bm, bn) working set stays inside the VMEM
+    budget, capped at the padded problem size.
+    """
+    while bm < m and 2 * bm * (bk + bn) + bk * bn <= VMEM_BUDGET_F32:
+        bm *= 2
+    return bm
+
+
+def _grow_bk(k: int, bm: int, bk: int, bn: int) -> int:
+    """Grow the K (contraction) tile when M and N tiles are small.
+
+    The weight-gradient matmul of a conv layer is (tiny M = C·kh·kw) x
+    (huge K = B·H·W) x (tiny N = OC): the sequential K grid dominates.
+    The K slab is free to grow — the accumulator tile (bm, bn) is
+    unaffected — so take whatever VMEM budget is left after bm.
+    """
+    while bk < k and 2 * bk * (bm + bn) + bm * bn <= VMEM_BUDGET_F32:
+        bk *= 2
+    return bk
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (bm, bn) output tile; grid axis 2 walks the K blocks sequentially."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def matmul(x, w, b=None, act: str = "none", *, bm: int = BLOCK_M,
+           bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """`act(x @ w + b)` via the Pallas tiled kernel.
+
+    x: f32[M, K], w: f32[K, N], b: f32[N] or None, act in {"none", "relu"}.
+    Inputs are zero-padded up to tile multiples and the result sliced back,
+    so arbitrary shapes are accepted.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if act not in ("none", "relu"):
+        raise ValueError(f"unknown activation {act!r}")
+    if b is None:
+        b = jnp.zeros((n,), x.dtype)
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    bm = _grow_bm(m, bm, bk, bn)
+    bk = _grow_bk(k, bm, bk, bn)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        partial(_matmul_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (x, w, bias, out tiles).
+
+    Used by the perf notes in DESIGN.md / EXPERIMENTS.md §Perf: the tile
+    choice must keep this well under the ~16 MiB VMEM of a TPU core.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bn + bm * bn)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrappers. pallas_call has no automatic transpose rule, so
+# dense() carries an explicit VJP whose backward matmuls reuse the same
+# Pallas kernel — the L1 kernel stays on the hot path in both directions.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, act: str = "none"):
+    """Differentiable fused dense layer: act(x @ w + b)."""
+    return matmul(x, w, b, act)
+
+
+def _dense_fwd(x, w, b, act):
+    y = matmul(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _dense_bwd(act, res, g):
+    x, w, y = res
+    if act == "relu":
+        g = g * (y > 0).astype(g.dtype)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

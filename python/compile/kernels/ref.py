@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has an exact counterpart here, written
+with plain jax.numpy so it is trivially correct. python/tests/test_kernels.py
+asserts allclose between kernel and oracle over hypothesis-driven
+shape/dtype sweeps, and checks the custom-VJP gradients against jax.grad of
+the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w, b=None, act: str = "none"):
+    """Reference for kernels.matmul.matmul: act(x @ w + b)."""
+    y = x @ w
+    if b is not None:
+        y = y + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def dense(x, w, b, act: str = "none"):
+    """Reference for kernels.matmul.dense (differentiable via plain jax)."""
+    return matmul(x, w, b, act)
+
+
+def mix(weights, x):
+    """Reference for kernels.aggregate.mix: out = weights.T @ x."""
+    return weights.T @ x
+
+
+def weighted_average(weights, x):
+    """Reference for kernels.aggregate.weighted_average."""
+    return weights @ x

@@ -1,0 +1,287 @@
+"""L2: the paper's on-device compute graphs in JAX, built on the L1 kernels.
+
+Three model families (paper §6.1, scaled for the CPU-PJRT testbed — see
+DESIGN.md §1):
+
+  * ``mlp_synth``   — 2-hidden-layer MLP for the fast synthetic task used by
+                      unit tests and micro-benches.
+  * ``femnist_cnn`` — the paper's FEMNIST CNN: 2x [conv3x3 + ReLU + maxpool2]
+                      -> dense(128) -> softmax(62). Scaled channels.
+  * ``cifar_cnn``   — VGG-style stack for 32x32x3, 10 classes. Scaled.
+
+All dense layers call kernels.matmul.dense (the Pallas kernel); convolutions
+are lowered to im2col + the same Pallas matmul, so the entire FLOP volume of
+the train step flows through L1 (fwd and bwd — the kernel carries a custom
+VJP).
+
+The exported step functions (AOT-lowered by aot.py, executed from Rust):
+
+  train_step: (p_0..p_{K-1}, m_0..m_{K-1}, x f32[B,D], y i32[B], lr f32[])
+              -> (p'_0.., m'_0.., mean_loss f32[])
+      one mini-batch SGD-with-momentum update (momentum 0.9, paper §6.1).
+  eval_step:  (p_0..p_{K-1}, x f32[B,D], y i32[B])
+              -> (correct f32[B], loss f32[B])
+      per-example results so the Rust side can mask padded tail batches.
+
+Parameters travel as a *positionally ordered* flat list; the order is the
+single source of truth recorded in the manifest (aot.py) and consumed by
+rust/src/model/.
+"""
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import matmul as pk
+
+MOMENTUM = 0.9  # paper §6.1: mini-batch SGD with momentum 0.9
+
+
+# --------------------------------------------------------------------------
+# Parameter schema
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape + init recipe for one parameter tensor (manifest entry)."""
+
+    name: str
+    shape: tuple
+    init: str          # "glorot_uniform" | "zeros"
+    fan_in: int = 0
+    fan_out: int = 0
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def _glorot(key, spec: ParamSpec):
+    limit = (6.0 / (spec.fan_in + spec.fan_out)) ** 0.5
+    return jax.random.uniform(key, spec.shape, jnp.float32, -limit, limit)
+
+
+def init_params(specs, seed: int = 0):
+    """Reference initialiser (tests only — Rust does its own init)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "glorot_uniform":
+            out.append(_glorot(sub, spec))
+        else:
+            raise ValueError(f"unknown init {spec.init!r}")
+    return out
+
+
+def _dense_specs(name, fi, fo):
+    return [
+        ParamSpec(f"{name}/w", (fi, fo), "glorot_uniform", fi, fo),
+        ParamSpec(f"{name}/b", (fo,), "zeros"),
+    ]
+
+
+def _conv_specs(name, kh, kw, ci, co):
+    fi, fo = kh * kw * ci, co
+    return [
+        ParamSpec(f"{name}/w", (kh, kw, ci, co), "glorot_uniform", fi, fo),
+        ParamSpec(f"{name}/b", (co,), "zeros"),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Layer helpers (all matmuls through the Pallas kernel)
+# --------------------------------------------------------------------------
+
+
+def conv2d(x, w, b):
+    """SAME conv via im2col + Pallas matmul. x: [B,H,W,C], w: [kh,kw,C,OC]."""
+    kh, kw, c, oc = w.shape
+    bsz, h, ww_, _ = x.shape
+    # Patches come out with features ordered (C, kh, kw) — channel-major.
+    patches = lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )  # [B, H, W, C*kh*kw]
+    pm = patches.reshape(bsz * h * ww_, c * kh * kw)
+    # Match the channel-major patch layout: w[kh,kw,C,OC] -> [C,kh,kw,OC].
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, oc)
+    y = pk.dense(pm, wm, b, "relu")
+    return y.reshape(bsz, h, ww_, oc)
+
+
+def maxpool2(x):
+    """2x2 max pooling, stride 2. x: [B,H,W,C]."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _log_softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - lax.stop_gradient(m)
+    return shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+
+
+def cross_entropy(logits, y, num_classes):
+    """Per-example softmax cross-entropy. y: i32[B]."""
+    logp = _log_softmax(logits)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=logits.dtype)
+    return -jnp.sum(onehot * logp, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Model definitions
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    """A functional model: parameter schema + apply(params, x_flat)->logits."""
+
+    name: str
+    input_dim: tuple            # e.g. (28, 28, 1); x arrives flat [B, prod]
+    num_classes: int
+    specs: tuple                # tuple[ParamSpec, ...] in positional order
+    apply: Callable             # (params: list, x: f32[B, D]) -> f32[B, C]
+    flops_per_sample: int       # analytic forward FLOPs (Eq. 8 workload C)
+
+    @property
+    def param_count(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    @property
+    def flat_dim(self) -> int:
+        n = 1
+        for s in self.input_dim:
+            n *= s
+        return n
+
+
+def _mlp_def(name="mlp_synth", input_dim=(64,), num_classes=10,
+             hidden=(128, 64)) -> ModelDef:
+    dims = [input_dim[0], *hidden, num_classes]
+    specs = []
+    for i in range(len(dims) - 1):
+        specs += _dense_specs(f"fc{i + 1}", dims[i], dims[i + 1])
+
+    def apply(params, x):
+        h = x
+        for i in range(len(dims) - 1):
+            w, b = params[2 * i], params[2 * i + 1]
+            act = "relu" if i < len(dims) - 2 else "none"
+            h = pk.dense(h, w, b, act)
+        return h
+
+    flops = sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return ModelDef(name, input_dim, num_classes, tuple(specs), apply, flops)
+
+
+def _cnn_def(name, input_dim, num_classes, conv_channels, fc_width) -> ModelDef:
+    """[conv3x3(c)+relu+pool2]* -> dense(fc)+relu -> dense(classes)."""
+    h, w, c = input_dim
+    specs = []
+    ci = c
+    hh, ww = h, w
+    flops = 0
+    for i, co in enumerate(conv_channels):
+        specs += _conv_specs(f"conv{i + 1}", 3, 3, ci, co)
+        flops += 2 * 3 * 3 * ci * co * hh * ww
+        hh, ww = hh // 2, ww // 2   # maxpool2 after every conv
+        ci = co
+    flat = hh * ww * ci
+    specs += _dense_specs("fc1", flat, fc_width)
+    specs += _dense_specs("fc2", fc_width, num_classes)
+    flops += 2 * flat * fc_width + 2 * fc_width * num_classes
+
+    n_conv = len(conv_channels)
+
+    def apply(params, x):
+        bsz = x.shape[0]
+        t = x.reshape(bsz, h, w, c)
+        for i in range(n_conv):
+            wgt, bias = params[2 * i], params[2 * i + 1]
+            t = conv2d(t, wgt, bias)
+            t = maxpool2(t)
+        t = t.reshape(bsz, -1)
+        w1, b1 = params[2 * n_conv], params[2 * n_conv + 1]
+        t = pk.dense(t, w1, b1, "relu")
+        w2, b2 = params[2 * n_conv + 2], params[2 * n_conv + 3]
+        return pk.dense(t, w2, b2, "none")
+
+    return ModelDef(name, input_dim, num_classes, tuple(specs), apply, flops)
+
+
+MODELS = {
+    "mlp_synth": _mlp_def(),
+    # Paper: CNN with two 3x3 conv layers (32 ch) + fc 1024 -> 62 classes
+    # (6.6M params). Scaled: 8/16 channels, fc 128 (~0.12M params).
+    "femnist_cnn": _cnn_def("femnist_cnn", (28, 28, 1), 62, (8, 16), 128),
+    # Paper: modified VGG-11 (9.75M params). Scaled VGG-style: 3 conv blocks.
+    "cifar_cnn": _cnn_def("cifar_cnn", (32, 32, 3), 10, (16, 32, 64), 128),
+}
+
+
+# --------------------------------------------------------------------------
+# Exported step functions
+# --------------------------------------------------------------------------
+
+
+def make_train_step(model: ModelDef):
+    """Build the AOT-exported train step (flat positional signature)."""
+    k = len(model.specs)
+
+    def train_step(*args):
+        params = list(args[:k])
+        mom = list(args[k:2 * k])
+        x, y, lr = args[2 * k], args[2 * k + 1], args[2 * k + 2]
+
+        def loss_fn(ps):
+            logits = model.apply(ps, x)
+            return jnp.mean(cross_entropy(logits, y, model.num_classes))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_mom = [MOMENTUM * m + g for m, g in zip(mom, grads)]
+        new_params = [p - lr * nm for p, nm in zip(params, new_mom)]
+        return tuple(new_params) + tuple(new_mom) + (loss,)
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef):
+    """Build the AOT-exported eval step (per-example outputs for masking)."""
+    k = len(model.specs)
+
+    def eval_step(*args):
+        params = list(args[:k])
+        x, y = args[k], args[k + 1]
+        logits = model.apply(params, x)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        loss = cross_entropy(logits, y, model.num_classes)
+        return correct, loss
+
+    return eval_step
+
+
+def example_args_train(model: ModelDef, batch: int):
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    params = [sd(s.shape, f32) for s in model.specs]
+    return (*params, *params, sd((batch, model.flat_dim), f32),
+            sd((batch,), i32), sd((), f32))
+
+
+def example_args_eval(model: ModelDef, batch: int):
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    params = [sd(s.shape, f32) for s in model.specs]
+    return (*params, sd((batch, model.flat_dim), f32), sd((batch,), i32))

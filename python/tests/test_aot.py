@@ -1,0 +1,112 @@
+"""AOT path: HLO text artifacts + manifest contract consumed by rust/.
+
+Lowers the cheap model (mlp_synth) into a tmpdir and checks the invariants
+the Rust runtime depends on: entry-parameter count/order, tuple arity,
+manifest <-> HLO consistency, and determinism of the lowering.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    model = M.MODELS["mlp_synth"]
+    entry = aot.build_model_artifacts(model, batch=8, out_dir=out)
+    agg = aot.build_aggregate_artifacts(out)
+    return out, entry, agg, model
+
+
+class TestManifestEntry:
+    def test_files_exist_and_nonempty(self, artifacts):
+        out, entry, agg, _ = artifacts
+        for f in (entry["train_hlo"], entry["eval_hlo"],
+                  agg["mix_hlo"], agg["wavg_hlo"]):
+            p = os.path.join(out, f)
+            assert os.path.getsize(p) > 100
+
+    def test_param_metadata(self, artifacts):
+        _, entry, _, model = artifacts
+        assert entry["param_count"] == model.param_count
+        assert entry["param_count"] == sum(p["size"] for p in entry["params"])
+        assert [tuple(p["shape"]) for p in entry["params"]] == \
+            [s.shape for s in model.specs]
+        assert entry["momentum"] == pytest.approx(0.9)
+        assert entry["flat_dim"] == model.flat_dim
+
+    def test_init_specs_complete(self, artifacts):
+        _, entry, _, _ = artifacts
+        for p in entry["params"]:
+            assert p["init"] in ("glorot_uniform", "zeros")
+            if p["init"] == "glorot_uniform":
+                assert p["fan_in"] > 0 and p["fan_out"] > 0
+
+
+class TestHloText:
+    def test_entry_signature_train(self, artifacts):
+        out, entry, _, model = artifacts
+        txt = open(os.path.join(out, entry["train_hlo"])).read()
+        assert "ENTRY" in txt
+        k = len(model.specs)
+        # 2K params+momentum, x, y, lr
+        n_inputs = 2 * k + 3
+        for i in range(n_inputs):
+            assert f"parameter({i})" in txt, f"missing parameter({i})"
+        assert f"parameter({n_inputs})" not in txt
+
+    def test_entry_signature_eval(self, artifacts):
+        out, entry, _, model = artifacts
+        txt = open(os.path.join(out, entry["eval_hlo"])).read()
+        k = len(model.specs)
+        n_inputs = k + 2
+        for i in range(n_inputs):
+            assert f"parameter({i})" in txt
+        assert f"parameter({n_inputs})" not in txt
+
+    def test_train_root_is_tuple(self, artifacts):
+        out, entry, _, model = artifacts
+        txt = open(os.path.join(out, entry["train_hlo"])).read()
+        # return_tuple=True => root tuple with 2K+1 elements
+        k = len(model.specs)
+        assert "tuple(" in txt.replace(" ", "") or "ROOT" in txt
+        assert txt.count("f32[") > 2 * k  # params appear with f32 shapes
+
+    def test_lowering_is_deterministic(self, artifacts, tmp_path):
+        _, entry, _, model = artifacts
+        out2 = str(tmp_path)
+        entry2 = aot.build_model_artifacts(model, batch=8, out_dir=out2)
+        assert entry2["train_sha256"] == entry["train_sha256"]
+        assert entry2["eval_sha256"] == entry["eval_sha256"]
+
+
+class TestFullManifest:
+    def test_repo_manifest_if_present(self):
+        # When `make artifacts` has run, validate the real manifest too.
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        man = json.load(open(path))
+        assert man["version"] == 1
+        assert set(man["models"]) >= {"mlp_synth"}
+        base = os.path.dirname(path)
+        for name, entry in man["models"].items():
+            m = M.MODELS[name]
+            assert entry["param_count"] == m.param_count, name
+            assert os.path.exists(os.path.join(base, entry["train_hlo"]))
+            assert os.path.exists(os.path.join(base, entry["eval_hlo"]))
+        assert man["aggregate"]["rows"] >= 8
+
+    def test_flops_positive_and_ordered(self):
+        # CIFAR VGG-style must be the heaviest, MLP the lightest — the
+        # netsim runtime model (Eq. 8) depends on these orderings.
+        f = {n: m.flops_per_sample for n, m in M.MODELS.items()}
+        assert f["mlp_synth"] < f["femnist_cnn"] < f["cifar_cnn"]

@@ -1,0 +1,158 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis drives the shape/seed sweeps — the kernel must agree with the
+oracle for arbitrary (M, K, N), including shapes that are not multiples of
+the tile sizes (exercising the pad+slice path), and its custom VJP must
+match jax.grad of the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate as agg
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=97)
+SMALL = st.integers(min_value=1, max_value=33)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+ACTS = st.sampled_from(["none", "relu"])
+
+
+def _rand(rs, *shape):
+    return jnp.asarray(rs.standard_normal(shape), jnp.float32)
+
+
+class TestMatmulVsRef:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS, act=ACTS)
+    def test_fused_matmul_matches_oracle(self, m, k, n, seed, act):
+        rs = np.random.default_rng(seed)
+        x, w, b = _rand(rs, m, k), _rand(rs, k, n), _rand(rs, n)
+        got = mk.matmul(x, w, b, act)
+        want = ref.matmul(x, w, b, act)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+    def test_matmul_without_bias(self, m, k, n, seed):
+        rs = np.random.default_rng(seed)
+        x, w = _rand(rs, m, k), _rand(rs, k, n)
+        np.testing.assert_allclose(
+            mk.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_tile_multiple_shapes_exact(self):
+        # Shapes exactly on tile boundaries skip the pad path entirely.
+        rs = np.random.default_rng(0)
+        x, w, b = _rand(rs, 128, 256), _rand(rs, 256, 128), _rand(rs, 128)
+        np.testing.assert_allclose(
+            mk.matmul(x, w, b, "relu"), ref.matmul(x, w, b, "relu"),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_rejects_bad_shapes(self):
+        rs = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            mk.matmul(_rand(rs, 4, 5), _rand(rs, 6, 7))
+        with pytest.raises(ValueError):
+            mk.matmul(_rand(rs, 4, 5), _rand(rs, 5, 7), act="gelu")
+
+    def test_dtype_preserved(self):
+        rs = np.random.default_rng(0)
+        y = mk.matmul(_rand(rs, 5, 7), _rand(rs, 7, 3))
+        assert y.dtype == jnp.float32
+
+
+class TestDenseVjp:
+    @settings(max_examples=15, deadline=None)
+    @given(m=SMALL, k=SMALL, n=SMALL, seed=SEEDS, act=ACTS)
+    def test_grads_match_oracle(self, m, k, n, seed, act):
+        rs = np.random.default_rng(seed)
+        x, w, b = _rand(rs, m, k), _rand(rs, k, n), _rand(rs, n)
+        # A non-trivial scalar loss so every cotangent path is exercised.
+        def loss_k(x, w, b):
+            return jnp.sum(mk.dense(x, w, b, act) ** 2)
+
+        def loss_r(x, w, b):
+            return jnp.sum(ref.dense(x, w, b, act) ** 2)
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+        for a, bb in zip(gk, gr):
+            np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)
+
+    def test_value_and_grad_jits(self):
+        rs = np.random.default_rng(1)
+        x, w, b = _rand(rs, 8, 8), _rand(rs, 8, 8), _rand(rs, 8)
+        f = jax.jit(jax.value_and_grad(lambda w: mk.dense(x, w, b, "relu").sum()))
+        v, g = f(w)
+        assert g.shape == w.shape and np.isfinite(float(v))
+
+
+class TestAggregateVsRef:
+    @settings(max_examples=20, deadline=None)
+    @given(r=st.integers(2, 16), d=st.integers(1, 3000), seed=SEEDS)
+    def test_mix_matches_oracle(self, r, d, seed):
+        rs = np.random.default_rng(seed)
+        x = _rand(rs, r, d)
+        h = jnp.asarray(rs.random((r, r)), jnp.float32)
+        h = h / h.sum(axis=0, keepdims=True)  # column-stochastic
+        np.testing.assert_allclose(
+            agg.mix(h, x), ref.mix(h, x), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(r=st.integers(1, 16), d=st.integers(1, 3000), seed=SEEDS)
+    def test_wavg_matches_oracle(self, r, d, seed):
+        rs = np.random.default_rng(seed)
+        x = _rand(rs, r, d)
+        w = jnp.asarray(rs.random(r), jnp.float32)
+        w = w / w.sum()
+        np.testing.assert_allclose(
+            agg.weighted_average(w, x), ref.weighted_average(w, x),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_doubly_stochastic_mix_preserves_mean(self):
+        # The invariant behind CE-FedAvg's Eq. 12: gossip with a doubly
+        # stochastic H leaves the average model unchanged.
+        rs = np.random.default_rng(7)
+        r, d = 8, 513
+        x = _rand(rs, r, d)
+        # Metropolis weights of a ring are doubly stochastic.
+        h = np.zeros((r, r), np.float32)
+        for i in range(r):
+            h[i, (i + 1) % r] = h[i, (i - 1) % r] = 1.0 / 3.0
+            h[i, i] = 1.0 / 3.0
+        out = agg.mix(jnp.asarray(h), x)
+        np.testing.assert_allclose(
+            out.mean(axis=0), x.mean(axis=0), rtol=1e-4, atol=1e-5
+        )
+
+    def test_identity_mix_is_noop(self):
+        rs = np.random.default_rng(3)
+        x = _rand(rs, 4, 100)
+        np.testing.assert_allclose(agg.mix(jnp.eye(4), x), x, rtol=1e-6)
+
+    def test_mix_rejects_mismatched_shapes(self):
+        rs = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            agg.mix(jnp.eye(3), _rand(rs, 4, 10))
+        with pytest.raises(ValueError):
+            agg.weighted_average(jnp.ones(3), _rand(rs, 4, 10))
+
+
+class TestBlockSelection:
+    def test_pick_block_shrinks_for_small_dims(self):
+        assert mk._pick_block(5, 128) == 8
+        assert mk._pick_block(128, 128) == 128
+        assert mk._pick_block(65, 128) == 128
+        assert mk._pick_block(64, 128) == 64
+
+    def test_vmem_estimate_fits_tpu_core(self):
+        # Default tiles must stay well under a 16 MiB VMEM budget.
+        assert mk.vmem_bytes() < 4 * 1024 * 1024

@@ -1,0 +1,203 @@
+"""L2 correctness: model graphs, train/eval steps, conv lowering.
+
+Checks the properties Rust relies on: positional parameter order, loss
+decrease under the exported train step, per-example eval outputs, and that
+the im2col+Pallas convolution is numerically identical to lax.conv.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import model as M
+
+
+def _batch(model, n, seed=0):
+    rs = np.random.default_rng(seed)
+    x = jnp.asarray(rs.standard_normal((n, model.flat_dim)) * 0.5, jnp.float32)
+    y = jnp.asarray(rs.integers(0, model.num_classes, n), jnp.int32)
+    return x, y
+
+
+class TestConvLowering:
+    @pytest.mark.parametrize("c,oc,hw", [(1, 8, 28), (3, 16, 32), (4, 4, 8)])
+    def test_conv2d_matches_lax_conv(self, c, oc, hw):
+        rs = np.random.default_rng(0)
+        x = jnp.asarray(rs.standard_normal((2, hw, hw, c)), jnp.float32)
+        w = jnp.asarray(rs.standard_normal((3, 3, c, oc)) * 0.1, jnp.float32)
+        b = jnp.asarray(rs.standard_normal(oc) * 0.1, jnp.float32)
+        got = M.conv2d(x, w, b)
+        want = jnp.maximum(
+            lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b,
+            0.0,
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_maxpool_halves_spatial(self):
+        x = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 8, 3)
+        y = M.maxpool2(x)
+        assert y.shape == (2, 4, 4, 3)
+        # top-left window max of channel 0 == element (1,1,0)
+        assert float(y[0, 0, 0, 0]) == float(x[0, 1, 1, 0])
+
+
+class TestSchemas:
+    def test_registry_contents(self):
+        assert set(M.MODELS) == {"mlp_synth", "femnist_cnn", "cifar_cnn"}
+
+    @pytest.mark.parametrize("name", sorted(M.MODELS))
+    def test_param_count_matches_specs(self, name):
+        m = M.MODELS[name]
+        assert m.param_count == sum(s.size for s in m.specs)
+        assert m.param_count > 0
+        # names unique, order stable
+        names = [s.name for s in m.specs]
+        assert len(set(names)) == len(names)
+
+    def test_femnist_structure_follows_paper(self):
+        # Two conv layers + two dense layers, 62-way output (paper §6.1).
+        m = M.MODELS["femnist_cnn"]
+        names = [s.name for s in m.specs]
+        assert names == [
+            "conv1/w", "conv1/b", "conv2/w", "conv2/b",
+            "fc1/w", "fc1/b", "fc2/w", "fc2/b",
+        ]
+        assert m.specs[-1].shape[-1] == 62
+        assert m.num_classes == 62
+
+    def test_init_params_match_spec_shapes(self):
+        m = M.MODELS["mlp_synth"]
+        ps = M.init_params(m.specs, 3)
+        for p, s in zip(ps, m.specs):
+            assert p.shape == s.shape
+        # biases start at zero (paper-standard init)
+        assert float(jnp.abs(ps[1]).max()) == 0.0
+
+    def test_glorot_range(self):
+        m = M.MODELS["mlp_synth"]
+        ps = M.init_params(m.specs, 0)
+        w = ps[0]
+        limit = (6.0 / (m.specs[0].fan_in + m.specs[0].fan_out)) ** 0.5
+        assert float(jnp.abs(w).max()) <= limit + 1e-6
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("name,steps,lr", [
+        ("mlp_synth", 20, 0.1),
+        ("femnist_cnn", 3, 0.05),
+    ])
+    def test_loss_decreases(self, name, steps, lr):
+        m = M.MODELS[name]
+        k = len(m.specs)
+        params = M.init_params(m.specs, 0)
+        mom = [jnp.zeros_like(p) for p in params]
+        x, y = _batch(m, 16)
+        step = jax.jit(M.make_train_step(m))
+        out = step(*params, *mom, x, y, jnp.float32(lr))
+        first = float(out[-1])
+        for _ in range(steps - 1):
+            params, mom = list(out[:k]), list(out[k:2 * k])
+            out = step(*params, *mom, x, y, jnp.float32(lr))
+        last = float(out[-1])
+        assert np.isfinite(first) and np.isfinite(last)
+        assert last < first * 0.9, (first, last)
+
+    def test_output_arity_and_shapes(self):
+        m = M.MODELS["mlp_synth"]
+        k = len(m.specs)
+        params = M.init_params(m.specs, 0)
+        mom = [jnp.zeros_like(p) for p in params]
+        x, y = _batch(m, 8)
+        out = M.make_train_step(m)(*params, *mom, x, y, jnp.float32(0.1))
+        assert len(out) == 2 * k + 1
+        for o, s in zip(out[:k], m.specs):
+            assert o.shape == s.shape
+        assert out[-1].shape == ()
+
+    def test_momentum_accumulates(self):
+        # After one step from zero momentum, mom' == grad; after two
+        # identical-batch steps, mom changes by mu*mom + g'.
+        m = M.MODELS["mlp_synth"]
+        k = len(m.specs)
+        params = M.init_params(m.specs, 1)
+        mom = [jnp.zeros_like(p) for p in params]
+        x, y = _batch(m, 8)
+        step = M.make_train_step(m)
+        out = step(*params, *mom, x, y, jnp.float32(0.0))  # lr=0: params frozen
+        new_mom = out[k:2 * k]
+        # lr=0 keeps params identical, so a second step must give
+        # mom2 = mu*mom1 + g with the same g.
+        out2 = step(*out[:k], *new_mom, x, y, jnp.float32(0.0))
+        mom2 = out2[k:2 * k]
+        for m1, m2 in zip(new_mom, mom2):
+            np.testing.assert_allclose(
+                m2, M.MOMENTUM * m1 + m1, rtol=1e-4, atol=1e-6
+            )
+
+    def test_zero_lr_freezes_params(self):
+        m = M.MODELS["mlp_synth"]
+        k = len(m.specs)
+        params = M.init_params(m.specs, 2)
+        mom = [jnp.zeros_like(p) for p in params]
+        x, y = _batch(m, 8)
+        out = M.make_train_step(m)(*params, *mom, x, y, jnp.float32(0.0))
+        for p0, p1 in zip(params, out[:k]):
+            np.testing.assert_array_equal(p0, p1)
+
+
+class TestEvalStep:
+    def test_per_example_outputs(self):
+        m = M.MODELS["mlp_synth"]
+        params = M.init_params(m.specs, 0)
+        x, y = _batch(m, 12)
+        correct, loss = M.make_eval_step(m)(*params, x, y)
+        assert correct.shape == (12,) and loss.shape == (12,)
+        assert set(np.unique(np.asarray(correct))) <= {0.0, 1.0}
+        assert np.all(np.asarray(loss) > 0)
+
+    def test_eval_consistent_with_argmax(self):
+        m = M.MODELS["mlp_synth"]
+        params = M.init_params(m.specs, 0)
+        x, y = _batch(m, 12)
+        logits = m.apply(params, x)
+        correct, _ = M.make_eval_step(m)(*params, x, y)
+        want = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(correct), np.asarray(want))
+
+    def test_training_improves_eval_accuracy(self):
+        m = M.MODELS["mlp_synth"]
+        k = len(m.specs)
+        params = M.init_params(m.specs, 0)
+        mom = [jnp.zeros_like(p) for p in params]
+        x, y = _batch(m, 64)
+        ev = jax.jit(M.make_eval_step(m))
+        acc0 = float(jnp.mean(ev(*params, x, y)[0]))
+        step = jax.jit(M.make_train_step(m))
+        out = step(*params, *mom, x, y, jnp.float32(0.1))
+        for _ in range(30):
+            params, mom = list(out[:k]), list(out[k:2 * k])
+            out = step(*params, *mom, x, y, jnp.float32(0.1))
+        acc1 = float(jnp.mean(ev(*out[:k], x, y)[0]))
+        assert acc1 > acc0 + 0.2, (acc0, acc1)
+
+
+class TestCrossEntropy:
+    def test_matches_manual_formula(self):
+        rs = np.random.default_rng(0)
+        logits = jnp.asarray(rs.standard_normal((5, 7)), jnp.float32)
+        y = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
+        got = M.cross_entropy(logits, y, 7)
+        p = jax.nn.log_softmax(logits)
+        want = -p[jnp.arange(5), y]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_uniform_logits_give_log_c(self):
+        logits = jnp.zeros((3, 10), jnp.float32)
+        y = jnp.asarray([0, 5, 9], jnp.int32)
+        got = M.cross_entropy(logits, y, 10)
+        np.testing.assert_allclose(got, np.log(10.0) * np.ones(3), rtol=1e-5)

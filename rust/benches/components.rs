@@ -1,0 +1,122 @@
+//! Component micro-benches: the L3 hot-path primitives (aggregation,
+//! gossip, consensus), the substrates (rng, json, partitioners), the mock
+//! train step, and — when artifacts are present — the PJRT train/eval
+//! steps of every model (the real request-path cost).
+
+use std::path::Path;
+
+use cfel::aggregation::{consensus_distance, gossip_mix, weighted_average_into};
+use cfel::data::synthetic::{Prototypes, SyntheticSpec};
+use cfel::data::{partition, Batch};
+use cfel::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
+use cfel::topology::{Graph, MixingMatrix};
+use cfel::util::bench::{header, Bench};
+use cfel::util::json::Json;
+use cfel::util::rng::Rng;
+
+fn main() {
+    header("components", "L3 primitives + substrates + backends");
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // ---- aggregation hot path ------------------------------------------
+    let d = 109_726; // femnist_cnn-sized flat model
+    let n_dev = 8;
+    let rows_data: Vec<Vec<f32>> = (0..n_dev)
+        .map(|i| (0..d).map(|j| ((i * d + j) % 97) as f32).collect())
+        .collect();
+    let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+    let weights = vec![1.0 / n_dev as f64; n_dev];
+    let mut out = vec![0.0f32; d];
+    b.run_throughput(
+        &format!("weighted_average {n_dev}x{d}"),
+        (n_dev * d) as f64,
+        || weighted_average_into(&rows, &weights, &mut out),
+    );
+
+    let g = Graph::ring(8).unwrap();
+    let h10 = MixingMatrix::metropolis(&g).power(10);
+    let mut models: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; d]).collect();
+    let mut scratch = Vec::new();
+    b.run_throughput(&format!("gossip_mix 8x{d} (H^10)"), (8 * d) as f64, || {
+        gossip_mix(&mut models, &h10, &mut scratch)
+    });
+    b.run(&format!("consensus_distance 8x{d}"), || consensus_distance(&models));
+    b.run("mixing power H^10 m=16", || {
+        MixingMatrix::metropolis(&Graph::ring(16).unwrap()).power(10)
+    });
+
+    // ---- substrates -------------------------------------------------------
+    b.run_throughput("rng normal x100k", 100_000.0, || {
+        let mut s = 0.0f32;
+        for _ in 0..100_000 {
+            s += rng.normal();
+        }
+        s
+    });
+    let manifest_path = Manifest::default_dir().join("manifest.json");
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(&manifest_path).unwrap();
+        b.run_throughput("json parse manifest", text.len() as f64, || {
+            Json::parse(&text).unwrap()
+        });
+    }
+    let labels: Vec<u32> = (0..50_000).map(|i| (i % 62) as u32).collect();
+    let prng = Rng::new(3);
+    b.run_throughput("partition dirichlet(0.5) 50k/64dev", 50_000.0, || {
+        partition::dirichlet(&labels, 62, 64, 0.5, &prng)
+    });
+    let spec = SyntheticSpec::femnist_like();
+    let protos = Prototypes::new(spec, &Rng::new(5));
+    b.run_throughput("synthetic femnist 1k samples", 1_000.0, || {
+        protos.global_pool(1_000, &Rng::new(6))
+    });
+
+    // ---- backends -----------------------------------------------------------
+    let mock = MockBackend::mlp_synth();
+    let mspec = SyntheticSpec::mlp_synth();
+    let mprotos = Prototypes::new(mspec, &Rng::new(7));
+    let ds = mock_dataset(&mprotos);
+    let batch = Batch::gather(&ds, &(0..16).collect::<Vec<_>>(), 16);
+    let mut state = mock.init_state(&Rng::new(8));
+    b.run_throughput("mock train_step (batch 16)", 16.0, || {
+        mock.train_step(&mut state, &batch, 0.05).unwrap()
+    });
+
+    if manifest_path.exists() {
+        bench_pjrt(&mut b, Manifest::default_dir().as_path());
+    } else {
+        println!("(artifacts missing — run `make artifacts` to bench the PJRT path)");
+    }
+}
+
+fn mock_dataset(protos: &Prototypes) -> cfel::data::Dataset {
+    protos.global_pool(64, &Rng::new(9))
+}
+
+fn bench_pjrt(b: &mut Bench, dir: &Path) {
+    let manifest = Manifest::load(dir).unwrap();
+    for name in manifest.models.keys() {
+        let be = PjrtBackend::from_manifest(&manifest, name).unwrap();
+        let spec = SyntheticSpec {
+            dim: be.flat_dim(),
+            num_classes: be.num_classes(),
+            ..SyntheticSpec::mlp_synth()
+        };
+        let protos = Prototypes::new(spec, &Rng::new(10));
+        let ds = protos.global_pool(be.batch_size(), &Rng::new(11));
+        let idx: Vec<usize> = (0..be.batch_size()).collect();
+        let batch = Batch::gather(&ds, &idx, be.batch_size());
+        let mut state = be.init_state(&Rng::new(12));
+        b.run_throughput(
+            &format!("pjrt train_step {name} (batch {})", be.batch_size()),
+            be.batch_size() as f64,
+            || be.train_step(&mut state, &batch, 0.05).unwrap(),
+        );
+        b.run_throughput(
+            &format!("pjrt eval {name} (1 batch)"),
+            be.batch_size() as f64,
+            || be.eval(&state.params, std::slice::from_ref(&batch)).unwrap(),
+        );
+    }
+}

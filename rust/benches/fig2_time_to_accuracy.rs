@@ -1,0 +1,61 @@
+//! Bench for Fig. 2 — one global round of each algorithm on the paper
+//! system (64 devices / 8 clusters, τ=2, q=8, π=10), plus the end-to-end
+//! time-to-accuracy comparison (Eq. 8 simulated seconds) the figure plots.
+//!
+//! Run with `cargo bench --bench fig2_time_to_accuracy`. The wall-clock
+//! numbers measure this machine's coordinator + mock backend; the
+//! simulated numbers reproduce the paper's runtime axis.
+
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy};
+use cfel::util::bench::{header, Bench};
+
+fn main() {
+    header(
+        "fig2: time-to-accuracy, 4 algorithms",
+        "paper system: n=64, m=8, tau=2, q=8, pi=10, ring backhaul, writers split",
+    );
+    let mut b = Bench::new();
+
+    // Wall-clock of one global round per algorithm.
+    for alg in AlgorithmKind::all() {
+        let mut cfg = ExperimentConfig::paper_system(alg);
+        cfg.rounds = 1;
+        b.run(&format!("one-global-round/{}", alg.name()), || {
+            let mut coord = Coordinator::from_config(&cfg).unwrap();
+            coord.run().unwrap()
+        });
+    }
+
+    // The figure itself: accuracy-vs-simulated-time over a short run.
+    println!("\n-- simulated time-to-accuracy (Eq. 8) --");
+    let rounds = 25;
+    let mut histories = Vec::new();
+    for alg in AlgorithmKind::all() {
+        let mut cfg = ExperimentConfig::paper_system(alg);
+        cfg.rounds = rounds;
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        histories.push((alg, coord.run().unwrap()));
+    }
+    let target = histories
+        .iter()
+        .map(|(_, h)| best_accuracy(h))
+        .fold(0.0f64, f64::max)
+        * 0.9;
+    println!("target accuracy = {target:.4} (90% of best series)");
+    for (alg, h) in &histories {
+        let best = best_accuracy(h);
+        match time_to_accuracy(h, target) {
+            Some((r, t)) => println!(
+                "  {:<12} best {best:.4}  hit at round {r:>3} / {t:>9.1} sim-s",
+                alg.name()
+            ),
+            None => println!("  {:<12} best {best:.4}  (never hit target)", alg.name()),
+        }
+    }
+    println!(
+        "\nexpected shape (paper Fig. 2): Hier-FAvg fastest per ROUND, \
+         CE-FedAvg fastest per SIM-SECOND, Local-Edge plateaus lowest."
+    );
+}

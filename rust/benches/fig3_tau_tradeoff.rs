@@ -1,0 +1,50 @@
+//! Bench for Fig. 3 — CE-FedAvg under τ ∈ {2,4,8} with fixed qτ = 16:
+//! wall-clock of one global round per setting plus the convergence /
+//! runtime trade-off rows (smaller τ ⇒ fewer rounds to target, more
+//! device-edge uploads per round ⇒ higher Eq. 8 round cost).
+
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy};
+use cfel::util::bench::{header, Bench};
+
+fn main() {
+    header("fig3: tau vs q trade-off (q*tau = 16)", "CE-FedAvg, paper system");
+    let mut b = Bench::new();
+
+    for tau in [2usize, 4, 8] {
+        let mut cfg = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+        cfg.tau = tau;
+        cfg.q = 16 / tau;
+        cfg.rounds = 1;
+        b.run(&format!("one-global-round/tau={tau},q={}", cfg.q), || {
+            let mut coord = Coordinator::from_config(&cfg).unwrap();
+            coord.run().unwrap()
+        });
+    }
+
+    println!("\n-- convergence/runtime rows --");
+    let rounds = 25;
+    let mut hs = Vec::new();
+    for tau in [2usize, 4, 8] {
+        let mut cfg = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+        cfg.tau = tau;
+        cfg.q = 16 / tau;
+        cfg.rounds = rounds;
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        hs.push((tau, coord.run().unwrap()));
+    }
+    let target = hs.iter().map(|(_, h)| best_accuracy(h)).fold(0.0f64, f64::max) * 0.9;
+    println!("target accuracy = {target:.4}");
+    for (tau, h) in &hs {
+        let per_round = h.last().unwrap().sim_time_s / h.len() as f64;
+        match time_to_accuracy(h, target) {
+            Some((r, t)) => println!(
+                "  tau={tau} q={:>2}  round-cost {per_round:>7.2} sim-s  hit round {r:>3} / {t:>8.1} sim-s",
+                16 / tau
+            ),
+            None => println!("  tau={tau} q={:>2}  round-cost {per_round:>7.2} sim-s  (never hit)", 16 / tau),
+        }
+    }
+    println!("\nexpected shape (Fig. 3 / Remark 1): smaller tau hits the target in fewer ROUNDS;\nlarger tau can win on RUNTIME because each round uploads q times to the edge.");
+}

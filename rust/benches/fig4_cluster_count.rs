@@ -1,0 +1,43 @@
+//! Bench for Fig. 4 — CE-FedAvg under m ∈ {4,8,16} clusters at n = 64:
+//! coordinator wall-clock per global round and the Remark-2 convergence
+//! ordering (smaller m ⇒ lower inter-cluster divergence ⇒ fewer rounds).
+
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy};
+use cfel::util::bench::{header, Bench};
+
+fn main() {
+    header("fig4: cluster count m at fixed n=64", "CE-FedAvg, ring backhaul");
+    let mut b = Bench::new();
+
+    for m in [4usize, 8, 16] {
+        let mut cfg = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+        cfg.n_clusters = m;
+        cfg.rounds = 1;
+        b.run(&format!("one-global-round/m={m}"), || {
+            let mut coord = Coordinator::from_config(&cfg).unwrap();
+            coord.run().unwrap()
+        });
+    }
+
+    println!("\n-- convergence rows --");
+    let rounds = 25;
+    let mut hs = Vec::new();
+    for m in [4usize, 8, 16] {
+        let mut cfg = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+        cfg.n_clusters = m;
+        cfg.rounds = rounds;
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        hs.push((m, coord.run().unwrap()));
+    }
+    let target = hs.iter().map(|(_, h)| best_accuracy(h)).fold(0.0f64, f64::max) * 0.9;
+    println!("target accuracy = {target:.4}");
+    for (m, h) in &hs {
+        match time_to_accuracy(h, target) {
+            Some((r, _)) => println!("  m={m:<3} best {:.4}  hit at round {r}", best_accuracy(h)),
+            None => println!("  m={m:<3} best {:.4}  (never hit)", best_accuracy(h)),
+        }
+    }
+    println!("\nexpected shape (Fig. 4 / Remark 2): fewer clusters converge in fewer rounds.");
+}

@@ -1,0 +1,50 @@
+//! Bench for Fig. 5 — cluster-level data distribution: partitioner
+//! throughput for the two-level schemes plus the Remark-3 convergence
+//! ordering (cluster-IID fastest; smaller C slower).
+
+use cfel::config::{AlgorithmKind, DataScheme, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::data::partition;
+use cfel::metrics::best_accuracy;
+use cfel::util::bench::{header, Bench};
+use cfel::util::rng::Rng;
+
+fn main() {
+    header("fig5: cluster-level distributions", "CE-FedAvg, paper system");
+    let mut b = Bench::new();
+
+    // Partitioner micro-benches (the data-plane cost of the schemes).
+    let labels: Vec<u32> = (0..50_000).map(|i| (i % 10) as u32).collect();
+    let rng = Rng::new(7);
+    b.run_throughput("partition/cluster-iid 50k", 50_000.0, || {
+        partition::cluster_iid(&labels, 8, 8, &rng).unwrap()
+    });
+    b.run_throughput("partition/cluster-noniid C=2 50k", 50_000.0, || {
+        partition::cluster_noniid(&labels, 8, 8, 2, &rng).unwrap()
+    });
+    b.run_throughput("partition/dirichlet 0.5 50k", 50_000.0, || {
+        partition::dirichlet(&labels, 10, 64, 0.5, &rng)
+    });
+
+    println!("\n-- convergence rows --");
+    let rounds = 25;
+    let mut rows = Vec::new();
+    let schemes: Vec<(String, DataScheme)> = vec![
+        ("cluster-iid".into(), DataScheme::ClusterIid),
+        ("cluster-noniid C=8".into(), DataScheme::ClusterNonIid { c_labels: 8 }),
+        ("cluster-noniid C=5".into(), DataScheme::ClusterNonIid { c_labels: 5 }),
+        ("cluster-noniid C=2".into(), DataScheme::ClusterNonIid { c_labels: 2 }),
+    ];
+    for (name, scheme) in schemes {
+        let mut cfg = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+        cfg.data = scheme;
+        cfg.rounds = rounds;
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        let h = coord.run().unwrap();
+        rows.push((name, best_accuracy(&h)));
+    }
+    for (name, best) in &rows {
+        println!("  {name:<22} best accuracy {best:.4}");
+    }
+    println!("\nexpected shape (Fig. 5 / Remark 3): cluster-IID >= C=8 >= C=5 >= C=2.");
+}

@@ -1,0 +1,235 @@
+//! Flat-vector aggregation primitives — the L3 hot path.
+//!
+//! Model/momentum state travels as flat `Vec<f32>`; the aggregation
+//! operators here implement the paper's Eq. 6 (intra-cluster weighted
+//! average) and Eq. 7 (gossip application of H^π) plus the consensus
+//! diagnostics used by tests and EXPERIMENTS.md. All operators are
+//! allocation-free on the hot path (callers pass output buffers or use the
+//! in-place variants); `components` bench tracks their throughput.
+
+use crate::topology::MixingMatrix;
+
+/// out = Σ_r weights[r] · rows[r]; `weights` need not be normalised —
+/// pass normalised sample fractions for Eq. 6.
+pub fn weighted_average_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+    assert_eq!(rows.len(), weights.len());
+    assert!(!rows.is_empty());
+    let d = out.len();
+    for r in rows {
+        assert_eq!(r.len(), d, "row length mismatch");
+    }
+    out.fill(0.0);
+    for (row, &w) in rows.iter().zip(weights) {
+        let w = w as f32;
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += w * v;
+        }
+    }
+}
+
+/// Allocating convenience wrapper for tests and cold paths.
+pub fn weighted_average(rows: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    let mut out = vec![0.0; rows[0].len()];
+    weighted_average_into(rows, weights, &mut out);
+    out
+}
+
+/// Uniform average.
+pub fn mean(rows: &[&[f32]]) -> Vec<f32> {
+    let w = vec![1.0 / rows.len() as f64; rows.len()];
+    weighted_average(rows, &w)
+}
+
+/// y += a * x (the SGD apply / momentum update primitive).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Gossip application (Eq. 7): given the stacked edge models `models[i]`
+/// and the (already powered) mixing matrix W = H^π, compute
+/// `out[i] = Σ_j W[j][i] · models[j]` for every cluster i.
+///
+/// `scratch` must be `m * d` long; the result is written back into
+/// `models` so callers keep a single buffer per cluster.
+pub fn gossip_mix(models: &mut [Vec<f32>], h_pi: &MixingMatrix, scratch: &mut Vec<f32>) {
+    let m = models.len();
+    assert_eq!(h_pi.len(), m);
+    if m == 0 {
+        return;
+    }
+    let d = models[0].len();
+    for mo in models.iter() {
+        assert_eq!(mo.len(), d);
+    }
+    scratch.clear();
+    scratch.resize(m * d, 0.0);
+    for j in 0..m {
+        let src = &models[j];
+        for i in 0..m {
+            let w = h_pi.get(j, i) as f32;
+            if w == 0.0 {
+                continue;
+            }
+            let dst = &mut scratch[i * d..(i + 1) * d];
+            for (o, &v) in dst.iter_mut().zip(src.iter()) {
+                *o += w * v;
+            }
+        }
+    }
+    for (i, mo) in models.iter_mut().enumerate() {
+        mo.copy_from_slice(&scratch[i * d..(i + 1) * d]);
+    }
+}
+
+/// Mean squared consensus distance: (1/m) Σ_i ‖x_i − x̄‖² — the residual
+/// error tracked by Lemmas 2–3 and reported by the figure harnesses.
+pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
+    let m = models.len();
+    if m <= 1 {
+        return 0.0;
+    }
+    let d = models[0].len();
+    let mut meanv = vec![0.0f64; d];
+    for mo in models {
+        for (acc, &v) in meanv.iter_mut().zip(mo.iter()) {
+            *acc += v as f64;
+        }
+    }
+    for v in &mut meanv {
+        *v /= m as f64;
+    }
+    let mut total = 0.0;
+    for mo in models {
+        for (&mu, &v) in meanv.iter().zip(mo.iter()) {
+            let dlt = v as f64 - mu;
+            total += dlt * dlt;
+        }
+    }
+    total / m as f64
+}
+
+/// Size-weighted global average of cluster models — the quantity u_t whose
+/// invariance under gossip (Eq. 12) the property tests pin down.
+pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Vec<f32> {
+    let n: usize = cluster_sizes.iter().sum();
+    let weights: Vec<f64> = cluster_sizes.iter().map(|&s| s as f64 / n as f64).collect();
+    let rows: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    weighted_average(&rows, &weights)
+}
+
+/// L2 distance between two flat vectors (test/diagnostic helper).
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Graph;
+
+    #[test]
+    fn weighted_average_basic() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let out = weighted_average(&[&a, &b], &[0.25, 0.75]);
+        assert_eq!(out, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn mean_of_identical_is_identity() {
+        let a = [1.5f32, -2.0, 0.0];
+        let out = mean(&[&a, &a, &a]);
+        assert_eq!(out, a.to_vec());
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(&mut y, -0.5, &[2.0, 4.0]);
+        assert_eq!(y, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn gossip_identity_is_noop() {
+        let mut models = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let orig = models.clone();
+        let mut scratch = Vec::new();
+        gossip_mix(&mut models, &MixingMatrix::identity(2), &mut scratch);
+        assert_eq!(models, orig);
+    }
+
+    #[test]
+    fn gossip_uniform_averages() {
+        let mut models = vec![vec![0.0f32, 4.0], vec![2.0, 0.0]];
+        let mut scratch = Vec::new();
+        gossip_mix(&mut models, &MixingMatrix::uniform(2), &mut scratch);
+        assert_eq!(models[0], vec![1.0, 2.0]);
+        assert_eq!(models[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn gossip_preserves_uniform_global_average() {
+        // Eq. 12: doubly-stochastic mixing keeps the (equal-size) average.
+        let g = Graph::ring(5).unwrap();
+        let h = MixingMatrix::metropolis(&g).power(3);
+        let mut models: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..7).map(|j| (i * 7 + j) as f32).collect())
+            .collect();
+        let before = global_average(&models, &[1; 5]);
+        let mut scratch = Vec::new();
+        gossip_mix(&mut models, &h, &mut scratch);
+        let after = global_average(&models, &[1; 5]);
+        assert!(l2_distance(&before, &after) < 1e-4);
+    }
+
+    #[test]
+    fn gossip_contracts_consensus_distance() {
+        let g = Graph::ring(8).unwrap();
+        let h = MixingMatrix::metropolis(&g);
+        let mut models: Vec<Vec<f32>> = (0..8)
+            .map(|i| vec![i as f32; 16])
+            .collect();
+        let mut scratch = Vec::new();
+        let initial = consensus_distance(&models);
+        let mut prev = initial;
+        for _ in 0..5 {
+            gossip_mix(&mut models, &h, &mut scratch);
+            let cur = consensus_distance(&models);
+            assert!(cur < prev + 1e-12, "{cur} !< {prev}");
+            prev = cur;
+        }
+        // Contraction rate is governed by ζ²(ring_8) ≈ 0.771 per step.
+        assert!(prev < initial * 0.5, "prev {prev} initial {initial}");
+    }
+
+    #[test]
+    fn consensus_distance_zero_iff_equal() {
+        let models = vec![vec![1.0f32, 2.0], vec![1.0, 2.0]];
+        assert_eq!(consensus_distance(&models), 0.0);
+        let models2 = vec![vec![1.0f32], vec![3.0]];
+        assert!((consensus_distance(&models2) - 1.0).abs() < 1e-12); // var around mean 2
+    }
+
+    #[test]
+    fn global_average_respects_sizes() {
+        let models = vec![vec![0.0f32], vec![10.0]];
+        let avg = global_average(&models, &[9, 1]);
+        assert!((avg[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_distance_basic() {
+        assert!((l2_distance(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! Communication compression for model uploads (paper §2's
+//! quantization/sparsification line of work [8, 24, 25], implemented as a
+//! first-class extension: the paper lists compression as composable with
+//! CE-FedAvg since only sums of model parameters are exchanged).
+//!
+//! A [`Compressor`] maps a flat model to a lossy, smaller representation;
+//! the coordinator applies it to every device→edge upload and every
+//! backhaul exchange, and the Eq. 8 simulator scales the transmitted bits
+//! by [`Compressor::bits_per_value`]. The `ablation` experiment measures
+//! the accuracy/latency trade-off.
+
+use crate::error::{CfelError, Result};
+
+/// A lossy model codec. `roundtrip` must be idempotent on its own output
+/// (compressing an already-compressed model is a no-op) — the property
+/// test below pins this.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Compressor {
+    /// Identity (no compression).
+    None,
+    /// Keep the top-`fraction` entries by magnitude, zero the rest
+    /// (ATOMO-style sparsification [24]). Transmitted bits per original
+    /// value ≈ fraction · (32 value + 32 index).
+    TopK { fraction: f64 },
+    /// Uniform symmetric quantization to `bits`-bit integers with a
+    /// per-model scale (FedPAQ-style [25]).
+    Quantize { bits: u32 },
+}
+
+impl Compressor {
+    pub fn parse(s: &str) -> Result<Compressor> {
+        if s == "none" {
+            return Ok(Compressor::None);
+        }
+        if let Some(f) = s.strip_prefix("topk:") {
+            let fraction: f64 = f
+                .parse()
+                .map_err(|_| CfelError::Config(format!("bad topk fraction {f:?}")))?;
+            if !(0.0 < fraction && fraction <= 1.0) {
+                return Err(CfelError::Config(format!(
+                    "topk fraction {fraction} outside (0,1]"
+                )));
+            }
+            return Ok(Compressor::TopK { fraction });
+        }
+        if let Some(b) = s.strip_prefix("quantize:") {
+            let bits: u32 = b
+                .parse()
+                .map_err(|_| CfelError::Config(format!("bad quantize bits {b:?}")))?;
+            if !(1..=16).contains(&bits) {
+                return Err(CfelError::Config(format!("quantize bits {bits} outside 1..=16")));
+            }
+            return Ok(Compressor::Quantize { bits });
+        }
+        Err(CfelError::Config(format!(
+            "unknown compressor {s:?} (none | topk:<frac> | quantize:<bits>)"
+        )))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Compressor::None => "none".into(),
+            Compressor::TopK { fraction } => format!("topk:{fraction}"),
+            Compressor::Quantize { bits } => format!("quantize:{bits}"),
+        }
+    }
+
+    /// Average transmitted bits per original f32 value (Eq. 8 scaling).
+    pub fn bits_per_value(&self) -> f64 {
+        match self {
+            Compressor::None => 32.0,
+            // value + index per surviving entry.
+            Compressor::TopK { fraction } => fraction * 64.0,
+            // codes + one f32 scale amortised away.
+            Compressor::Quantize { bits } => *bits as f64,
+        }
+    }
+
+    /// Apply the lossy round-trip in place (what the receiver would see).
+    pub fn roundtrip(&self, x: &mut [f32]) {
+        match self {
+            Compressor::None => {}
+            Compressor::TopK { fraction } => topk_inplace(x, *fraction),
+            Compressor::Quantize { bits } => quantize_inplace(x, *bits),
+        }
+    }
+
+    /// Compression ratio vs raw f32 (1.0 = uncompressed).
+    pub fn ratio(&self) -> f64 {
+        self.bits_per_value() / 32.0
+    }
+}
+
+fn topk_inplace(x: &mut [f32], fraction: f64) {
+    let n = x.len();
+    let k = ((n as f64 * fraction).ceil() as usize).clamp(1, n);
+    if k == n {
+        return;
+    }
+    // Threshold via select_nth on magnitudes (O(n) average).
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let idx = n - k;
+    mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let threshold = mags[idx];
+    // Keep values strictly above threshold, plus enough at exactly the
+    // threshold to reach k (deterministic: first-come order).
+    let mut kept = x.iter().filter(|v| v.abs() > threshold).count();
+    for v in x.iter_mut() {
+        let mag = v.abs();
+        if mag > threshold {
+            continue;
+        }
+        if mag == threshold && kept < k {
+            kept += 1;
+            continue;
+        }
+        *v = 0.0;
+    }
+}
+
+fn quantize_inplace(x: &mut [f32], bits: u32) {
+    let levels = ((1u64 << bits) - 1) as f32; // e.g. 255 for 8 bits
+    let max = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let scale = max / (levels / 2.0);
+    for v in x.iter_mut() {
+        let q = (*v / scale).round().clamp(-(levels / 2.0), levels / 2.0);
+        *v = q * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn noisy(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn parse_roundtrip_and_validation() {
+        for c in [
+            Compressor::None,
+            Compressor::TopK { fraction: 0.1 },
+            Compressor::Quantize { bits: 8 },
+        ] {
+            assert_eq!(Compressor::parse(&c.name()).unwrap(), c);
+        }
+        assert!(Compressor::parse("topk:0").is_err());
+        assert!(Compressor::parse("topk:1.5").is_err());
+        assert!(Compressor::parse("quantize:0").is_err());
+        assert!(Compressor::parse("quantize:33").is_err());
+        assert!(Compressor::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut x = noisy(100, 1);
+        let orig = x.clone();
+        Compressor::None.roundtrip(&mut x);
+        assert_eq!(x, orig);
+        assert_eq!(Compressor::None.ratio(), 1.0);
+    }
+
+    #[test]
+    fn topk_keeps_exactly_k_largest() {
+        let mut x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0, 0.0, -2.0];
+        Compressor::TopK { fraction: 0.5 }.roundtrip(&mut x);
+        let nonzero: Vec<f32> = x.iter().copied().filter(|&v| v != 0.0).collect();
+        assert_eq!(nonzero.len(), 4);
+        assert_eq!(nonzero, vec![-5.0, 3.0, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn topk_handles_ties_deterministically() {
+        let mut x = vec![1.0f32; 10];
+        Compressor::TopK { fraction: 0.3 }.roundtrip(&mut x);
+        assert_eq!(x.iter().filter(|&&v| v != 0.0).count(), 3);
+        // First three survive (first-come tie-break).
+        assert_eq!(&x[..3], &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn topk_idempotent() {
+        let mut x = noisy(500, 2);
+        let c = Compressor::TopK { fraction: 0.2 };
+        c.roundtrip(&mut x);
+        let once = x.clone();
+        c.roundtrip(&mut x);
+        assert_eq!(x, once);
+    }
+
+    #[test]
+    fn quantize_bounds_error_by_half_step() {
+        let mut x = noisy(1000, 3);
+        let orig = x.clone();
+        let bits = 8u32;
+        Compressor::Quantize { bits }.roundtrip(&mut x);
+        let max = orig.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let step = max / (((1u64 << bits) - 1) as f32 / 2.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6, "{a} vs {b} (step {step})");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent_and_zero_safe() {
+        let c = Compressor::Quantize { bits: 4 };
+        let mut x = noisy(200, 4);
+        c.roundtrip(&mut x);
+        let once = x.clone();
+        c.roundtrip(&mut x);
+        for (a, b) in x.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let mut z = vec![0.0f32; 8];
+        c.roundtrip(&mut z);
+        assert_eq!(z, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let orig = noisy(2000, 5);
+        let err = |bits: u32| {
+            let mut x = orig.clone();
+            Compressor::Quantize { bits }.roundtrip(&mut x);
+            x.iter()
+                .zip(&orig)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(err(2) > err(4));
+        assert!(err(4) > err(8));
+    }
+
+    #[test]
+    fn bits_per_value_scaling() {
+        assert_eq!(Compressor::None.bits_per_value(), 32.0);
+        assert!((Compressor::TopK { fraction: 0.1 }.bits_per_value() - 6.4).abs() < 1e-12);
+        assert_eq!(Compressor::Quantize { bits: 8 }.bits_per_value(), 8.0);
+        assert!(Compressor::Quantize { bits: 8 }.ratio() < 1.0);
+    }
+}

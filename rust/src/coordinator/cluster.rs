@@ -1,0 +1,30 @@
+//! Per-cluster state: the edge server's model and its device roster.
+
+/// One edge server's state (the paper's y^{(i)} plus bookkeeping).
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    /// Global device ids S_i managed by this edge server.
+    pub device_ids: Vec<usize>,
+    /// The edge model y^{(i)} as a flat parameter vector.
+    pub model: Vec<f32>,
+    /// Σ_k |D_k| over the cluster's devices (aggregation weights).
+    pub n_samples: usize,
+}
+
+impl ClusterState {
+    pub fn n_devices(&self) -> usize {
+        self.device_ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let c = ClusterState { device_ids: vec![3, 4, 5], model: vec![0.0; 7], n_samples: 30 };
+        assert_eq!(c.n_devices(), 3);
+        assert_eq!(c.model.len(), 7);
+    }
+}

@@ -1,0 +1,90 @@
+//! Cloud FedAvg baseline (paper §6.1 adaptation).
+//!
+//! Per global round every device runs qτ local epochs from the global
+//! model, then uploads to the cloud for one size-weighted aggregation —
+//! the traditional cloud-based FL framework. If the cloud has been killed
+//! (Table 1 fault experiment) the aggregation is skipped and devices keep
+//! drifting on their own cluster models.
+
+use crate::coordinator::cefedavg::merge_steps;
+use crate::coordinator::{Coordinator, RoundStats};
+use crate::error::Result;
+
+impl Coordinator {
+    pub(crate) fn fedavg_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        let epochs = self.cfg.q * self.cfg.tau; // qτ local epochs per round
+        let phase = round as u64;
+        for ci in self.alive_clusters() {
+            let outcomes = self.train_cluster(ci, epochs, phase)?;
+            for (dev, o) in &outcomes {
+                stats.device_steps.push((*dev, o.steps));
+                stats.loss_sum += o.loss_sum;
+                stats.step_count += o.steps;
+            }
+            // Stage device models at the cluster slot (pure bookkeeping —
+            // the real aggregation is the cloud step below).
+            self.aggregate_cluster(ci, &outcomes);
+        }
+        if self.aggregator_alive {
+            self.cloud_aggregate();
+        }
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{AlgorithmKind, ExperimentConfig, FaultSpec};
+    use crate::coordinator::Coordinator;
+    use crate::metrics::best_accuracy;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart();
+        c.algorithm = AlgorithmKind::FedAvg;
+        c.rounds = 6;
+        c
+    }
+
+    #[test]
+    fn learns_and_reaches_consensus() {
+        let mut coord = Coordinator::from_config(&cfg()).unwrap();
+        let h = coord.run().unwrap();
+        assert!(best_accuracy(&h) > 0.3);
+        // Cloud aggregation ⇒ all cluster models identical each round.
+        assert!(h.last().unwrap().consensus < 1e-12);
+    }
+
+    #[test]
+    fn cloud_upload_dominates_round_latency() {
+        // 1 Mbps cloud links make FedAvg rounds slower than CE rounds on
+        // the same workload (paper Fig. 2 runtime axis).
+        let mut fa = Coordinator::from_config(&cfg()).unwrap();
+        let hfa = fa.run().unwrap();
+        let mut c = cfg();
+        c.algorithm = AlgorithmKind::CeFedAvg;
+        c.pi = 5;
+        let mut ce = Coordinator::from_config(&c).unwrap();
+        let hce = ce.run().unwrap();
+        assert!(
+            hfa.last().unwrap().sim_time_s > hce.last().unwrap().sim_time_s,
+            "fedavg {} !> ce {}",
+            hfa.last().unwrap().sim_time_s,
+            hce.last().unwrap().sim_time_s
+        );
+    }
+
+    #[test]
+    fn aggregator_death_freezes_cooperation() {
+        let mut c = cfg();
+        c.rounds = 8;
+        c.fault = Some(FaultSpec::KillAggregator { at_round: 3 });
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let h = coord.run().unwrap();
+        // Before the fault consensus is 0 (cloud sync); afterwards the
+        // cluster models drift apart.
+        assert!(h[2].consensus < 1e-12);
+        assert!(h[7].consensus > 1e-12, "no drift after aggregator death");
+    }
+}

@@ -1,0 +1,96 @@
+//! Hier-FAvg baseline (Liu et al. [19]) — hierarchical FL.
+//!
+//! Per global round: q−1 rounds of (τ local epochs + edge aggregation),
+//! then one more τ-epoch round whose models go to the *cloud* for a global
+//! aggregation. The cloud is a star bottleneck: it gives the fastest
+//! per-round convergence (full averaging) at the price of the slow
+//! device→cloud upload in Eq. 8 and a single point of failure.
+
+use crate::coordinator::cefedavg::merge_steps;
+use crate::coordinator::{Coordinator, RoundStats};
+use crate::error::Result;
+
+impl Coordinator {
+    pub(crate) fn hier_favg_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        for r in 0..self.cfg.q {
+            let phase = (round * self.cfg.q + r) as u64;
+            for ci in self.alive_clusters() {
+                let outcomes = self.train_cluster(ci, self.cfg.tau, phase)?;
+                for (dev, o) in &outcomes {
+                    stats.device_steps.push((*dev, o.steps));
+                    stats.loss_sum += o.loss_sum;
+                    stats.step_count += o.steps;
+                }
+                self.aggregate_cluster(ci, &outcomes);
+            }
+        }
+        if self.aggregator_alive {
+            self.cloud_aggregate();
+        }
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{AlgorithmKind, ExperimentConfig};
+    use crate::coordinator::Coordinator;
+    use crate::metrics::best_accuracy;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart();
+        c.algorithm = AlgorithmKind::HierFAvg;
+        c.rounds = 6;
+        c
+    }
+
+    #[test]
+    fn learns_and_synchronises() {
+        let mut coord = Coordinator::from_config(&cfg()).unwrap();
+        let h = coord.run().unwrap();
+        assert!(best_accuracy(&h) > 0.3);
+        assert!(h.last().unwrap().consensus < 1e-12);
+    }
+
+    #[test]
+    fn equals_ce_fedavg_under_complete_strong_gossip() {
+        // §4.3: fully-connected backhaul + full averaging ⇒ CE-FedAvg's
+        // update rule coincides with Hier-FAvg. Uniform H (π irrelevant)
+        // averages exactly, so losses must match round for round —
+        // *almost*: Hier weights the cloud average by cluster sample
+        // counts while gossip with doubly-stochastic H is uniform. Use
+        // equal cluster sizes so both weightings coincide.
+        let mut hier_cfg = cfg();
+        hier_cfg.rounds = 3;
+        let mut ce_cfg = hier_cfg.clone();
+        ce_cfg.algorithm = AlgorithmKind::CeFedAvg;
+        ce_cfg.topology = "complete".into();
+        ce_cfg.pi = 60; // H^60 of a complete-graph Metropolis ≈ uniform
+        let mut hier = Coordinator::from_config(&hier_cfg).unwrap();
+        let hh = hier.run().unwrap();
+        let mut ce = Coordinator::from_config(&ce_cfg).unwrap();
+        let hc = ce.run().unwrap();
+        for (a, b) in hh.iter().zip(&hc) {
+            assert!(
+                (a.train_loss - b.train_loss).abs() < 1e-3,
+                "round {}: hier {} vs ce {}",
+                a.round,
+                a.train_loss,
+                b.train_loss
+            );
+        }
+    }
+
+    #[test]
+    fn hier_per_round_slower_than_local_edge() {
+        let mut le_cfg = cfg();
+        le_cfg.algorithm = AlgorithmKind::LocalEdge;
+        let mut hier = Coordinator::from_config(&cfg()).unwrap();
+        let mut le = Coordinator::from_config(&le_cfg).unwrap();
+        let hh = hier.run().unwrap();
+        let hl = le.run().unwrap();
+        assert!(hh.last().unwrap().sim_time_s > hl.last().unwrap().sim_time_s);
+    }
+}

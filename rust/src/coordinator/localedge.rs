@@ -1,0 +1,86 @@
+//! Local-Edge baseline: the edge-based FL framework with *no* cooperation
+//! between edge servers — each cluster runs FedAvg over its own devices
+//! only. Lowest per-round latency (no backhaul, no cloud) but each edge
+//! model only ever sees 1/m of the data, which caps its accuracy (the
+//! paper's motivation for CFEL).
+
+use crate::coordinator::cefedavg::merge_steps;
+use crate::coordinator::{Coordinator, RoundStats};
+use crate::error::Result;
+
+impl Coordinator {
+    pub(crate) fn local_edge_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        for r in 0..self.cfg.q {
+            let phase = (round * self.cfg.q + r) as u64;
+            for ci in self.alive_clusters() {
+                let outcomes = self.train_cluster(ci, self.cfg.tau, phase)?;
+                for (dev, o) in &outcomes {
+                    stats.device_steps.push((*dev, o.steps));
+                    stats.loss_sum += o.loss_sum;
+                    stats.step_count += o.steps;
+                }
+                self.aggregate_cluster(ci, &outcomes);
+            }
+        }
+        // No inter-cluster aggregation of any kind.
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{AlgorithmKind, DataScheme, ExperimentConfig};
+    use crate::coordinator::Coordinator;
+    use crate::metrics::best_accuracy;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart();
+        c.algorithm = AlgorithmKind::LocalEdge;
+        c.rounds = 6;
+        c
+    }
+
+    #[test]
+    fn clusters_never_converge_to_each_other() {
+        let mut coord = Coordinator::from_config(&cfg()).unwrap();
+        let h = coord.run().unwrap();
+        // No cooperation ⇒ models stay apart under non-IID writers.
+        assert!(h.last().unwrap().consensus > 1e-9);
+    }
+
+    #[test]
+    fn accuracy_below_cooperative_ce_on_noniid_data() {
+        // The paper's headline qualitative result (Fig. 2): Local-Edge
+        // plateaus below CE-FedAvg because each edge model sees a skewed
+        // fraction of the data. Use a strongly skewed cluster split.
+        let mut le_cfg = cfg();
+        le_cfg.rounds = 10;
+        le_cfg.data = DataScheme::ClusterNonIid { c_labels: 2 };
+        let mut ce_cfg = le_cfg.clone();
+        ce_cfg.algorithm = AlgorithmKind::CeFedAvg;
+        let mut le = Coordinator::from_config(&le_cfg).unwrap();
+        let mut ce = Coordinator::from_config(&ce_cfg).unwrap();
+        let hl = le.run().unwrap();
+        let hc = ce.run().unwrap();
+        let (ble, bce) = (best_accuracy(&hl), best_accuracy(&hc));
+        assert!(bce > ble + 0.05, "ce {bce} !>> local {ble}");
+    }
+
+    #[test]
+    fn cheapest_per_round() {
+        let mut le = Coordinator::from_config(&cfg()).unwrap();
+        let hl = le.run().unwrap();
+        for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::FedAvg, AlgorithmKind::HierFAvg] {
+            let mut c = cfg();
+            c.algorithm = alg;
+            let mut coord = Coordinator::from_config(&c).unwrap();
+            let h = coord.run().unwrap();
+            assert!(
+                hl.last().unwrap().sim_time_s <= h.last().unwrap().sim_time_s + 1e-9,
+                "local-edge not cheapest vs {alg:?}"
+            );
+        }
+    }
+}

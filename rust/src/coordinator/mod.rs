@@ -1,0 +1,433 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! [`Coordinator`] owns the whole CFEL system: the federated data, the
+//! cluster/device layout, the edge-backhaul graph with its gossip matrix,
+//! the network latency model, and the execution backend. [`Coordinator::run`]
+//! drives `rounds` global rounds of whichever algorithm the config selects:
+//!
+//! * **CE-FedAvg** (Algorithm 1) — `cefedavg.rs`
+//! * **FedAvg** (cloud baseline) — `fedavg.rs`
+//! * **Hier-FAvg** (hierarchical baseline) — `hierfavg.rs`
+//! * **Local-Edge** (no-cooperation baseline) — `localedge.rs`
+//!
+//! Shared machinery (local training, intra-cluster aggregation, eval,
+//! fault bookkeeping) lives here and in `trainer.rs` / `cluster.rs`.
+
+pub mod cefedavg;
+pub mod cluster;
+pub mod fedavg;
+pub mod hierfavg;
+pub mod localedge;
+pub mod trainer;
+
+pub use cluster::ClusterState;
+pub use trainer::LocalOutcome;
+
+use std::time::Instant;
+
+use crate::aggregation;
+use crate::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec};
+use crate::data::sampler::eval_batches;
+use crate::data::synthetic::{
+    femnist_federation, pool_federation, FederatedData, SyntheticSpec,
+};
+use crate::data::{partition, Batch};
+use crate::error::{CfelError, Result};
+use crate::metrics::{History, RoundRecord};
+use crate::netsim::{NetworkModel, RoundLatency};
+use crate::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
+use crate::topology::{Graph, MixingMatrix};
+use crate::util::rng::Rng;
+
+/// Aggregate statistics of one global round's local-training phase.
+#[derive(Debug, Default, Clone)]
+pub struct RoundStats {
+    /// (device_id, sgd_steps) for every participating device.
+    pub device_steps: Vec<(usize, usize)>,
+    pub loss_sum: f64,
+    pub step_count: usize,
+}
+
+impl RoundStats {
+    pub fn mean_loss(&self) -> f64 {
+        if self.step_count == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.step_count as f64
+        }
+    }
+}
+
+/// The CFEL system runtime.
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    pub backend: Box<dyn TrainBackend>,
+    pub fed: FederatedData,
+    pub clusters: Vec<ClusterState>,
+    pub graph: Graph,
+    /// H^π over the *current* alive subgraph.
+    pub h_pi: MixingMatrix,
+    pub net: NetworkModel,
+    pub eval_set: Vec<Batch>,
+    pub rng: Rng,
+    /// Alive flag per cluster (fault injection).
+    pub alive: Vec<bool>,
+    /// Whether the central aggregator (cloud/hub) is alive.
+    pub aggregator_alive: bool,
+    /// Scratch buffer reused by gossip.
+    pub(crate) scratch: Vec<f32>,
+    /// Verbose per-round logging.
+    pub verbose: bool,
+}
+
+impl Coordinator {
+    /// Build the full system from a config (backend, data, topology, net).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Coordinator> {
+        cfg.validate()?;
+        let backend: Box<dyn TrainBackend> = match &cfg.backend {
+            BackendKind::Mock { hidden } => {
+                // The mock MLP trains on the mlp_synth-shaped task.
+                Box::new(MockBackend::new(64, *hidden, 10, 16))
+            }
+            BackendKind::Pjrt { model, artifacts_dir } => {
+                let dir = artifacts_dir
+                    .clone()
+                    .unwrap_or_else(Manifest::default_dir);
+                Box::new(PjrtBackend::load(&dir, model)?)
+            }
+        };
+        Self::with_backend(cfg.clone(), backend)
+    }
+
+    /// Build with an explicit backend (tests inject custom mocks here).
+    pub fn with_backend(
+        cfg: ExperimentConfig,
+        backend: Box<dyn TrainBackend>,
+    ) -> Result<Coordinator> {
+        cfg.validate()?;
+        let rng = Rng::new(cfg.seed);
+        let fed = Self::build_data(&cfg, &*backend, &rng)?;
+
+        // Devices are assigned to clusters contiguously (paper §5.2):
+        // cluster i owns devices [i·dpc, (i+1)·dpc).
+        let dpc = cfg.devices_per_cluster();
+        let param_count = backend.param_count();
+        let init = backend.init_state(&rng.split(0x1217)).params;
+        let clusters: Vec<ClusterState> = (0..cfg.n_clusters)
+            .map(|ci| {
+                let device_ids: Vec<usize> = (ci * dpc..(ci + 1) * dpc).collect();
+                let n_samples = device_ids
+                    .iter()
+                    .map(|&d| fed.device_train[d].len())
+                    .sum();
+                ClusterState {
+                    device_ids,
+                    model: init.clone(),
+                    n_samples,
+                }
+            })
+            .collect();
+        debug_assert_eq!(init.len(), param_count);
+
+        let graph = Graph::by_name(&cfg.topology, cfg.n_clusters, &rng.split(0x706F))?;
+        if !graph.is_connected() {
+            return Err(CfelError::Topology(format!(
+                "backhaul {} is not connected",
+                cfg.topology
+            )));
+        }
+        let h_pi = MixingMatrix::metropolis(&graph).power(cfg.pi);
+
+        let mut net = NetworkModel::paper_defaults(
+            cfg.n_devices,
+            backend.flops_per_sample(),
+            backend.batch_size(),
+            param_count,
+        );
+        // Lossy upload compression shrinks every transmitted model.
+        net.model_bits *= cfg.compression.ratio();
+        if let Some(lo) = cfg.heterogeneity {
+            net = net.with_heterogeneity(lo, &rng.split(0x4E37));
+        }
+
+        let eval_set = eval_batches(&fed.test, backend.batch_size());
+        let n_clusters = cfg.n_clusters;
+        Ok(Coordinator {
+            cfg,
+            backend,
+            fed,
+            clusters,
+            graph,
+            h_pi,
+            net,
+            eval_set,
+            rng,
+            alive: vec![true; n_clusters],
+            aggregator_alive: true,
+            scratch: Vec::new(),
+            verbose: false,
+        })
+    }
+
+    fn build_data(
+        cfg: &ExperimentConfig,
+        backend: &dyn TrainBackend,
+        rng: &Rng,
+    ) -> Result<FederatedData> {
+        // The synthetic spec must match the backend's input shape.
+        let mut spec = SyntheticSpec {
+            dim: backend.flat_dim(),
+            num_classes: backend.num_classes(),
+            ..SyntheticSpec::mlp_synth()
+        };
+        if let Some(n) = cfg.data_noise {
+            spec.noise = n;
+        }
+        if let Some(s) = cfg.writer_style {
+            spec.writer_style = s;
+        }
+        let data_rng = rng.split(0xDA7A);
+        let fed = match &cfg.data {
+            DataScheme::FemnistWriters { label_alpha } => femnist_federation(
+                spec,
+                cfg.n_devices,
+                cfg.samples_per_device,
+                *label_alpha,
+                &data_rng,
+            ),
+            scheme => {
+                let pool_size = cfg.n_devices * cfg.samples_per_device;
+                // Build the index partition over a balanced pool whose
+                // labels are i % num_classes (global_pool's layout).
+                let labels: Vec<u32> = (0..pool_size)
+                    .map(|i| (i % backend.num_classes()) as u32)
+                    .collect();
+                let parts = match scheme {
+                    DataScheme::PoolIid => partition::iid(pool_size, cfg.n_devices, &data_rng),
+                    DataScheme::PoolDirichlet { alpha } => partition::dirichlet(
+                        &labels,
+                        backend.num_classes(),
+                        cfg.n_devices,
+                        *alpha,
+                        &data_rng,
+                    ),
+                    DataScheme::ClusterIid => partition::cluster_iid(
+                        &labels,
+                        cfg.n_clusters,
+                        cfg.devices_per_cluster(),
+                        &data_rng,
+                    )?,
+                    DataScheme::ClusterNonIid { c_labels } => partition::cluster_noniid(
+                        &labels,
+                        cfg.n_clusters,
+                        cfg.devices_per_cluster(),
+                        *c_labels,
+                        &data_rng,
+                    )?,
+                    DataScheme::FemnistWriters { .. } => unreachable!(),
+                };
+                partition::validate_partition(&parts, pool_size, true)
+                    .map_err(|e| CfelError::Data(format!("partition invalid: {e}")))?;
+                pool_federation(spec, pool_size, cfg.test_size, &parts, &data_rng)
+            }
+        };
+        for (k, d) in fed.device_train.iter().enumerate() {
+            if d.is_empty() {
+                return Err(CfelError::Data(format!("device {k} got no data")));
+            }
+        }
+        Ok(fed)
+    }
+
+    // ----- shared round machinery ------------------------------------------
+
+    /// Indices of currently alive clusters.
+    pub fn alive_clusters(&self) -> Vec<usize> {
+        (0..self.clusters.len()).filter(|&i| self.alive[i]).collect()
+    }
+
+    /// Intra-cluster aggregation (Eq. 6): size-weighted average of the
+    /// freshly trained (participating) device models of cluster `ci`.
+    pub(crate) fn aggregate_cluster(&mut self, ci: usize, outcomes: &[(usize, LocalOutcome)]) {
+        let total: usize = outcomes.iter().map(|(_, o)| o.n_samples).sum();
+        let weights: Vec<f64> = outcomes
+            .iter()
+            .map(|(_, o)| o.n_samples as f64 / total as f64)
+            .collect();
+        let rows: Vec<&[f32]> = outcomes.iter().map(|(_, o)| o.params.as_slice()).collect();
+        aggregation::weighted_average_into(&rows, &weights, &mut self.clusters[ci].model);
+    }
+
+    /// Cloud aggregation (FedAvg / Hier-FAvg): size-weighted average over
+    /// alive clusters, broadcast back to every alive cluster.
+    pub(crate) fn cloud_aggregate(&mut self) {
+        let alive = self.alive_clusters();
+        let models: Vec<Vec<f32>> = alive
+            .iter()
+            .map(|&i| self.clusters[i].model.clone())
+            .collect();
+        let sizes: Vec<usize> = alive.iter().map(|&i| self.clusters[i].n_samples).collect();
+        let global = aggregation::global_average(&models, &sizes);
+        for &i in &alive {
+            self.clusters[i].model.copy_from_slice(&global);
+        }
+    }
+
+    /// Inter-cluster gossip (Eq. 7) over the alive subgraph. Backhaul
+    /// messages go through the configured compressor first (what the
+    /// neighbouring servers actually receive).
+    pub(crate) fn gossip(&mut self) {
+        let alive = self.alive_clusters();
+        if alive.len() <= 1 {
+            return;
+        }
+        let mut models: Vec<Vec<f32>> = alive
+            .iter()
+            .map(|&i| std::mem::take(&mut self.clusters[i].model))
+            .collect();
+        for m in &mut models {
+            self.cfg.compression.roundtrip(m);
+        }
+        aggregation::gossip_mix(&mut models, &self.h_pi, &mut self.scratch);
+        for (slot, &i) in alive.iter().enumerate() {
+            self.clusters[i].model = std::mem::take(&mut models[slot]);
+        }
+    }
+
+    /// Apply any scheduled fault at the start of `round`.
+    pub(crate) fn apply_fault(&mut self, round: usize) -> Result<()> {
+        match self.cfg.fault {
+            Some(FaultSpec::KillCluster { at_round, cluster }) if at_round == round => {
+                if self.cfg.algorithm == AlgorithmKind::CeFedAvg {
+                    // Rebuild the gossip matrix over the surviving graph.
+                    let (sub, _map) = self.graph.remove_node(self.count_alive_before(cluster))?;
+                    if !sub.is_connected() {
+                        return Err(CfelError::Topology(
+                            "fault disconnected the backhaul".into(),
+                        ));
+                    }
+                    self.h_pi = MixingMatrix::metropolis(&sub).power(self.cfg.pi);
+                    self.graph = sub;
+                }
+                self.alive[cluster] = false;
+                if self.verbose {
+                    eprintln!("[fault] cluster {cluster} killed at round {round}");
+                }
+            }
+            Some(FaultSpec::KillAggregator { at_round }) if at_round == round => {
+                self.aggregator_alive = false;
+                if self.verbose {
+                    eprintln!("[fault] central aggregator killed at round {round}");
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Graph-node index of `cluster` among currently alive clusters.
+    fn count_alive_before(&self, cluster: usize) -> usize {
+        (0..cluster).filter(|&i| self.alive[i]).count()
+    }
+
+    /// Simulated latency of this round per Eq. 8 for the configured
+    /// algorithm.
+    pub(crate) fn round_latency(&self, stats: &RoundStats) -> RoundLatency {
+        match self.cfg.algorithm {
+            AlgorithmKind::CeFedAvg => {
+                self.net
+                    .ce_fedavg_round(&stats.device_steps, self.cfg.q, self.cfg.pi as usize)
+            }
+            AlgorithmKind::FedAvg => self.net.fedavg_round(&stats.device_steps),
+            AlgorithmKind::HierFAvg => self.net.hier_favg_round(&stats.device_steps, self.cfg.q),
+            AlgorithmKind::LocalEdge => self.net.local_edge_round(&stats.device_steps, self.cfg.q),
+        }
+    }
+
+    /// Evaluate the current models on the common test set.
+    ///
+    /// CE-FedAvg / Local-Edge report the mean accuracy of edge models
+    /// (paper §6.2); FedAvg / Hier-FAvg report the cloud model — which
+    /// equals every cluster model right after cloud aggregation, so the
+    /// same weighted-mean computation serves all four.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let alive = self.alive_clusters();
+        let mut acc = 0.0;
+        let mut loss = 0.0;
+        let mut total = 0usize;
+        for &ci in &alive {
+            let r = self.backend.eval(&self.clusters[ci].model, &self.eval_set)?;
+            let w = self.clusters[ci].n_samples;
+            acc += r.accuracy * w as f64;
+            loss += r.loss * w as f64;
+            total += w;
+        }
+        if total == 0 {
+            return Ok((f64::NAN, f64::NAN));
+        }
+        Ok((acc / total as f64, loss / total as f64))
+    }
+
+    /// Consensus distance across alive cluster models (diagnostic).
+    pub fn consensus(&self) -> f64 {
+        let alive = self.alive_clusters();
+        let models: Vec<Vec<f32>> = alive
+            .iter()
+            .map(|&i| self.clusters[i].model.clone())
+            .collect();
+        aggregation::consensus_distance(&models)
+    }
+
+    /// Run the configured number of global rounds; returns the history.
+    pub fn run(&mut self) -> Result<History> {
+        let mut history = History::new();
+        let mut sim_time = 0.0f64;
+        let mut wall = 0.0f64;
+        for round in 0..self.cfg.rounds {
+            let t0 = Instant::now();
+            self.apply_fault(round)?;
+            let stats = match self.cfg.algorithm {
+                AlgorithmKind::CeFedAvg => self.ce_fedavg_round(round)?,
+                AlgorithmKind::FedAvg => self.fedavg_round(round)?,
+                AlgorithmKind::HierFAvg => self.hier_favg_round(round)?,
+                AlgorithmKind::LocalEdge => self.local_edge_round(round)?,
+            };
+            wall += t0.elapsed().as_secs_f64();
+            sim_time += self.round_latency(&stats).total();
+
+            let (acc, tloss) = if (round + 1) % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds
+            {
+                self.evaluate()?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let rec = RoundRecord {
+                round: round + 1,
+                sim_time_s: sim_time,
+                wall_time_s: wall,
+                train_loss: stats.mean_loss(),
+                test_accuracy: acc,
+                test_loss: tloss,
+                consensus: self.consensus(),
+                steps: stats.step_count,
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{}] round {:>3}  loss {:.4}  acc {}  sim {:.1}s",
+                    self.cfg.algorithm.name(),
+                    rec.round,
+                    rec.train_loss,
+                    if acc.is_nan() {
+                        "  -  ".to_string()
+                    } else {
+                        format!("{:.4}", acc)
+                    },
+                    sim_time
+                );
+            }
+            history.push(rec);
+        }
+        Ok(history)
+    }
+}

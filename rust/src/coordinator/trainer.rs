@@ -1,0 +1,176 @@
+//! Device-local training: τ epochs of mini-batch SGD from the edge model
+//! (paper Eqs. 4–5, epoch semantics following Reddi et al. [42]).
+
+use crate::coordinator::Coordinator;
+use crate::data::sampler::EpochSampler;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::model::ModelState;
+use crate::runtime::TrainBackend;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// Result of one device's local run within an edge round.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    /// Final local model x^{(k)}_{l,r,τ}.
+    pub params: Vec<f32>,
+    /// SGD steps executed (netsim Eq. 8 workload).
+    pub steps: usize,
+    pub loss_sum: f64,
+    /// Local sample count |D_k| (aggregation weight).
+    pub n_samples: usize,
+}
+
+/// Train one device for `epochs` local epochs starting from `init_params`
+/// (momentum starts at zero — devices are stateless between rounds).
+pub fn train_device(
+    backend: &dyn TrainBackend,
+    data: &Dataset,
+    init_params: &[f32],
+    epochs: usize,
+    lr: f32,
+    rng: Rng,
+) -> Result<LocalOutcome> {
+    let mut state = ModelState::from_params(init_params.to_vec());
+    let mut sampler = EpochSampler::new(data.len(), backend.batch_size(), rng);
+    let mut steps = 0usize;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..epochs {
+        for batch in sampler.epoch_batches(data) {
+            let loss = backend.train_step(&mut state, &batch, lr)?;
+            loss_sum += loss as f64;
+            steps += 1;
+        }
+    }
+    Ok(LocalOutcome {
+        params: state.params,
+        steps,
+        loss_sum,
+        n_samples: data.len(),
+    })
+}
+
+impl Coordinator {
+    /// Run one edge round for cluster `ci`: the sampled participants
+    /// (config `participation`, classic FedAvg client sampling) each
+    /// train `epochs` epochs from the current edge model, in parallel
+    /// when the backend allows it. RNG streams are derived from
+    /// (seed, device, phase) so results are identical regardless of
+    /// thread count. Returns `(device_id, outcome)` pairs; the uploads
+    /// have already been passed through the configured lossy compressor
+    /// (what the edge server actually receives).
+    pub(crate) fn train_cluster(
+        &self,
+        ci: usize,
+        epochs: usize,
+        phase: u64,
+    ) -> Result<Vec<(usize, LocalOutcome)>> {
+        let cluster = &self.clusters[ci];
+        let participants = self.sample_participants(ci, phase);
+        let n = participants.len();
+        let threads = if self.backend.parallel_devices() {
+            default_threads(n)
+        } else {
+            1
+        };
+        let results: Vec<Result<LocalOutcome>> = parallel_map(n, threads, |slot| {
+            let dev = participants[slot];
+            let rng = self
+                .rng
+                .split(0x5EED_0000 + dev as u64)
+                .split(phase);
+            let mut out = train_device(
+                &*self.backend,
+                &self.fed.device_train[dev],
+                &cluster.model,
+                epochs,
+                self.cfg.lr,
+                rng,
+            )?;
+            // Device -> edge upload: the server sees the lossy model.
+            self.cfg.compression.roundtrip(&mut out.params);
+            Ok(out)
+        });
+        results
+            .into_iter()
+            .zip(participants)
+            .map(|(r, dev)| r.map(|o| (dev, o)))
+            .collect()
+    }
+
+    /// Deterministic participant sample for (cluster, phase).
+    fn sample_participants(&self, ci: usize, phase: u64) -> Vec<usize> {
+        let ids = &self.clusters[ci].device_ids;
+        if self.cfg.participation >= 1.0 {
+            return ids.clone();
+        }
+        let k = ((ids.len() as f64 * self.cfg.participation).ceil() as usize)
+            .clamp(1, ids.len());
+        let mut rng = self
+            .rng
+            .split(0x9A27_0000 + ci as u64)
+            .split(phase);
+        let mut picks = rng.choose(ids.len(), k);
+        picks.sort_unstable(); // stable aggregation order
+        picks.into_iter().map(|slot| ids[slot]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Prototypes, SyntheticSpec};
+    use crate::runtime::MockBackend;
+
+    fn fixture() -> (MockBackend, Dataset) {
+        let be = MockBackend::mlp_synth();
+        let protos = Prototypes::new(SyntheticSpec::mlp_synth(), &Rng::new(1));
+        let ds = protos.global_pool(48, &Rng::new(2));
+        (be, ds)
+    }
+
+    #[test]
+    fn steps_match_epoch_math() {
+        let (be, ds) = fixture();
+        let init = be.init_state(&Rng::new(3)).params;
+        let out = train_device(&be, &ds, &init, 2, 0.05, Rng::new(4)).unwrap();
+        // 48 samples / batch 16 = 3 batches per epoch; 2 epochs = 6 steps.
+        assert_eq!(out.steps, 6);
+        assert_eq!(out.n_samples, 48);
+        assert_eq!(out.params.len(), be.param_count());
+    }
+
+    #[test]
+    fn training_moves_params_and_reduces_loss() {
+        let (be, ds) = fixture();
+        let init = be.init_state(&Rng::new(3)).params;
+        let out1 = train_device(&be, &ds, &init, 1, 0.1, Rng::new(4)).unwrap();
+        let out8 = train_device(&be, &ds, &init, 8, 0.1, Rng::new(4)).unwrap();
+        assert_ne!(out1.params, init);
+        let mean1 = out1.loss_sum / out1.steps as f64;
+        let mean8 = out8.loss_sum / out8.steps as f64;
+        assert!(mean8 < mean1, "{mean8} !< {mean1}");
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let (be, ds) = fixture();
+        let init = be.init_state(&Rng::new(3)).params;
+        let a = train_device(&be, &ds, &init, 2, 0.1, Rng::new(7)).unwrap();
+        let b = train_device(&be, &ds, &init, 2, 0.1, Rng::new(7)).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.loss_sum, b.loss_sum);
+    }
+
+    #[test]
+    fn momentum_starts_fresh() {
+        // Two successive calls from the same init give identical results —
+        // no hidden state leaks between local rounds.
+        let (be, ds) = fixture();
+        let init = be.init_state(&Rng::new(3)).params;
+        let a = train_device(&be, &ds, &init, 1, 0.1, Rng::new(9)).unwrap();
+        let b = train_device(&be, &ds, &init, 1, 0.1, Rng::new(9)).unwrap();
+        assert_eq!(a.params, b.params);
+    }
+}

@@ -1,0 +1,120 @@
+//! Epoch-based mini-batch sampling over a device's local dataset.
+//!
+//! The paper (following Reddi et al. [42]) runs τ local *epochs* rather
+//! than τ fixed steps; [`EpochSampler`] shuffles per epoch and yields
+//! fixed-size [`Batch`]es (padding the tail batch by cycling, with `valid`
+//! recording the real count so step-weighted aggregation stays exact).
+
+use crate::data::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+/// Deterministic per-device batch sampler.
+pub struct EpochSampler {
+    batch_size: usize,
+    rng: Rng,
+    order: Vec<usize>,
+}
+
+impl EpochSampler {
+    pub fn new(n_samples: usize, batch_size: usize, rng: Rng) -> EpochSampler {
+        assert!(n_samples > 0, "sampler over empty dataset");
+        assert!(batch_size > 0);
+        EpochSampler { batch_size, rng, order: (0..n_samples).collect() }
+    }
+
+    /// Number of batches in one epoch (ceil division).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+
+    /// Shuffle and return the batch index lists for one epoch.
+    pub fn epoch(&mut self) -> Vec<Vec<usize>> {
+        self.rng.shuffle(&mut self.order);
+        self.order
+            .chunks(self.batch_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Convenience: gather one epoch of concrete batches from `data`.
+    pub fn epoch_batches(&mut self, data: &Dataset) -> Vec<Batch> {
+        self.epoch()
+            .into_iter()
+            .map(|idx| Batch::gather(data, &idx, self.batch_size))
+            .collect()
+    }
+}
+
+/// Split a test set into fixed-size batches (no shuffling; padded tail).
+pub fn eval_batches(data: &Dataset, batch_size: usize) -> Vec<Batch> {
+    assert!(!data.is_empty());
+    (0..data.len())
+        .collect::<Vec<_>>()
+        .chunks(batch_size)
+        .map(|c| Batch::gather(data, c, batch_size))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut d = Dataset::new(1, 2);
+        for i in 0..n {
+            d.push(&[i as f32], (i % 2) as u32);
+        }
+        d
+    }
+
+    #[test]
+    fn epoch_covers_every_sample_once() {
+        let mut s = EpochSampler::new(10, 3, Rng::new(1));
+        let batches = s.epoch();
+        assert_eq!(batches.len(), 4);
+        let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut s = EpochSampler::new(20, 20, Rng::new(2));
+        let a = s.epoch()[0].clone();
+        let b = s.epoch()[0].clone();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = EpochSampler::new(12, 4, Rng::new(3));
+        let mut b = EpochSampler::new(12, 4, Rng::new(3));
+        assert_eq!(a.epoch(), b.epoch());
+    }
+
+    #[test]
+    fn batch_gathering_pads_tail() {
+        let d = toy(5);
+        let mut s = EpochSampler::new(5, 4, Rng::new(4));
+        let batches = s.epoch_batches(&d);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].valid, 4);
+        assert_eq!(batches[1].valid, 1);
+        assert_eq!(batches[1].x.len(), 4); // padded to batch_size * dim
+    }
+
+    #[test]
+    fn batches_per_epoch_ceil() {
+        assert_eq!(EpochSampler::new(10, 3, Rng::new(0)).batches_per_epoch(), 4);
+        assert_eq!(EpochSampler::new(9, 3, Rng::new(0)).batches_per_epoch(), 3);
+    }
+
+    #[test]
+    fn eval_batches_preserve_order() {
+        let d = toy(7);
+        let bs = eval_batches(&d, 3);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].x, vec![0.0, 1.0, 2.0]);
+        assert_eq!(bs[2].valid, 1);
+    }
+}

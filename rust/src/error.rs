@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, CfelError>;
+
+/// Errors produced by the CFEL coordinator and its substrates.
+#[derive(Debug, thiserror::Error)]
+pub enum CfelError {
+    /// Invalid experiment / system configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed JSON (manifest, config file, results).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Artifact manifest inconsistent with HLO or with the config.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// Topology construction or validation failure (e.g. disconnected graph).
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    /// Data generation / partitioning failure.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// PJRT runtime failure (compile, execute, literal conversion).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying XLA error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for CfelError {
+    fn from(e: xla::Error) -> Self {
+        CfelError::Xla(e.to_string())
+    }
+}

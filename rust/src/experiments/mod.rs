@@ -1,0 +1,108 @@
+//! Experiment harnesses — one runner per paper figure/table.
+//!
+//! Every runner regenerates its figure's data: it builds the exact system
+//! configurations of the paper's §6, runs them through the coordinator,
+//! and writes `results/<fig>.csv` (per-round series, [`metrics::ROUND_HEADER`]
+//! schema) plus `results/<fig>.md` (the headline comparison the paper's
+//! text quotes). `cfel figures --fig all` runs everything;
+//! `cargo bench` wraps the same runners with timing.
+//!
+//! The default backend is the mock MLP so a full figure regenerates in
+//! seconds; pass `--backend pjrt --model femnist_cnn` to run the real
+//! AOT artifacts through PJRT (slower, same orderings — see
+//! EXPERIMENTS.md for both sets of numbers).
+
+pub mod ablation;
+pub mod figures;
+pub mod runtime_table;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use crate::config::BackendKind;
+use crate::error::{CfelError, Result};
+
+/// Shared options for all figure runners.
+#[derive(Debug, Clone)]
+pub struct FigureOpts {
+    pub out_dir: PathBuf,
+    /// Global rounds per run (paper: up to 1500; scaled default).
+    pub rounds: usize,
+    pub seed: u64,
+    pub backend: BackendKind,
+    pub verbose: bool,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            out_dir: PathBuf::from("results"),
+            rounds: 30,
+            seed: 1,
+            backend: BackendKind::Mock { hidden: 32 },
+            verbose: false,
+        }
+    }
+}
+
+/// All known figure ids.
+pub const ALL_FIGURES: &[&str] =
+    &["fig2", "fig3", "fig4", "fig5", "fig6", "table1", "runtime", "ablation"];
+
+/// Run one figure (or "all"); returns the markdown summary.
+pub fn run_figure(name: &str, opts: &FigureOpts) -> Result<String> {
+    match name {
+        "fig2" => figures::fig2(opts),
+        "fig3" => figures::fig3(opts),
+        "fig4" => figures::fig4(opts),
+        "fig5" => figures::fig5(opts),
+        "fig6" => figures::fig6(opts),
+        "table1" => table1::run(opts),
+        "runtime" => runtime_table::run(opts),
+        "ablation" => ablation::run(opts),
+        "all" => {
+            let mut out = String::new();
+            for f in ALL_FIGURES {
+                out.push_str(&format!("\n\n# {f}\n\n"));
+                out.push_str(&run_figure(f, opts)?);
+            }
+            Ok(out)
+        }
+        _ => Err(CfelError::Config(format!(
+            "unknown figure {name:?}; have {ALL_FIGURES:?} or \"all\""
+        ))),
+    }
+}
+
+/// Write a markdown summary next to the CSV.
+pub(crate) fn write_summary(opts: &FigureOpts, fig: &str, text: &str) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(opts.out_dir.join(format!("{fig}.md")), text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(run_figure("fig99", &FigureOpts::default()).is_err());
+    }
+
+    #[test]
+    fn all_figures_listed_are_dispatchable() {
+        // Smoke-run the cheapest figure end to end in a tempdir.
+        let mut opts = FigureOpts {
+            out_dir: std::env::temp_dir().join(format!("cfel_fig_{}", std::process::id())),
+            rounds: 2,
+            ..Default::default()
+        };
+        opts.verbose = false;
+        let summary = run_figure("fig6", &opts).unwrap();
+        assert!(summary.contains("zeta") || summary.contains("ζ"));
+        assert!(opts.out_dir.join("fig6.csv").exists());
+        assert!(opts.out_dir.join("fig6.md").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,107 @@
+//! Eq. 8 runtime decomposition table (§4.2 / §6.1 constants).
+//!
+//! For each model in the artifact manifest (falling back to the mock
+//! model's analytic numbers when artifacts are absent), print one global
+//! round's latency decomposition — compute vs device-edge upload vs
+//! backhaul/cloud — for all four algorithms under the paper's default
+//! system (64 devices, 8 clusters, τ=2, q=8, π=10).
+
+use crate::error::Result;
+use crate::experiments::{write_summary, FigureOpts};
+use crate::metrics::markdown_table;
+use crate::netsim::NetworkModel;
+use crate::runtime::Manifest;
+
+struct ModelRow {
+    name: String,
+    flops_per_sample: f64,
+    param_count: usize,
+    batch: usize,
+}
+
+pub fn run(opts: &FigureOpts) -> Result<String> {
+    let mut models = Vec::new();
+    if let Ok(man) = Manifest::load(&Manifest::default_dir()) {
+        for (name, e) in &man.models {
+            models.push(ModelRow {
+                name: name.clone(),
+                flops_per_sample: e.flops_per_sample,
+                param_count: e.schema.param_count,
+                batch: e.batch_size,
+            });
+        }
+    }
+    if models.is_empty() {
+        models.push(ModelRow {
+            name: "mock-mlp".into(),
+            flops_per_sample: 2.0 * (64.0 * 32.0 + 32.0 * 10.0),
+            param_count: 64 * 32 + 32 + 32 * 10 + 10,
+            batch: 16,
+        });
+    }
+    // Paper-scale reference points for context.
+    models.push(ModelRow {
+        name: "paper femnist-cnn (6.6M)".into(),
+        flops_per_sample: 13.30e6,
+        param_count: 6_603_710,
+        batch: 50,
+    });
+    models.push(ModelRow {
+        name: "paper vgg-11 (9.75M)".into(),
+        flops_per_sample: 920.67e6,
+        param_count: 9_750_922,
+        batch: 50,
+    });
+
+    let (n, q, tau, pi) = (64usize, 8usize, 2usize, 10usize);
+    let mut rows = Vec::new();
+    for m in &models {
+        let net = NetworkModel::paper_defaults(n, m.flops_per_sample, m.batch, m.param_count);
+        // One epoch ≈ 1 batch for the scaled sets; the paper's τ counts
+        // steps, so use steps = qτ directly for the reference rows.
+        let steps: Vec<(usize, usize)> = (0..n).map(|d| (d, q * tau)).collect();
+        for (alg, lat) in [
+            ("ce-fedavg", net.ce_fedavg_round(&steps, q, pi)),
+            ("fedavg", net.fedavg_round(&steps)),
+            ("hier-favg", net.hier_favg_round(&steps, q)),
+            ("local-edge", net.local_edge_round(&steps, q)),
+        ] {
+            rows.push(vec![
+                m.name.clone(),
+                alg.to_string(),
+                format!("{:.3}", lat.compute_s),
+                format!("{:.3}", lat.upload_s),
+                format!("{:.3}", lat.backhaul_s),
+                format!("{:.3}", lat.total()),
+            ]);
+        }
+    }
+    let summary = format!(
+        "Eq. 8 — per-global-round latency decomposition (64 devices, 8 \
+         clusters, τ=2, q=8, π=10; b_d2e=10 Mbps, b_e2e=50 Mbps, \
+         b_d2c=1 Mbps, devices at iPhone-X 691.2 GFLOPS).\n\n{}",
+        markdown_table(
+            &["model", "algorithm", "compute_s", "upload_s", "backhaul_s", "total_s"],
+            &rows
+        )
+    );
+    write_summary(opts, "runtime", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_rows_for_paper_models() {
+        let opts = FigureOpts {
+            out_dir: std::env::temp_dir().join(format!("cfel_rt_{}", std::process::id())),
+            ..Default::default()
+        };
+        let s = run(&opts).unwrap();
+        assert!(s.contains("vgg-11"));
+        assert!(s.contains("ce-fedavg"));
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,42 @@
+//! # cfel — Cooperative Federated Edge Learning
+//!
+//! A production-grade reproduction of *Scalable and Low-Latency Federated
+//! Learning with Cooperative Mobile Edge Networking* (Zhang et al., 2022):
+//! the CFEL two-tier edge architecture and the CE-FedAvg federated
+//! optimization algorithm, plus the three baseline FL frameworks the paper
+//! compares against (cloud FedAvg, hierarchical Hier-FAvg, Local-Edge).
+//!
+//! Architecture (see DESIGN.md):
+//! * **Layer 3 (this crate)** — the coordinator: cluster/device topology,
+//!   gossip over the edge backhaul, partitioning, the paper's runtime model
+//!   (Eq. 8), metrics and experiment harnesses.
+//! * **Layer 2/1 (python/, build time only)** — JAX model fwd/bwd on Pallas
+//!   kernels, AOT-lowered to HLO text and executed here through the PJRT C
+//!   API ([`runtime::PjrtBackend`]). Python never runs on the request path.
+//!
+//! Quick start:
+//! ```no_run
+//! use cfel::config::ExperimentConfig;
+//! use cfel::coordinator::Coordinator;
+//!
+//! let cfg = ExperimentConfig::quickstart();
+//! let mut coord = Coordinator::from_config(&cfg).unwrap();
+//! let history = coord.run().unwrap();
+//! println!("final accuracy: {:.3}", history.last().unwrap().test_accuracy);
+//! ```
+
+pub mod aggregation;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+
+pub use error::{CfelError, Result};

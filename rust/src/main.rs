@@ -1,0 +1,313 @@
+//! `cfel` — CLI for the CFEL / CE-FedAvg reproduction.
+//!
+//! Subcommands:
+//!   train      run one experiment (algorithm, system shape, backend flags)
+//!   figures    regenerate the paper's figures/tables into results/
+//!   topology   print spectral diagnostics (ζ, Ω₁, Ω₂) for a backhaul graph
+//!   artifacts  inspect the AOT artifact manifest
+//!
+//! Examples:
+//!   cfel train --algorithm ce-fedavg --rounds 20
+//!   cfel train --backend pjrt --model femnist_cnn --devices 16 --clusters 4
+//!   cfel figures --fig fig2 --rounds 30 --out results
+//!   cfel topology --kind er:0.4 --m 8 --pi 10
+
+use std::path::PathBuf;
+
+use cfel::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::experiments::{run_figure, FigureOpts};
+use cfel::metrics::{best_accuracy, time_to_accuracy, CsvWriter, ROUND_HEADER};
+use cfel::runtime::Manifest;
+use cfel::topology::{Graph, MixingMatrix};
+use cfel::util::cli::Command;
+use cfel::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("figures") => cmd_figures(&argv[1..]),
+        Some("topology") => cmd_topology(&argv[1..]),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "cfel — Cooperative Federated Edge Learning (CE-FedAvg reproduction)\n\n\
+         Subcommands:\n\
+         \x20 train      run one experiment\n\
+         \x20 figures    regenerate paper figures/tables (fig2..fig6, table1, runtime, all)\n\
+         \x20 topology   spectral diagnostics for a backhaul graph\n\
+         \x20 artifacts  inspect the AOT artifact manifest\n\n\
+         Run `cfel <subcommand> --help` for flags."
+    );
+}
+
+fn train_command() -> Command {
+    Command::new("cfel train", "run one CFEL experiment")
+        .flag_default("algorithm", "ce-fedavg", "ce-fedavg | fedavg | hier-favg | local-edge")
+        .flag_default("devices", "16", "total devices n")
+        .flag_default("clusters", "4", "edge servers m (must divide n)")
+        .flag_default("tau", "2", "local epochs per edge round (τ)")
+        .flag_default("q", "2", "edge rounds per global round")
+        .flag_default("pi", "10", "gossip steps per global aggregation (π)")
+        .flag_default("rounds", "15", "global rounds")
+        .flag_default("lr", "0.1", "local learning rate")
+        .flag_default("topology", "ring", "ring | complete | star | line | er:<p>")
+        .flag_default("data", "writers:0.3", "writers:<a> | dirichlet:<a> | iid | cluster-iid | cluster-noniid:<C>")
+        .flag_default("samples", "60", "training samples per device")
+        .flag_default("seed", "42", "experiment seed")
+        .flag_default("backend", "mock", "mock | pjrt")
+        .flag_default("model", "mlp_synth", "artifact model name (pjrt backend)")
+        .flag("artifacts-dir", "artifacts directory (default: <repo>/artifacts)")
+        .flag("heterogeneity", "device speed floor in (0,1], e.g. 0.5")
+        .flag("csv", "write per-round history to this CSV file")
+        .flag_default("eval-every", "1", "evaluate every k rounds")
+        .flag_default("compression", "none", "none | topk:<frac> | quantize:<bits> (upload codec)")
+        .flag_default("participation", "1.0", "fraction of devices sampled per edge round")
+        .flag("save", "write the final global model to this checkpoint file")
+        .bool_flag("quiet", "suppress per-round logging")
+        .flag("config", "load an ExperimentConfig JSON file (other flags override)")
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let cmd = train_command();
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    match run_train(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let j = cfel::util::json::Json::parse_file(std::path::Path::new(path))?;
+        ExperimentConfig::from_json(&j)?
+    } else {
+        ExperimentConfig::quickstart()
+    };
+    cfg.algorithm = AlgorithmKind::parse(&args.get_or("algorithm", cfg.algorithm.name()))?;
+    cfg.n_devices = args.get_usize("devices", cfg.n_devices);
+    cfg.n_clusters = args.get_usize("clusters", cfg.n_clusters);
+    cfg.tau = args.get_usize("tau", cfg.tau);
+    cfg.q = args.get_usize("q", cfg.q);
+    cfg.pi = args.get_usize("pi", cfg.pi as usize) as u32;
+    cfg.rounds = args.get_usize("rounds", cfg.rounds);
+    cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+    cfg.topology = args.get_or("topology", &cfg.topology);
+    cfg.data = DataScheme::parse(&args.get_or("data", &cfg.data.name()))?;
+    cfg.samples_per_device = args.get_usize("samples", cfg.samples_per_device);
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every);
+    if args.get("heterogeneity").is_some() {
+        cfg.heterogeneity = Some(args.get_f64("heterogeneity", 0.5));
+    }
+    cfg.backend = match args.get_or("backend", "mock").as_str() {
+        "mock" => BackendKind::Mock { hidden: 32 },
+        "pjrt" => BackendKind::Pjrt {
+            model: args.get_or("model", "mlp_synth"),
+            artifacts_dir: args.get("artifacts-dir").map(PathBuf::from),
+        },
+        other => {
+            return Err(cfel::CfelError::Config(format!("unknown backend {other:?}")))
+        }
+    };
+    cfg.compression =
+        cfel::compression::Compressor::parse(&args.get_or("compression", &cfg.compression.name()))?;
+    cfg.participation = args.get_f64("participation", cfg.participation);
+    cfg.validate()?;
+
+    let mut coord = Coordinator::from_config(&cfg)?;
+    coord.verbose = !args.get_bool("quiet");
+    eprintln!(
+        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {}",
+        cfg.algorithm.name(),
+        coord.backend.name(),
+        cfg.n_devices,
+        cfg.n_clusters,
+        cfg.tau,
+        cfg.q,
+        cfg.pi,
+        cfg.topology,
+        cfg.data.name()
+    );
+    let history = coord.run()?;
+
+    if let Some(csv_path) = args.get("csv") {
+        let mut w = CsvWriter::create(std::path::Path::new(csv_path), ROUND_HEADER)?;
+        for rec in &history {
+            w.round_row(cfg.algorithm.name(), rec)?;
+        }
+        eprintln!("[cfel] wrote {csv_path}");
+    }
+
+    let last = history.last().expect("at least one round");
+    let best = best_accuracy(&history);
+    println!("rounds:          {}", history.len());
+    println!("final accuracy:  {:.4}", last.test_accuracy);
+    println!("best accuracy:   {best:.4}");
+    println!("final loss:      {:.4}", last.train_loss);
+    println!("sim time:        {:.1} s (Eq. 8)", last.sim_time_s);
+    println!("wall time:       {:.1} s", last.wall_time_s);
+    if let Some((r, t)) = time_to_accuracy(&history, best * 0.9) {
+        println!("90%-of-best hit: round {r} / {t:.1} sim-s");
+    }
+    if let Some(path) = args.get("save") {
+        // Persist the size-weighted global model.
+        let sizes: Vec<usize> = coord.clusters.iter().map(|c| c.n_samples).collect();
+        let models: Vec<Vec<f32>> = coord.clusters.iter().map(|c| c.model.clone()).collect();
+        let global = cfel::aggregation::global_average(&models, &sizes);
+        let state = cfel::model::ModelState::from_params(global);
+        cfel::model::checkpoint::save(
+            std::path::Path::new(path),
+            &state,
+            coord.backend.name(),
+            history.len(),
+        )?;
+        eprintln!("[cfel] saved checkpoint to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> i32 {
+    let cmd = Command::new("cfel figures", "regenerate paper figures/tables")
+        .flag_default("fig", "all", "fig2|fig3|fig4|fig5|fig6|table1|runtime|all")
+        .flag_default("out", "results", "output directory")
+        .flag_default("rounds", "30", "global rounds per run")
+        .flag_default("seed", "1", "seed")
+        .flag_default("backend", "mock", "mock | pjrt")
+        .flag_default("model", "mlp_synth", "artifact model name (pjrt)")
+        .bool_flag("verbose", "per-round logging");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let backend = match args.get_or("backend", "mock").as_str() {
+        "pjrt" => BackendKind::Pjrt {
+            model: args.get_or("model", "mlp_synth"),
+            artifacts_dir: None,
+        },
+        _ => BackendKind::Mock { hidden: 32 },
+    };
+    let opts = FigureOpts {
+        out_dir: PathBuf::from(args.get_or("out", "results")),
+        rounds: args.get_usize("rounds", 30),
+        seed: args.get_usize("seed", 1) as u64,
+        backend,
+        verbose: args.get_bool("verbose"),
+    };
+    match run_figure(&args.get_or("fig", "all"), &opts) {
+        Ok(summary) => {
+            println!("{summary}");
+            println!("\n[cfel] CSVs + summaries written to {}", opts.out_dir.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_topology(argv: &[String]) -> i32 {
+    let cmd = Command::new("cfel topology", "spectral diagnostics for a backhaul graph")
+        .flag_default("kind", "ring", "ring | complete | star | line | er:<p>")
+        .flag_default("m", "8", "number of edge servers")
+        .flag_default("pi", "10", "gossip steps")
+        .flag_default("seed", "1", "seed (ER graphs)");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let kind = args.get_or("kind", "ring");
+    let m = args.get_usize("m", 8);
+    let pi = args.get_usize("pi", 10) as u32;
+    let rng = Rng::new(args.get_usize("seed", 1) as u64);
+    match Graph::by_name(&kind, m, &rng) {
+        Ok(g) => {
+            let h = MixingMatrix::metropolis(&g);
+            println!("topology:  {} (m={m}, {} edges)", g.name(), g.edge_count());
+            println!("connected: {}", g.is_connected());
+            println!("zeta:      {:.6}", h.zeta());
+            println!("omega1(pi={pi}): {:.6}", h.omega1(pi));
+            println!("omega2(pi={pi}): {:.6}", h.omega2(pi));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts(argv: &[String]) -> i32 {
+    let cmd = Command::new("cfel artifacts", "inspect the AOT artifact manifest")
+        .flag("dir", "artifacts directory (default: <repo>/artifacts)");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let dir = args
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {}", dir.display());
+            for (name, e) in &m.models {
+                println!(
+                    "  {name}: {} params, batch {}, input {:?}, {} classes, {:.2} MFLOPs/sample",
+                    e.schema.param_count,
+                    e.batch_size,
+                    e.input_dim,
+                    e.num_classes,
+                    e.flops_per_sample / 1e6
+                );
+                println!(
+                    "    train: {} | eval: {}",
+                    e.train_hlo.file_name().unwrap().to_string_lossy(),
+                    e.eval_hlo.file_name().unwrap().to_string_lossy()
+                );
+            }
+            println!(
+                "  aggregate: rows={} dim={}",
+                m.aggregate.rows, m.aggregate.dim
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

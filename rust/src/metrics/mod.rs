@@ -1,0 +1,166 @@
+//! Round-level metrics, history, CSV/markdown emission, time-to-accuracy.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// One global round's record (the unit of Figs. 2–6).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// Global round index l (1-based in reports).
+    pub round: usize,
+    /// Simulated wall-clock per Eq. 8, cumulative seconds.
+    pub sim_time_s: f64,
+    /// Real wall-clock spent training, cumulative seconds.
+    pub wall_time_s: f64,
+    /// Mean training loss over the round's SGD steps.
+    pub train_loss: f64,
+    /// Common-test-set accuracy (NaN when eval was skipped this round).
+    pub test_accuracy: f64,
+    pub test_loss: f64,
+    /// Mean squared distance of cluster models from their average.
+    pub consensus: f64,
+    /// Total SGD steps executed this round (all devices).
+    pub steps: usize,
+}
+
+/// Full run history.
+pub type History = Vec<RoundRecord>;
+
+/// First round/sim-time at which `target` accuracy is reached (Fig. 2's
+/// time-to-accuracy metric). Returns (round, sim_time_s).
+pub fn time_to_accuracy(history: &History, target: f64) -> Option<(usize, f64)> {
+    history
+        .iter()
+        .find(|r| !r.test_accuracy.is_nan() && r.test_accuracy >= target)
+        .map(|r| (r.round, r.sim_time_s))
+}
+
+/// Best accuracy seen in the run.
+pub fn best_accuracy(history: &History) -> f64 {
+    history
+        .iter()
+        .map(|r| r.test_accuracy)
+        .filter(|a| !a.is_nan())
+        .fold(0.0, f64::max)
+}
+
+/// CSV writer: one file accumulating rows across experiment series.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &str) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Standard per-round row for a named series.
+    pub fn round_row(&mut self, series: &str, r: &RoundRecord) -> Result<()> {
+        self.row(&[
+            series.to_string(),
+            r.round.to_string(),
+            format!("{:.3}", r.sim_time_s),
+            format!("{:.3}", r.wall_time_s),
+            format!("{:.5}", r.train_loss),
+            if r.test_accuracy.is_nan() {
+                String::new()
+            } else {
+                format!("{:.5}", r.test_accuracy)
+            },
+            if r.test_loss.is_nan() {
+                String::new()
+            } else {
+                format!("{:.5}", r.test_loss)
+            },
+            format!("{:.6e}", r.consensus),
+            r.steps.to_string(),
+        ])
+    }
+}
+
+/// Header matching [`CsvWriter::round_row`].
+pub const ROUND_HEADER: &str =
+    "series,round,sim_time_s,wall_time_s,train_loss,test_accuracy,test_loss,consensus,steps";
+
+/// Render a small aligned markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!(
+        "|{}\n",
+        headers.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, t: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_time_s: t,
+            wall_time_s: 0.0,
+            train_loss: 1.0,
+            test_accuracy: acc,
+            test_loss: 1.0,
+            consensus: 0.0,
+            steps: 10,
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let h = vec![rec(1, 0.3, 10.0), rec(2, 0.55, 20.0), rec(3, 0.6, 30.0)];
+        assert_eq!(time_to_accuracy(&h, 0.5), Some((2, 20.0)));
+        assert_eq!(time_to_accuracy(&h, 0.9), None);
+    }
+
+    #[test]
+    fn nan_rounds_skipped() {
+        let h = vec![rec(1, f64::NAN, 5.0), rec(2, 0.7, 9.0)];
+        assert_eq!(time_to_accuracy(&h, 0.5), Some((2, 9.0)));
+        assert!((best_accuracy(&h) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_writer_produces_rows() {
+        let tmp = std::env::temp_dir().join(format!("cfel_csv_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&tmp, ROUND_HEADER).unwrap();
+            w.round_row("ce-fedavg", &rec(1, 0.5, 2.0)).unwrap();
+            w.round_row("fedavg", &rec(2, f64::NAN, 3.0)).unwrap();
+        }
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("series,round"));
+        assert!(lines[1].contains("ce-fedavg,1,"));
+        assert!(lines[2].contains(",,")); // NaN accuracy → empty field
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert_eq!(t.lines().count(), 3);
+    }
+}

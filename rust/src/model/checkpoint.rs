@@ -1,0 +1,195 @@
+//! Model checkpointing: save/load a [`ModelState`] (+ metadata) to a
+//! compact self-describing binary format (own codec — the vendor set has
+//! no serde). Used by `cfel train --save/--load` so long runs can resume
+//! and trained models can be handed to downstream evaluation.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "CFEL" | u32 version | u32 json_len | json header bytes
+//! | params f32×n | momentum f32×n
+//! ```
+//! The JSON header records `param_count`, the model name and the
+//! originating round, and is validated on load.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{CfelError, Result};
+use crate::model::ModelState;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"CFEL";
+const VERSION: u32 = 1;
+
+/// Metadata stored alongside the tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub model: String,
+    pub round: usize,
+    pub param_count: usize,
+}
+
+/// Write `state` + metadata to `path` (atomically via a temp file).
+pub fn save(path: &Path, state: &ModelState, model: &str, round: usize) -> Result<()> {
+    if state.params.len() != state.momentum.len() {
+        return Err(CfelError::Config("params/momentum length mismatch".into()));
+    }
+    let mut header = Json::obj();
+    header
+        .set("model", Json::from_str_val(model))
+        .set("round", Json::from_usize(round))
+        .set("param_count", Json::from_usize(state.params.len()));
+    let header_bytes = header.to_string().into_bytes();
+
+    let tmp = path.with_extension("tmp");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        write_f32s(&mut f, &state.params)?;
+        write_f32s(&mut f, &state.momentum)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a checkpoint; `expect_params` guards against loading a model of
+/// the wrong architecture.
+pub fn load(path: &Path, expect_params: Option<usize>) -> Result<(ModelState, CheckpointMeta)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(CfelError::Config(format!(
+            "{}: not a CFEL checkpoint",
+            path.display()
+        )));
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(CfelError::Config(format!(
+            "unsupported checkpoint version {version}"
+        )));
+    }
+    let header_len = read_u32(&mut f)? as usize;
+    if header_len > 1 << 20 {
+        return Err(CfelError::Config("implausible checkpoint header".into()));
+    }
+    let mut header_bytes = vec![0u8; header_len];
+    f.read_exact(&mut header_bytes)?;
+    let header = Json::parse(
+        std::str::from_utf8(&header_bytes)
+            .map_err(|_| CfelError::Config("checkpoint header not utf-8".into()))?,
+    )?;
+    let meta = CheckpointMeta {
+        model: header.get("model")?.as_str()?.to_string(),
+        round: header.get("round")?.as_usize()?,
+        param_count: header.get("param_count")?.as_usize()?,
+    };
+    if let Some(n) = expect_params {
+        if n != meta.param_count {
+            return Err(CfelError::Config(format!(
+                "checkpoint has {} params, expected {n}",
+                meta.param_count
+            )));
+        }
+    }
+    let params = read_f32s(&mut f, meta.param_count)?;
+    let momentum = read_f32s(&mut f, meta.param_count)?;
+    Ok((ModelState { params, momentum }, meta))
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f32]) -> Result<()> {
+    // Chunked to avoid a full byte-copy of large models.
+    let mut buf = Vec::with_capacity(4 * 4096.min(xs.len()));
+    for chunk in xs.chunks(4096) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; 4 * n];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cfel_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let path = tmpfile("rt.ckpt");
+        let state = ModelState {
+            params: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+            momentum: vec![0.5, 0.0, -1.0, 3.0],
+        };
+        save(&path, &state, "mlp_synth", 7).unwrap();
+        let (loaded, meta) = load(&path, Some(4)).unwrap();
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.momentum, state.momentum);
+        assert_eq!(meta, CheckpointMeta { model: "mlp_synth".into(), round: 7, param_count: 4 });
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arch_and_garbage() {
+        let path = tmpfile("bad.ckpt");
+        let state = ModelState::zeros(3);
+        save(&path, &state, "m", 0).unwrap();
+        assert!(load(&path, Some(5)).is_err());
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path, None).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_errors_cleanly() {
+        let path = tmpfile("trunc.ckpt");
+        let state = ModelState::zeros(1000);
+        save(&path, &state, "m", 1).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(load(&path, None).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn large_model_roundtrip() {
+        let path = tmpfile("large.ckpt");
+        let n = 150_000;
+        let state = ModelState {
+            params: (0..n).map(|i| (i as f32).sin()).collect(),
+            momentum: (0..n).map(|i| (i as f32).cos()).collect(),
+        };
+        save(&path, &state, "cifar_cnn", 42).unwrap();
+        let (loaded, meta) = load(&path, Some(n)).unwrap();
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(meta.round, 42);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Model parameter schema + initialisation.
+//!
+//! Parameters travel through the coordinator as a single flat `Vec<f32>`
+//! (concatenation of every tensor in manifest order) — aggregation,
+//! gossip and netsim all operate on flat vectors; only the PJRT backend
+//! re-slices them into per-tensor literals. Initialisation mirrors the
+//! Python reference (`model.init_params`): Glorot-uniform weights, zero
+//! biases — the *family* must match, bit-identity is not required because
+//! all training flows through the same HLO artifacts afterwards.
+
+pub mod checkpoint;
+
+use crate::error::{CfelError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Initialisation recipe for one tensor (manifest `init` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    GlorotUniform,
+    Zeros,
+}
+
+/// One parameter tensor's schema entry.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub init: InitKind,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+impl ParamSpec {
+    pub fn from_json(j: &Json) -> Result<ParamSpec> {
+        let shape: Vec<usize> = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let size = j.get("size")?.as_usize()?;
+        let computed: usize = shape.iter().product();
+        if computed != size {
+            return Err(CfelError::Manifest(format!(
+                "param size {size} != product of shape {shape:?}"
+            )));
+        }
+        let init = match j.get("init")?.as_str()? {
+            "glorot_uniform" => InitKind::GlorotUniform,
+            "zeros" => InitKind::Zeros,
+            other => {
+                return Err(CfelError::Manifest(format!("unknown init {other:?}")))
+            }
+        };
+        Ok(ParamSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            size,
+            init,
+            fan_in: j.get("fan_in")?.as_usize()?,
+            fan_out: j.get("fan_out")?.as_usize()?,
+        })
+    }
+}
+
+/// Full parameter schema of one model (ordered tensor list).
+#[derive(Debug, Clone)]
+pub struct ModelSchema {
+    pub specs: Vec<ParamSpec>,
+    pub param_count: usize,
+}
+
+impl ModelSchema {
+    pub fn new(specs: Vec<ParamSpec>) -> ModelSchema {
+        let param_count = specs.iter().map(|s| s.size).sum();
+        ModelSchema { specs, param_count }
+    }
+
+    /// (start, end) offsets of each tensor inside the flat vector.
+    pub fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.specs.len());
+        let mut off = 0;
+        for s in &self.specs {
+            out.push((off, off + s.size));
+            off += s.size;
+        }
+        out
+    }
+
+    /// Initialise a flat parameter vector (Glorot weights, zero biases).
+    pub fn init_flat(&self, rng: &Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count);
+        for (i, spec) in self.specs.iter().enumerate() {
+            let mut r = rng.split(i as u64);
+            match spec.init {
+                InitKind::Zeros => out.extend(std::iter::repeat(0.0).take(spec.size)),
+                InitKind::GlorotUniform => {
+                    let limit =
+                        (6.0 / (spec.fan_in + spec.fan_out) as f32).sqrt();
+                    out.extend((0..spec.size).map(|_| r.uniform(-limit, limit)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A device/cluster model: flat parameters + flat momentum buffer.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl ModelState {
+    pub fn zeros(n: usize) -> ModelState {
+        ModelState { params: vec![0.0; n], momentum: vec![0.0; n] }
+    }
+
+    pub fn from_params(params: Vec<f32>) -> ModelState {
+        let momentum = vec![0.0; params.len()];
+        ModelState { params, momentum }
+    }
+
+    /// Reset the momentum buffer (devices start each local round fresh).
+    pub fn reset_momentum(&mut self) {
+        self.momentum.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> ModelSchema {
+        ModelSchema::new(vec![
+            ParamSpec {
+                name: "w".into(),
+                shape: vec![4, 3],
+                size: 12,
+                init: InitKind::GlorotUniform,
+                fan_in: 4,
+                fan_out: 3,
+            },
+            ParamSpec {
+                name: "b".into(),
+                shape: vec![3],
+                size: 3,
+                init: InitKind::Zeros,
+                fan_in: 0,
+                fan_out: 0,
+            },
+        ])
+    }
+
+    #[test]
+    fn offsets_and_count() {
+        let s = schema();
+        assert_eq!(s.param_count, 15);
+        assert_eq!(s.offsets(), vec![(0, 12), (12, 15)]);
+    }
+
+    #[test]
+    fn init_respects_kinds_and_limits() {
+        let s = schema();
+        let flat = s.init_flat(&Rng::new(1));
+        assert_eq!(flat.len(), 15);
+        let limit = (6.0f32 / 7.0).sqrt();
+        assert!(flat[..12].iter().all(|&v| v.abs() <= limit));
+        assert!(flat[..12].iter().any(|&v| v != 0.0));
+        assert!(flat[12..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let s = schema();
+        assert_eq!(s.init_flat(&Rng::new(9)), s.init_flat(&Rng::new(9)));
+        assert_ne!(s.init_flat(&Rng::new(9)), s.init_flat(&Rng::new(10)));
+    }
+
+    #[test]
+    fn spec_from_json_roundtrip_and_validation() {
+        let j = Json::parse(
+            r#"{"name":"w","shape":[2,3],"size":6,"init":"glorot_uniform","fan_in":2,"fan_out":3}"#,
+        )
+        .unwrap();
+        let s = ParamSpec::from_json(&j).unwrap();
+        assert_eq!(s.size, 6);
+        assert_eq!(s.init, InitKind::GlorotUniform);
+
+        let bad = Json::parse(
+            r#"{"name":"w","shape":[2,3],"size":7,"init":"zeros","fan_in":0,"fan_out":0}"#,
+        )
+        .unwrap();
+        assert!(ParamSpec::from_json(&bad).is_err());
+
+        let bad2 = Json::parse(
+            r#"{"name":"w","shape":[1],"size":1,"init":"magic","fan_in":0,"fan_out":0}"#,
+        )
+        .unwrap();
+        assert!(ParamSpec::from_json(&bad2).is_err());
+    }
+
+    #[test]
+    fn model_state_reset() {
+        let mut st = ModelState::from_params(vec![1.0, 2.0]);
+        st.momentum[0] = 5.0;
+        st.reset_momentum();
+        assert_eq!(st.momentum, vec![0.0, 0.0]);
+        assert_eq!(st.params, vec![1.0, 2.0]);
+    }
+}

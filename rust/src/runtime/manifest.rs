@@ -1,0 +1,207 @@
+//! Artifact manifest loader — the L2→L3 contract (DESIGN.md §6).
+//!
+//! `artifacts/manifest.json` is written once by `python/compile/aot.py`;
+//! this module parses it into typed entries and validates the pieces the
+//! runtime depends on (parameter order/shapes, batch size, file presence).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{CfelError, Result};
+use crate::model::{ModelSchema, ParamSpec};
+use crate::util::json::Json;
+
+/// One model's artifact entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub batch_size: usize,
+    pub input_dim: Vec<usize>,
+    pub flat_dim: usize,
+    pub num_classes: usize,
+    pub momentum: f64,
+    pub flops_per_sample: f64,
+    pub schema: ModelSchema,
+}
+
+/// The shared Pallas aggregation executables.
+#[derive(Debug, Clone)]
+pub struct AggregateEntry {
+    pub mix_hlo: PathBuf,
+    pub wavg_hlo: PathBuf,
+    pub rows: usize,
+    pub dim: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub aggregate: AggregateEntry,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(CfelError::Manifest(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let j = Json::parse_file(&path)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(CfelError::Manifest(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let mut models = BTreeMap::new();
+        for (name, entry) in j.get("models")?.as_obj()? {
+            models.insert(name.clone(), Self::parse_model(dir, name, entry)?);
+        }
+        let agg = j.get("aggregate")?;
+        let aggregate = AggregateEntry {
+            mix_hlo: dir.join(agg.get("mix_hlo")?.as_str()?),
+            wavg_hlo: dir.join(agg.get("wavg_hlo")?.as_str()?),
+            rows: agg.get("rows")?.as_usize()?,
+            dim: agg.get("dim")?.as_usize()?,
+        };
+        let m = Manifest { dir: dir.to_path_buf(), models, aggregate };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn parse_model(dir: &Path, name: &str, j: &Json) -> Result<ModelEntry> {
+        let specs: Vec<ParamSpec> = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(ParamSpec::from_json)
+            .collect::<Result<_>>()?;
+        let schema = ModelSchema::new(specs);
+        let declared = j.get("param_count")?.as_usize()?;
+        if declared != schema.param_count {
+            return Err(CfelError::Manifest(format!(
+                "{name}: param_count {declared} != schema total {}",
+                schema.param_count
+            )));
+        }
+        let input_dim: Vec<usize> = j
+            .get("input_dim")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let flat_dim = j.get("flat_dim")?.as_usize()?;
+        if input_dim.iter().product::<usize>() != flat_dim {
+            return Err(CfelError::Manifest(format!(
+                "{name}: flat_dim {flat_dim} != product of input_dim {input_dim:?}"
+            )));
+        }
+        Ok(ModelEntry {
+            name: name.to_string(),
+            train_hlo: dir.join(j.get("train_hlo")?.as_str()?),
+            eval_hlo: dir.join(j.get("eval_hlo")?.as_str()?),
+            batch_size: j.get("batch_size")?.as_usize()?,
+            input_dim,
+            flat_dim,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            momentum: j.get("momentum")?.as_f64()?,
+            flops_per_sample: j.get("flops_per_sample")?.as_f64()?,
+            schema,
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, m) in &self.models {
+            for f in [&m.train_hlo, &m.eval_hlo] {
+                if !f.exists() {
+                    return Err(CfelError::Manifest(format!(
+                        "{name}: missing artifact {}",
+                        f.display()
+                    )));
+                }
+            }
+            if m.batch_size == 0 || m.num_classes == 0 {
+                return Err(CfelError::Manifest(format!("{name}: zero batch/classes")));
+            }
+        }
+        for f in [&self.aggregate.mix_hlo, &self.aggregate.wavg_hlo] {
+            if !f.exists() {
+                return Err(CfelError::Manifest(format!(
+                    "missing aggregate artifact {}",
+                    f.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            CfelError::Manifest(format!(
+                "model {name:?} not in manifest (have {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Default artifacts directory: `$CFEL_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CFEL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real artifacts when present (CI runs
+    /// `make artifacts` first) and are skipped otherwise.
+    fn real() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = real() else { return };
+        assert!(m.models.contains_key("mlp_synth"));
+        let mlp = m.model("mlp_synth").unwrap();
+        assert_eq!(mlp.flat_dim, 64);
+        assert_eq!(mlp.num_classes, 10);
+        assert!((mlp.momentum - 0.9).abs() < 1e-9);
+        assert!(mlp.schema.param_count > 0);
+        assert!(mlp.train_hlo.exists());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(m) = real() else { return };
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn corrupt_manifest_rejected() {
+        let tmp = std::env::temp_dir().join(format!("cfel_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{\"version\": 2}").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::write(tmp.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

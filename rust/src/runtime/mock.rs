@@ -1,0 +1,397 @@
+//! Pure-Rust reference backend: one-hidden-layer MLP with hand-written
+//! backprop and the exact step semantics of the exported HLO train step
+//! (mean softmax cross-entropy, SGD with momentum 0.9, padded batches).
+//!
+//! Used by unit/property/integration tests and the figure benches so they
+//! run in milliseconds without artifacts; also serves as the independent
+//! oracle the PJRT round-trip test compares against. Gradients are pinned
+//! against central finite differences in the tests below.
+
+use crate::data::Batch;
+use crate::error::{CfelError, Result};
+use crate::model::{InitKind, ModelSchema, ModelState, ParamSpec};
+use crate::runtime::{accumulate_eval, EvalResult, TrainBackend};
+use crate::util::rng::Rng;
+
+/// MLP: x[B,D] → relu(x·W1+b1)[B,H] → (h·W2+b2)[B,C].
+/// Flat layout: [W1 (D·H) | b1 (H) | W2 (H·C) | b2 (C)].
+#[derive(Debug, Clone)]
+pub struct MockBackend {
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub momentum: f32,
+    schema: ModelSchema,
+}
+
+impl MockBackend {
+    pub fn new(dim: usize, hidden: usize, classes: usize, batch: usize) -> MockBackend {
+        let schema = ModelSchema::new(vec![
+            ParamSpec {
+                name: "fc1/w".into(),
+                shape: vec![dim, hidden],
+                size: dim * hidden,
+                init: InitKind::GlorotUniform,
+                fan_in: dim,
+                fan_out: hidden,
+            },
+            ParamSpec {
+                name: "fc1/b".into(),
+                shape: vec![hidden],
+                size: hidden,
+                init: InitKind::Zeros,
+                fan_in: 0,
+                fan_out: 0,
+            },
+            ParamSpec {
+                name: "fc2/w".into(),
+                shape: vec![hidden, classes],
+                size: hidden * classes,
+                init: InitKind::GlorotUniform,
+                fan_in: hidden,
+                fan_out: classes,
+            },
+            ParamSpec {
+                name: "fc2/b".into(),
+                shape: vec![classes],
+                size: classes,
+                init: InitKind::Zeros,
+                fan_in: 0,
+                fan_out: 0,
+            },
+        ]);
+        MockBackend { dim, hidden, classes, batch, momentum: 0.9, schema }
+    }
+
+    /// The default test fixture matching `SyntheticSpec::mlp_synth`.
+    pub fn mlp_synth() -> MockBackend {
+        MockBackend::new(64, 32, 10, 16)
+    }
+
+    fn split_offsets(&self) -> (usize, usize, usize, usize) {
+        let w1 = self.dim * self.hidden;
+        let b1 = w1 + self.hidden;
+        let w2 = b1 + self.hidden * self.classes;
+        let b2 = w2 + self.classes;
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward pass; fills `hid` [B,H] and `logits` [B,C].
+    fn forward(&self, p: &[f32], x: &[f32], bsz: usize, hid: &mut [f32], logits: &mut [f32]) {
+        let (w1e, b1e, w2e, _) = self.split_offsets();
+        let (w1, rest) = p.split_at(w1e);
+        let (b1, rest2) = rest.split_at(b1e - w1e);
+        let (w2, b2) = rest2.split_at(w2e - b1e);
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        for bi in 0..bsz {
+            let xrow = &x[bi * d..(bi + 1) * d];
+            let hrow = &mut hid[bi * h..(bi + 1) * h];
+            hrow.copy_from_slice(b1);
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &w1[k * h..(k + 1) * h];
+                    for (hv, &wv) in hrow.iter_mut().zip(wrow) {
+                        *hv += xv * wv;
+                    }
+                }
+            }
+            for hv in hrow.iter_mut() {
+                *hv = hv.max(0.0);
+            }
+            let lrow = &mut logits[bi * c..(bi + 1) * c];
+            lrow.copy_from_slice(b2);
+            for (k, &hv) in hid[bi * h..(bi + 1) * h].iter().enumerate() {
+                if hv != 0.0 {
+                    let wrow = &w2[k * c..(k + 1) * c];
+                    for (lv, &wv) in lrow.iter_mut().zip(wrow) {
+                        *lv += hv * wv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Softmax in place per row; returns per-row cross-entropy losses.
+    fn softmax_xent(&self, logits: &mut [f32], y: &[i32], bsz: usize) -> Vec<f32> {
+        let c = self.classes;
+        let mut losses = Vec::with_capacity(bsz);
+        for bi in 0..bsz {
+            let row = &mut logits[bi * c..(bi + 1) * c];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - maxv).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+            let target = y[bi] as usize;
+            losses.push(-(row[target].max(1e-30)).ln());
+        }
+        losses
+    }
+
+    /// Full loss + gradient over the (padded) batch; mirrors the HLO step:
+    /// loss = mean over the full batch (padding included — identical to
+    /// the exported artifact, which also sees the padded rows).
+    fn loss_and_grad(&self, p: &[f32], batch: &Batch, grad: &mut [f32]) -> f32 {
+        let bsz = self.batch;
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let (w1e, b1e, w2e, _) = self.split_offsets();
+        let mut hid = vec![0.0f32; bsz * h];
+        let mut probs = vec![0.0f32; bsz * c];
+        self.forward(p, &batch.x, bsz, &mut hid, &mut probs);
+        let losses = self.softmax_xent(&mut probs, &batch.y, bsz);
+        let loss = losses.iter().sum::<f32>() / bsz as f32;
+
+        grad.fill(0.0);
+        let (gw1, grest) = grad.split_at_mut(w1e);
+        let (gb1, grest2) = grest.split_at_mut(b1e - w1e);
+        let (gw2, gb2) = grest2.split_at_mut(w2e - b1e);
+        let w2 = &p[b1e..w2e];
+
+        let scale = 1.0 / bsz as f32;
+        let mut dh = vec![0.0f32; h];
+        for bi in 0..bsz {
+            // dlogits = (probs - onehot) / B
+            let prow = &mut probs[bi * c..(bi + 1) * c];
+            prow[batch.y[bi] as usize] -= 1.0;
+            for v in prow.iter_mut() {
+                *v *= scale;
+            }
+            let hrow = &hid[bi * h..(bi + 1) * h];
+            // gw2 += h ⊗ dlogits; gb2 += dlogits; dh = W2 · dlogits
+            for (k, &hv) in hrow.iter().enumerate() {
+                let grow = &mut gw2[k * c..(k + 1) * c];
+                let wrow = &w2[k * c..(k + 1) * c];
+                let mut acc = 0.0f32;
+                for j in 0..c {
+                    grow[j] += hv * prow[j];
+                    acc += wrow[j] * prow[j];
+                }
+                dh[k] = if hv > 0.0 { acc } else { 0.0 }; // relu mask
+            }
+            for (gb, &pv) in gb2.iter_mut().zip(prow.iter()) {
+                *gb += pv;
+            }
+            // gw1 += x ⊗ dh; gb1 += dh
+            let xrow = &batch.x[bi * d..(bi + 1) * d];
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let grow = &mut gw1[k * h..(k + 1) * h];
+                    for (g, &dv) in grow.iter_mut().zip(dh.iter()) {
+                        *g += xv * dv;
+                    }
+                }
+            }
+            for (g, &dv) in gb1.iter_mut().zip(dh.iter()) {
+                *g += dv;
+            }
+        }
+        loss
+    }
+}
+
+impl TrainBackend for MockBackend {
+    fn param_count(&self) -> usize {
+        self.schema.param_count
+    }
+
+    fn flat_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn flops_per_sample(&self) -> f64 {
+        (2 * self.dim * self.hidden + 2 * self.hidden * self.classes) as f64
+    }
+
+    fn init_state(&self, rng: &Rng) -> ModelState {
+        ModelState::from_params(self.schema.init_flat(rng))
+    }
+
+    fn train_step(&self, state: &mut ModelState, batch: &Batch, lr: f32) -> Result<f32> {
+        if batch.y.len() != self.batch {
+            return Err(CfelError::Runtime(format!(
+                "batch size {} != backend batch {}",
+                batch.y.len(),
+                self.batch
+            )));
+        }
+        let mut grad = vec![0.0f32; self.schema.param_count];
+        let loss = self.loss_and_grad(&state.params, batch, &mut grad);
+        // v ← μ·v + g; p ← p − lr·v  (matches the exported HLO step).
+        for ((p, v), &g) in state
+            .params
+            .iter_mut()
+            .zip(state.momentum.iter_mut())
+            .zip(grad.iter())
+        {
+            *v = self.momentum * *v + g;
+            *p -= lr * *v;
+        }
+        Ok(loss)
+    }
+
+    fn eval(&self, params: &[f32], batches: &[Batch]) -> Result<EvalResult> {
+        let bsz = self.batch;
+        let (h, c) = (self.hidden, self.classes);
+        let mut results = Vec::with_capacity(batches.len());
+        let mut hid = vec![0.0f32; bsz * h];
+        let mut logits = vec![0.0f32; bsz * c];
+        for b in batches {
+            self.forward(params, &b.x, bsz, &mut hid, &mut logits);
+            let mut correct = vec![0.0f32; bsz];
+            for bi in 0..bsz {
+                let row = &logits[bi * c..(bi + 1) * c];
+                let am = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct[bi] = (am as i32 == b.y[bi]) as i32 as f32;
+            }
+            let losses = self.softmax_xent(&mut logits, &b.y, bsz);
+            results.push((correct, losses, b.valid));
+        }
+        Ok(accumulate_eval(results))
+    }
+
+    fn parallel_devices(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        "mock-mlp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::data::synthetic::{Prototypes, SyntheticSpec};
+
+    fn toy_batch(backend: &MockBackend, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let mut ds = Dataset::new(backend.dim, backend.classes);
+        let mut buf = vec![0.0f32; backend.dim];
+        for i in 0..backend.batch {
+            for v in &mut buf {
+                *v = rng.normal();
+            }
+            ds.push(&buf, (i % backend.classes) as u32);
+        }
+        Batch::gather(&ds, &(0..backend.batch).collect::<Vec<_>>(), backend.batch)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let be = MockBackend::new(6, 5, 4, 3);
+        let state = be.init_state(&Rng::new(1));
+        let batch = toy_batch(&be, 2);
+        let mut grad = vec![0.0f32; be.param_count()];
+        let _ = be.loss_and_grad(&state.params, &batch, &mut grad);
+
+        let eps = 1e-3f32;
+        let mut p = state.params.clone();
+        let mut scratch = vec![0.0f32; be.param_count()];
+        // probe a spread of parameter indices
+        for &idx in &[0usize, 7, 29, 30, 34, 54, 55, 58] {
+            let orig = p[idx];
+            p[idx] = orig + eps;
+            let lp = be.loss_and_grad(&p, &batch, &mut scratch);
+            p[idx] = orig - eps;
+            let lm = be.loss_and_grad(&p, &batch, &mut scratch);
+            p[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {idx}: fd {fd} vs analytic {}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_improves_accuracy() {
+        let be = MockBackend::mlp_synth();
+        let spec = SyntheticSpec::mlp_synth();
+        let protos = Prototypes::new(spec, &Rng::new(3));
+        let ds = protos.global_pool(64, &Rng::new(4));
+        let idx: Vec<usize> = (0..16).collect();
+        let batch = Batch::gather(&ds, &idx, be.batch_size());
+
+        let mut state = be.init_state(&Rng::new(5));
+        let eval_batches = crate::data::sampler::eval_batches(&ds, be.batch_size());
+        let before = be.eval(&state.params, &eval_batches).unwrap();
+        let l0 = be.train_step(&mut state, &batch, 0.1).unwrap();
+        let mut last = l0;
+        for _ in 0..40 {
+            last = be.train_step(&mut state, &batch, 0.1).unwrap();
+        }
+        let after = be.eval(&state.params, &eval_batches).unwrap();
+        assert!(last < l0 * 0.7, "loss {l0} -> {last}");
+        assert!(after.accuracy > before.accuracy, "{before:?} -> {after:?}");
+    }
+
+    #[test]
+    fn momentum_semantics_match_pytorch_sgd() {
+        // One step with lr=0 leaves params but accumulates momentum = g.
+        let be = MockBackend::new(4, 3, 2, 2);
+        let mut state = be.init_state(&Rng::new(7));
+        let p0 = state.params.clone();
+        let batch = toy_batch(&be, 8);
+        be.train_step(&mut state, &batch, 0.0).unwrap();
+        assert_eq!(state.params, p0);
+        let m1 = state.momentum.clone();
+        assert!(m1.iter().any(|&v| v != 0.0));
+        // Second identical step: v2 = 0.9*v1 + g = 1.9*v1 (same grads).
+        be.train_step(&mut state, &batch, 0.0).unwrap();
+        for (a, b) in state.momentum.iter().zip(m1.iter()) {
+            assert!((a - 1.9 * b).abs() < 1e-5, "{a} vs 1.9*{b}");
+        }
+    }
+
+    #[test]
+    fn eval_masks_padded_examples() {
+        let be = MockBackend::new(4, 3, 2, 4);
+        let state = be.init_state(&Rng::new(2));
+        let mut ds = Dataset::new(4, 2);
+        ds.push(&[1.0, 0.0, 0.0, 0.0], 0);
+        ds.push(&[0.0, 1.0, 0.0, 0.0], 1);
+        // One batch of 4 slots but only 2 valid.
+        let b = Batch::gather(&ds, &[0, 1], 4);
+        let r = be.eval(&state.params, &[b]).unwrap();
+        assert_eq!(r.examples, 2);
+    }
+
+    #[test]
+    fn rejects_wrong_batch_size() {
+        let be = MockBackend::new(4, 3, 2, 4);
+        let mut state = be.init_state(&Rng::new(2));
+        let bad = Batch { x: vec![0.0; 8], y: vec![0, 1], valid: 2 };
+        assert!(be.train_step(&mut state, &bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn deterministic_step() {
+        let be = MockBackend::mlp_synth();
+        let batch = toy_batch(&be, 9);
+        let mut s1 = be.init_state(&Rng::new(11));
+        let mut s2 = be.init_state(&Rng::new(11));
+        be.train_step(&mut s1, &batch, 0.05).unwrap();
+        be.train_step(&mut s2, &batch, 0.05).unwrap();
+        assert_eq!(s1.params, s2.params);
+    }
+}

@@ -1,0 +1,113 @@
+//! Execution backends for the on-device train/eval steps.
+//!
+//! [`TrainBackend`] is the seam between the coordinator (L3) and the
+//! compiled compute graph (L2/L1):
+//!
+//! * [`PjrtBackend`](pjrt::PjrtBackend) — the production path: loads the
+//!   AOT HLO-text artifacts through the PJRT C API and executes them on
+//!   the CPU client. Python is never involved at runtime.
+//! * [`MockBackend`](mock::MockBackend) — a pure-Rust one-hidden-layer MLP
+//!   with hand-written backprop and identical step semantics (SGD with
+//!   momentum over a padded batch). It exists so the coordinator, the
+//!   property suite and the figure benches run fast and without
+//!   artifacts; its gradients are pinned against finite differences.
+
+pub mod manifest;
+pub mod mock;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use mock::MockBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::data::Batch;
+use crate::error::Result;
+use crate::model::ModelState;
+use crate::util::rng::Rng;
+
+/// Aggregate evaluation result over a test set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub loss: f64,
+    pub examples: usize,
+}
+
+/// One on-device training/eval engine. Implementations must be
+/// deterministic given the same state + batch.
+pub trait TrainBackend: Send + Sync {
+    /// Flat parameter vector length.
+    fn param_count(&self) -> usize;
+    /// Flattened input dimension D (x is `[batch, D]`).
+    fn flat_dim(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn batch_size(&self) -> usize;
+    /// Forward FLOPs per sample (Eq. 8 workload constant).
+    fn flops_per_sample(&self) -> f64;
+
+    /// Initialise a fresh model (Glorot weights / zero biases family).
+    fn init_state(&self, rng: &Rng) -> ModelState;
+
+    /// One SGD-with-momentum step on `batch`; returns the mean batch loss.
+    fn train_step(&self, state: &mut ModelState, batch: &Batch, lr: f32) -> Result<f32>;
+
+    /// Evaluate `params` over `batches` (per-example masking of padding).
+    fn eval(&self, params: &[f32], batches: &[Batch]) -> Result<EvalResult>;
+
+    /// Whether the coordinator may call `train_step` from multiple threads
+    /// concurrently (on distinct states).
+    fn parallel_devices(&self) -> bool {
+        false
+    }
+
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &str;
+}
+
+/// Accumulate per-example (correct, loss) vectors into an [`EvalResult`],
+/// honouring each batch's `valid` prefix. Shared by both backends.
+pub fn accumulate_eval(
+    per_batch: impl IntoIterator<Item = (Vec<f32>, Vec<f32>, usize)>,
+) -> EvalResult {
+    let mut correct = 0.0f64;
+    let mut loss = 0.0f64;
+    let mut n = 0usize;
+    for (c, l, valid) in per_batch {
+        for i in 0..valid {
+            correct += c[i] as f64;
+            loss += l[i] as f64;
+        }
+        n += valid;
+    }
+    if n == 0 {
+        return EvalResult { accuracy: 0.0, loss: 0.0, examples: 0 };
+    }
+    EvalResult {
+        accuracy: correct / n as f64,
+        loss: loss / n as f64,
+        examples: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_masks_padding() {
+        let r = accumulate_eval(vec![
+            (vec![1.0, 1.0, 0.0], vec![0.1, 0.2, 9.0], 2), // 3rd entry padded
+            (vec![0.0], vec![0.4], 1),
+        ]);
+        assert_eq!(r.examples, 3);
+        assert!((r.accuracy - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.loss - (0.1 + 0.2 + 0.4) / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn accumulate_empty() {
+        let r = accumulate_eval(Vec::<(Vec<f32>, Vec<f32>, usize)>::new());
+        assert_eq!(r.examples, 0);
+        assert_eq!(r.accuracy, 0.0);
+    }
+}

@@ -1,0 +1,366 @@
+//! Gossip mixing matrix **H** (paper Assumption 4) and its spectral
+//! quantities.
+//!
+//! * Metropolis–Hastings weights make H symmetric doubly stochastic for any
+//!   connected graph: `H[i][j] = 1 / (1 + max(d_i, d_j))` for edges,
+//!   diagonal absorbs the remainder.
+//! * ζ = max{|λ₂|, |λ_m|} — the second largest eigenvalue magnitude —
+//!   computed by power iteration on H deflated by the all-ones eigenvector
+//!   (H is symmetric, so power iteration converges to the dominant
+//!   remaining eigenvalue magnitude).
+//! * Ω₁, Ω₂ of Eq. 15 — the constants in Theorem 1's bound; exposed so the
+//!   figure harnesses can report the theory-side quantities next to the
+//!   measured convergence curves.
+
+use crate::error::{CfelError, Result};
+use crate::topology::Graph;
+
+/// A dense m×m doubly-stochastic mixing matrix.
+#[derive(Debug, Clone)]
+pub struct MixingMatrix {
+    m: usize,
+    /// Row-major storage; `h[i*m + j]` = weight server i assigns to j.
+    h: Vec<f64>,
+}
+
+impl MixingMatrix {
+    /// Metropolis–Hastings weights on `graph` (symmetric doubly stochastic).
+    pub fn metropolis(graph: &Graph) -> MixingMatrix {
+        let m = graph.len();
+        let mut h = vec![0.0; m * m];
+        for i in 0..m {
+            let mut diag = 1.0;
+            for &j in graph.neighbors(i) {
+                let w = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+                h[i * m + j] = w;
+                diag -= w;
+            }
+            h[i * m + i] = diag;
+        }
+        MixingMatrix { m, h }
+    }
+
+    /// Uniform averaging matrix H = (1/m) 11ᵀ — the Hier-FAvg / cloud limit.
+    pub fn uniform(m: usize) -> MixingMatrix {
+        MixingMatrix { m, h: vec![1.0 / m as f64; m * m] }
+    }
+
+    /// Identity (no cooperation — the Local-Edge limit).
+    pub fn identity(m: usize) -> MixingMatrix {
+        let mut h = vec![0.0; m * m];
+        for i in 0..m {
+            h[i * m + i] = 1.0;
+        }
+        MixingMatrix { m, h }
+    }
+
+    /// Build from explicit row-major entries (tests / custom weights).
+    pub fn from_rows(m: usize, h: Vec<f64>) -> Result<MixingMatrix> {
+        if h.len() != m * m {
+            return Err(CfelError::Topology(format!(
+                "mixing matrix needs {}x{} entries, got {}",
+                m,
+                m,
+                h.len()
+            )));
+        }
+        let mm = MixingMatrix { m, h };
+        mm.validate()?;
+        Ok(mm)
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.h[i * self.m + j]
+    }
+
+    /// Row-major raw entries (for the PJRT aggregate fast path).
+    pub fn entries(&self) -> &[f64] {
+        &self.h
+    }
+
+    /// Check Assumption 4: non-negative, symmetric, doubly stochastic.
+    pub fn validate(&self) -> Result<()> {
+        let m = self.m;
+        for i in 0..m {
+            let mut row = 0.0;
+            let mut col = 0.0;
+            for j in 0..m {
+                let v = self.get(i, j);
+                if v < -1e-12 {
+                    return Err(CfelError::Topology(format!(
+                        "negative weight H[{i}][{j}] = {v}"
+                    )));
+                }
+                if (v - self.get(j, i)).abs() > 1e-9 {
+                    return Err(CfelError::Topology(format!(
+                        "asymmetric H at ({i},{j})"
+                    )));
+                }
+                row += v;
+                col += self.get(j, i);
+            }
+            if (row - 1.0).abs() > 1e-9 || (col - 1.0).abs() > 1e-9 {
+                return Err(CfelError::Topology(format!(
+                    "row/col {i} sums {row}/{col} != 1"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Matrix power H^π (π = gossip steps per global round, paper Eq. 7).
+    pub fn power(&self, pi: u32) -> MixingMatrix {
+        let mut result = MixingMatrix::identity(self.m);
+        let mut base = self.clone();
+        let mut e = pi;
+        while e > 0 {
+            if e & 1 == 1 {
+                result = result.matmul(&base);
+            }
+            base = base.matmul(&base);
+            e >>= 1;
+        }
+        result
+    }
+
+    fn matmul(&self, other: &MixingMatrix) -> MixingMatrix {
+        assert_eq!(self.m, other.m);
+        let m = self.m;
+        let mut out = vec![0.0; m * m];
+        for i in 0..m {
+            for k in 0..m {
+                let a = self.h[i * m + k];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..m {
+                    out[i * m + j] += a * other.h[k * m + j];
+                }
+            }
+        }
+        MixingMatrix { m, h: out }
+    }
+
+    /// ζ = max{|λ₂(H)|, |λ_m(H)|} (Assumption 4.3). Power iteration on the
+    /// deflated matrix H − (1/m)·11ᵀ; H symmetric ⇒ the dominant eigenvalue
+    /// of the deflation is exactly ζ.
+    pub fn zeta(&self) -> f64 {
+        let m = self.m;
+        if m == 1 {
+            return 0.0;
+        }
+        // Deterministic pseudo-random start orthogonal to 1.
+        let mut v: Vec<f64> = (0..m)
+            .map(|i| (i as f64 * 0.754_877_666 + 0.1).sin())
+            .collect();
+        let mean: f64 = v.iter().sum::<f64>() / m as f64;
+        for x in &mut v {
+            *x -= mean;
+        }
+        let mut lambda = 0.0;
+        for _ in 0..5_000 {
+            // w = (H - A) v  =  H v - mean(v) (v already centered each iter)
+            let mut w = vec![0.0; m];
+            for i in 0..m {
+                let mut s = 0.0;
+                for j in 0..m {
+                    s += self.h[i * m + j] * v[j];
+                }
+                w[i] = s;
+            }
+            let wmean: f64 = w.iter().sum::<f64>() / m as f64;
+            for x in &mut w {
+                *x -= wmean;
+            }
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 0.0; // deflated matrix is (numerically) zero: ζ = 0
+            }
+            let new_lambda = norm
+                / v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+            for (x, wi) in v.iter_mut().zip(&w) {
+                *x = wi / norm;
+            }
+            if (new_lambda - lambda).abs() < 1e-13 {
+                return new_lambda;
+            }
+            lambda = new_lambda;
+        }
+        lambda
+    }
+
+    /// Ω₁ = ζ^{2π} / (1 − ζ^{2π})  (Eq. 15). Infinite when ζ^π → 1.
+    pub fn omega1(&self, pi: u32) -> f64 {
+        let z = self.zeta().powi(2 * pi as i32);
+        if z >= 1.0 {
+            f64::INFINITY
+        } else {
+            z / (1.0 - z)
+        }
+    }
+
+    /// Ω₂ = 1/(1−ζ^{2π}) + 2/(1−ζ^π) + ζ^π/(1−ζ^π)²  (Eq. 15).
+    pub fn omega2(&self, pi: u32) -> f64 {
+        let zp = self.zeta().powi(pi as i32);
+        let z2p = zp * zp;
+        if zp >= 1.0 {
+            return f64::INFINITY;
+        }
+        1.0 / (1.0 - z2p) + 2.0 / (1.0 - zp) + zp / ((1.0 - zp) * (1.0 - zp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn metropolis_is_doubly_stochastic_on_every_builder() {
+        let rng = crate::util::rng::Rng::new(3);
+        for g in [
+            Graph::ring(8).unwrap(),
+            Graph::complete(6).unwrap(),
+            Graph::star(7).unwrap(),
+            Graph::line(5).unwrap(),
+            Graph::erdos_renyi(10, 0.4, &rng).unwrap(),
+        ] {
+            MixingMatrix::metropolis(&g).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn metropolis_respects_sparsity() {
+        let g = Graph::ring(6).unwrap();
+        let h = MixingMatrix::metropolis(&g);
+        // H[i][j] > 0 iff (i,j) in E or i == j (Assumption 4.1).
+        for i in 0..6 {
+            for j in 0..6 {
+                let connected = g.neighbors(i).contains(&j) || i == j;
+                assert_eq!(h.get(i, j) > 0.0, connected, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_zeta_is_zero_complete_near_zero() {
+        assert_close(MixingMatrix::uniform(8).zeta(), 0.0, 1e-9);
+        // Metropolis on complete graph: H = (1/m)(11ᵀ) exactly, so ζ=0.
+        let g = Graph::complete(8).unwrap();
+        let z = MixingMatrix::metropolis(&g).zeta();
+        assert_close(z, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn identity_zeta_is_one() {
+        assert_close(MixingMatrix::identity(5).zeta(), 1.0, 1e-9);
+    }
+
+    #[test]
+    fn ring_zeta_closed_form() {
+        // Metropolis ring (m>=3): every degree is 2 so off-diagonal weights
+        // are 1/3 and diagonal 1/3: H = I/3 + C/3 + Cᵀ/3 with C the cyclic
+        // shift. Eigenvalues: (1 + 2cos(2πk/m))/3 ⇒
+        // ζ = max_k |(1+2cos(2πk/m))/3| for k != 0.
+        for m in [4usize, 5, 8, 12] {
+            let g = Graph::ring(m).unwrap();
+            let z = MixingMatrix::metropolis(&g).zeta();
+            let expect = (1..m)
+                .map(|k| {
+                    ((1.0 + 2.0 * (2.0 * std::f64::consts::PI * k as f64 / m as f64).cos())
+                        / 3.0)
+                        .abs()
+                })
+                .fold(0.0f64, f64::max);
+            assert_close(z, expect, 1e-6);
+        }
+    }
+
+    #[test]
+    fn better_connectivity_smaller_zeta() {
+        // Theorem 1's topology ordering (Fig. 6): complete < ER(0.6) <
+        // ER(0.2)-ish < ring < line for large-ish m.
+        let rng = crate::util::rng::Rng::new(1);
+        let z_complete = MixingMatrix::metropolis(&Graph::complete(16).unwrap()).zeta();
+        let z_er6 =
+            MixingMatrix::metropolis(&Graph::erdos_renyi(16, 0.6, &rng).unwrap()).zeta();
+        let z_ring = MixingMatrix::metropolis(&Graph::ring(16).unwrap()).zeta();
+        let z_line = MixingMatrix::metropolis(&Graph::line(16).unwrap()).zeta();
+        assert!(z_complete < z_er6, "{z_complete} {z_er6}");
+        assert!(z_er6 < z_ring, "{z_er6} {z_ring}");
+        assert!(z_ring < z_line, "{z_ring} {z_line}");
+        assert!(z_line < 1.0);
+    }
+
+    #[test]
+    fn power_matches_repeated_matmul() {
+        let g = Graph::ring(5).unwrap();
+        let h = MixingMatrix::metropolis(&g);
+        let h3 = h.power(3);
+        let manual = h.matmul(&h).matmul(&h);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_close(h3.get(i, j), manual.get(i, j), 1e-12);
+            }
+        }
+        // H^0 = I
+        let h0 = h.power(0);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_close(h0.get(i, j), if i == j { 1.0 } else { 0.0 }, 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn power_stays_doubly_stochastic_and_contracts() {
+        let g = Graph::ring(8).unwrap();
+        let h = MixingMatrix::metropolis(&g);
+        let h10 = h.power(10);
+        h10.validate().unwrap();
+        // H^π → (1/m)11ᵀ: entries approach 1/8.
+        let max_dev = (0..64)
+            .map(|k| (h10.entries()[k] - 1.0 / 8.0).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_dev < h.zeta().powi(10) + 1e-9, "dev {max_dev}");
+    }
+
+    #[test]
+    fn omegas_match_formula_and_ordering() {
+        let g = Graph::ring(8).unwrap();
+        let h = MixingMatrix::metropolis(&g);
+        let z = h.zeta();
+        let pi = 10u32;
+        let zp = z.powi(pi as i32);
+        let z2p = zp * zp;
+        assert_close(h.omega1(pi), z2p / (1.0 - z2p), 1e-9);
+        assert_close(
+            h.omega2(pi),
+            1.0 / (1.0 - z2p) + 2.0 / (1.0 - zp) + zp / (1.0 - zp).powi(2),
+            1e-9,
+        );
+        // More gossip steps ⇒ smaller Ω₁ (faster consensus).
+        assert!(h.omega1(20) < h.omega1(5));
+        // Identity (no mixing): Ω infinite.
+        assert!(MixingMatrix::identity(4).omega1(1).is_infinite());
+    }
+
+    #[test]
+    fn from_rows_validates() {
+        assert!(MixingMatrix::from_rows(2, vec![0.5, 0.5, 0.5, 0.5]).is_ok());
+        assert!(MixingMatrix::from_rows(2, vec![0.9, 0.1, 0.5, 0.5]).is_err()); // asym
+        assert!(MixingMatrix::from_rows(2, vec![1.5, -0.5, -0.5, 1.5]).is_err()); // neg
+        assert!(MixingMatrix::from_rows(2, vec![1.0]).is_err()); // size
+    }
+}

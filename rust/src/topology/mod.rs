@@ -1,0 +1,323 @@
+//! Edge-backhaul topology: the undirected connected graph G = (V, E) over
+//! which edge servers cooperate (paper §3).
+//!
+//! Builders cover every topology the paper evaluates: the default ring
+//! (§6.1), the complete graph (the Hier-FAvg limit, §4.3), Erdős–Rényi
+//! random graphs with edge probability p (Fig. 6), plus star and line used
+//! in tests. [`mixing`] derives the doubly-stochastic gossip matrix **H**
+//! and its spectral quantities (ζ, Ω₁, Ω₂).
+
+pub mod mixing;
+
+pub use mixing::MixingMatrix;
+
+use crate::error::{CfelError, Result};
+use crate::util::rng::Rng;
+
+/// An undirected graph over `m` edge servers, stored as an adjacency list.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    m: usize,
+    adj: Vec<Vec<usize>>,
+    name: String,
+}
+
+impl Graph {
+    /// Build from an explicit (deduplicated) undirected edge list.
+    pub fn from_edges(m: usize, edges: &[(usize, usize)], name: &str) -> Result<Graph> {
+        if m == 0 {
+            return Err(CfelError::Topology("graph needs at least one node".into()));
+        }
+        let mut adj = vec![Vec::new(); m];
+        for &(a, b) in edges {
+            if a >= m || b >= m {
+                return Err(CfelError::Topology(format!(
+                    "edge ({a},{b}) out of range for m={m}"
+                )));
+            }
+            if a == b {
+                continue; // self-loops are implicit in the mixing matrix
+            }
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for list in &mut adj {
+            list.sort_unstable();
+        }
+        Ok(Graph { m, adj, name: name.to_string() })
+    }
+
+    /// Ring topology (the paper's default backhaul, §6.1).
+    pub fn ring(m: usize) -> Result<Graph> {
+        if m == 1 {
+            return Graph::from_edges(1, &[], "ring");
+        }
+        if m == 2 {
+            return Graph::from_edges(2, &[(0, 1)], "ring");
+        }
+        let edges: Vec<_> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+        Graph::from_edges(m, &edges, "ring")
+    }
+
+    /// Complete graph (ζ = 0 with uniform weights; the Hier-FAvg limit).
+    pub fn complete(m: usize) -> Result<Graph> {
+        let mut edges = Vec::new();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                edges.push((i, j));
+            }
+        }
+        Graph::from_edges(m, &edges, "complete")
+    }
+
+    /// Star topology: node 0 is the hub (models a central coordinator).
+    pub fn star(m: usize) -> Result<Graph> {
+        let edges: Vec<_> = (1..m).map(|i| (0, i)).collect();
+        Graph::from_edges(m, &edges, "star")
+    }
+
+    /// Line (path) topology — worst connectivity among connected graphs.
+    pub fn line(m: usize) -> Result<Graph> {
+        let edges: Vec<_> = (1..m).map(|i| (i - 1, i)).collect();
+        Graph::from_edges(m, &edges, "line")
+    }
+
+    /// Erdős–Rényi G(m, p) conditioned on connectivity (Fig. 6): edges are
+    /// re-drawn (new seed stream) until the sample is connected, matching
+    /// the paper's "generate random topologies" procedure.
+    pub fn erdos_renyi(m: usize, p: f64, rng: &Rng) -> Result<Graph> {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(CfelError::Topology(format!("p={p} outside [0,1]")));
+        }
+        for attempt in 0..10_000u64 {
+            let mut r = rng.split(attempt);
+            let mut edges = Vec::new();
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    if (r.f64()) < p {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let g = Graph::from_edges(m, &edges, &format!("erdos_renyi(p={p})"))?;
+            if g.is_connected() {
+                return Ok(g);
+            }
+        }
+        Err(CfelError::Topology(format!(
+            "could not sample a connected G({m},{p}) in 10k attempts"
+        )))
+    }
+
+    /// Build by name — used by configs/CLI: "ring" | "complete" | "star" |
+    /// "line" | "er:<p>".
+    pub fn by_name(kind: &str, m: usize, rng: &Rng) -> Result<Graph> {
+        match kind {
+            "ring" => Graph::ring(m),
+            "complete" => Graph::complete(m),
+            "star" => Graph::star(m),
+            "line" => Graph::line(m),
+            _ => {
+                if let Some(p) = kind.strip_prefix("er:") {
+                    let p: f64 = p.parse().map_err(|_| {
+                        CfelError::Topology(format!("bad ER probability {p:?}"))
+                    })?;
+                    Graph::erdos_renyi(m, p, rng)
+                } else {
+                    Err(CfelError::Topology(format!("unknown topology {kind:?}")))
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Neighbors N_i of server i.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check (Assumption 4 requires a connected graph).
+    pub fn is_connected(&self) -> bool {
+        if self.m == 0 {
+            return false;
+        }
+        let mut seen = vec![false; self.m];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.m
+    }
+
+    /// Remove a node (fault injection for Table 1): returns the induced
+    /// subgraph on the surviving nodes with indices remapped to 0..m-1,
+    /// plus the old->new index map.
+    pub fn remove_node(&self, victim: usize) -> Result<(Graph, Vec<Option<usize>>)> {
+        if victim >= self.m {
+            return Err(CfelError::Topology(format!("no node {victim}")));
+        }
+        if self.m == 1 {
+            return Err(CfelError::Topology("cannot remove the only node".into()));
+        }
+        let mut map = vec![None; self.m];
+        let mut next = 0;
+        for i in 0..self.m {
+            if i != victim {
+                map[i] = Some(next);
+                next += 1;
+            }
+        }
+        let mut edges = Vec::new();
+        for i in 0..self.m {
+            if i == victim {
+                continue;
+            }
+            for &j in &self.adj[i] {
+                if j != victim && i < j {
+                    edges.push((map[i].unwrap(), map[j].unwrap()));
+                }
+            }
+        }
+        let g = Graph::from_edges(self.m - 1, &edges, &format!("{}-minus{victim}", self.name))?;
+        Ok((g, map))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(8).unwrap();
+        assert_eq!(g.len(), 8);
+        assert_eq!(g.edge_count(), 8);
+        for i in 0..8 {
+            assert_eq!(g.degree(i), 2);
+        }
+        assert_eq!(g.neighbors(0), &[1, 7]);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn tiny_rings() {
+        assert_eq!(Graph::ring(1).unwrap().edge_count(), 0);
+        assert_eq!(Graph::ring(2).unwrap().edge_count(), 1);
+        assert_eq!(Graph::ring(3).unwrap().edge_count(), 3);
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = Graph::complete(5).unwrap();
+        assert_eq!(g.edge_count(), 10);
+        for i in 0..5 {
+            assert_eq!(g.degree(i), 4);
+        }
+    }
+
+    #[test]
+    fn star_and_line() {
+        let s = Graph::star(6).unwrap();
+        assert_eq!(s.degree(0), 5);
+        assert!(s.is_connected());
+        let l = Graph::line(4).unwrap();
+        assert_eq!(l.degree(0), 1);
+        assert_eq!(l.degree(1), 2);
+        assert!(l.is_connected());
+    }
+
+    #[test]
+    fn er_respects_p_and_connectivity() {
+        let rng = Rng::new(1);
+        let g = Graph::erdos_renyi(16, 0.4, &rng).unwrap();
+        assert!(g.is_connected());
+        // Higher p ⇒ denser (statistical, but overwhelming at these sizes).
+        let dense = Graph::erdos_renyi(16, 0.9, &rng).unwrap();
+        assert!(dense.edge_count() > g.edge_count());
+        // p=1 is complete.
+        let full = Graph::erdos_renyi(8, 1.0, &rng).unwrap();
+        assert_eq!(full.edge_count(), 28);
+    }
+
+    #[test]
+    fn er_deterministic_for_seed() {
+        let a = Graph::erdos_renyi(12, 0.3, &Rng::new(9)).unwrap();
+        let b = Graph::erdos_renyi(12, 0.3, &Rng::new(9)).unwrap();
+        for i in 0..12 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        let rng = Rng::new(0);
+        assert_eq!(Graph::by_name("ring", 4, &rng).unwrap().name(), "ring");
+        assert!(Graph::by_name("er:0.5", 8, &rng).unwrap().is_connected());
+        assert!(Graph::by_name("nope", 4, &rng).is_err());
+        assert!(Graph::by_name("er:2.0", 4, &rng).is_err());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)], "two-pairs").unwrap();
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn edge_validation() {
+        assert!(Graph::from_edges(3, &[(0, 5)], "bad").is_err());
+        assert!(Graph::from_edges(0, &[], "empty").is_err());
+        // duplicate + self-loop tolerated
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (2, 2)], "dups").unwrap();
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    fn remove_node_remaps() {
+        let g = Graph::ring(4).unwrap(); // 0-1-2-3-0
+        let (h, map) = g.remove_node(2).unwrap();
+        assert_eq!(h.len(), 3);
+        assert_eq!(map[0], Some(0));
+        assert_eq!(map[2], None);
+        assert_eq!(map[3], Some(2));
+        // Ring minus a node = path: still connected.
+        assert!(h.is_connected());
+        assert_eq!(h.edge_count(), 2);
+    }
+
+    #[test]
+    fn remove_hub_disconnects_star() {
+        let s = Graph::star(5).unwrap();
+        let (h, _) = s.remove_node(0).unwrap();
+        assert!(!h.is_connected()); // the Table 1 fault-tolerance scenario
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark harness used by the `cargo bench` targets.
+//!
+//! criterion is not in the offline vendor set, so `rust/benches/*.rs` are
+//! `harness = false` binaries built on this module: warmup, repeated timed
+//! iterations, robust summary (mean ± stddev, median, p10/p90), and an
+//! optional throughput label. Output is stable, grep-able text that
+//! EXPERIMENTS.md quotes directly.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug)]
+pub struct Sample {
+    pub name: String,
+    pub secs: Vec<f64>,
+    pub throughput_items: Option<f64>,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        let m = stats::mean(&self.secs);
+        let sd = stats::percentile(&self.secs, 0.5);
+        let p10 = stats::percentile(&self.secs, 0.1);
+        let p90 = stats::percentile(&self.secs, 0.9);
+        let mut line = format!(
+            "{:<44} mean {:>10}  median {:>10}  p10 {:>10}  p90 {:>10}  n={}",
+            self.name,
+            stats::fmt_duration(m),
+            stats::fmt_duration(sd),
+            stats::fmt_duration(p10),
+            stats::fmt_duration(p90),
+            self.secs.len()
+        );
+        if let Some(items) = self.throughput_items {
+            if m > 0.0 {
+                line.push_str(&format!("  [{:.1} items/s]", items / m));
+            }
+        }
+        line
+    }
+}
+
+/// Bench runner with fixed warmup/measure counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    samples: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // CFEL_BENCH_ITERS / CFEL_BENCH_WARMUP override for quick runs.
+        let iters = std::env::var("CFEL_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let warmup = std::env::var("CFEL_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        Self { warmup, iters, samples: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f` (called once per iteration); the closure's return value is
+    /// black-boxed so the work is not optimised away.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut secs = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        self.samples.push(Sample { name: name.to_string(), secs, throughput_items: None });
+        let s = self.samples.last().unwrap();
+        println!("{}", s.report());
+        s
+    }
+
+    /// Like [`run`], attaching an items/sec throughput to the report.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut secs = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        self.samples.push(Sample {
+            name: name.to_string(),
+            secs,
+            throughput_items: Some(items),
+        });
+        let s = self.samples.last().unwrap();
+        println!("{}", s.report());
+        s
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+}
+
+/// Standard header so all bench binaries print a uniform preamble.
+pub fn header(title: &str, detail: &str) {
+    println!("\n=== bench: {title} ===");
+    if !detail.is_empty() {
+        println!("{detail}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut b = Bench { warmup: 1, iters: 3, samples: vec![] };
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.secs.len(), 3);
+        assert!(s.report().contains("noop"));
+        assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn throughput_label_present() {
+        let mut b = Bench { warmup: 0, iters: 2, samples: vec![] };
+        let s = b.run_throughput("tp", 100.0, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert!(s.report().contains("items/s"));
+    }
+}

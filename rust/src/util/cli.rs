@@ -1,0 +1,209 @@
+//! Tiny command-line flag parser (replaces `clap` in the offline build).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates a usage string from the declared options.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one flag.
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid --{name} value {v:?}; using {default}");
+                    default
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid --{name} value {v:?}; using {default}");
+                    default
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some(""))
+    }
+}
+
+/// A declared command with flags; parses and validates argv.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, boolean: false });
+        self
+    }
+
+    pub fn flag_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(Flag { name, help, default: Some(default), boolean: false });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for f in &self.flags {
+            let val = if f.boolean { "" } else { " <value>" };
+            let def = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", f.name, f.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        s
+    }
+
+    /// Parse an argv slice (excluding the program/subcommand name).
+    /// Returns Err(usage) on `--help` or an unknown/malformed flag.
+    pub fn parse(&self, argv: &[String]) -> std::result::Result<Args, String> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let flag = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == key)
+                    .ok_or_else(|| format!("unknown flag --{key}\n\n{}", self.usage()))?;
+                let value = if flag.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} needs a value"))?
+                };
+                args.values.insert(key.to_string(), value);
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .flag_default("rounds", "10", "number of rounds")
+            .flag("model", "model name")
+            .bool_flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("rounds", 0), 10);
+        assert_eq!(a.get("model"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd()
+            .parse(&argv(&["--rounds", "5", "--model=cnn", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("rounds", 0), 5);
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["pos1", "--rounds", "3", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_flag_and_help_error() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+        let usage = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(usage.contains("--rounds"));
+        assert!(usage.contains("default: 10"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&argv(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn numeric_fallbacks() {
+        let a = cmd().parse(&argv(&["--rounds", "abc"])).unwrap();
+        assert_eq!(a.get_usize("rounds", 0), 0);
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch substrates for the offline build.
+//!
+//! The vendored crate set only carries the `xla` crate's closure, so the
+//! usual ecosystem dependencies are implemented here and unit-tested in
+//! place (see DESIGN.md §1):
+//!
+//! * [`rng`] — deterministic splittable PRNG (SplitMix64 core) with
+//!   normal / Dirichlet / shuffle sampling (replaces `rand`).
+//! * [`json`] — JSON parser + writer for the artifact manifest, configs
+//!   and results (replaces `serde_json`).
+//! * [`cli`] — flag parser for the binary and examples (replaces `clap`).
+//! * [`threadpool`] — scoped data-parallel helper (replaces `rayon`).
+//! * [`stats`] — summary statistics used by metrics and the bench harness.
+//! * [`bench`] — micro-benchmark harness behind `cargo bench`
+//!   (`harness = false` targets; replaces `criterion`).
+//! * [`proptest`] — seeded property-testing helper (replaces `proptest`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,124 @@
+//! Scoped data-parallel helper (replaces `rayon` in the offline build).
+//!
+//! The coordinator's only parallel pattern is "run the same closure over a
+//! work list of device indices" (local training within a round), so the
+//! abstraction is a single [`parallel_map`] built on `std::thread::scope`
+//! with a shared atomic work queue — no channels, no per-item spawn cost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: respects
+/// `CFEL_THREADS`, otherwise `available_parallelism`, clamped to the job.
+pub fn default_threads(jobs: usize) -> usize {
+    let hw = std::env::var("CFEL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    hw.clamp(1, jobs.max(1))
+}
+
+/// Apply `f(i)` for every `i in 0..n` on up to `threads` workers and return
+/// the results in index order. `f` must be `Sync` (it is shared, not
+/// cloned); captured state must be thread-safe.
+///
+/// With `threads <= 1` everything runs inline on the caller's thread — the
+/// mode used by the PJRT backend, whose executables are not `Send`.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let results_ptr = SendPtr(results.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            let results_ptr = &results_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let val = f(i);
+                // SAFETY: each index i is claimed exactly once by exactly
+                // one worker (fetch_add), and the vec outlives the scope.
+                unsafe {
+                    *results_ptr.0.add(i) = Some(val);
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|r| r.expect("worker failed to fill slot"))
+        .collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-index write pattern.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_in_order() {
+        let out = parallel_map(100, 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_inline() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let out: Vec<usize> = parallel_map(0, 8, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn every_item_processed_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let n = 1000;
+        let out = parallel_map(n, 8, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), n as u64);
+        assert_eq!(out.len(), n);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = parallel_map(3, 64, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn default_threads_clamps() {
+        assert_eq!(default_threads(1), 1);
+        assert!(default_threads(1_000_000) >= 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration tests for the extension features: upload compression,
+//! partial participation, checkpointing.
+
+use cfel::compression::Compressor;
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, History};
+use cfel::model::checkpoint;
+
+fn run(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn base(rounds: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::paper_system(AlgorithmKind::CeFedAvg);
+    c.rounds = rounds;
+    c
+}
+
+#[test]
+fn compression_shrinks_simulated_time_per_round() {
+    let h_raw = run(&base(3));
+    let mut c = base(3);
+    c.compression = Compressor::Quantize { bits: 8 };
+    let h_q8 = run(&c);
+    // Communication dominates Eq. 8 here, so 8-bit uploads must cut the
+    // simulated clock by roughly 4x (compute share is unchanged).
+    let (t_raw, t_q8) = (h_raw[2].sim_time_s, h_q8[2].sim_time_s);
+    assert!(t_q8 < t_raw * 0.4, "quantize:8 {t_q8} !<< raw {t_raw}");
+}
+
+#[test]
+fn quantized_training_still_learns() {
+    let mut c = base(12);
+    c.compression = Compressor::Quantize { bits: 8 };
+    let h = run(&c);
+    assert!(best_accuracy(&h) > 0.5, "{}", best_accuracy(&h));
+    // And stays close to the uncompressed accuracy.
+    let h_raw = run(&base(12));
+    assert!(
+        best_accuracy(&h) > best_accuracy(&h_raw) - 0.1,
+        "q8 {} vs raw {}",
+        best_accuracy(&h),
+        best_accuracy(&h_raw)
+    );
+}
+
+#[test]
+fn aggressive_topk_degrades_but_runs() {
+    let mut c = base(8);
+    c.compression = Compressor::TopK { fraction: 0.05 };
+    let h = run(&c);
+    // Still trains (top-5% of a fresh model moves the loss), no NaNs.
+    assert!(h.iter().all(|r| r.train_loss.is_finite()));
+    assert!(best_accuracy(&h) > 0.2);
+}
+
+#[test]
+fn participation_halves_steps_and_still_learns() {
+    let full = run(&base(6));
+    let mut c = base(6);
+    c.participation = 0.5;
+    let half = run(&c);
+    let steps_full: usize = full.iter().map(|r| r.steps).sum();
+    let steps_half: usize = half.iter().map(|r| r.steps).sum();
+    assert!(
+        steps_half * 2 <= steps_full + steps_full / 10,
+        "sampling did not halve work: {steps_half} vs {steps_full}"
+    );
+    assert!(best_accuracy(&half) > 0.4, "{}", best_accuracy(&half));
+}
+
+#[test]
+fn participation_is_deterministic() {
+    let mut c = base(4);
+    c.participation = 0.5;
+    let a = run(&c);
+    let b = run(&c);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.steps, y.steps);
+    }
+}
+
+#[test]
+fn full_participation_unchanged_by_feature() {
+    // participation = 1.0 must reproduce the original trajectory.
+    let mut c = base(3);
+    c.participation = 1.0;
+    let a = run(&c);
+    let b = run(&base(3));
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.train_loss, y.train_loss);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_coordinator_models() {
+    let mut coord = Coordinator::from_config(&base(2)).unwrap();
+    coord.run().unwrap();
+    let model = coord.clusters[0].model.clone();
+    let path = std::env::temp_dir().join(format!("cfel_int_ckpt_{}.ckpt", std::process::id()));
+    let state = cfel::model::ModelState::from_params(model.clone());
+    checkpoint::save(&path, &state, "mock-mlp", 2).unwrap();
+    let (loaded, meta) = checkpoint::load(&path, Some(model.len())).unwrap();
+    assert_eq!(loaded.params, model);
+    assert_eq!(meta.round, 2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn config_json_roundtrips_extensions() {
+    let mut c = base(2);
+    c.compression = Compressor::TopK { fraction: 0.25 };
+    c.participation = 0.75;
+    let j = c.to_json();
+    let c2 = ExperimentConfig::from_json(&j).unwrap();
+    assert_eq!(c2.compression, c.compression);
+    assert_eq!(c2.participation, c.participation);
+    // Invalid participation rejected.
+    let mut bad = base(2);
+    bad.participation = 0.0;
+    assert!(bad.validate().is_err());
+}

@@ -1,0 +1,158 @@
+//! PJRT round-trip integration tests (artifact-gated: these run the real
+//! AOT HLO artifacts through the runtime and skip cleanly when
+//! `make artifacts` has not been run).
+
+use cfel::config::{BackendKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::data::synthetic::{Prototypes, SyntheticSpec};
+use cfel::data::{sampler::eval_batches, Batch};
+use cfel::runtime::{Manifest, PjrtBackend, TrainBackend};
+use cfel::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&Manifest::default_dir()).ok()
+}
+
+fn backend(name: &str) -> Option<PjrtBackend> {
+    manifest().map(|m| PjrtBackend::from_manifest(&m, name).expect("backend load"))
+}
+
+fn task_batch(be: &dyn TrainBackend, seed: u64) -> (cfel::data::Dataset, Batch) {
+    let spec = SyntheticSpec {
+        dim: be.flat_dim(),
+        num_classes: be.num_classes(),
+        ..SyntheticSpec::mlp_synth()
+    };
+    let protos = Prototypes::new(spec, &Rng::new(seed));
+    let ds = protos.global_pool(be.batch_size() * 3, &Rng::new(seed + 1));
+    let idx: Vec<usize> = (0..be.batch_size()).collect();
+    let b = Batch::gather(&ds, &idx, be.batch_size());
+    (ds, b)
+}
+
+#[test]
+fn train_step_decreases_loss_on_every_model() {
+    let Some(man) = manifest() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    for name in man.models.keys() {
+        let be = PjrtBackend::from_manifest(&man, name).unwrap();
+        let (_, batch) = task_batch(&be, 11);
+        let mut state = be.init_state(&Rng::new(12));
+        let l0 = be.train_step(&mut state, &batch, 0.05).unwrap();
+        let mut last = l0;
+        for _ in 0..4 {
+            last = be.train_step(&mut state, &batch, 0.05).unwrap();
+        }
+        assert!(last < l0, "{name}: loss {l0} -> {last}");
+        assert!(l0.is_finite() && last.is_finite());
+    }
+}
+
+#[test]
+fn initial_loss_matches_uniform_prediction() {
+    // Fresh Glorot init ⇒ near-uniform softmax ⇒ loss ≈ ln(C). Validates
+    // the whole literal-marshalling path (wrong parameter order or
+    // transposed shapes would blow this up).
+    let Some(be) = backend("mlp_synth") else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let (_, batch) = task_batch(&be, 21);
+    let mut state = be.init_state(&Rng::new(22));
+    let loss = be.train_step(&mut state, &batch, 0.0).unwrap();
+    let ln_c = (be.num_classes() as f32).ln();
+    assert!(
+        (loss - ln_c).abs() < 0.35 * ln_c,
+        "initial loss {loss} vs ln(C) {ln_c}"
+    );
+}
+
+#[test]
+fn zero_lr_step_keeps_params_but_fills_momentum() {
+    let Some(be) = backend("mlp_synth") else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let (_, batch) = task_batch(&be, 31);
+    let mut state = be.init_state(&Rng::new(32));
+    let p0 = state.params.clone();
+    be.train_step(&mut state, &batch, 0.0).unwrap();
+    assert_eq!(state.params, p0, "params moved at lr=0");
+    assert!(
+        state.momentum.iter().any(|&v| v != 0.0),
+        "momentum not written back"
+    );
+}
+
+#[test]
+fn eval_masks_padding_and_matches_manual_count() {
+    let Some(be) = backend("mlp_synth") else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let (ds, _) = task_batch(&be, 41);
+    let state = be.init_state(&Rng::new(42));
+    // Full batches vs a short final batch: examples must add up.
+    let batches = eval_batches(&ds, be.batch_size());
+    let r = be.eval(&state.params, &batches).unwrap();
+    assert_eq!(r.examples, ds.len());
+    assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+    assert!(r.loss > 0.0);
+    // Padded single-example batch.
+    let short = Batch::gather(&ds, &[0], be.batch_size());
+    let r1 = be.eval(&state.params, &[short]).unwrap();
+    assert_eq!(r1.examples, 1);
+}
+
+#[test]
+fn training_beats_chance_on_separable_task() {
+    let Some(be) = backend("mlp_synth") else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let (ds, batch) = task_batch(&be, 51);
+    let mut state = be.init_state(&Rng::new(52));
+    for _ in 0..25 {
+        be.train_step(&mut state, &batch, 0.1).unwrap();
+    }
+    let r = be
+        .eval(&state.params, &eval_batches(&ds, be.batch_size()))
+        .unwrap();
+    let chance = 1.0 / be.num_classes() as f64;
+    assert!(r.accuracy > 3.0 * chance, "accuracy {} vs chance {chance}", r.accuracy);
+}
+
+#[test]
+fn full_ce_fedavg_round_on_pjrt() {
+    if manifest().is_none() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.n_devices = 4;
+    cfg.n_clusters = 2;
+    cfg.rounds = 2;
+    cfg.tau = 1;
+    cfg.q = 1;
+    cfg.samples_per_device = 110; // ~2 batches of 50
+    cfg.data_noise = None;
+    cfg.backend = BackendKind::Pjrt { model: "mlp_synth".into(), artifacts_dir: None };
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let h = coord.run().unwrap();
+    assert_eq!(h.len(), 2);
+    assert!(h[1].train_loss < h[0].train_loss);
+    assert!(!h[1].test_accuracy.is_nan());
+}
+
+#[test]
+fn rejects_wrong_batch_size() {
+    let Some(be) = backend("mlp_synth") else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let mut state = be.init_state(&Rng::new(1));
+    let bad = Batch { x: vec![0.0; 2 * be.flat_dim()], y: vec![0, 1], valid: 2 };
+    assert!(be.train_step(&mut state, &bad, 0.1).is_err());
+}

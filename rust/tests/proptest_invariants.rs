@@ -1,0 +1,215 @@
+//! Property-based tests over the coordinator's algebraic invariants
+//! (util::proptest harness; seeds reported on failure for reproduction).
+
+use cfel::aggregation::{
+    consensus_distance, global_average, gossip_mix, l2_distance, weighted_average,
+};
+use cfel::data::partition;
+use cfel::prop_assert;
+use cfel::topology::{Graph, MixingMatrix};
+use cfel::util::proptest::{check, close, default_cases, int_biased, simplex, vec_f32};
+use cfel::util::rng::Rng;
+
+/// Random connected graph: ER(p) with p biased upward, falling back to a
+/// ring when sampling fails.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let m = int_biased(rng, 2, 12);
+    let p = 0.2 + 0.7 * rng.f64();
+    Graph::erdos_renyi(m, p, &rng.split(99)).unwrap_or_else(|_| Graph::ring(m).unwrap())
+}
+
+#[test]
+fn prop_metropolis_doubly_stochastic_on_random_graphs() {
+    check("metropolis-ds", 11, default_cases(), |rng| {
+        let g = random_graph(rng);
+        let h = MixingMatrix::metropolis(&g);
+        h.validate().map_err(|e| e.to_string())?;
+        // Any power must remain doubly stochastic.
+        let pi = int_biased(rng, 1, 12) as u32;
+        h.power(pi).validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_zeta_bounds_and_monotone_contraction() {
+    check("zeta-bounds", 12, default_cases(), |rng| {
+        let g = random_graph(rng);
+        let h = MixingMatrix::metropolis(&g);
+        let z = h.zeta();
+        prop_assert!((0.0..1.0 + 1e-9).contains(&z), "zeta {z} out of [0,1)");
+        if g.is_connected() {
+            prop_assert!(z < 1.0 - 1e-9, "connected graph with zeta {z}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gossip_preserves_equal_size_average() {
+    // Eq. 12: the doubly-stochastic mix leaves the mean model invariant.
+    check("gossip-mean", 13, default_cases(), |rng| {
+        let g = random_graph(rng);
+        let m = g.len();
+        let d = int_biased(rng, 1, 300);
+        let pi = int_biased(rng, 1, 6) as u32;
+        let h = MixingMatrix::metropolis(&g).power(pi);
+        let mut models: Vec<Vec<f32>> = (0..m).map(|_| vec_f32(rng, d)).collect();
+        let before = global_average(&models, &vec![1; m]);
+        let mut scratch = Vec::new();
+        gossip_mix(&mut models, &h, &mut scratch);
+        let after = global_average(&models, &vec![1; m]);
+        let dist = l2_distance(&before, &after);
+        let scale = before.iter().map(|v| v.abs() as f64).sum::<f64>() / d as f64;
+        prop_assert!(
+            dist < 1e-3 * (1.0 + scale) * (d as f64).sqrt(),
+            "average moved by {dist} (scale {scale})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gossip_never_increases_consensus_distance() {
+    check("gossip-contracts", 14, default_cases(), |rng| {
+        let g = random_graph(rng);
+        let m = g.len();
+        let d = int_biased(rng, 1, 200);
+        let h = MixingMatrix::metropolis(&g);
+        let mut models: Vec<Vec<f32>> = (0..m).map(|_| vec_f32(rng, d)).collect();
+        let mut scratch = Vec::new();
+        let mut prev = consensus_distance(&models);
+        for _ in 0..4 {
+            gossip_mix(&mut models, &h, &mut scratch);
+            let cur = consensus_distance(&models);
+            prop_assert!(
+                cur <= prev * (1.0 + 1e-5) + 1e-7,
+                "consensus grew: {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_average_is_convex_combination() {
+    check("wavg-convex", 15, default_cases(), |rng| {
+        let n = int_biased(rng, 1, 10);
+        let d = int_biased(rng, 1, 100);
+        let rows_data: Vec<Vec<f32>> = (0..n).map(|_| vec_f32(rng, d)).collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let w = simplex(rng, n);
+        let avg = weighted_average(&rows, &w);
+        for j in 0..d {
+            let lo = rows_data.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+            let hi = rows_data
+                .iter()
+                .map(|r| r[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            let tol = 1e-4 * (1.0 + hi.abs().max(lo.abs()));
+            prop_assert!(
+                avg[j] >= lo - tol && avg[j] <= hi + tol,
+                "coord {j}: {} outside [{lo}, {hi}]",
+                avg[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_disjoint_and_exhaustive() {
+    check("partition-invariants", 16, default_cases(), |rng| {
+        let classes = int_biased(rng, 2, 12);
+        let n_dev = int_biased(rng, 1, 24);
+        let n = (classes * n_dev * int_biased(rng, 2, 12)).max(n_dev);
+        let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+        let prng = rng.split(5);
+
+        let parts = partition::iid(n, n_dev, &prng);
+        partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
+
+        let alpha = 0.1 + rng.f64() * 5.0;
+        let parts = partition::dirichlet(&labels, classes, n_dev, alpha, &prng);
+        partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
+        prop_assert!(
+            parts.iter().all(|p| !p.is_empty()) || n < n_dev,
+            "dirichlet left a device empty with n={n}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_two_level_partitions_cover_everything() {
+    check("two-level-partitions", 17, default_cases(), |rng| {
+        let m = int_biased(rng, 2, 6);
+        let dpc = int_biased(rng, 2, 6);
+        let classes = int_biased(rng, 2, 10);
+        let per_dev = int_biased(rng, 8, 40);
+        let n = m * dpc * per_dev;
+        let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+        let prng = rng.split(6);
+        let parts = partition::cluster_iid(&labels, m, dpc, &prng).map_err(|e| e.to_string())?;
+        partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
+        let c = int_biased(rng, 1, classes);
+        let parts =
+            partition::cluster_noniid(&labels, m, dpc, c, &prng).map_err(|e| e.to_string())?;
+        partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixing_power_converges_to_uniform() {
+    check("power-converges", 18, default_cases() / 2, |rng| {
+        let g = random_graph(rng);
+        let m = g.len();
+        let h = MixingMatrix::metropolis(&g);
+        if !g.is_connected() {
+            return Ok(());
+        }
+        let hp = h.power(400);
+        for i in 0..m {
+            for j in 0..m {
+                prop_assert!(
+                    close(hp.get(i, j), 1.0 / m as f64, 1e-3),
+                    "H^400[{i}][{j}] = {} != 1/{m}",
+                    hp.get(i, j)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_removal_keeps_valid_structure() {
+    check("node-removal", 19, default_cases(), |rng| {
+        let g = random_graph(rng);
+        if g.len() < 2 {
+            return Ok(());
+        }
+        let victim = rng.below(g.len());
+        let (sub, map) = g.remove_node(victim).map_err(|e| e.to_string())?;
+        prop_assert!(sub.len() == g.len() - 1, "wrong size");
+        prop_assert!(map[victim].is_none(), "victim still mapped");
+        // Edges preserved among survivors.
+        for i in 0..g.len() {
+            if i == victim {
+                continue;
+            }
+            for &j in g.neighbors(i) {
+                if j == victim {
+                    continue;
+                }
+                let (ni, nj) = (map[i].unwrap(), map[j].unwrap());
+                prop_assert!(
+                    sub.neighbors(ni).contains(&nj),
+                    "edge ({i},{j}) lost in removal"
+                );
+            }
+        }
+        Ok(())
+    });
+}
