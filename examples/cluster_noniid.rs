@@ -17,16 +17,16 @@ use cfel::coordinator::Coordinator;
 use cfel::metrics::{best_accuracy, time_to_accuracy, History};
 use cfel::util::cli::Command;
 
-fn run(scheme: DataScheme, rounds: usize, seed: u64) -> anyhow::Result<History> {
+fn run(scheme: DataScheme, rounds: usize, seed: u64) -> cfel::Result<History> {
     let mut cfg = ExperimentConfig::paper_system(cfel::config::AlgorithmKind::CeFedAvg);
     cfg.rounds = rounds;
     cfg.seed = seed;
     cfg.data = scheme;
     let mut coord = Coordinator::from_config(&cfg)?;
-    Ok(coord.run()?)
+    coord.run()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cfel::Result<()> {
     let cmd = Command::new("cluster_noniid", "Fig. 5: cluster-level distribution sweep")
         .flag_default("rounds", "20", "global rounds")
         .flag_default("seed", "1", "seed");

@@ -20,7 +20,7 @@ use cfel::coordinator::Coordinator;
 use cfel::metrics::{best_accuracy, CsvWriter, ROUND_HEADER};
 use cfel::util::cli::Command;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cfel::Result<()> {
     let cmd = Command::new("e2e_femnist", "end-to-end CE-FedAvg on the femnist_cnn artifacts")
         .flag_default("devices", "16", "total devices")
         .flag_default("clusters", "4", "edge servers")
@@ -91,14 +91,16 @@ fn main() -> anyhow::Result<()> {
     println!("real wall time:   {:.1} s", last.wall_time_s);
     println!("simulated time:   {:.1} s (Eq. 8, paper constants)", last.sim_time_s);
     println!("csv:              {}", csv_path.display());
-    anyhow::ensure!(
-        last.train_loss < history[0].train_loss,
-        "training did not reduce the loss"
-    );
-    anyhow::ensure!(
-        best_accuracy(&history) > 3.0 / 62.0,
-        "accuracy never cleared 3x chance"
-    );
+    if last.train_loss >= history[0].train_loss {
+        return Err(cfel::CfelError::Runtime(
+            "training did not reduce the loss".into(),
+        ));
+    }
+    if best_accuracy(&history) <= 3.0 / 62.0 {
+        return Err(cfel::CfelError::Runtime(
+            "accuracy never cleared 3x chance".into(),
+        ));
+    }
     println!("OK: loss decreased and accuracy beats chance — stack verified.");
     Ok(())
 }

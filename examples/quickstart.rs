@@ -15,7 +15,7 @@ use cfel::config::{AlgorithmKind, ExperimentConfig};
 use cfel::coordinator::Coordinator;
 use cfel::metrics::{best_accuracy, time_to_accuracy};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cfel::Result<()> {
     let mut cfg = ExperimentConfig::quickstart();
     cfg.rounds = 20;
 

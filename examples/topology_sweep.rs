@@ -16,7 +16,7 @@ use cfel::topology::{Graph, MixingMatrix};
 use cfel::util::cli::Command;
 use cfel::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cfel::Result<()> {
     let cmd = Command::new("topology_sweep", "Fig. 6: backhaul topology sweep")
         .flag_default("rounds", "15", "global rounds per topology")
         .flag_default("m", "8", "edge servers")

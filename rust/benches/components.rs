@@ -6,6 +6,8 @@
 use std::path::Path;
 
 use cfel::aggregation::{consensus_distance, gossip_mix, weighted_average_into};
+use cfel::config::ExperimentConfig;
+use cfel::coordinator::Coordinator;
 use cfel::data::synthetic::{Prototypes, SyntheticSpec};
 use cfel::data::{partition, Batch};
 use cfel::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
@@ -83,10 +85,29 @@ fn main() {
         mock.train_step(&mut state, &batch, 0.05).unwrap()
     });
 
-    if manifest_path.exists() {
+    // ---- parallel cluster engine ---------------------------------------
+    // Wall-clock of one CE-FedAvg global round (quickstart system: 4
+    // clusters x 4 devices, mock backend) with the round engine pinned to
+    // 1 vs 4 worker threads — the speedup the coordinator refactor buys.
+    let mut round_cfg = ExperimentConfig::quickstart();
+    round_cfg.rounds = 1;
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        let mut coord = Coordinator::from_config(&round_cfg).unwrap();
+        b.run(
+            &format!("ce-fedavg global round m=4 (CFEL_THREADS={threads})"),
+            || coord.run().unwrap(),
+        );
+    }
+    std::env::remove_var("CFEL_THREADS");
+
+    if manifest_path.exists() && cfg!(feature = "xla") {
         bench_pjrt(&mut b, Manifest::default_dir().as_path());
     } else {
-        println!("(artifacts missing — run `make artifacts` to bench the PJRT path)");
+        println!(
+            "(PJRT path skipped — needs `make artifacts` and a build with \
+             --features xla)"
+        );
     }
 }
 

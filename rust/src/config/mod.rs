@@ -260,7 +260,7 @@ impl ExperimentConfig {
         if self.pi == 0 && self.algorithm == AlgorithmKind::CeFedAvg {
             return Err(CfelError::Config("CE-FedAvg needs pi >= 1".into()));
         }
-        if !(self.lr > 0.0) {
+        if self.lr.is_nan() || self.lr <= 0.0 {
             return Err(CfelError::Config(format!("lr must be positive, got {}", self.lr)));
         }
         if self.samples_per_device == 0 {

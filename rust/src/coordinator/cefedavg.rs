@@ -16,15 +16,10 @@ impl Coordinator {
         let mut stats = RoundStats::default();
         for r in 0..self.cfg.q {
             let phase = (round * self.cfg.q + r) as u64;
-            for ci in self.alive_clusters() {
-                let outcomes = self.train_cluster(ci, self.cfg.tau, phase)?;
-                for (dev, o) in &outcomes {
-                    stats.device_steps.push((*dev, o.steps));
-                    stats.loss_sum += o.loss_sum;
-                    stats.step_count += o.steps;
-                }
-                self.aggregate_cluster(ci, &outcomes);
-            }
+            // Every alive cluster trains + aggregates concurrently —
+            // Algorithm 1's edge rounds are cluster-independent until
+            // the gossip step below.
+            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
         }
         self.gossip();
         // Eq. 8 wants per-device steps of the *whole* global round.

@@ -1,5 +1,8 @@
 //! Per-cluster state: the edge server's model and its device roster.
 
+use crate::aggregation;
+use crate::coordinator::trainer::LocalOutcome;
+
 /// One edge server's state (the paper's y^{(i)} plus bookkeeping).
 #[derive(Debug, Clone)]
 pub struct ClusterState {
@@ -15,6 +18,21 @@ impl ClusterState {
     pub fn n_devices(&self) -> usize {
         self.device_ids.len()
     }
+
+    /// Intra-cluster aggregation (Eq. 6): the size-weighted average of
+    /// the participating devices' freshly trained models, written into
+    /// `out` (normally the cluster's existing model buffer). A pure
+    /// shard-local operation the parallel round engine applies per alive
+    /// cluster after the training join.
+    pub fn aggregate_into(outcomes: &[(usize, LocalOutcome)], out: &mut [f32]) {
+        let total: usize = outcomes.iter().map(|(_, o)| o.n_samples).sum();
+        let weights: Vec<f64> = outcomes
+            .iter()
+            .map(|(_, o)| o.n_samples as f64 / total as f64)
+            .collect();
+        let rows: Vec<&[f32]> = outcomes.iter().map(|(_, o)| o.params.as_slice()).collect();
+        aggregation::weighted_average_into(&rows, &weights, out);
+    }
 }
 
 #[cfg(test)]
@@ -26,5 +44,19 @@ mod tests {
         let c = ClusterState { device_ids: vec![3, 4, 5], model: vec![0.0; 7], n_samples: 30 };
         assert_eq!(c.n_devices(), 3);
         assert_eq!(c.model.len(), 7);
+    }
+
+    #[test]
+    fn aggregate_into_weights_by_sample_count() {
+        let o = |params: Vec<f32>, n_samples: usize| LocalOutcome {
+            params,
+            steps: 1,
+            loss_sum: 0.0,
+            n_samples,
+        };
+        let outcomes = vec![(0usize, o(vec![0.0, 0.0], 30)), (1usize, o(vec![4.0, 8.0], 10))];
+        let mut out = vec![9.0f32; 2];
+        ClusterState::aggregate_into(&outcomes, &mut out);
+        assert_eq!(out, vec![1.0, 2.0]); // 0.75 * 0 + 0.25 * [4, 8]
     }
 }

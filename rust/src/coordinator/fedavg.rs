@@ -15,17 +15,10 @@ impl Coordinator {
         let mut stats = RoundStats::default();
         let epochs = self.cfg.q * self.cfg.tau; // qτ local epochs per round
         let phase = round as u64;
-        for ci in self.alive_clusters() {
-            let outcomes = self.train_cluster(ci, epochs, phase)?;
-            for (dev, o) in &outcomes {
-                stats.device_steps.push((*dev, o.steps));
-                stats.loss_sum += o.loss_sum;
-                stats.step_count += o.steps;
-            }
-            // Stage device models at the cluster slot (pure bookkeeping —
-            // the real aggregation is the cloud step below).
-            self.aggregate_cluster(ci, &outcomes);
-        }
+        // All devices train concurrently; the per-cluster Eq. 6 average
+        // is pure bookkeeping here — the real aggregation is the cloud
+        // step below.
+        self.edge_phase(epochs, phase, &mut stats)?;
         if self.aggregator_alive {
             self.cloud_aggregate();
         }

@@ -15,15 +15,9 @@ impl Coordinator {
         let mut stats = RoundStats::default();
         for r in 0..self.cfg.q {
             let phase = (round * self.cfg.q + r) as u64;
-            for ci in self.alive_clusters() {
-                let outcomes = self.train_cluster(ci, self.cfg.tau, phase)?;
-                for (dev, o) in &outcomes {
-                    stats.device_steps.push((*dev, o.steps));
-                    stats.loss_sum += o.loss_sum;
-                    stats.step_count += o.steps;
-                }
-                self.aggregate_cluster(ci, &outcomes);
-            }
+            // Clusters are independent between cloud syncs — run them
+            // concurrently through the parallel round engine.
+            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
         }
         if self.aggregator_alive {
             self.cloud_aggregate();

@@ -13,15 +13,9 @@ impl Coordinator {
         let mut stats = RoundStats::default();
         for r in 0..self.cfg.q {
             let phase = (round * self.cfg.q + r) as u64;
-            for ci in self.alive_clusters() {
-                let outcomes = self.train_cluster(ci, self.cfg.tau, phase)?;
-                for (dev, o) in &outcomes {
-                    stats.device_steps.push((*dev, o.steps));
-                    stats.loss_sum += o.loss_sum;
-                    stats.step_count += o.steps;
-                }
-                self.aggregate_cluster(ci, &outcomes);
-            }
+            // Fully independent clusters: the ideal case for the
+            // parallel round engine.
+            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
         }
         // No inter-cluster aggregation of any kind.
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));

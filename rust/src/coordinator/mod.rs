@@ -35,9 +35,39 @@ use crate::data::{partition, Batch};
 use crate::error::{CfelError, Result};
 use crate::metrics::{History, RoundRecord};
 use crate::netsim::{NetworkModel, RoundLatency};
-use crate::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
+use crate::runtime::{EvalResult, Manifest, MockBackend, PjrtBackend, TrainBackend};
 use crate::topology::{Graph, MixingMatrix};
 use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// Immutable per-round view of the coordinator, shared by the parallel
+/// cluster tasks. Splitting the round state this way lets every alive
+/// cluster train concurrently against shared read-only data while the
+/// mutable [`ClusterState`] shards are only written after the join, in
+/// deterministic cluster order — so results are bit-identical for any
+/// `CFEL_THREADS`.
+pub(crate) struct RoundContext<'a> {
+    pub backend: &'a dyn TrainBackend,
+    pub fed: &'a FederatedData,
+    pub cfg: &'a ExperimentConfig,
+    pub rng: &'a Rng,
+}
+
+impl RoundContext<'_> {
+    /// Deterministic per-(round-phase, cluster) stream: participant
+    /// sampling. Stable no matter how many clusters run concurrently or
+    /// in which order the scheduler interleaves them.
+    pub(crate) fn cluster_rng(&self, ci: usize, phase: u64) -> Rng {
+        self.rng.split(0x9A27_0000 + ci as u64).split(phase)
+    }
+
+    /// Deterministic per-(round-phase, device) stream: local SGD batch
+    /// order. Derived from the root seed, not from any worker-thread
+    /// state, so a device's trajectory is independent of thread count.
+    pub(crate) fn device_rng(&self, dev: usize, phase: u64) -> Rng {
+        self.rng.split(0x5EED_0000 + dev as u64).split(phase)
+    }
+}
 
 /// Aggregate statistics of one global round's local-training phase.
 #[derive(Debug, Default, Clone)]
@@ -246,16 +276,14 @@ impl Coordinator {
         (0..self.clusters.len()).filter(|&i| self.alive[i]).collect()
     }
 
-    /// Intra-cluster aggregation (Eq. 6): size-weighted average of the
-    /// freshly trained (participating) device models of cluster `ci`.
-    pub(crate) fn aggregate_cluster(&mut self, ci: usize, outcomes: &[(usize, LocalOutcome)]) {
-        let total: usize = outcomes.iter().map(|(_, o)| o.n_samples).sum();
-        let weights: Vec<f64> = outcomes
-            .iter()
-            .map(|(_, o)| o.n_samples as f64 / total as f64)
-            .collect();
-        let rows: Vec<&[f32]> = outcomes.iter().map(|(_, o)| o.params.as_slice()).collect();
-        aggregation::weighted_average_into(&rows, &weights, &mut self.clusters[ci].model);
+    /// Borrow the immutable round context the parallel cluster tasks share.
+    pub(crate) fn round_ctx(&self) -> RoundContext<'_> {
+        RoundContext {
+            backend: &*self.backend,
+            fed: &self.fed,
+            cfg: &self.cfg,
+            rng: &self.rng,
+        }
     }
 
     /// Cloud aggregation (FedAvg / Hier-FAvg): size-weighted average over
@@ -352,11 +380,23 @@ impl Coordinator {
     /// same weighted-mean computation serves all four.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         let alive = self.alive_clusters();
+        // Per-cluster evals are independent; run them concurrently when
+        // the backend allows it and reduce in alive order afterwards so
+        // the floating-point accumulation is deterministic.
+        let threads = if self.backend.parallel_devices() {
+            default_threads(alive.len())
+        } else {
+            1
+        };
+        let results: Vec<Result<EvalResult>> = parallel_map(alive.len(), threads, |slot| {
+            self.backend
+                .eval(&self.clusters[alive[slot]].model, &self.eval_set)
+        });
         let mut acc = 0.0;
         let mut loss = 0.0;
         let mut total = 0usize;
-        for &ci in &alive {
-            let r = self.backend.eval(&self.clusters[ci].model, &self.eval_set)?;
+        for (&ci, r) in alive.iter().zip(results) {
+            let r = r?;
             let w = self.clusters[ci].n_samples;
             acc += r.accuracy * w as f64;
             loss += r.loss * w as f64;

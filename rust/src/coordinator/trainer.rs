@@ -1,7 +1,7 @@
 //! Device-local training: τ epochs of mini-batch SGD from the edge model
 //! (paper Eqs. 4–5, epoch semantics following Reddi et al. [42]).
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{ClusterState, Coordinator, RoundContext, RoundStats};
 use crate::data::sampler::EpochSampler;
 use crate::data::Dataset;
 use crate::error::Result;
@@ -51,69 +51,108 @@ pub fn train_device(
     })
 }
 
-impl Coordinator {
-    /// Run one edge round for cluster `ci`: the sampled participants
-    /// (config `participation`, classic FedAvg client sampling) each
-    /// train `epochs` epochs from the current edge model, in parallel
-    /// when the backend allows it. RNG streams are derived from
-    /// (seed, device, phase) so results are identical regardless of
-    /// thread count. Returns `(device_id, outcome)` pairs; the uploads
-    /// have already been passed through the configured lossy compressor
-    /// (what the edge server actually receives).
-    pub(crate) fn train_cluster(
+impl RoundContext<'_> {
+    /// Deterministic participant sample for (cluster, phase) — classic
+    /// FedAvg client sampling over the cluster's device roster.
+    pub(crate) fn sample_participants(
         &self,
+        cluster: &ClusterState,
         ci: usize,
-        epochs: usize,
         phase: u64,
-    ) -> Result<Vec<(usize, LocalOutcome)>> {
-        let cluster = &self.clusters[ci];
-        let participants = self.sample_participants(ci, phase);
-        let n = participants.len();
-        let threads = if self.backend.parallel_devices() {
-            default_threads(n)
-        } else {
-            1
-        };
-        let results: Vec<Result<LocalOutcome>> = parallel_map(n, threads, |slot| {
-            let dev = participants[slot];
-            let rng = self
-                .rng
-                .split(0x5EED_0000 + dev as u64)
-                .split(phase);
-            let mut out = train_device(
-                &*self.backend,
-                &self.fed.device_train[dev],
-                &cluster.model,
-                epochs,
-                self.cfg.lr,
-                rng,
-            )?;
-            // Device -> edge upload: the server sees the lossy model.
-            self.cfg.compression.roundtrip(&mut out.params);
-            Ok(out)
-        });
-        results
-            .into_iter()
-            .zip(participants)
-            .map(|(r, dev)| r.map(|o| (dev, o)))
-            .collect()
-    }
-
-    /// Deterministic participant sample for (cluster, phase).
-    fn sample_participants(&self, ci: usize, phase: u64) -> Vec<usize> {
-        let ids = &self.clusters[ci].device_ids;
+    ) -> Vec<usize> {
+        let ids = &cluster.device_ids;
         if self.cfg.participation >= 1.0 {
             return ids.clone();
         }
         let k = ((ids.len() as f64 * self.cfg.participation).ceil() as usize)
             .clamp(1, ids.len());
-        let mut rng = self
-            .rng
-            .split(0x9A27_0000 + ci as u64)
-            .split(phase);
+        let mut rng = self.cluster_rng(ci, phase);
         let mut picks = rng.choose(ids.len(), k);
         picks.sort_unstable(); // stable aggregation order
         picks.into_iter().map(|slot| ids[slot]).collect()
+    }
+}
+
+impl Coordinator {
+    /// One edge phase of a global round: every alive cluster trains its
+    /// sampled participants `epochs` local epochs from its current edge
+    /// model and aggregates intra-cluster (Eq. 6).
+    ///
+    /// This is the parallel cluster execution engine: the (cluster,
+    /// device) work items of *all* alive clusters are flattened into one
+    /// work list and run concurrently (when the backend allows it —
+    /// the mock backend does; the non-`Send` PJRT executables keep the
+    /// inline single-thread mode). Each device draws its RNG stream from
+    /// the immutable [`RoundContext`] keyed by (device, phase), and both
+    /// `RoundStats` and the per-cluster models are merged after the join
+    /// in deterministic (alive-cluster, participant) order, so the
+    /// result is bit-identical for any `CFEL_THREADS`.
+    ///
+    /// Device→edge uploads pass through the configured lossy compressor
+    /// before aggregation (what the edge server actually receives).
+    pub(crate) fn edge_phase(
+        &mut self,
+        epochs: usize,
+        phase: u64,
+        stats: &mut RoundStats,
+    ) -> Result<()> {
+        let alive = self.alive_clusters();
+        if alive.is_empty() {
+            return Ok(());
+        }
+        let parallel = self.backend.parallel_devices();
+
+        // ---- train: one flattened work item per (cluster, device) -----
+        let ctx = self.round_ctx();
+        let participants: Vec<Vec<usize>> = alive
+            .iter()
+            .map(|&ci| ctx.sample_participants(&self.clusters[ci], ci, phase))
+            .collect();
+        let items: Vec<(usize, usize)> = participants
+            .iter()
+            .enumerate()
+            .flat_map(|(slot, devs)| devs.iter().map(move |&dev| (slot, dev)))
+            .collect();
+        let threads = if parallel {
+            default_threads(items.len())
+        } else {
+            1
+        };
+        let clusters = &self.clusters;
+        let trained: Vec<Result<LocalOutcome>> = parallel_map(items.len(), threads, |w| {
+            let (slot, dev) = items[w];
+            let mut out = train_device(
+                ctx.backend,
+                &ctx.fed.device_train[dev],
+                &clusters[alive[slot]].model,
+                epochs,
+                ctx.cfg.lr,
+                ctx.device_rng(dev, phase),
+            )?;
+            // Device -> edge upload: the server sees the lossy model.
+            ctx.cfg.compression.roundtrip(&mut out.params);
+            Ok(out)
+        });
+
+        // ---- merge stats + group per cluster (deterministic order) ----
+        let mut per_cluster: Vec<Vec<(usize, LocalOutcome)>> =
+            participants.iter().map(|p| Vec::with_capacity(p.len())).collect();
+        for (&(slot, dev), r) in items.iter().zip(trained) {
+            let out = r?;
+            stats.device_steps.push((dev, out.steps));
+            stats.loss_sum += out.loss_sum;
+            stats.step_count += out.steps;
+            per_cluster[slot].push((dev, out));
+        }
+
+        // ---- aggregate (Eq. 6): in place, per shard, post-join --------
+        // O(m·p) memory-bound averages are cheap next to training; write
+        // straight into each cluster's existing model buffer rather than
+        // paying per-phase allocations or a second thread-pool spin-up.
+        for (slot, &ci) in alive.iter().enumerate() {
+            ClusterState::aggregate_into(&per_cluster[slot], &mut self.clusters[ci].model);
+        }
+        Ok(())
     }
 }
 

@@ -1,46 +1,91 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: the offline build carries no
+//! `thiserror`).
+
+use std::fmt;
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, CfelError>;
 
 /// Errors produced by the CFEL coordinator and its substrates.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CfelError {
     /// Invalid experiment / system configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed JSON (manifest, config file, results).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Artifact manifest inconsistent with HLO or with the config.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// Topology construction or validation failure (e.g. disconnected graph).
-    #[error("topology error: {0}")]
     Topology(String),
 
     /// Data generation / partitioning failure.
-    #[error("data error: {0}")]
     Data(String),
 
     /// PJRT runtime failure (compile, execute, literal conversion).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Underlying XLA error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for CfelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CfelError::Config(m) => write!(f, "config error: {m}"),
+            CfelError::Json(m) => write!(f, "json error: {m}"),
+            CfelError::Manifest(m) => write!(f, "manifest error: {m}"),
+            CfelError::Topology(m) => write!(f, "topology error: {m}"),
+            CfelError::Data(m) => write!(f, "data error: {m}"),
+            CfelError::Runtime(m) => write!(f, "runtime error: {m}"),
+            CfelError::Xla(m) => write!(f, "xla error: {m}"),
+            CfelError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CfelError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CfelError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CfelError {
+    fn from(e: std::io::Error) -> Self {
+        CfelError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for CfelError {
     fn from(e: xla::Error) -> Self {
         CfelError::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_kind() {
+        assert!(CfelError::Config("x".into()).to_string().starts_with("config error"));
+        assert!(CfelError::Manifest("x".into()).to_string().contains("x"));
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: CfelError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

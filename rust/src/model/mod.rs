@@ -95,7 +95,7 @@ impl ModelSchema {
         for (i, spec) in self.specs.iter().enumerate() {
             let mut r = rng.split(i as u64);
             match spec.init {
-                InitKind::Zeros => out.extend(std::iter::repeat(0.0).take(spec.size)),
+                InitKind::Zeros => out.resize(out.len() + spec.size, 0.0),
                 InitKind::GlorotUniform => {
                     let limit =
                         (6.0 / (spec.fan_in + spec.fan_out) as f32).sqrt();

@@ -1,0 +1,74 @@
+//! The parallel cluster engine must be invisible in the results:
+//! the same config + seed produce an identical `History` whether the
+//! round runs on 1 worker thread or 4 (`CFEL_THREADS`). RNG streams are
+//! derived per (round-phase, cluster/device) from the root seed and all
+//! merges happen in deterministic order after the join, so this holds
+//! bit-for-bit, not just approximately.
+
+use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::History;
+
+fn run(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_with_threads(cfg: &ExperimentConfig, threads: &str) -> History {
+    std::env::set_var("CFEL_THREADS", threads);
+    let h = run(cfg);
+    std::env::remove_var("CFEL_THREADS");
+    h
+}
+
+fn assert_bit_identical(alg: AlgorithmKind, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{alg:?}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round);
+        // Bitwise f64 equality: the merge order after the parallel join
+        // is fixed, so not even the float accumulation may differ.
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{alg:?} round {}: train_loss {} vs {}",
+            x.round,
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{alg:?} round {}: test_accuracy {} vs {}",
+            x.round,
+            x.test_accuracy,
+            y.test_accuracy
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits());
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits());
+        assert_eq!(x.steps, y.steps);
+    }
+}
+
+/// One test body: `CFEL_THREADS` is process-global, so the env-var
+/// mutations must not race a concurrently running test.
+#[test]
+fn histories_identical_for_1_vs_4_threads() {
+    for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::HierFAvg] {
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.algorithm = alg;
+        cfg.rounds = 6;
+        let h1 = run_with_threads(&cfg, "1");
+        let h4 = run_with_threads(&cfg, "4");
+        assert_bit_identical(alg, &h1, &h4);
+
+        // Partial participation exercises the per-(cluster, phase)
+        // sampling streams as well.
+        let mut sampled = cfg.clone();
+        sampled.participation = 0.5;
+        sampled.rounds = 4;
+        let s1 = run_with_threads(&sampled, "1");
+        let s4 = run_with_threads(&sampled, "4");
+        assert_bit_identical(alg, &s1, &s4);
+    }
+}

@@ -10,6 +10,11 @@ use cfel::runtime::{Manifest, PjrtBackend, TrainBackend};
 use cfel::util::rng::Rng;
 
 fn manifest() -> Option<Manifest> {
+    // Artifact- AND feature-gated: without `--features xla` the stub
+    // backend cannot execute HLO, so skip even when artifacts exist.
+    if !cfg!(feature = "xla") {
+        return None;
+    }
     Manifest::load(&Manifest::default_dir()).ok()
 }
 
