@@ -10,6 +10,7 @@ use cfel::config::ExperimentConfig;
 use cfel::coordinator::Coordinator;
 use cfel::data::synthetic::{Prototypes, SyntheticSpec};
 use cfel::data::{partition, Batch};
+use cfel::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
 use cfel::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
 use cfel::topology::{Graph, MixingMatrix};
 use cfel::util::bench::{header, Bench};
@@ -33,7 +34,7 @@ fn main() {
     b.run_throughput(
         &format!("weighted_average {n_dev}x{d}"),
         (n_dev * d) as f64,
-        || weighted_average_into(&rows, &weights, &mut out),
+        || weighted_average_into(&rows, &weights, &mut out).unwrap(),
     );
 
     let g = Graph::ring(8).unwrap();
@@ -100,6 +101,32 @@ fn main() {
         );
     }
     std::env::remove_var("CFEL_THREADS");
+
+    // ---- event-driven latency engine -----------------------------------
+    // Simulator overhead vs the closed-form path, measured in events/sec:
+    // one global-round training segment of a 128-cluster, 3072-device
+    // system (femnist-CNN-sized model, 16 steps/device, reporting
+    // deadline armed) plus the π=10 backhaul gossip hops. Two events per
+    // device per phase + the gossip hops = 6154 events per iteration.
+    let net = NetworkModel::paper_defaults(3072, 13.30e6, 50, 6_603_710);
+    let cluster_work: Vec<Vec<(usize, usize)>> = (0..128)
+        .map(|c| (0..24).map(|d| (c * 24 + d, 16)).collect())
+        .collect();
+    let n_events = (3072 * 2 + 10) as f64;
+    b.run_throughput("event-sim round 128cl x 24dev (events)", n_events, || {
+        let mut t = 0.0f64;
+        for work in &cluster_work {
+            t += EventDrivenEstimator::simulate_phase(
+                &net,
+                work,
+                UploadChannel::DeviceEdge,
+                Some(30.0),
+            )
+            .duration_s;
+        }
+        t += EventDrivenEstimator::simulate_gossip(&net, 10).0;
+        t
+    });
 
     if manifest_path.exists() && cfg!(feature = "xla") {
         bench_pjrt(&mut b, Manifest::default_dir().as_path());

@@ -7,13 +7,23 @@
 //! allocation-free on the hot path (callers pass output buffers or use the
 //! in-place variants); `components` bench tracks their throughput.
 
+use crate::error::{CfelError, Result};
 use crate::topology::MixingMatrix;
 
 /// out = Σ_r weights[r] · rows[r]; `weights` need not be normalised —
 /// pass normalised sample fractions for Eq. 6.
-pub fn weighted_average_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+///
+/// An empty participant set is a runtime condition, not a programming
+/// error — fault injection or a tight reporting deadline can drop every
+/// device of a cluster — so it returns [`CfelError::Aggregation`] rather
+/// than panicking (callers either propagate or skip the cluster).
+pub fn weighted_average_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) -> Result<()> {
     assert_eq!(rows.len(), weights.len());
-    assert!(!rows.is_empty());
+    if rows.is_empty() {
+        return Err(CfelError::Aggregation(
+            "weighted average over an empty participant set".into(),
+        ));
+    }
     let d = out.len();
     for r in rows {
         assert_eq!(r.len(), d, "row length mismatch");
@@ -25,18 +35,19 @@ pub fn weighted_average_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) 
             *o += w * v;
         }
     }
+    Ok(())
 }
 
 /// Allocating convenience wrapper for tests and cold paths.
-pub fn weighted_average(rows: &[&[f32]], weights: &[f64]) -> Vec<f32> {
-    let mut out = vec![0.0; rows[0].len()];
-    weighted_average_into(rows, weights, &mut out);
-    out
+pub fn weighted_average(rows: &[&[f32]], weights: &[f64]) -> Result<Vec<f32>> {
+    let mut out = vec![0.0; rows.first().map_or(0, |r| r.len())];
+    weighted_average_into(rows, weights, &mut out)?;
+    Ok(out)
 }
 
 /// Uniform average.
-pub fn mean(rows: &[&[f32]]) -> Vec<f32> {
-    let w = vec![1.0 / rows.len() as f64; rows.len()];
+pub fn mean(rows: &[&[f32]]) -> Result<Vec<f32>> {
+    let w = vec![1.0 / rows.len().max(1) as f64; rows.len()];
     weighted_average(rows, &w)
 }
 
@@ -113,8 +124,13 @@ pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
 
 /// Size-weighted global average of cluster models — the quantity u_t whose
 /// invariance under gossip (Eq. 12) the property tests pin down.
-pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Vec<f32> {
+pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Result<Vec<f32>> {
     let n: usize = cluster_sizes.iter().sum();
+    if n == 0 {
+        return Err(CfelError::Aggregation(
+            "global average over zero total samples".into(),
+        ));
+    }
     let weights: Vec<f64> = cluster_sizes.iter().map(|&s| s as f64 / n as f64).collect();
     let rows: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
     weighted_average(&rows, &weights)
@@ -142,15 +158,30 @@ mod tests {
     fn weighted_average_basic() {
         let a = [1.0f32, 2.0];
         let b = [3.0f32, 6.0];
-        let out = weighted_average(&[&a, &b], &[0.25, 0.75]);
+        let out = weighted_average(&[&a, &b], &[0.25, 0.75]).unwrap();
         assert_eq!(out, vec![2.5, 5.0]);
     }
 
     #[test]
     fn mean_of_identical_is_identity() {
         let a = [1.5f32, -2.0, 0.0];
-        let out = mean(&[&a, &a, &a]);
+        let out = mean(&[&a, &a, &a]).unwrap();
         assert_eq!(out, a.to_vec());
+    }
+
+    #[test]
+    fn empty_participant_set_is_an_error_not_a_panic() {
+        // Regression: reachable when fault injection or a tight reporting
+        // deadline drops every device in a cluster.
+        assert!(matches!(
+            weighted_average(&[], &[]),
+            Err(crate::error::CfelError::Aggregation(_))
+        ));
+        let mut out = vec![1.0f32; 3];
+        assert!(weighted_average_into(&[], &[], &mut out).is_err());
+        assert_eq!(out, vec![1.0; 3], "output untouched on error");
+        assert!(mean(&[]).is_err());
+        assert!(global_average(&[], &[]).is_err());
     }
 
     #[test]
@@ -186,10 +217,10 @@ mod tests {
         let mut models: Vec<Vec<f32>> = (0..5)
             .map(|i| (0..7).map(|j| (i * 7 + j) as f32).collect())
             .collect();
-        let before = global_average(&models, &[1; 5]);
+        let before = global_average(&models, &[1; 5]).unwrap();
         let mut scratch = Vec::new();
         gossip_mix(&mut models, &h, &mut scratch);
-        let after = global_average(&models, &[1; 5]);
+        let after = global_average(&models, &[1; 5]).unwrap();
         assert!(l2_distance(&before, &after) < 1e-4);
     }
 
@@ -224,7 +255,7 @@ mod tests {
     #[test]
     fn global_average_respects_sizes() {
         let models = vec![vec![0.0f32], vec![10.0]];
-        let avg = global_average(&models, &[9, 1]);
+        let avg = global_average(&models, &[9, 1]).unwrap();
         assert!((avg[0] - 1.0).abs() < 1e-6);
     }
 

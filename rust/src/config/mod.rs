@@ -7,6 +7,7 @@ use std::path::PathBuf;
 
 use crate::compression::Compressor;
 use crate::error::{CfelError, Result};
+use crate::netsim::StragglerSpec;
 use crate::util::json::Json;
 
 /// Which federated optimization algorithm drives the run (paper §6.1).
@@ -49,6 +50,36 @@ impl AlgorithmKind {
             AlgorithmKind::HierFAvg,
             AlgorithmKind::LocalEdge,
         ]
+    }
+}
+
+/// How per-round latency is estimated (`netsim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LatencyMode {
+    /// The paper's closed-form Eq. 8 (fast default; no deadlines).
+    #[default]
+    ClosedForm,
+    /// Per-device discrete-event simulation (`netsim::event`) — required
+    /// for reporting deadlines and per-device timing.
+    EventDriven,
+}
+
+impl LatencyMode {
+    pub fn parse(s: &str) -> Result<LatencyMode> {
+        match s {
+            "closed-form" | "closed" | "eq8" => Ok(LatencyMode::ClosedForm),
+            "event" | "event-driven" => Ok(LatencyMode::EventDriven),
+            _ => Err(CfelError::Config(format!(
+                "unknown latency mode {s:?} (closed-form | event)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatencyMode::ClosedForm => "closed-form",
+            LatencyMode::EventDriven => "event",
+        }
     }
 }
 
@@ -159,6 +190,14 @@ pub struct ExperimentConfig {
     pub backend: BackendKind,
     /// Device compute heterogeneity: Some(lo) draws c_k ~ U[lo,1]·capacity.
     pub heterogeneity: Option<f64>,
+    /// Heavy-tail straggler population layered on top of `heterogeneity`.
+    pub stragglers: Option<StragglerSpec>,
+    /// Per-round latency estimator: closed-form Eq. 8 or the event sim.
+    pub latency: LatencyMode,
+    /// Per-edge-round reporting deadline T_dl in simulated seconds; slow
+    /// devices are dropped from Eq. 6 aggregation (weights renormalize
+    /// over the survivors). Requires `latency = EventDriven`.
+    pub deadline_s: Option<f64>,
     /// Override the synthetic generator's per-sample noise std (task
     /// difficulty knob; None = the generator default).
     pub data_noise: Option<f32>,
@@ -195,6 +234,9 @@ impl ExperimentConfig {
             data: DataScheme::FemnistWriters { label_alpha: 0.3 },
             backend: BackendKind::Mock { hidden: 32 },
             heterogeneity: None,
+            stragglers: None,
+            latency: LatencyMode::ClosedForm,
+            deadline_s: None,
             // noise 3.0 puts Bayes accuracy ≈ 0.85 on the 64-d synthetic
             // task, so convergence curves resolve over tens of rounds
             // instead of saturating immediately (tuned empirically).
@@ -227,6 +269,9 @@ impl ExperimentConfig {
             data: DataScheme::FemnistWriters { label_alpha: 0.3 },
             backend: BackendKind::Mock { hidden: 32 },
             heterogeneity: None,
+            stragglers: None,
+            latency: LatencyMode::ClosedForm,
+            deadline_s: None,
             // noise 3.0 puts Bayes accuracy ≈ 0.85 on the 64-d synthetic
             // task, so convergence curves resolve over tens of rounds
             // instead of saturating immediately (tuned empirically).
@@ -275,6 +320,23 @@ impl ExperimentConfig {
         if let Some(lo) = self.heterogeneity {
             if !(0.0 < lo && lo <= 1.0) {
                 return Err(CfelError::Config(format!("heterogeneity {lo} outside (0,1]")));
+            }
+        }
+        if let Some(spec) = self.stragglers {
+            spec.validate()?;
+        }
+        if let Some(dl) = self.deadline_s {
+            if !(dl > 0.0 && dl.is_finite()) {
+                return Err(CfelError::Config(format!(
+                    "deadline_s {dl} must be positive and finite"
+                )));
+            }
+            if self.latency != LatencyMode::EventDriven {
+                return Err(CfelError::Config(
+                    "deadline_s requires the event-driven latency mode \
+                     (set latency = \"event\" / pass --latency event)"
+                        .into(),
+                ));
             }
         }
         if let Some(FaultSpec::KillCluster { cluster, .. }) = self.fault {
@@ -327,6 +389,15 @@ impl ExperimentConfig {
         }
         if let Some(h) = self.heterogeneity {
             o.set("heterogeneity", Json::from_f64(h));
+        }
+        if let Some(s) = self.stragglers {
+            o.set("stragglers", Json::from_str_val(&s.name()));
+        }
+        if self.latency != LatencyMode::ClosedForm {
+            o.set("latency", Json::from_str_val(self.latency.name()));
+        }
+        if let Some(dl) = self.deadline_s {
+            o.set("deadline_s", Json::from_f64(dl));
         }
         if let Some(n) = self.data_noise {
             o.set("data_noise", Json::from_f64(n as f64));
@@ -420,6 +491,15 @@ impl ExperimentConfig {
             },
             backend,
             heterogeneity: j.opt("heterogeneity").map(|v| v.as_f64()).transpose()?,
+            stragglers: j
+                .opt("stragglers")
+                .map(|v| v.as_str().and_then(StragglerSpec::parse))
+                .transpose()?,
+            latency: match j.opt("latency") {
+                Some(v) => LatencyMode::parse(v.as_str()?)?,
+                None => LatencyMode::ClosedForm,
+            },
+            deadline_s: j.opt("deadline_s").map(|v| v.as_f64()).transpose()?,
             data_noise: j
                 .opt("data_noise")
                 .map(|v| v.as_f64().map(|x| x as f32))
@@ -473,6 +553,26 @@ mod tests {
         let mut c = ExperimentConfig::quickstart();
         c.fault = Some(FaultSpec::KillCluster { at_round: 1, cluster: 99 });
         assert!(c.validate().is_err());
+        // A deadline without the event-driven latency mode is rejected...
+        let mut c = ExperimentConfig::quickstart();
+        c.deadline_s = Some(0.5);
+        assert!(c.validate().is_err());
+        // ...and accepted with it.
+        c.latency = LatencyMode::EventDriven;
+        c.validate().unwrap();
+        c.deadline_s = Some(-1.0);
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::quickstart();
+        c.stragglers = Some(StragglerSpec { fraction: 2.0, slowdown: 4.0 });
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn latency_mode_parse_roundtrip() {
+        for m in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+            assert_eq!(LatencyMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(LatencyMode::parse("psychic").is_err());
     }
 
     #[test]
@@ -504,6 +604,9 @@ mod tests {
         c.fault = Some(FaultSpec::KillCluster { at_round: 3, cluster: 2 });
         c.data = DataScheme::ClusterNonIid { c_labels: 2 };
         c.backend = BackendKind::Pjrt { model: "femnist_cnn".into(), artifacts_dir: None };
+        c.stragglers = Some(StragglerSpec { fraction: 0.125, slowdown: 50.0 });
+        c.latency = LatencyMode::EventDriven;
+        c.deadline_s = Some(21.5);
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.algorithm, c.algorithm);
@@ -512,6 +615,9 @@ mod tests {
         assert_eq!(c2.backend, c.backend);
         assert_eq!(c2.fault, c.fault);
         assert_eq!(c2.heterogeneity, c.heterogeneity);
+        assert_eq!(c2.stragglers, c.stragglers);
+        assert_eq!(c2.latency, c.latency);
+        assert_eq!(c2.deadline_s, c.deadline_s);
         assert_eq!(c2.tau, c.tau);
     }
 

@@ -10,6 +10,7 @@
 
 use crate::coordinator::{Coordinator, RoundStats};
 use crate::error::Result;
+use crate::netsim::UploadChannel;
 
 impl Coordinator {
     pub(crate) fn ce_fedavg_round(&mut self, round: usize) -> Result<RoundStats> {
@@ -19,7 +20,7 @@ impl Coordinator {
             // Every alive cluster trains + aggregates concurrently —
             // Algorithm 1's edge rounds are cluster-independent until
             // the gossip step below.
-            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
+            self.edge_phase(self.cfg.tau, phase, UploadChannel::DeviceEdge, &mut stats)?;
         }
         self.gossip();
         // Eq. 8 wants per-device steps of the *whole* global round.

@@ -2,6 +2,7 @@
 
 use crate::aggregation;
 use crate::coordinator::trainer::LocalOutcome;
+use crate::error::{CfelError, Result};
 
 /// One edge server's state (the paper's y^{(i)} plus bookkeeping).
 #[derive(Debug, Clone)]
@@ -24,14 +25,25 @@ impl ClusterState {
     /// `out` (normally the cluster's existing model buffer). A pure
     /// shard-local operation the parallel round engine applies per alive
     /// cluster after the training join.
-    pub fn aggregate_into(outcomes: &[(usize, LocalOutcome)], out: &mut [f32]) {
+    ///
+    /// Weights are normalised over the outcomes actually present, so when
+    /// a reporting deadline drops part of the participant set the
+    /// survivors renormalize automatically. An empty set (everyone
+    /// dropped) is an error — callers skip the cluster and keep its
+    /// previous model instead.
+    pub fn aggregate_into(outcomes: &[(usize, LocalOutcome)], out: &mut [f32]) -> Result<()> {
         let total: usize = outcomes.iter().map(|(_, o)| o.n_samples).sum();
+        if total == 0 {
+            return Err(CfelError::Aggregation(
+                "Eq. 6 aggregation over an empty participant set".into(),
+            ));
+        }
         let weights: Vec<f64> = outcomes
             .iter()
             .map(|(_, o)| o.n_samples as f64 / total as f64)
             .collect();
         let rows: Vec<&[f32]> = outcomes.iter().map(|(_, o)| o.params.as_slice()).collect();
-        aggregation::weighted_average_into(&rows, &weights, out);
+        aggregation::weighted_average_into(&rows, &weights, out)
     }
 }
 
@@ -56,7 +68,16 @@ mod tests {
         };
         let outcomes = vec![(0usize, o(vec![0.0, 0.0], 30)), (1usize, o(vec![4.0, 8.0], 10))];
         let mut out = vec![9.0f32; 2];
-        ClusterState::aggregate_into(&outcomes, &mut out);
+        ClusterState::aggregate_into(&outcomes, &mut out).unwrap();
         assert_eq!(out, vec![1.0, 2.0]); // 0.75 * 0 + 0.25 * [4, 8]
+    }
+
+    #[test]
+    fn aggregate_empty_participants_errors_and_preserves_model() {
+        // Regression for the deadline/fault path: an all-dropped cluster
+        // must not panic and must leave the edge model untouched.
+        let mut out = vec![3.0f32; 2];
+        assert!(ClusterState::aggregate_into(&[], &mut out).is_err());
+        assert_eq!(out, vec![3.0; 2]);
     }
 }

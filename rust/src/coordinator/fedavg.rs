@@ -9,6 +9,7 @@
 use crate::coordinator::cefedavg::merge_steps;
 use crate::coordinator::{Coordinator, RoundStats};
 use crate::error::Result;
+use crate::netsim::UploadChannel;
 
 impl Coordinator {
     pub(crate) fn fedavg_round(&mut self, round: usize) -> Result<RoundStats> {
@@ -17,10 +18,10 @@ impl Coordinator {
         let phase = round as u64;
         // All devices train concurrently; the per-cluster Eq. 6 average
         // is pure bookkeeping here — the real aggregation is the cloud
-        // step below.
-        self.edge_phase(epochs, phase, &mut stats)?;
+        // step below. Reports travel on the 1 Mbps device→cloud links.
+        self.edge_phase(epochs, phase, UploadChannel::DeviceCloud, &mut stats)?;
         if self.aggregator_alive {
-            self.cloud_aggregate();
+            self.cloud_aggregate()?;
         }
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
         Ok(stats)

@@ -9,6 +9,7 @@
 use crate::coordinator::cefedavg::merge_steps;
 use crate::coordinator::{Coordinator, RoundStats};
 use crate::error::Result;
+use crate::netsim::UploadChannel;
 
 impl Coordinator {
     pub(crate) fn hier_favg_round(&mut self, round: usize) -> Result<RoundStats> {
@@ -16,11 +17,18 @@ impl Coordinator {
         for r in 0..self.cfg.q {
             let phase = (round * self.cfg.q + r) as u64;
             // Clusters are independent between cloud syncs — run them
-            // concurrently through the parallel round engine.
-            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
+            // concurrently through the parallel round engine. The first
+            // q−1 rounds report to the edge server; the q-th feeds the
+            // cloud aggregation over the slow device→cloud links (§6.1).
+            let channel = if r + 1 == self.cfg.q {
+                UploadChannel::DeviceCloud
+            } else {
+                UploadChannel::DeviceEdge
+            };
+            self.edge_phase(self.cfg.tau, phase, channel, &mut stats)?;
         }
         if self.aggregator_alive {
-            self.cloud_aggregate();
+            self.cloud_aggregate()?;
         }
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
         Ok(stats)

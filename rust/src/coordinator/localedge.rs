@@ -7,6 +7,7 @@
 use crate::coordinator::cefedavg::merge_steps;
 use crate::coordinator::{Coordinator, RoundStats};
 use crate::error::Result;
+use crate::netsim::UploadChannel;
 
 impl Coordinator {
     pub(crate) fn local_edge_round(&mut self, round: usize) -> Result<RoundStats> {
@@ -15,7 +16,7 @@ impl Coordinator {
             let phase = (round * self.cfg.q + r) as u64;
             // Fully independent clusters: the ideal case for the
             // parallel round engine.
-            self.edge_phase(self.cfg.tau, phase, &mut stats)?;
+            self.edge_phase(self.cfg.tau, phase, UploadChannel::DeviceEdge, &mut stats)?;
         }
         // No inter-cluster aggregation of any kind.
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));

@@ -26,7 +26,9 @@ pub use trainer::LocalOutcome;
 use std::time::Instant;
 
 use crate::aggregation;
-use crate::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec};
+use crate::config::{
+    AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode,
+};
 use crate::data::sampler::eval_batches;
 use crate::data::synthetic::{
     femnist_federation, pool_federation, FederatedData, SyntheticSpec,
@@ -34,7 +36,10 @@ use crate::data::synthetic::{
 use crate::data::{partition, Batch};
 use crate::error::{CfelError, Result};
 use crate::metrics::{History, RoundRecord};
-use crate::netsim::{NetworkModel, RoundLatency};
+use crate::netsim::{
+    ClosedFormEstimator, EventDrivenEstimator, LatencyEstimator, NetworkModel, RoundLatency,
+    RoundTiming,
+};
 use crate::runtime::{EvalResult, Manifest, MockBackend, PjrtBackend, TrainBackend};
 use crate::topology::{Graph, MixingMatrix};
 use crate::util::rng::Rng;
@@ -76,6 +81,9 @@ pub struct RoundStats {
     pub device_steps: Vec<(usize, usize)>,
     pub loss_sum: f64,
     pub step_count: usize,
+    /// Per-device/per-cluster virtual timing, filled by the event-driven
+    /// latency estimator (empty in closed-form mode).
+    pub timing: RoundTiming,
 }
 
 impl RoundStats {
@@ -98,6 +106,9 @@ pub struct Coordinator {
     /// H^π over the *current* alive subgraph.
     pub h_pi: MixingMatrix,
     pub net: NetworkModel,
+    /// Round-latency estimator (closed-form Eq. 8 or the event sim),
+    /// selected by the config's `latency` field.
+    pub latency: Box<dyn LatencyEstimator>,
     pub eval_set: Vec<Batch>,
     pub rng: Rng,
     /// Alive flag per cluster (fault injection).
@@ -179,6 +190,13 @@ impl Coordinator {
         if let Some(lo) = cfg.heterogeneity {
             net = net.with_heterogeneity(lo, &rng.split(0x4E37));
         }
+        if let Some(spec) = cfg.stragglers {
+            net = net.with_stragglers(spec, &rng.split(0x5746));
+        }
+        let latency: Box<dyn LatencyEstimator> = match cfg.latency {
+            LatencyMode::ClosedForm => Box::new(ClosedFormEstimator),
+            LatencyMode::EventDriven => Box::new(EventDrivenEstimator),
+        };
 
         let eval_set = eval_batches(&fed.test, backend.batch_size());
         let n_clusters = cfg.n_clusters;
@@ -190,6 +208,7 @@ impl Coordinator {
             graph,
             h_pi,
             net,
+            latency,
             eval_set,
             rng,
             alive: vec![true; n_clusters],
@@ -287,18 +306,23 @@ impl Coordinator {
     }
 
     /// Cloud aggregation (FedAvg / Hier-FAvg): size-weighted average over
-    /// alive clusters, broadcast back to every alive cluster.
-    pub(crate) fn cloud_aggregate(&mut self) {
+    /// alive clusters, broadcast back to every alive cluster. A no-op when
+    /// every cluster is dead (nothing to average).
+    pub(crate) fn cloud_aggregate(&mut self) -> Result<()> {
         let alive = self.alive_clusters();
+        if alive.is_empty() {
+            return Ok(());
+        }
         let models: Vec<Vec<f32>> = alive
             .iter()
             .map(|&i| self.clusters[i].model.clone())
             .collect();
         let sizes: Vec<usize> = alive.iter().map(|&i| self.clusters[i].n_samples).collect();
-        let global = aggregation::global_average(&models, &sizes);
+        let global = aggregation::global_average(&models, &sizes)?;
         for &i in &alive {
             self.clusters[i].model.copy_from_slice(&global);
         }
+        Ok(())
     }
 
     /// Inter-cluster gossip (Eq. 7) over the alive subgraph. Backhaul
@@ -358,18 +382,17 @@ impl Coordinator {
         (0..cluster).filter(|&i| self.alive[i]).count()
     }
 
-    /// Simulated latency of this round per Eq. 8 for the configured
-    /// algorithm.
+    /// Simulated latency of this round, via the configured estimator
+    /// (closed-form Eq. 8 or the discrete-event simulator).
     pub(crate) fn round_latency(&self, stats: &RoundStats) -> RoundLatency {
-        match self.cfg.algorithm {
-            AlgorithmKind::CeFedAvg => {
-                self.net
-                    .ce_fedavg_round(&stats.device_steps, self.cfg.q, self.cfg.pi as usize)
-            }
-            AlgorithmKind::FedAvg => self.net.fedavg_round(&stats.device_steps),
-            AlgorithmKind::HierFAvg => self.net.hier_favg_round(&stats.device_steps, self.cfg.q),
-            AlgorithmKind::LocalEdge => self.net.local_edge_round(&stats.device_steps, self.cfg.q),
-        }
+        self.latency.round_latency(
+            &self.net,
+            self.cfg.algorithm,
+            self.cfg.q,
+            self.cfg.pi as usize,
+            &stats.device_steps,
+            &stats.timing,
+        )
     }
 
     /// Evaluate the current models on the common test set.
@@ -433,7 +456,8 @@ impl Coordinator {
                 AlgorithmKind::LocalEdge => self.local_edge_round(round)?,
             };
             wall += t0.elapsed().as_secs_f64();
-            sim_time += self.round_latency(&stats).total();
+            let lat = self.round_latency(&stats);
+            sim_time += lat.total();
 
             let (acc, tloss) = if (round + 1) % self.cfg.eval_every == 0
                 || round + 1 == self.cfg.rounds
@@ -446,6 +470,10 @@ impl Coordinator {
                 round: round + 1,
                 sim_time_s: sim_time,
                 wall_time_s: wall,
+                compute_s: lat.compute_s,
+                upload_s: lat.upload_s,
+                backhaul_s: lat.backhaul_s,
+                dropped_devices: stats.timing.dropped_devices,
                 train_loss: stats.mean_loss(),
                 test_accuracy: acc,
                 test_loss: tloss,
@@ -454,7 +482,7 @@ impl Coordinator {
             };
             if self.verbose {
                 eprintln!(
-                    "[{}] round {:>3}  loss {:.4}  acc {}  sim {:.1}s",
+                    "[{}] round {:>3}  loss {:.4}  acc {}  sim {:.1}s{}",
                     self.cfg.algorithm.name(),
                     rec.round,
                     rec.train_loss,
@@ -463,7 +491,12 @@ impl Coordinator {
                     } else {
                         format!("{:.4}", acc)
                     },
-                    sim_time
+                    sim_time,
+                    if rec.dropped_devices > 0 {
+                        format!("  dropped {}", rec.dropped_devices)
+                    } else {
+                        String::new()
+                    }
                 );
             }
             history.push(rec);

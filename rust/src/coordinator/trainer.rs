@@ -6,6 +6,7 @@ use crate::data::sampler::EpochSampler;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::model::ModelState;
+use crate::netsim::UploadChannel;
 use crate::runtime::TrainBackend;
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_threads, parallel_map};
@@ -90,10 +91,21 @@ impl Coordinator {
     ///
     /// Device→edge uploads pass through the configured lossy compressor
     /// before aggregation (what the edge server actually receives).
+    ///
+    /// `channel` names the uplink this phase's reports travel over (edge
+    /// for CE-FedAvg / Local-Edge / Hier-FAvg edge rounds, cloud for
+    /// FedAvg and Hier-FAvg's final round). In event-driven latency mode
+    /// the phase is additionally simulated per device after the join:
+    /// devices whose simulated report misses the config's `deadline_s`
+    /// are dropped from the Eq. 6 aggregation (survivor weights
+    /// renormalize; a cluster whose devices all miss keeps its previous
+    /// edge model), and per-cluster virtual time accumulates into
+    /// `stats.timing`.
     pub(crate) fn edge_phase(
         &mut self,
         epochs: usize,
         phase: u64,
+        channel: UploadChannel,
         stats: &mut RoundStats,
     ) -> Result<()> {
         let alive = self.alive_clusters();
@@ -145,12 +157,46 @@ impl Coordinator {
             per_cluster[slot].push((dev, out));
         }
 
+        // ---- simulate phase timing + apply the reporting deadline -----
+        // Event mode only (the closed-form estimator returns None and
+        // keeps the Eq. 8 round-level path). Runs single-threaded after
+        // the join in alive-cluster order, so timing — including which
+        // devices a deadline drops — is independent of CFEL_THREADS.
+        for (slot, &ci) in alive.iter().enumerate() {
+            let work: Vec<(usize, usize)> = per_cluster[slot]
+                .iter()
+                .map(|(dev, out)| (*dev, out.steps))
+                .collect();
+            let Some(pt) =
+                self.latency
+                    .phase_timing(&self.net, &work, channel, self.cfg.deadline_s)
+            else {
+                continue;
+            };
+            if pt.devices.iter().any(|t| t.dropped) {
+                let mut kept = Vec::with_capacity(per_cluster[slot].len());
+                for (outcome, timing) in per_cluster[slot].drain(..).zip(&pt.devices) {
+                    debug_assert_eq!(outcome.0, timing.device);
+                    if !timing.dropped {
+                        kept.push(outcome);
+                    }
+                }
+                per_cluster[slot] = kept;
+            }
+            stats.timing.record_phase(ci, self.clusters.len(), &pt);
+        }
+
         // ---- aggregate (Eq. 6): in place, per shard, post-join --------
         // O(m·p) memory-bound averages are cheap next to training; write
         // straight into each cluster's existing model buffer rather than
         // paying per-phase allocations or a second thread-pool spin-up.
+        // Weights renormalize over the outcomes present; a cluster whose
+        // whole participant set was dropped keeps its previous model.
         for (slot, &ci) in alive.iter().enumerate() {
-            ClusterState::aggregate_into(&per_cluster[slot], &mut self.clusters[ci].model);
+            if per_cluster[slot].is_empty() {
+                continue;
+            }
+            ClusterState::aggregate_into(&per_cluster[slot], &mut self.clusters[ci].model)?;
         }
         Ok(())
     }

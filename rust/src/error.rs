@@ -24,6 +24,10 @@ pub enum CfelError {
     /// Data generation / partitioning failure.
     Data(String),
 
+    /// Aggregation over an invalid participant set (e.g. every device of a
+    /// cluster was dropped by a fault or a reporting deadline).
+    Aggregation(String),
+
     /// PJRT runtime failure (compile, execute, literal conversion).
     Runtime(String),
 
@@ -42,6 +46,7 @@ impl fmt::Display for CfelError {
             CfelError::Manifest(m) => write!(f, "manifest error: {m}"),
             CfelError::Topology(m) => write!(f, "topology error: {m}"),
             CfelError::Data(m) => write!(f, "data error: {m}"),
+            CfelError::Aggregation(m) => write!(f, "aggregation error: {m}"),
             CfelError::Runtime(m) => write!(f, "runtime error: {m}"),
             CfelError::Xla(m) => write!(f, "xla error: {m}"),
             CfelError::Io(e) => write!(f, "io error: {e}"),

@@ -4,12 +4,15 @@
 //! model's analytic numbers when artifacts are absent), print one global
 //! round's latency decomposition — compute vs device-edge upload vs
 //! backhaul/cloud — for all four algorithms under the paper's default
-//! system (64 devices, 8 clusters, τ=2, q=8, π=10).
+//! system (64 devices, 8 clusters, τ=2, q=8, π=10). The last column
+//! replays the same round through the discrete-event simulator
+//! (`netsim::event`), which must agree with the closed form in this
+//! homogeneous no-deadline regime — the table doubles as an oracle check.
 
 use crate::error::Result;
 use crate::experiments::{write_summary, FigureOpts};
 use crate::metrics::markdown_table;
-use crate::netsim::NetworkModel;
+use crate::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
 use crate::runtime::Manifest;
 
 struct ModelRow {
@@ -53,7 +56,7 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
         batch: 50,
     });
 
-    let (n, q, tau, pi) = (64usize, 8usize, 2usize, 10usize);
+    let (n, m_clusters, q, tau, pi) = (64usize, 8usize, 8usize, 2usize, 10usize);
     let mut rows = Vec::new();
     for m in &models {
         let net = NetworkModel::paper_defaults(n, m.flops_per_sample, m.batch, m.param_count);
@@ -73,20 +76,57 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
                 format!("{:.3}", lat.upload_s),
                 format!("{:.3}", lat.backhaul_s),
                 format!("{:.3}", lat.total()),
+                format!("{:.3}", event_total(&net, alg, n / m_clusters, q, tau, pi)),
             ]);
         }
     }
     let summary = format!(
         "Eq. 8 — per-global-round latency decomposition (64 devices, 8 \
          clusters, τ=2, q=8, π=10; b_d2e=10 Mbps, b_e2e=50 Mbps, \
-         b_d2c=1 Mbps, devices at iPhone-X 691.2 GFLOPS).\n\n{}",
+         b_d2c=1 Mbps, devices at iPhone-X 691.2 GFLOPS). event_total_s \
+         replays the round through the discrete-event simulator.\n\n{}",
         markdown_table(
-            &["model", "algorithm", "compute_s", "upload_s", "backhaul_s", "total_s"],
+            &[
+                "model",
+                "algorithm",
+                "compute_s",
+                "upload_s",
+                "backhaul_s",
+                "total_s",
+                "event_total_s",
+            ],
             &rows
         )
     );
     write_summary(opts, "runtime", &summary)?;
     Ok(summary)
+}
+
+/// The same global round replayed as discrete events: q edge phases of τ
+/// steps per device (FedAvg: one phase of qτ steps on the cloud links;
+/// Hier-FAvg: the q-th phase reports to the cloud) for one representative
+/// cluster — the fleet is homogeneous, so every cluster's trajectory is
+/// identical — plus CE-FedAvg's π gossip hops.
+fn event_total(net: &NetworkModel, alg: &str, dpc: usize, q: usize, tau: usize, pi: usize) -> f64 {
+    let phase = |channel: UploadChannel, steps: usize| {
+        let work: Vec<(usize, usize)> = (0..dpc).map(|d| (d, steps)).collect();
+        EventDrivenEstimator::simulate_phase(net, &work, channel, None).duration_s
+    };
+    match alg {
+        "ce-fedavg" => {
+            (0..q).map(|_| phase(UploadChannel::DeviceEdge, tau)).sum::<f64>()
+                + EventDrivenEstimator::simulate_gossip(net, pi).0
+        }
+        "fedavg" => phase(UploadChannel::DeviceCloud, q * tau),
+        "hier-favg" => {
+            (0..q.saturating_sub(1))
+                .map(|_| phase(UploadChannel::DeviceEdge, tau))
+                .sum::<f64>()
+                + phase(UploadChannel::DeviceCloud, tau)
+        }
+        "local-edge" => (0..q).map(|_| phase(UploadChannel::DeviceEdge, tau)).sum::<f64>(),
+        other => unreachable!("unknown algorithm {other}"),
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +142,27 @@ mod tests {
         let s = run(&opts).unwrap();
         assert!(s.contains("vgg-11"));
         assert!(s.contains("ce-fedavg"));
+        assert!(s.contains("event_total_s"));
         std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+
+    #[test]
+    fn event_replay_agrees_with_closed_form() {
+        // Homogeneous fleet, no deadline: the event column must be the
+        // Eq. 8 total (the table's oracle property).
+        let net = NetworkModel::paper_defaults(64, 13.30e6, 50, 6_603_710);
+        let steps: Vec<(usize, usize)> = (0..64).map(|d| (d, 16)).collect();
+        for (alg, want) in [
+            ("ce-fedavg", net.ce_fedavg_round(&steps, 8, 10).total()),
+            ("fedavg", net.fedavg_round(&steps).total()),
+            ("hier-favg", net.hier_favg_round(&steps, 8).total()),
+            ("local-edge", net.local_edge_round(&steps, 8).total()),
+        ] {
+            let got = event_total(&net, alg, 8, 8, 2, 10);
+            assert!(
+                (got - want).abs() / want <= 1e-9,
+                "{alg}: event {got} vs closed {want}"
+            );
+        }
     }
 }

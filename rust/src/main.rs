@@ -14,7 +14,7 @@
 
 use std::path::PathBuf;
 
-use cfel::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig};
+use cfel::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, LatencyMode};
 use cfel::coordinator::Coordinator;
 use cfel::experiments::{run_figure, FigureOpts};
 use cfel::metrics::{best_accuracy, time_to_accuracy, CsvWriter, ROUND_HEADER};
@@ -73,6 +73,9 @@ fn train_command() -> Command {
         .flag_default("model", "mlp_synth", "artifact model name (pjrt backend)")
         .flag("artifacts-dir", "artifacts directory (default: <repo>/artifacts)")
         .flag("heterogeneity", "device speed floor in (0,1], e.g. 0.5")
+        .flag_default("latency", "closed-form", "closed-form | event (per-round latency estimator)")
+        .flag("deadline", "per-edge-round reporting deadline in seconds (event mode)")
+        .flag("stragglers", "heavy-tail stragglers as <fraction>:<slowdown>, e.g. 0.1:50")
         .flag("csv", "write per-round history to this CSV file")
         .flag_default("eval-every", "1", "evaluate every k rounds")
         .flag_default("compression", "none", "none | topk:<frac> | quantize:<bits> (upload codec)")
@@ -123,6 +126,17 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     if args.get("heterogeneity").is_some() {
         cfg.heterogeneity = Some(args.get_f64("heterogeneity", 0.5));
     }
+    cfg.latency = LatencyMode::parse(&args.get_or("latency", cfg.latency.name()))?;
+    if let Some(dl) = args.get("deadline") {
+        // Strict parse: a malformed deadline must not silently fall back
+        // to some default — it changes which devices get dropped.
+        cfg.deadline_s = Some(dl.parse().map_err(|_| {
+            cfel::CfelError::Config(format!("invalid --deadline value {dl:?} (seconds)"))
+        })?);
+    }
+    if let Some(spec) = args.get("stragglers") {
+        cfg.stragglers = Some(cfel::netsim::StragglerSpec::parse(spec)?);
+    }
     cfg.backend = match args.get_or("backend", "mock").as_str() {
         "mock" => BackendKind::Mock { hidden: 32 },
         "pjrt" => BackendKind::Pjrt {
@@ -141,7 +155,7 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     let mut coord = Coordinator::from_config(&cfg)?;
     coord.verbose = !args.get_bool("quiet");
     eprintln!(
-        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {}",
+        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {}",
         cfg.algorithm.name(),
         coord.backend.name(),
         cfg.n_devices,
@@ -150,7 +164,8 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         cfg.q,
         cfg.pi,
         cfg.topology,
-        cfg.data.name()
+        cfg.data.name(),
+        cfg.latency.name()
     );
     let history = coord.run()?;
 
@@ -168,7 +183,15 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     println!("final accuracy:  {:.4}", last.test_accuracy);
     println!("best accuracy:   {best:.4}");
     println!("final loss:      {:.4}", last.train_loss);
-    println!("sim time:        {:.1} s (Eq. 8)", last.sim_time_s);
+    println!(
+        "sim time:        {:.1} s ({})",
+        last.sim_time_s,
+        if cfg.latency == LatencyMode::EventDriven { "event sim" } else { "Eq. 8" }
+    );
+    if cfg.latency == LatencyMode::EventDriven {
+        let dropped: usize = history.iter().map(|r| r.dropped_devices).sum();
+        println!("deadline drops:  {dropped} device-rounds");
+    }
     println!("wall time:       {:.1} s", last.wall_time_s);
     if let Some((r, t)) = time_to_accuracy(&history, best * 0.9) {
         println!("90%-of-best hit: round {r} / {t:.1} sim-s");
@@ -177,7 +200,7 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         // Persist the size-weighted global model.
         let sizes: Vec<usize> = coord.clusters.iter().map(|c| c.n_samples).collect();
         let models: Vec<Vec<f32>> = coord.clusters.iter().map(|c| c.model.clone()).collect();
-        let global = cfel::aggregation::global_average(&models, &sizes);
+        let global = cfel::aggregation::global_average(&models, &sizes)?;
         let state = cfel::model::ModelState::from_params(global);
         cfel::model::checkpoint::save(
             std::path::Path::new(path),

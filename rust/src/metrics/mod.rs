@@ -14,6 +14,15 @@ pub struct RoundRecord {
     pub sim_time_s: f64,
     /// Real wall-clock spent training, cumulative seconds.
     pub wall_time_s: f64,
+    /// This round's simulated compute (straggler barrier) seconds.
+    pub compute_s: f64,
+    /// This round's simulated device-uplink seconds.
+    pub upload_s: f64,
+    /// This round's simulated backhaul (gossip) seconds.
+    pub backhaul_s: f64,
+    /// Devices dropped by the reporting deadline this round (event-driven
+    /// latency mode; always 0 in closed-form mode).
+    pub dropped_devices: usize,
     /// Mean training loss over the round's SGD steps.
     pub train_loss: f64,
     /// Common-test-set accuracy (NaN when eval was skipped this round).
@@ -86,13 +95,17 @@ impl CsvWriter {
             },
             format!("{:.6e}", r.consensus),
             r.steps.to_string(),
+            format!("{:.3}", r.compute_s),
+            format!("{:.3}", r.upload_s),
+            format!("{:.3}", r.backhaul_s),
+            r.dropped_devices.to_string(),
         ])
     }
 }
 
 /// Header matching [`CsvWriter::round_row`].
-pub const ROUND_HEADER: &str =
-    "series,round,sim_time_s,wall_time_s,train_loss,test_accuracy,test_loss,consensus,steps";
+pub const ROUND_HEADER: &str = "series,round,sim_time_s,wall_time_s,train_loss,\
+     test_accuracy,test_loss,consensus,steps,compute_s,upload_s,backhaul_s,dropped";
 
 /// Render a small aligned markdown table.
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -117,6 +130,10 @@ mod tests {
             round,
             sim_time_s: t,
             wall_time_s: 0.0,
+            compute_s: 0.1,
+            upload_s: 0.2,
+            backhaul_s: 0.3,
+            dropped_devices: 0,
             train_loss: 1.0,
             test_accuracy: acc,
             test_loss: 1.0,

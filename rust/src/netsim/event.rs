@@ -1,0 +1,590 @@
+//! Discrete-event virtual-clock simulation of a CFEL round.
+//!
+//! The closed-form Eq. 8 estimator in the parent module collapses a global
+//! round into three aggregate terms. This module simulates the same round
+//! as *per-device discrete events* on a virtual clock, which is what lets
+//! the system express reporting deadlines, stragglers, and per-device
+//! timing heterogeneity that the closed form cannot.
+//!
+//! # Event model
+//!
+//! One edge phase of one cluster is simulated as follows: every
+//! participating device `k` schedules a [`EventKind::ComputeDone`] event at
+//! `steps_k · C / c_k` (its local SGD workload over its processing
+//! capacity). Popping a `ComputeDone` schedules the device's
+//! [`EventKind::UploadDone`] at `t + W / b` where `b` is the phase's
+//! [`UploadChannel`] bandwidth — devices transmit on dedicated links, so
+//! uploads overlap freely (the paper's model). The inter-cluster
+//! aggregation of CE-FedAvg is simulated as π sequential
+//! [`EventKind::BackhaulDone`] hops of `W / b_e2e` each (every edge of the
+//! backhaul transmits concurrently within a hop).
+//!
+//! # Tie-breaking and determinism
+//!
+//! The event queue is a binary min-heap ordered by `(time, kind, id)`:
+//! simultaneous events pop in `ComputeDone < UploadDone < BackhaulDone`
+//! order, and within a kind by ascending id (the device's slot in the
+//! phase's work list, which the coordinator builds in sorted participant
+//! order). Simulation inputs are derived purely from the experiment seed
+//! and the simulation runs single-threaded after the training join, so
+//! event-driven timing — including which devices a deadline drops — is
+//! bit-identical for any `CFEL_THREADS` (pinned by
+//! `rust/tests/determinism.rs`).
+//!
+//! # Deadlines and Eq. 6 renormalization
+//!
+//! A reporting deadline `T_dl` (config `deadline_s`) applies per *edge
+//! phase*, relative to the phase start: a device whose `UploadDone` lands
+//! after `T_dl` is marked [`DeviceTiming::dropped`]. The coordinator
+//! excludes dropped devices from the Eq. 6 intra-cluster average, which
+//! renormalizes the surviving sample-count weights automatically (the
+//! average is taken over survivors only). If *every* device of a cluster
+//! misses the deadline the cluster skips aggregation and keeps its previous
+//! edge model for that phase. The phase itself ends at
+//! `min(T_dl, latest report)` — the edge server never waits past the
+//! deadline.
+//!
+//! # Closed-form equivalence
+//!
+//! With homogeneous (or merely per-device-constant) workloads, full
+//! participation and no deadline, summing the per-phase barriers
+//! reproduces Eq. 8 exactly: `Σ_r max_k(steps·C/c_k) = max_k Σ_r` when the
+//! slowest device is the same each phase, and uploads/backhaul hops add up
+//! to the closed-form `q·W/b` and `π·W/b_e2e` terms
+//! (`rust/tests/event_sim.rs` pins ≤1e-9 relative error for all four
+//! algorithms). Under partial participation the two models legitimately
+//! diverge: the closed form takes the max over *round-total* per-device
+//! steps, while the event simulator charges every phase its own barrier —
+//! the more faithful account.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::AlgorithmKind;
+use crate::netsim::{NetworkModel, RoundLatency};
+
+/// Event types, listed in tie-break order (earlier kinds pop first at
+/// equal timestamps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A device finished its local SGD steps for this edge phase.
+    ComputeDone,
+    /// A device's model report arrived at its aggregation point.
+    UploadDone,
+    /// One inter-cluster gossip hop completed on the backhaul.
+    BackhaulDone,
+}
+
+/// One scheduled occurrence on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Virtual time of the occurrence, seconds from the phase start.
+    pub time_s: f64,
+    pub kind: EventKind,
+    /// Work-list slot for compute/upload events; hop index for backhaul.
+    pub id: usize,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then_with(|| self.kind.cmp(&other.kind))
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Binary-heap event queue with a monotone virtual clock.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+    clock_s: f64,
+    processed: usize,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Events popped so far (the simulator-throughput metric).
+    pub fn processed(&self) -> usize {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule an event; must not be in the virtual past.
+    pub fn schedule(&mut self, ev: Event) {
+        debug_assert!(
+            ev.time_s >= self.clock_s,
+            "event at {} scheduled before clock {}",
+            ev.time_s,
+            self.clock_s
+        );
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?.0;
+        self.clock_s = ev.time_s;
+        self.processed += 1;
+        Some(ev)
+    }
+}
+
+/// Which uplink carries an edge phase's model reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UploadChannel {
+    /// Device → edge server (CE-FedAvg, Local-Edge, Hier-FAvg edge rounds).
+    DeviceEdge,
+    /// Device → cloud (FedAvg; Hier-FAvg's final round of a global round).
+    DeviceCloud,
+}
+
+impl UploadChannel {
+    pub fn bandwidth(self, net: &NetworkModel) -> f64 {
+        match self {
+            UploadChannel::DeviceEdge => net.b_d2e,
+            UploadChannel::DeviceCloud => net.b_d2c,
+        }
+    }
+}
+
+/// One device's simulated timing within an edge phase.
+#[derive(Debug, Clone)]
+pub struct DeviceTiming {
+    /// Global device id.
+    pub device: usize,
+    /// Seconds of local compute (steps · C / c_k).
+    pub compute_s: f64,
+    /// Seconds of model upload (W / channel bandwidth).
+    pub upload_s: f64,
+    /// Report arrival, seconds from the phase start.
+    pub finish_s: f64,
+    /// Missed the reporting deadline — excluded from Eq. 6 aggregation.
+    pub dropped: bool,
+}
+
+/// Simulated timing of one cluster's edge phase.
+#[derive(Debug, Clone)]
+pub struct PhaseTiming {
+    /// Phase duration: `min(deadline, latest report)`.
+    pub duration_s: f64,
+    /// Compute portion of the duration (the straggler barrier, capped at
+    /// the deadline).
+    pub compute_s: f64,
+    /// Upload portion of the duration (`duration - compute`).
+    pub upload_s: f64,
+    /// Per-device timing, in work-list (sorted participant) order.
+    pub devices: Vec<DeviceTiming>,
+    /// Events processed by the simulation.
+    pub events: usize,
+}
+
+/// Per-global-round accumulator the event estimator fills phase by phase;
+/// empty in closed-form mode. Lives inside the coordinator's `RoundStats`.
+#[derive(Debug, Clone, Default)]
+pub struct RoundTiming {
+    /// Accumulated virtual time per cluster (clusters progress through
+    /// their edge phases independently and only barrier at the
+    /// inter-cluster aggregation).
+    pub cluster_time_s: Vec<f64>,
+    /// Accumulated compute portion per cluster.
+    pub cluster_compute_s: Vec<f64>,
+    /// Accumulated upload portion per cluster.
+    pub cluster_upload_s: Vec<f64>,
+    /// Every simulated device timing of the round (all phases appended).
+    pub device_timings: Vec<DeviceTiming>,
+    /// Devices dropped by the reporting deadline this round.
+    pub dropped_devices: usize,
+    /// Total events processed this round.
+    pub events_processed: usize,
+}
+
+impl RoundTiming {
+    /// Fold one cluster's phase into the round accumulator.
+    pub fn record_phase(&mut self, cluster: usize, n_clusters: usize, pt: &PhaseTiming) {
+        if self.cluster_time_s.len() < n_clusters {
+            self.cluster_time_s.resize(n_clusters, 0.0);
+            self.cluster_compute_s.resize(n_clusters, 0.0);
+            self.cluster_upload_s.resize(n_clusters, 0.0);
+        }
+        self.cluster_time_s[cluster] += pt.duration_s;
+        self.cluster_compute_s[cluster] += pt.compute_s;
+        self.cluster_upload_s[cluster] += pt.upload_s;
+        self.dropped_devices += pt.devices.iter().filter(|d| d.dropped).count();
+        self.events_processed += pt.events;
+        self.device_timings.extend(pt.devices.iter().cloned());
+    }
+}
+
+/// How the coordinator turns a round's training into simulated latency.
+///
+/// Two implementations: [`ClosedFormEstimator`] replays the paper's Eq. 8
+/// (the fast default and the oracle for the equivalence tests) and
+/// [`EventDrivenEstimator`] runs the discrete-event simulation above
+/// (required for deadlines/stragglers). Selected by the config's
+/// `latency` field / the CLI's `--latency` flag.
+pub trait LatencyEstimator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Simulate one cluster's edge phase. `work` is `(device, steps)` in
+    /// sorted participant order. Returns `None` in closed-form mode — no
+    /// per-phase simulation, nobody is dropped, the coordinator keeps its
+    /// Eq. 8 round-level path.
+    fn phase_timing(
+        &self,
+        net: &NetworkModel,
+        work: &[(usize, usize)],
+        channel: UploadChannel,
+        deadline_s: Option<f64>,
+    ) -> Option<PhaseTiming>;
+
+    /// Latency of one whole global round. `device_steps` are the merged
+    /// per-device round totals (the Eq. 8 inputs); `timing` is the event
+    /// accumulator (empty in closed-form mode).
+    fn round_latency(
+        &self,
+        net: &NetworkModel,
+        alg: AlgorithmKind,
+        q: usize,
+        pi: usize,
+        device_steps: &[(usize, usize)],
+        timing: &RoundTiming,
+    ) -> RoundLatency;
+}
+
+/// The paper's closed-form Eq. 8 — one aggregate number per round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClosedFormEstimator;
+
+impl LatencyEstimator for ClosedFormEstimator {
+    fn name(&self) -> &'static str {
+        "closed-form"
+    }
+
+    fn phase_timing(
+        &self,
+        _net: &NetworkModel,
+        _work: &[(usize, usize)],
+        _channel: UploadChannel,
+        _deadline_s: Option<f64>,
+    ) -> Option<PhaseTiming> {
+        None
+    }
+
+    fn round_latency(
+        &self,
+        net: &NetworkModel,
+        alg: AlgorithmKind,
+        q: usize,
+        pi: usize,
+        device_steps: &[(usize, usize)],
+        _timing: &RoundTiming,
+    ) -> RoundLatency {
+        match alg {
+            AlgorithmKind::CeFedAvg => net.ce_fedavg_round(device_steps, q, pi),
+            AlgorithmKind::FedAvg => net.fedavg_round(device_steps),
+            AlgorithmKind::HierFAvg => net.hier_favg_round(device_steps, q),
+            AlgorithmKind::LocalEdge => net.local_edge_round(device_steps, q),
+        }
+    }
+}
+
+/// The discrete-event simulator (see the module docs for the event model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventDrivenEstimator;
+
+impl EventDrivenEstimator {
+    /// Run the per-device event simulation of one cluster's edge phase.
+    pub fn simulate_phase(
+        net: &NetworkModel,
+        work: &[(usize, usize)],
+        channel: UploadChannel,
+        deadline_s: Option<f64>,
+    ) -> PhaseTiming {
+        let upload = net.model_bits / channel.bandwidth(net);
+        let mut queue = EventQueue::new();
+        for (slot, &(dev, steps)) in work.iter().enumerate() {
+            queue.schedule(Event {
+                time_s: steps as f64 * net.step_seconds(dev),
+                kind: EventKind::ComputeDone,
+                id: slot,
+            });
+        }
+        let mut compute = vec![0.0f64; work.len()];
+        let mut finish = vec![0.0f64; work.len()];
+        while let Some(ev) = queue.pop() {
+            match ev.kind {
+                EventKind::ComputeDone => {
+                    compute[ev.id] = ev.time_s;
+                    queue.schedule(Event {
+                        time_s: ev.time_s + upload,
+                        kind: EventKind::UploadDone,
+                        id: ev.id,
+                    });
+                }
+                EventKind::UploadDone => finish[ev.id] = ev.time_s,
+                EventKind::BackhaulDone => unreachable!("no backhaul inside an edge phase"),
+            }
+        }
+        let latest = finish.iter().fold(0.0, f64::max);
+        let duration = match deadline_s {
+            Some(dl) if latest > dl => dl,
+            _ => latest,
+        };
+        let devices: Vec<DeviceTiming> = work
+            .iter()
+            .enumerate()
+            .map(|(slot, &(dev, _))| DeviceTiming {
+                device: dev,
+                compute_s: compute[slot],
+                upload_s: upload,
+                finish_s: finish[slot],
+                dropped: deadline_s.is_some_and(|dl| finish[slot] > dl),
+            })
+            .collect();
+        let barrier = compute.iter().fold(0.0, f64::max).min(duration);
+        PhaseTiming {
+            duration_s: duration,
+            compute_s: barrier,
+            upload_s: duration - barrier,
+            devices,
+            events: queue.processed(),
+        }
+    }
+
+    /// Simulate π sequential gossip hops on the backhaul; returns
+    /// (virtual seconds, events processed).
+    pub fn simulate_gossip(net: &NetworkModel, pi: usize) -> (f64, usize) {
+        let hop = net.model_bits / net.b_e2e;
+        let mut queue = EventQueue::new();
+        if pi > 0 {
+            queue.schedule(Event { time_s: hop, kind: EventKind::BackhaulDone, id: 0 });
+        }
+        while let Some(ev) = queue.pop() {
+            if ev.id + 1 < pi {
+                queue.schedule(Event {
+                    time_s: ev.time_s + hop,
+                    kind: EventKind::BackhaulDone,
+                    id: ev.id + 1,
+                });
+            }
+        }
+        (queue.now(), queue.processed())
+    }
+}
+
+impl LatencyEstimator for EventDrivenEstimator {
+    fn name(&self) -> &'static str {
+        "event"
+    }
+
+    fn phase_timing(
+        &self,
+        net: &NetworkModel,
+        work: &[(usize, usize)],
+        channel: UploadChannel,
+        deadline_s: Option<f64>,
+    ) -> Option<PhaseTiming> {
+        Some(Self::simulate_phase(net, work, channel, deadline_s))
+    }
+
+    fn round_latency(
+        &self,
+        net: &NetworkModel,
+        alg: AlgorithmKind,
+        _q: usize,
+        pi: usize,
+        _device_steps: &[(usize, usize)],
+        timing: &RoundTiming,
+    ) -> RoundLatency {
+        // The slowest cluster's trajectory defines the training segment of
+        // the round; clusters only barrier at the inter-cluster step.
+        // Ties break toward the lowest cluster index (deterministic).
+        let mut slowest = 0usize;
+        let mut t = f64::NEG_INFINITY;
+        for (i, &ct) in timing.cluster_time_s.iter().enumerate() {
+            if ct > t {
+                t = ct;
+                slowest = i;
+            }
+        }
+        let (compute, upload) = if timing.cluster_time_s.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                timing.cluster_compute_s[slowest],
+                timing.cluster_upload_s[slowest],
+            )
+        };
+        let backhaul = match alg {
+            AlgorithmKind::CeFedAvg => Self::simulate_gossip(net, pi).0,
+            _ => 0.0,
+        };
+        RoundLatency {
+            compute_s: compute,
+            upload_s: upload,
+            backhaul_s: backhaul,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        // 1 MFLOP/sample, batch 50, 1M params (the parent module's fixture).
+        NetworkModel::paper_defaults(4, 1e6, 50, 1_000_000)
+    }
+
+    #[test]
+    fn queue_orders_by_time_kind_id() {
+        let mut q = EventQueue::new();
+        q.schedule(Event { time_s: 2.0, kind: EventKind::ComputeDone, id: 0 });
+        q.schedule(Event { time_s: 1.0, kind: EventKind::UploadDone, id: 1 });
+        q.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 1 });
+        q.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 0 });
+        let order: Vec<(f64, EventKind, usize)> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.time_s, e.kind, e.id))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (1.0, EventKind::ComputeDone, 0),
+                (1.0, EventKind::ComputeDone, 1),
+                (1.0, EventKind::UploadDone, 1),
+                (2.0, EventKind::ComputeDone, 0),
+            ]
+        );
+        assert_eq!(q.processed(), 4);
+        assert_eq!(q.now(), 2.0);
+    }
+
+    #[test]
+    fn phase_matches_closed_form_without_deadline() {
+        let m = net();
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt =
+            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceEdge, None);
+        let want_compute = 16.0 * m.step_seconds(0);
+        let want_upload = m.model_bits / m.b_d2e;
+        assert!((pt.compute_s - want_compute).abs() < 1e-12);
+        assert!((pt.upload_s - want_upload).abs() < 1e-12);
+        assert!((pt.duration_s - (want_compute + want_upload)).abs() < 1e-12);
+        assert_eq!(pt.devices.len(), 4);
+        assert!(pt.devices.iter().all(|d| !d.dropped));
+        // Two events per device: ComputeDone + UploadDone.
+        assert_eq!(pt.events, 8);
+    }
+
+    #[test]
+    fn deadline_drops_slow_devices_and_caps_duration() {
+        let mut m = net();
+        m.device_flops[2] /= 1000.0; // straggler: ~3.5 s compute vs ~3.5 ms
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let fast_finish = 16.0 * m.step_seconds(0) + m.model_bits / m.b_d2e;
+        let dl = fast_finish * 1.5; // fast devices report, the straggler not
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            Some(dl),
+        );
+        let dropped: Vec<usize> =
+            pt.devices.iter().filter(|d| d.dropped).map(|d| d.device).collect();
+        assert_eq!(dropped, vec![2]);
+        assert!((pt.duration_s - dl).abs() < 1e-12, "duration capped at the deadline");
+        assert!(pt.devices[2].finish_s > dl);
+    }
+
+    #[test]
+    fn all_dropped_phase_lasts_exactly_the_deadline() {
+        let m = net();
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            Some(1e-9),
+        );
+        assert!(pt.devices.iter().all(|d| d.dropped));
+        assert!((pt.duration_s - 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn empty_phase_is_zero() {
+        let pt = EventDrivenEstimator::simulate_phase(
+            &net(),
+            &[],
+            UploadChannel::DeviceEdge,
+            Some(1.0),
+        );
+        assert_eq!(pt.duration_s, 0.0);
+        assert_eq!(pt.events, 0);
+        assert!(pt.devices.is_empty());
+    }
+
+    #[test]
+    fn gossip_hops_sum_to_closed_form() {
+        let m = net();
+        let (t, events) = EventDrivenEstimator::simulate_gossip(&m, 10);
+        let want = 10.0 * m.model_bits / m.b_e2e;
+        assert!((t - want).abs() / want < 1e-12);
+        assert_eq!(events, 10);
+        let (t0, e0) = EventDrivenEstimator::simulate_gossip(&m, 0);
+        assert_eq!((t0, e0), (0.0, 0));
+    }
+
+    #[test]
+    fn cloud_channel_uses_cloud_bandwidth() {
+        let m = net();
+        let work = [(0usize, 16usize)];
+        let pt =
+            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceCloud, None);
+        assert!((pt.devices[0].upload_s - m.model_bits / m.b_d2c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_timing_accumulates_phases() {
+        let m = net();
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt =
+            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceEdge, None);
+        let mut rt = RoundTiming::default();
+        rt.record_phase(1, 2, &pt);
+        rt.record_phase(1, 2, &pt);
+        assert!((rt.cluster_time_s[1] - 2.0 * pt.duration_s).abs() < 1e-12);
+        assert_eq!(rt.cluster_time_s[0], 0.0);
+        assert_eq!(rt.device_timings.len(), 8);
+        assert_eq!(rt.events_processed, 16);
+        // The estimator picks cluster 1 (the slowest) for the breakdown.
+        let lat = EventDrivenEstimator.round_latency(
+            &m,
+            AlgorithmKind::LocalEdge,
+            2,
+            0,
+            &[],
+            &rt,
+        );
+        assert!((lat.total() - 2.0 * pt.duration_s).abs() < 1e-9);
+    }
+}

@@ -1,12 +1,32 @@
-//! Wireless-network runtime model — the paper's Eq. 8 and §6.1 constants.
+//! Wireless-network runtime model — the paper's Eq. 8 and §6.1 constants,
+//! plus the discrete-event simulation engine that generalises them.
 //!
 //! The paper estimates training time analytically: per global round, the
 //! delay is the slowest device's computation plus the communication of the
 //! aggregation pattern of the algorithm in use. This module reproduces
 //! that estimator exactly (unit tests pin the closed forms), with the
-//! paper's constants as defaults and optional device heterogeneity
-//! (`c_k ~ U[0.5, 1]·capacity`).
+//! paper's constants as defaults, optional device heterogeneity
+//! (`c_k ~ U[0.5, 1]·capacity`), and an optional heavy-tail straggler
+//! population ([`StragglerSpec`]).
+//!
+//! The closed form cannot express reporting deadlines, stragglers being
+//! dropped from aggregation, or per-device timing. The [`event`] submodule
+//! simulates the same round as per-device `ComputeDone` / `UploadDone` /
+//! `BackhaulDone` events on a virtual clock; [`LatencyEstimator`] is the
+//! coordinator-facing trait with both implementations
+//! ([`ClosedFormEstimator`] — the fast default and equivalence oracle —
+//! and [`EventDrivenEstimator`]). See the [`event`] module docs for the
+//! event model, tie-breaking order, and how deadlines interact with the
+//! Eq. 6 weight renormalization.
 
+pub mod event;
+
+pub use event::{
+    ClosedFormEstimator, DeviceTiming, Event, EventDrivenEstimator, EventKind, EventQueue,
+    LatencyEstimator, PhaseTiming, RoundTiming, UploadChannel,
+};
+
+use crate::error::{CfelError, Result};
 use crate::util::rng::Rng;
 
 /// Seconds in a round, per algorithm (see DESIGN.md §5).
@@ -48,6 +68,55 @@ pub struct NetworkModel {
 pub const IPHONE_X_FLOPS: f64 = 691.2e9;
 pub const MBPS: f64 = 1e6;
 
+/// Heavy-tail straggler model layered on top of the paper's `U[0.5,1]`
+/// heterogeneity: a `fraction` of the fleet runs `slowdown`× slower
+/// (thermal throttling, background load, an effectively stalled device).
+/// Parsed from `<fraction>:<slowdown>`, e.g. `0.1:50`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerSpec {
+    /// Fraction of devices affected, in (0, 1].
+    pub fraction: f64,
+    /// Capacity divisor for affected devices, ≥ 1.
+    pub slowdown: f64,
+}
+
+impl StragglerSpec {
+    pub fn parse(s: &str) -> Result<StragglerSpec> {
+        let bad = || {
+            CfelError::Config(format!(
+                "invalid straggler spec {s:?} (expected <fraction>:<slowdown>, e.g. 0.1:50)"
+            ))
+        };
+        let (f, sl) = s.split_once(':').ok_or_else(bad)?;
+        let spec = StragglerSpec {
+            fraction: f.parse().map_err(|_| bad())?,
+            slowdown: sl.parse().map_err(|_| bad())?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.fraction, self.slowdown)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.fraction && self.fraction <= 1.0) {
+            return Err(CfelError::Config(format!(
+                "straggler fraction {} outside (0,1]",
+                self.fraction
+            )));
+        }
+        if !(self.slowdown >= 1.0 && self.slowdown.is_finite()) {
+            return Err(CfelError::Config(format!(
+                "straggler slowdown {} must be >= 1",
+                self.slowdown
+            )));
+        }
+        Ok(())
+    }
+}
+
 impl NetworkModel {
     /// Homogeneous fleet with the paper's constants.
     pub fn paper_defaults(
@@ -73,6 +142,17 @@ impl NetworkModel {
         let mut r = rng.split(0xBEEF);
         for c in &mut self.device_flops {
             *c = IPHONE_X_FLOPS * r.uniform(lo_fraction as f32, 1.0) as f64;
+        }
+        self
+    }
+
+    /// Slow down a deterministic straggler subset of the fleet.
+    pub fn with_stragglers(mut self, spec: StragglerSpec, rng: &Rng) -> NetworkModel {
+        let n = self.device_flops.len();
+        let count = ((n as f64 * spec.fraction).ceil() as usize).clamp(1, n);
+        let mut r = rng.split(0x57A6);
+        for slot in r.choose(n, count) {
+            self.device_flops[slot] /= spec.slowdown;
         }
         self
     }
@@ -219,6 +299,31 @@ mod tests {
             assert!(c >= 0.5 * IPHONE_X_FLOPS - 1.0 && c <= IPHONE_X_FLOPS);
         }
         let m2 = model().with_heterogeneity(0.5, &Rng::new(4));
+        assert_eq!(m.device_flops, m2.device_flops);
+    }
+
+    #[test]
+    fn straggler_spec_parse_roundtrip_and_validation() {
+        let s = StragglerSpec::parse("0.1:50").unwrap();
+        assert_eq!(s, StragglerSpec { fraction: 0.1, slowdown: 50.0 });
+        assert_eq!(StragglerSpec::parse(&s.name()).unwrap(), s);
+        assert!(StragglerSpec::parse("0.1").is_err());
+        assert!(StragglerSpec::parse("1.5:2").is_err());
+        assert!(StragglerSpec::parse("0.5:0.2").is_err());
+    }
+
+    #[test]
+    fn stragglers_slow_a_deterministic_subset() {
+        let spec = StragglerSpec { fraction: 0.5, slowdown: 10.0 };
+        let rng = Rng::new(7);
+        let m = model().with_stragglers(spec, &rng);
+        let slowed = m
+            .device_flops
+            .iter()
+            .filter(|&&c| (c - IPHONE_X_FLOPS / 10.0).abs() < 1.0)
+            .count();
+        assert_eq!(slowed, 2); // ceil(0.5 * 4)
+        let m2 = model().with_stragglers(spec, &Rng::new(7));
         assert_eq!(m.device_flops, m2.device_flops);
     }
 

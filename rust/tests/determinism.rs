@@ -5,9 +5,10 @@
 //! merges happen in deterministic order after the join, so this holds
 //! bit-for-bit, not just approximately.
 
-use cfel::config::{AlgorithmKind, ExperimentConfig};
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
 use cfel::coordinator::Coordinator;
 use cfel::metrics::History;
+use cfel::netsim::StragglerSpec;
 
 fn run(cfg: &ExperimentConfig) -> History {
     let mut coord = Coordinator::from_config(cfg).unwrap();
@@ -46,6 +47,13 @@ fn assert_bit_identical(alg: AlgorithmKind, a: &History, b: &History) {
         assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
         assert_eq!(x.consensus.to_bits(), y.consensus.to_bits());
         assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits());
+        // The event-driven latency path must be thread-invariant too,
+        // down to the per-round breakdown and which devices a deadline
+        // dropped.
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits());
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits());
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits());
+        assert_eq!(x.dropped_devices, y.dropped_devices);
         assert_eq!(x.steps, y.steps);
     }
 }
@@ -70,5 +78,22 @@ fn histories_identical_for_1_vs_4_threads() {
         let s1 = run_with_threads(&sampled, "1");
         let s4 = run_with_threads(&sampled, "4");
         assert_bit_identical(alg, &s1, &s4);
+
+        // Event-driven latency with stragglers and a reporting deadline:
+        // the simulation runs post-join in deterministic cluster order,
+        // so virtual timing and deadline drops are thread-invariant.
+        let mut event = cfg.clone();
+        event.latency = LatencyMode::EventDriven;
+        event.heterogeneity = Some(0.5);
+        event.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
+        event.deadline_s = Some(0.1);
+        event.rounds = 4;
+        let e1 = run_with_threads(&event, "1");
+        let e4 = run_with_threads(&event, "4");
+        assert!(
+            e1.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
+            "{alg:?}: the deadline scenario should actually drop devices"
+        );
+        assert_bit_identical(alg, &e1, &e4);
     }
 }

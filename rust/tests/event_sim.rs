@@ -1,0 +1,149 @@
+//! The event-driven latency simulator against its closed-form oracle.
+//!
+//! With homogeneous (per-device-constant) workloads, full participation
+//! and no reporting deadline, the discrete-event simulation must reproduce
+//! the closed-form Eq. 8 round latency to ≤1e-9 relative error for all
+//! four algorithms — the closed form is exactly the sum of the per-phase
+//! barriers in that regime (see `netsim::event` docs). Training itself is
+//! identical in both modes (nobody is dropped), so the learning curves
+//! must match bit-for-bit too.
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::History;
+use cfel::netsim::StragglerSpec;
+
+fn run(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn base(alg: AlgorithmKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = alg;
+    cfg.rounds = 3;
+    cfg
+}
+
+fn assert_latency_close(alg: AlgorithmKind, closed: &History, event: &History) {
+    assert_eq!(closed.len(), event.len());
+    for (c, e) in closed.iter().zip(event) {
+        let rel = (c.sim_time_s - e.sim_time_s).abs() / c.sim_time_s;
+        assert!(
+            rel <= 1e-9,
+            "{alg:?} round {}: closed {} vs event {} (rel {rel:e})",
+            c.round,
+            c.sim_time_s,
+            e.sim_time_s
+        );
+        // No deadline ⇒ no drops ⇒ the training trajectory is untouched.
+        assert_eq!(c.train_loss.to_bits(), e.train_loss.to_bits());
+        assert_eq!(c.test_accuracy.to_bits(), e.test_accuracy.to_bits());
+        assert_eq!(e.dropped_devices, 0);
+    }
+}
+
+#[test]
+fn event_sim_matches_eq8_for_all_algorithms_homogeneous() {
+    for alg in AlgorithmKind::all() {
+        let cfg = base(alg);
+        let mut event_cfg = cfg.clone();
+        event_cfg.latency = LatencyMode::EventDriven;
+        assert_latency_close(alg, &run(&cfg), &run(&event_cfg));
+    }
+}
+
+#[test]
+fn event_sim_matches_eq8_under_heterogeneity_full_participation() {
+    // Per-device speeds differ but are constant across edge phases, so the
+    // straggler of every phase is the same device and the per-phase
+    // barriers still sum to the Eq. 8 max (see module docs).
+    for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::FedAvg] {
+        let mut cfg = base(alg);
+        cfg.heterogeneity = Some(0.5);
+        let mut event_cfg = cfg.clone();
+        event_cfg.latency = LatencyMode::EventDriven;
+        assert_latency_close(alg, &run(&cfg), &run(&event_cfg));
+    }
+}
+
+#[test]
+fn deadline_drops_stragglers_and_caps_round_latency() {
+    // A quarter of the fleet is slowed ~10^6× (effectively stalled), the
+    // rest report in ~8 ms (upload-dominated on the mock model). A 100 ms
+    // deadline therefore drops exactly the stragglers, every edge phase.
+    let mut cfg = base(AlgorithmKind::CeFedAvg);
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
+    cfg.rounds = 4;
+    let mut with_dl = cfg.clone();
+    with_dl.deadline_s = Some(0.1);
+    let free = run(&cfg);
+    let capped = run(&with_dl);
+    let stragglers = (cfg.n_devices as f64 * 0.25).ceil() as usize;
+    for rec in &capped {
+        assert_eq!(
+            rec.dropped_devices,
+            stragglers * cfg.q,
+            "round {}: expected every straggler dropped in each of q phases",
+            rec.round
+        );
+        assert!(rec.test_accuracy.is_nan() || rec.test_accuracy.is_finite());
+    }
+    for rec in &free {
+        assert_eq!(rec.dropped_devices, 0, "no deadline, nothing dropped");
+    }
+    // Dropping the stalled devices is the whole point: the deadline-capped
+    // run must be much faster in virtual time.
+    let (t_free, t_capped) = (
+        free.last().unwrap().sim_time_s,
+        capped.last().unwrap().sim_time_s,
+    );
+    assert!(
+        t_capped < t_free / 10.0,
+        "deadline did not cap latency: {t_capped} !<< {t_free}"
+    );
+}
+
+#[test]
+fn all_devices_dropped_keeps_models_and_does_not_panic() {
+    // Regression companion to the aggregation empty-set bugfix: a deadline
+    // shorter than any possible report drops *every* device of *every*
+    // cluster; each cluster must keep its previous edge model (here: the
+    // shared init), not panic.
+    let mut cfg = base(AlgorithmKind::CeFedAvg);
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.deadline_s = Some(1e-9);
+    cfg.rounds = 3;
+    let h = run(&cfg);
+    for rec in &h {
+        assert_eq!(rec.dropped_devices, cfg.n_devices * cfg.q);
+        // All clusters stay at the identical init model.
+        assert!(rec.consensus < 1e-30, "consensus {}", rec.consensus);
+    }
+    // The model never moves, so accuracy is frozen at its initial value.
+    assert_eq!(
+        h.first().unwrap().test_accuracy.to_bits(),
+        h.last().unwrap().test_accuracy.to_bits()
+    );
+}
+
+#[test]
+fn per_round_breakdown_is_populated_and_consistent() {
+    let mut cfg = base(AlgorithmKind::CeFedAvg);
+    cfg.latency = LatencyMode::EventDriven;
+    let h = run(&cfg);
+    let mut prev = 0.0;
+    for rec in &h {
+        let round_total = rec.compute_s + rec.upload_s + rec.backhaul_s;
+        let delta = rec.sim_time_s - prev;
+        assert!(
+            (round_total - delta).abs() <= 1e-9 * delta.max(1.0),
+            "round {}: breakdown {round_total} != delta {delta}",
+            rec.round
+        );
+        assert!(rec.compute_s > 0.0 && rec.upload_s > 0.0);
+        assert!(rec.backhaul_s > 0.0, "CE-FedAvg gossips every round");
+        prev = rec.sim_time_s;
+    }
+}

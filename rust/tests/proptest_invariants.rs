@@ -54,10 +54,10 @@ fn prop_gossip_preserves_equal_size_average() {
         let pi = int_biased(rng, 1, 6) as u32;
         let h = MixingMatrix::metropolis(&g).power(pi);
         let mut models: Vec<Vec<f32>> = (0..m).map(|_| vec_f32(rng, d)).collect();
-        let before = global_average(&models, &vec![1; m]);
+        let before = global_average(&models, &vec![1; m]).unwrap();
         let mut scratch = Vec::new();
         gossip_mix(&mut models, &h, &mut scratch);
-        let after = global_average(&models, &vec![1; m]);
+        let after = global_average(&models, &vec![1; m]).unwrap();
         let dist = l2_distance(&before, &after);
         let scale = before.iter().map(|v| v.abs() as f64).sum::<f64>() / d as f64;
         prop_assert!(
@@ -99,7 +99,7 @@ fn prop_weighted_average_is_convex_combination() {
         let rows_data: Vec<Vec<f32>> = (0..n).map(|_| vec_f32(rng, d)).collect();
         let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
         let w = simplex(rng, n);
-        let avg = weighted_average(&rows, &w);
+        let avg = weighted_average(&rows, &w).unwrap();
         for j in 0..d {
             let lo = rows_data.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
             let hi = rows_data
