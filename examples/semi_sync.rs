@@ -1,0 +1,75 @@
+//! The three edge-round close policies, head to head on one straggler
+//! fleet.
+//!
+//! ```sh
+//! cargo run --release --example semi_sync
+//! ```
+//!
+//! The fleet has U[0.5,1] compute heterogeneity plus a heavy tail: 1 in 8
+//! devices runs ~10⁴× slower. Three CE-FedAvg runs on the *same seed*:
+//!
+//! * **full barrier** — the paper's semantics; every edge round waits for
+//!   the slowest device.
+//! * **deadline-drop** (`--agg-policy deadline:0.02`) — close after 20 ms
+//!   and drop late reports from Eq. 6 entirely.
+//! * **semi-sync K-of-N** (`--agg-policy kofn:3:0.02`) — close at the 3rd
+//!   report (of 4 per cluster) or 20 ms, park late reports, and fold them
+//!   into a later round with the FedBuff-style `1/(1+s)` discount.
+//!
+//! Everything below is bit-identical for any `CFEL_THREADS`.
+
+use cfel::config::{AggPolicyKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy, History};
+use cfel::netsim::StragglerSpec;
+
+fn run(cfg: &ExperimentConfig) -> cfel::Result<History> {
+    let mut coord = Coordinator::from_config(cfg)?;
+    coord.run()
+}
+
+fn main() -> cfel::Result<()> {
+    let mut base = ExperimentConfig::quickstart();
+    base.name = "semi-sync".into();
+    base.rounds = 10;
+    base.latency = LatencyMode::EventDriven;
+    base.heterogeneity = Some(0.5);
+    base.stragglers = Some(StragglerSpec { fraction: 0.125, slowdown: 1e4 });
+
+    let policies = [
+        ("full barrier", AggPolicyKind::FullBarrier),
+        ("deadline-drop", AggPolicyKind::DeadlineDrop { deadline_s: 0.02 }),
+        ("semi-sync 3/4", AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 }),
+    ];
+    let mut results: Vec<(&str, History)> = Vec::new();
+    for (label, policy) in policies {
+        let mut cfg = base.clone();
+        cfg.agg_policy = policy;
+        println!("== {} ({}) ==", label, policy.name());
+        results.push((label, run(&cfg)?));
+    }
+
+    println!("\npolicy         | best acc | total sim | dropped | late | stale-merged");
+    for (label, h) in &results {
+        println!(
+            "{:<14} | {:>8.4} | {:>8.3}s | {:>7} | {:>4} | {:>12}",
+            label,
+            best_accuracy(h),
+            h.last().unwrap().sim_time_s,
+            h.iter().map(|r| r.dropped_devices).sum::<usize>(),
+            h.iter().map(|r| r.late_devices).sum::<usize>(),
+            h.iter().map(|r| r.stale_merged).sum::<usize>(),
+        );
+    }
+
+    // Time-to-target: 90% of the barrier's best accuracy, same seed.
+    let target = 0.9 * best_accuracy(&results[0].1);
+    println!("\ntime to {target:.4} accuracy (90% of the full barrier's best):");
+    for (label, h) in &results {
+        match time_to_accuracy(h, target) {
+            Some((round, t)) => println!("  {label:<14} round {round:>2} at {t:.3} sim-s"),
+            None => println!("  {label:<14} not reached"),
+        }
+    }
+    Ok(())
+}

@@ -5,6 +5,7 @@
 
 use std::path::Path;
 
+use cfel::aggregation::policy::{DeadlineDrop, SemiSync};
 use cfel::aggregation::{consensus_distance, gossip_mix, weighted_average_into};
 use cfel::config::ExperimentConfig;
 use cfel::coordinator::Coordinator;
@@ -107,12 +108,14 @@ fn main() {
     // one global-round training segment of a 128-cluster, 3072-device
     // system (femnist-CNN-sized model, 16 steps/device, reporting
     // deadline armed) plus the π=10 backhaul gossip hops. Two events per
-    // device per phase + the gossip hops = 6154 events per iteration.
+    // device per phase + one RoundClose timeout per cluster phase + the
+    // gossip hops = 6282 events per iteration.
     let net = NetworkModel::paper_defaults(3072, 13.30e6, 50, 6_603_710);
     let cluster_work: Vec<Vec<(usize, usize)>> = (0..128)
         .map(|c| (0..24).map(|d| (c * 24 + d, 16)).collect())
         .collect();
-    let n_events = (3072 * 2 + 10) as f64;
+    let n_events = (3072 * 2 + 128 + 10) as f64;
+    let deadline = DeadlineDrop { deadline_s: 30.0 };
     b.run_throughput("event-sim round 128cl x 24dev (events)", n_events, || {
         let mut t = 0.0f64;
         for work in &cluster_work {
@@ -120,7 +123,25 @@ fn main() {
                 &net,
                 work,
                 UploadChannel::DeviceEdge,
-                Some(30.0),
+                &deadline,
+            )
+            .duration_s;
+        }
+        t += EventDrivenEstimator::simulate_gossip(&net, 10).0;
+        t
+    });
+    // Same fleet under a semi-sync K-of-N close: the policy decision adds
+    // one predicate per report, so throughput should track the deadline
+    // path — this bench guards that the policy abstraction stays free.
+    let kofn = SemiSync { k: 18, timeout_s: 30.0, staleness_exp: 1.0 };
+    b.run_throughput("event-sim round 128cl x 24dev (kofn:18)", n_events, || {
+        let mut t = 0.0f64;
+        for work in &cluster_work {
+            t += EventDrivenEstimator::simulate_phase(
+                &net,
+                work,
+                UploadChannel::DeviceEdge,
+                &kofn,
             )
             .duration_s;
         }

@@ -7,6 +7,8 @@
 //! allocation-free on the hot path (callers pass output buffers or use the
 //! in-place variants); `components` bench tracks their throughput.
 
+pub mod policy;
+
 use crate::error::{CfelError, Result};
 use crate::topology::MixingMatrix;
 
@@ -120,6 +122,35 @@ pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
         }
     }
     total / m as f64
+}
+
+/// Normalized merge weights for a staleness-discounted Eq. 6 aggregate:
+/// `w_i = n_i · d_i / Σ_j n_j · d_j` over sample counts `n` and positive
+/// staleness discounts `d` (on-time reports pass `d = 1`).
+///
+/// With all discounts exactly `1.0` this reproduces the plain Eq. 6
+/// weights bit for bit: `n as f64 * 1.0` is exact, and the f64 sum of
+/// integer-valued terms equals the integer total exactly — the property
+/// the semi-sync oracle-equivalence suite pins. The weights of any merged
+/// aggregate always sum to 1 (up to one final rounding), which
+/// `rust/tests/proptest_invariants.rs` checks over random inputs.
+pub fn report_weights(n_samples: &[usize], discounts: &[f64]) -> Result<Vec<f64>> {
+    assert_eq!(n_samples.len(), discounts.len());
+    let total: f64 = n_samples
+        .iter()
+        .zip(discounts)
+        .map(|(&n, &d)| n as f64 * d)
+        .sum();
+    if !(total > 0.0 && total.is_finite()) {
+        return Err(CfelError::Aggregation(
+            "staleness-weighted aggregation over an empty participant set".into(),
+        ));
+    }
+    Ok(n_samples
+        .iter()
+        .zip(discounts)
+        .map(|(&n, &d)| n as f64 * d / total)
+        .collect())
 }
 
 /// Size-weighted global average of cluster models — the quantity u_t whose
@@ -262,5 +293,23 @@ mod tests {
     #[test]
     fn l2_distance_basic() {
         assert!((l2_distance(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_weights_match_plain_eq6_with_unit_discounts() {
+        let w = report_weights(&[30, 10], &[1.0, 1.0]).unwrap();
+        // Bit-identical to n_i as f64 / total as f64 — the oracle property.
+        assert_eq!(w[0].to_bits(), (30.0f64 / 40.0).to_bits());
+        assert_eq!(w[1].to_bits(), (10.0f64 / 40.0).to_bits());
+    }
+
+    #[test]
+    fn report_weights_discount_stale_reports_and_sum_to_one() {
+        // A report two phases stale at exponent 1 counts 1/3 as much.
+        let w = report_weights(&[10, 10], &[1.0, 1.0 / 3.0]).unwrap();
+        assert!((w[0] - 0.75).abs() < 1e-12);
+        assert!((w[1] - 0.25).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(report_weights(&[], &[]).is_err());
     }
 }

@@ -1,0 +1,261 @@
+//! Edge-round close policies — when an edge server stops waiting.
+//!
+//! CE-FedAvg as written closes every edge round with a full barrier: the
+//! Eq. 6 average waits for the slowest surviving device, so one straggler
+//! stalls the whole cluster even though the event engine knows every
+//! device's report time. [`AggregationPolicy`] abstracts the *close
+//! condition* of an edge phase so the coordinator can trade that barrier
+//! for latency:
+//!
+//! * [`FullBarrier`] — wait for every report (the paper's semantics and
+//!   the equivalence oracle for the other two policies).
+//! * [`DeadlineDrop`] — close at `min(deadline, latest report)` and drop
+//!   late devices from Eq. 6 entirely (the `--deadline` policy; survivor
+//!   weights renormalize).
+//! * [`SemiSync`] — close at the K-th report (or a timeout), merge the
+//!   on-time reports via Eq. 6, and fold late-but-arriving reports into a
+//!   *later* phase's aggregate with a FedBuff-style polynomial staleness
+//!   discount `1/(1+s)^a`, where `s` counts edge phases elapsed since the
+//!   report's origin phase. Nothing is discarded; stragglers just count
+//!   for less the longer they lag.
+//!
+//! The policy is consulted by the discrete-event simulator
+//! (`netsim::event`): it may schedule one `RoundClose` timeout event and
+//! decides, per `UploadDone`, whether the phase closes. Reports that miss
+//! the close are classified by [`AggregationPolicy::late_verdict`] as
+//! either [`ReportVerdict::Dropped`] (deadline-drop) or
+//! [`ReportVerdict::Late`] (semi-sync: kept, merged stale). All policy
+//! decisions are pure functions of simulated report times, which are
+//! derived from the experiment seed alone — so every policy is
+//! bit-identical for any `CFEL_THREADS` (pinned by
+//! `rust/tests/determinism.rs`, and the degenerate `SemiSync{k=N,
+//! timeout=∞, a=0}` case is pinned to `FullBarrier` at bit-identical
+//! precision by `rust/tests/agg_policy.rs`).
+
+/// Why an edge phase stopped accepting reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Every participating device reported before any cutoff fired.
+    AllReported,
+    /// The K-th report arrived (semi-sync) before the timeout.
+    KthReport,
+    /// The semi-sync timeout fired with fewer than K reports in.
+    Timeout,
+    /// The reporting deadline fired with reports still outstanding.
+    Deadline,
+}
+
+impl CloseReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            CloseReason::AllReported => "all-reported",
+            CloseReason::KthReport => "kth-report",
+            CloseReason::Timeout => "timeout",
+            CloseReason::Deadline => "deadline",
+        }
+    }
+
+    /// Stable index for count accumulators (`RoundTiming::close_reasons`).
+    pub fn index(self) -> usize {
+        match self {
+            CloseReason::AllReported => 0,
+            CloseReason::KthReport => 1,
+            CloseReason::Timeout => 2,
+            CloseReason::Deadline => 3,
+        }
+    }
+
+    /// All variants, in `index` order.
+    pub const ALL: [CloseReason; 4] = [
+        CloseReason::AllReported,
+        CloseReason::KthReport,
+        CloseReason::Timeout,
+        CloseReason::Deadline,
+    ];
+}
+
+/// How one device's report fared against the phase close.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReportVerdict {
+    /// Arrived at or before the close — merged into this phase's Eq. 6.
+    OnTime,
+    /// Missed the close but is kept; merges into a later phase close with
+    /// a staleness discount (semi-sync).
+    Late,
+    /// Missed the close and is discarded outright (deadline-drop).
+    Dropped,
+}
+
+/// The edge-round close condition, consulted by the event simulator.
+///
+/// One phase of one cluster is simulated as `ComputeDone`/`UploadDone`
+/// events; the policy optionally arms a single `RoundClose` timeout event
+/// ([`timeout`](AggregationPolicy::timeout)) and is asked after every
+/// report whether the phase closes now
+/// ([`closes_at_report`](AggregationPolicy::closes_at_report)). Reports
+/// landing after the close get [`late_verdict`](AggregationPolicy::late_verdict);
+/// late reports that are kept merge into a later close weighted by
+/// `n_samples ·` [`staleness_discount`](AggregationPolicy::staleness_discount).
+pub trait AggregationPolicy: Send + Sync {
+    /// Absolute phase-relative time of the `RoundClose` timeout event to
+    /// arm, if any, and the [`CloseReason`] to record when it fires first.
+    fn timeout(&self) -> Option<(f64, CloseReason)>;
+
+    /// Whether the phase closes once `reports_done` of `total` devices
+    /// have reported. Called after each `UploadDone` in virtual-time
+    /// order; the first `true` fixes the close instant.
+    fn closes_at_report(&self, reports_done: usize, total: usize) -> bool;
+
+    /// Fate of a report that misses the close: [`ReportVerdict::Dropped`]
+    /// or [`ReportVerdict::Late`]. Never [`ReportVerdict::OnTime`].
+    fn late_verdict(&self) -> ReportVerdict;
+
+    /// Weight multiplier for a kept report merged `staleness` edge phases
+    /// after its origin phase (on-time reports use `staleness = 0`). Must
+    /// be positive; the merge renormalizes, so only ratios matter.
+    fn staleness_discount(&self, staleness: u64) -> f64;
+}
+
+/// Wait for every report — the paper's barrier and the equivalence oracle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FullBarrier;
+
+impl AggregationPolicy for FullBarrier {
+    fn timeout(&self) -> Option<(f64, CloseReason)> {
+        None
+    }
+
+    fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
+        reports_done == total
+    }
+
+    fn late_verdict(&self) -> ReportVerdict {
+        // Unreachable in practice: the barrier close is the last report.
+        ReportVerdict::Dropped
+    }
+
+    fn staleness_discount(&self, _staleness: u64) -> f64 {
+        1.0
+    }
+}
+
+/// Close at `min(deadline, latest report)`; late devices are dropped from
+/// Eq. 6 and the survivor weights renormalize (PR 2's `--deadline` path).
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineDrop {
+    /// Per-edge-phase reporting deadline T_dl, seconds from phase start.
+    pub deadline_s: f64,
+}
+
+impl AggregationPolicy for DeadlineDrop {
+    fn timeout(&self) -> Option<(f64, CloseReason)> {
+        Some((self.deadline_s, CloseReason::Deadline))
+    }
+
+    fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
+        reports_done == total
+    }
+
+    fn late_verdict(&self) -> ReportVerdict {
+        ReportVerdict::Dropped
+    }
+
+    fn staleness_discount(&self, _staleness: u64) -> f64 {
+        1.0
+    }
+}
+
+/// FedBuff-style K-of-N: close at the K-th report (or `timeout_s`), keep
+/// late reports and merge them stale with weight `1/(1+s)^staleness_exp`.
+#[derive(Debug, Clone, Copy)]
+pub struct SemiSync {
+    /// Reports needed to close the phase (clamped to the phase's
+    /// participant count, so `k >= n` degenerates to the full barrier).
+    pub k: usize,
+    /// Hard cutoff, seconds from phase start; `f64::INFINITY` disables it.
+    pub timeout_s: f64,
+    /// Polynomial staleness exponent `a` in `1/(1+s)^a`; `0` weights late
+    /// reports like fresh ones.
+    pub staleness_exp: f64,
+}
+
+impl AggregationPolicy for SemiSync {
+    fn timeout(&self) -> Option<(f64, CloseReason)> {
+        if self.timeout_s.is_finite() {
+            Some((self.timeout_s, CloseReason::Timeout))
+        } else {
+            None
+        }
+    }
+
+    fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
+        reports_done >= self.k.min(total)
+    }
+
+    fn late_verdict(&self) -> ReportVerdict {
+        ReportVerdict::Late
+    }
+
+    fn staleness_discount(&self, staleness: u64) -> f64 {
+        // (1+s)^0 == 1.0 exactly (IEEE pow), so a == 0 reproduces the
+        // undiscounted Eq. 6 weights bit for bit.
+        (1.0 + staleness as f64).powf(-self.staleness_exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_barrier_closes_only_on_last_report() {
+        let p = FullBarrier;
+        assert!(p.timeout().is_none());
+        assert!(!p.closes_at_report(3, 4));
+        assert!(p.closes_at_report(4, 4));
+        assert_eq!(p.staleness_discount(7), 1.0);
+    }
+
+    #[test]
+    fn deadline_drop_arms_timeout_and_drops_late() {
+        let p = DeadlineDrop { deadline_s: 0.25 };
+        assert_eq!(p.timeout(), Some((0.25, CloseReason::Deadline)));
+        assert!(!p.closes_at_report(1, 2));
+        assert!(p.closes_at_report(2, 2));
+        assert_eq!(p.late_verdict(), ReportVerdict::Dropped);
+    }
+
+    #[test]
+    fn semi_sync_closes_at_kth_and_clamps_k() {
+        let p = SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 1.0 };
+        assert!(p.timeout().is_none(), "infinite timeout arms no event");
+        assert!(!p.closes_at_report(2, 8));
+        assert!(p.closes_at_report(3, 8));
+        // k larger than the phase degenerates to the barrier.
+        assert!(!p.closes_at_report(1, 2));
+        assert!(p.closes_at_report(2, 2));
+        assert_eq!(p.late_verdict(), ReportVerdict::Late);
+    }
+
+    #[test]
+    fn staleness_discount_is_polynomial_and_exact_at_zero_exp() {
+        let p = SemiSync { k: 1, timeout_s: 0.5, staleness_exp: 2.0 };
+        assert!((p.staleness_discount(0) - 1.0).abs() < 1e-15);
+        assert!((p.staleness_discount(1) - 0.25).abs() < 1e-15);
+        assert!((p.staleness_discount(3) - 1.0 / 16.0).abs() < 1e-15);
+        let flat = SemiSync { k: 1, timeout_s: 0.5, staleness_exp: 0.0 };
+        for s in 0..10 {
+            // Bit-exact 1.0: the oracle-equivalence tests rely on it.
+            assert_eq!(flat.staleness_discount(s).to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn close_reason_names_and_indices_are_stable() {
+        for (i, r) in CloseReason::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+        assert_eq!(CloseReason::Deadline.name(), "deadline");
+        assert_eq!(CloseReason::KthReport.name(), "kth-report");
+    }
+}

@@ -5,6 +5,7 @@
 
 use std::path::PathBuf;
 
+use crate::aggregation::policy::{AggregationPolicy, DeadlineDrop, FullBarrier, SemiSync};
 use crate::compression::Compressor;
 use crate::error::{CfelError, Result};
 use crate::netsim::StragglerSpec;
@@ -79,6 +80,92 @@ impl LatencyMode {
         match self {
             LatencyMode::ClosedForm => "closed-form",
             LatencyMode::EventDriven => "event",
+        }
+    }
+}
+
+/// Declarative edge-round close policy (`aggregation::policy`); the
+/// coordinator instantiates the matching [`AggregationPolicy`] object.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggPolicyKind {
+    /// Wait for every report (paper semantics; works in both latency
+    /// modes — in closed-form mode it is the only valid policy).
+    FullBarrier,
+    /// Close at `min(deadline, latest report)`, dropping late devices
+    /// from Eq. 6 (requires the event-driven latency mode).
+    DeadlineDrop {
+        /// Per-edge-round reporting deadline T_dl, simulated seconds.
+        deadline_s: f64,
+    },
+    /// FedBuff-style semi-sync: close at the K-th report or `timeout_s`,
+    /// keep late reports and merge them stale with a `1/(1+s)^a` discount
+    /// (`a` = the config's `staleness_exp`). Requires event-driven mode.
+    SemiSync {
+        /// Reports per cluster needed to close an edge phase.
+        k: usize,
+        /// Hard cutoff in simulated seconds; `f64::INFINITY` disables it.
+        timeout_s: f64,
+    },
+}
+
+impl AggPolicyKind {
+    /// Parse `full` | `deadline:<T>` | `kofn:<K>:<timeout>` (timeout may
+    /// be `inf`).
+    pub fn parse(s: &str) -> Result<AggPolicyKind> {
+        let bad = || {
+            CfelError::Config(format!(
+                "unknown aggregation policy {s:?} \
+                 (full | deadline:<seconds> | kofn:<K>:<timeout_seconds|inf>)"
+            ))
+        };
+        if matches!(s, "full" | "full-barrier" | "barrier") {
+            return Ok(AggPolicyKind::FullBarrier);
+        }
+        if let Some(dl) = s.strip_prefix("deadline:") {
+            return Ok(AggPolicyKind::DeadlineDrop {
+                deadline_s: dl.parse().map_err(|_| bad())?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("kofn:") {
+            let (k, timeout) = rest.split_once(':').ok_or_else(bad)?;
+            let timeout_s = match timeout {
+                "inf" | "none" => f64::INFINITY,
+                t => t.parse().map_err(|_| bad())?,
+            };
+            return Ok(AggPolicyKind::SemiSync {
+                k: k.parse().map_err(|_| bad())?,
+                timeout_s,
+            });
+        }
+        Err(bad())
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AggPolicyKind::FullBarrier => "full".into(),
+            AggPolicyKind::DeadlineDrop { deadline_s } => format!("deadline:{deadline_s}"),
+            AggPolicyKind::SemiSync { k, timeout_s } => {
+                if timeout_s.is_finite() {
+                    format!("kofn:{k}:{timeout_s}")
+                } else {
+                    format!("kofn:{k}:inf")
+                }
+            }
+        }
+    }
+
+    /// Instantiate the runtime policy object. `staleness_exp` is the
+    /// polynomial discount exponent applied by semi-sync stale merges
+    /// (ignored by the other two policies).
+    pub fn build(&self, staleness_exp: f64) -> Box<dyn AggregationPolicy> {
+        match *self {
+            AggPolicyKind::FullBarrier => Box::new(FullBarrier),
+            AggPolicyKind::DeadlineDrop { deadline_s } => {
+                Box::new(DeadlineDrop { deadline_s })
+            }
+            AggPolicyKind::SemiSync { k, timeout_s } => {
+                Box::new(SemiSync { k, timeout_s, staleness_exp })
+            }
         }
     }
 }
@@ -196,8 +283,16 @@ pub struct ExperimentConfig {
     pub latency: LatencyMode,
     /// Per-edge-round reporting deadline T_dl in simulated seconds; slow
     /// devices are dropped from Eq. 6 aggregation (weights renormalize
-    /// over the survivors). Requires `latency = EventDriven`.
+    /// over the survivors). Requires `latency = EventDriven`. Sugar for
+    /// `agg_policy = DeadlineDrop { .. }` — cannot be combined with a
+    /// non-default `agg_policy` (see [`ExperimentConfig::resolved_policy`]).
     pub deadline_s: Option<f64>,
+    /// Edge-round close policy (full barrier / deadline-drop / semi-sync).
+    pub agg_policy: AggPolicyKind,
+    /// Polynomial staleness exponent `a`: a semi-sync report merged `s`
+    /// edge phases after its origin phase is weighted by `n/(1+s)^a`.
+    /// `0` weights stale reports like fresh ones.
+    pub staleness_exp: f64,
     /// Override the synthetic generator's per-sample noise std (task
     /// difficulty knob; None = the generator default).
     pub data_noise: Option<f32>,
@@ -237,6 +332,8 @@ impl ExperimentConfig {
             stragglers: None,
             latency: LatencyMode::ClosedForm,
             deadline_s: None,
+            agg_policy: AggPolicyKind::FullBarrier,
+            staleness_exp: 1.0,
             // noise 3.0 puts Bayes accuracy ≈ 0.85 on the 64-d synthetic
             // task, so convergence curves resolve over tens of rounds
             // instead of saturating immediately (tuned empirically).
@@ -272,6 +369,8 @@ impl ExperimentConfig {
             stragglers: None,
             latency: LatencyMode::ClosedForm,
             deadline_s: None,
+            agg_policy: AggPolicyKind::FullBarrier,
+            staleness_exp: 1.0,
             // noise 3.0 puts Bayes accuracy ≈ 0.85 on the 64-d synthetic
             // task, so convergence curves resolve over tens of rounds
             // instead of saturating immediately (tuned empirically).
@@ -286,6 +385,19 @@ impl ExperimentConfig {
 
     pub fn devices_per_cluster(&self) -> usize {
         self.n_devices / self.n_clusters
+    }
+
+    /// The effective close policy: an explicit `agg_policy` wins; the
+    /// legacy `deadline_s` sugar maps to [`AggPolicyKind::DeadlineDrop`];
+    /// otherwise the full barrier. (`validate` rejects setting both.)
+    pub fn resolved_policy(&self) -> AggPolicyKind {
+        if self.agg_policy != AggPolicyKind::FullBarrier {
+            return self.agg_policy;
+        }
+        match self.deadline_s {
+            Some(deadline_s) => AggPolicyKind::DeadlineDrop { deadline_s },
+            None => AggPolicyKind::FullBarrier,
+        }
     }
 
     /// Validate cross-field invariants.
@@ -331,13 +443,49 @@ impl ExperimentConfig {
                     "deadline_s {dl} must be positive and finite"
                 )));
             }
-            if self.latency != LatencyMode::EventDriven {
-                return Err(CfelError::Config(
-                    "deadline_s requires the event-driven latency mode \
-                     (set latency = \"event\" / pass --latency event)"
-                        .into(),
-                ));
+            if self.agg_policy != AggPolicyKind::FullBarrier {
+                return Err(CfelError::Config(format!(
+                    "deadline_s is sugar for the deadline-drop policy and cannot \
+                     be combined with agg_policy {:?}",
+                    self.agg_policy.name()
+                )));
             }
+        }
+        match self.agg_policy {
+            AggPolicyKind::FullBarrier => {}
+            AggPolicyKind::DeadlineDrop { deadline_s } => {
+                if !(deadline_s > 0.0 && deadline_s.is_finite()) {
+                    return Err(CfelError::Config(format!(
+                        "deadline-drop deadline {deadline_s} must be positive and finite"
+                    )));
+                }
+            }
+            AggPolicyKind::SemiSync { k, timeout_s } => {
+                if k == 0 {
+                    return Err(CfelError::Config("semi-sync K must be >= 1".into()));
+                }
+                if timeout_s <= 0.0 || timeout_s.is_nan() {
+                    return Err(CfelError::Config(format!(
+                        "semi-sync timeout {timeout_s} must be positive (or inf)"
+                    )));
+                }
+            }
+        }
+        if self.resolved_policy() != AggPolicyKind::FullBarrier
+            && self.latency != LatencyMode::EventDriven
+        {
+            return Err(CfelError::Config(
+                "deadline-drop and semi-sync close policies require the \
+                 event-driven latency mode (set latency = \"event\" / pass \
+                 --latency event)"
+                    .into(),
+            ));
+        }
+        if !(self.staleness_exp >= 0.0 && self.staleness_exp.is_finite()) {
+            return Err(CfelError::Config(format!(
+                "staleness_exp {} must be finite and >= 0",
+                self.staleness_exp
+            )));
         }
         if let Some(FaultSpec::KillCluster { cluster, .. }) = self.fault {
             if cluster >= self.n_clusters {
@@ -398,6 +546,12 @@ impl ExperimentConfig {
         }
         if let Some(dl) = self.deadline_s {
             o.set("deadline_s", Json::from_f64(dl));
+        }
+        if self.agg_policy != AggPolicyKind::FullBarrier {
+            o.set("agg_policy", Json::from_str_val(&self.agg_policy.name()));
+        }
+        if self.staleness_exp != 1.0 {
+            o.set("staleness_exp", Json::from_f64(self.staleness_exp));
         }
         if let Some(n) = self.data_noise {
             o.set("data_noise", Json::from_f64(n as f64));
@@ -500,6 +654,14 @@ impl ExperimentConfig {
                 None => LatencyMode::ClosedForm,
             },
             deadline_s: j.opt("deadline_s").map(|v| v.as_f64()).transpose()?,
+            agg_policy: match j.opt("agg_policy") {
+                Some(v) => AggPolicyKind::parse(v.as_str()?)?,
+                None => AggPolicyKind::FullBarrier,
+            },
+            staleness_exp: match j.opt("staleness_exp") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
             data_noise: j
                 .opt("data_noise")
                 .map(|v| v.as_f64().map(|x| x as f32))
@@ -565,6 +727,62 @@ mod tests {
         let mut c = ExperimentConfig::quickstart();
         c.stragglers = Some(StragglerSpec { fraction: 2.0, slowdown: 4.0 });
         assert!(c.validate().is_err());
+        // Semi-sync / deadline-drop policies need the event-driven mode...
+        let mut c = ExperimentConfig::quickstart();
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: f64::INFINITY };
+        assert!(c.validate().is_err());
+        // ...and are accepted with it.
+        c.latency = LatencyMode::EventDriven;
+        c.validate().unwrap();
+        c.agg_policy = AggPolicyKind::SemiSync { k: 0, timeout_s: 1.0 };
+        assert!(c.validate().is_err(), "K = 0 rejected");
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: -1.0 };
+        assert!(c.validate().is_err(), "negative timeout rejected");
+        c.agg_policy = AggPolicyKind::DeadlineDrop { deadline_s: f64::INFINITY };
+        assert!(c.validate().is_err(), "deadline-drop needs a finite deadline");
+        // The deadline_s sugar conflicts with an explicit policy.
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 1.0 };
+        c.deadline_s = Some(0.5);
+        assert!(c.validate().is_err());
+        c.deadline_s = None;
+        c.staleness_exp = -0.5;
+        assert!(c.validate().is_err(), "negative staleness exponent rejected");
+    }
+
+    #[test]
+    fn agg_policy_parse_roundtrip() {
+        for p in [
+            AggPolicyKind::FullBarrier,
+            AggPolicyKind::DeadlineDrop { deadline_s: 0.02 },
+            AggPolicyKind::SemiSync { k: 5, timeout_s: 1.5 },
+            AggPolicyKind::SemiSync { k: 12, timeout_s: f64::INFINITY },
+        ] {
+            assert_eq!(AggPolicyKind::parse(&p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            AggPolicyKind::parse("kofn:4:inf").unwrap(),
+            AggPolicyKind::SemiSync { k: 4, timeout_s: f64::INFINITY }
+        );
+        assert!(AggPolicyKind::parse("kofn:4").is_err());
+        assert!(AggPolicyKind::parse("kofn:x:1").is_err());
+        assert!(AggPolicyKind::parse("async").is_err());
+    }
+
+    #[test]
+    fn resolved_policy_maps_deadline_sugar() {
+        let mut c = ExperimentConfig::quickstart();
+        assert_eq!(c.resolved_policy(), AggPolicyKind::FullBarrier);
+        c.latency = LatencyMode::EventDriven;
+        c.deadline_s = Some(0.25);
+        c.validate().unwrap();
+        assert_eq!(
+            c.resolved_policy(),
+            AggPolicyKind::DeadlineDrop { deadline_s: 0.25 }
+        );
+        c.deadline_s = None;
+        c.agg_policy = AggPolicyKind::SemiSync { k: 2, timeout_s: 0.5 };
+        c.validate().unwrap();
+        assert_eq!(c.resolved_policy(), c.agg_policy);
     }
 
     #[test]
@@ -619,6 +837,21 @@ mod tests {
         assert_eq!(c2.latency, c.latency);
         assert_eq!(c2.deadline_s, c.deadline_s);
         assert_eq!(c2.tau, c.tau);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_agg_policy() {
+        let mut c = ExperimentConfig::quickstart();
+        c.latency = LatencyMode::EventDriven;
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.25 };
+        c.staleness_exp = 2.0;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.agg_policy, c.agg_policy);
+        assert_eq!(c2.staleness_exp, c.staleness_exp);
+        // The infinite-timeout spelling survives the round trip too.
+        c.agg_policy = AggPolicyKind::SemiSync { k: 16, timeout_s: f64::INFINITY };
+        let c3 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c3.agg_policy, c.agg_policy);
     }
 
     #[test]

@@ -2,7 +2,19 @@
 
 use crate::aggregation;
 use crate::coordinator::trainer::LocalOutcome;
-use crate::error::{CfelError, Result};
+use crate::error::Result;
+
+/// One model report queued for an Eq. 6 merge: a flat parameter vector,
+/// its sample-count weight, and the staleness discount the close policy
+/// assigned (1.0 for fresh on-time reports).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightedReport<'a> {
+    pub params: &'a [f32],
+    pub n_samples: usize,
+    /// Positive multiplier on the sample-count weight (`1/(1+s)^a` for a
+    /// report `s` phases stale under semi-sync).
+    pub discount: f64,
+}
 
 /// One edge server's state (the paper's y^{(i)} plus bookkeeping).
 #[derive(Debug, Clone)]
@@ -32,17 +44,29 @@ impl ClusterState {
     /// dropped) is an error — callers skip the cluster and keep its
     /// previous model instead.
     pub fn aggregate_into(outcomes: &[(usize, LocalOutcome)], out: &mut [f32]) -> Result<()> {
-        let total: usize = outcomes.iter().map(|(_, o)| o.n_samples).sum();
-        if total == 0 {
-            return Err(CfelError::Aggregation(
-                "Eq. 6 aggregation over an empty participant set".into(),
-            ));
-        }
-        let weights: Vec<f64> = outcomes
+        let reports: Vec<WeightedReport> = outcomes
             .iter()
-            .map(|(_, o)| o.n_samples as f64 / total as f64)
+            .map(|(_, o)| WeightedReport {
+                params: &o.params,
+                n_samples: o.n_samples,
+                discount: 1.0,
+            })
             .collect();
-        let rows: Vec<&[f32]> = outcomes.iter().map(|(_, o)| o.params.as_slice()).collect();
+        Self::aggregate_reports_into(&reports, out)
+    }
+
+    /// Staleness-aware Eq. 6: the merge over fresh on-time reports plus
+    /// any late reports a semi-sync policy deferred from earlier phases,
+    /// weighted by `n_i · discount_i` and renormalized
+    /// ([`aggregation::report_weights`]). With all discounts exactly 1.0
+    /// this is bit-identical to [`ClusterState::aggregate_into`] — the
+    /// plain path is implemented as a wrapper, which is what pins the
+    /// semi-sync degenerate case to the full-barrier oracle.
+    pub fn aggregate_reports_into(reports: &[WeightedReport], out: &mut [f32]) -> Result<()> {
+        let ns: Vec<usize> = reports.iter().map(|r| r.n_samples).collect();
+        let ds: Vec<f64> = reports.iter().map(|r| r.discount).collect();
+        let weights = aggregation::report_weights(&ns, &ds)?;
+        let rows: Vec<&[f32]> = reports.iter().map(|r| r.params).collect();
         aggregation::weighted_average_into(&rows, &weights, out)
     }
 }
@@ -79,5 +103,50 @@ mod tests {
         let mut out = vec![3.0f32; 2];
         assert!(ClusterState::aggregate_into(&[], &mut out).is_err());
         assert_eq!(out, vec![3.0; 2]);
+        assert!(ClusterState::aggregate_reports_into(&[], &mut out).is_err());
+        assert_eq!(out, vec![3.0; 2]);
+    }
+
+    #[test]
+    fn stale_reports_count_for_less() {
+        // Equal sample counts, but the second report is two phases stale
+        // at exponent 1 → discount 1/3 → weights 3/4 and 1/4.
+        let a = vec![0.0f32, 0.0];
+        let b = vec![4.0f32, 8.0];
+        let reports = [
+            WeightedReport { params: &a, n_samples: 10, discount: 1.0 },
+            WeightedReport { params: &b, n_samples: 10, discount: 1.0 / 3.0 },
+        ];
+        let mut out = vec![9.0f32; 2];
+        ClusterState::aggregate_reports_into(&reports, &mut out).unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!((out[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_discounts_match_plain_aggregate_bitwise() {
+        let o = |params: Vec<f32>, n_samples: usize| LocalOutcome {
+            params,
+            steps: 1,
+            loss_sum: 0.0,
+            n_samples,
+        };
+        let outcomes =
+            vec![(0usize, o(vec![0.1, 0.9], 30)), (1usize, o(vec![4.0, 8.0], 11))];
+        let mut plain = vec![0.0f32; 2];
+        ClusterState::aggregate_into(&outcomes, &mut plain).unwrap();
+        let reports: Vec<WeightedReport> = outcomes
+            .iter()
+            .map(|(_, o)| WeightedReport {
+                params: &o.params,
+                n_samples: o.n_samples,
+                discount: 1.0,
+            })
+            .collect();
+        let mut stale = vec![0.0f32; 2];
+        ClusterState::aggregate_reports_into(&reports, &mut stale).unwrap();
+        for (p, s) in plain.iter().zip(&stale) {
+            assert_eq!(p.to_bits(), s.to_bits());
+        }
     }
 }

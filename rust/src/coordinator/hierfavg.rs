@@ -4,7 +4,9 @@
 //! then one more τ-epoch round whose models go to the *cloud* for a global
 //! aggregation. The cloud is a star bottleneck: it gives the fastest
 //! per-round convergence (full averaging) at the price of the slow
-//! device→cloud upload in Eq. 8 and a single point of failure.
+//! device→cloud upload in Eq. 8 and a single point of failure. The
+//! configured close policy governs every one of the q phases — edge and
+//! cloud alike — through the shared `edge_phase` machinery.
 
 use crate::coordinator::cefedavg::merge_steps;
 use crate::coordinator::{Coordinator, RoundStats};
@@ -82,6 +84,34 @@ mod tests {
                 a.train_loss,
                 b.train_loss
             );
+        }
+    }
+
+    #[test]
+    fn semi_sync_timeout_splits_edge_and_cloud_phase_closes() {
+        use crate::config::{AggPolicyKind, LatencyMode};
+        // Hier-FAvg is the one algorithm whose phases ride two different
+        // uplinks per global round: q−1 edge phases (~8 ms healthy
+        // reports on 10 Mbps) and one cloud phase (~77 ms on 1 Mbps). A
+        // 20 ms semi-sync timeout therefore lands *between* the two —
+        // edge phases close with every report in, cloud phases time out
+        // with everyone late-but-kept — so the round's close reasons are
+        // genuinely mixed and nothing is ever dropped.
+        let mut c = cfg();
+        c.rounds = 4;
+        c.latency = LatencyMode::EventDriven;
+        c.agg_policy = AggPolicyKind::SemiSync {
+            k: c.devices_per_cluster(),
+            timeout_s: 0.02,
+        };
+        let h = Coordinator::from_config(&c).unwrap().run().unwrap();
+        for rec in &h {
+            assert_eq!(rec.close_reason, "mixed", "round {}", rec.round);
+            assert_eq!(rec.dropped_devices, 0, "semi-sync never drops");
+            // Every cloud report misses the timeout; every edge report
+            // makes it.
+            assert_eq!(rec.late_devices, c.n_devices);
+            assert_eq!(rec.on_time_devices, (c.q - 1) * c.n_devices);
         }
     }
 

@@ -20,12 +20,13 @@ pub mod hierfavg;
 pub mod localedge;
 pub mod trainer;
 
-pub use cluster::ClusterState;
+pub use cluster::{ClusterState, WeightedReport};
 pub use trainer::LocalOutcome;
 
 use std::time::Instant;
 
 use crate::aggregation;
+use crate::aggregation::policy::AggregationPolicy;
 use crate::config::{
     AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode,
 };
@@ -96,6 +97,20 @@ impl RoundStats {
     }
 }
 
+/// A kept-late model report awaiting a stale merge (semi-sync policy):
+/// the device's trained parameters, its Eq. 6 weight, when the report
+/// arrives on the cluster's virtual clock, and which edge phase produced
+/// it (the staleness anchor).
+#[derive(Debug, Clone)]
+pub(crate) struct PendingReport {
+    pub params: Vec<f32>,
+    pub n_samples: usize,
+    /// Arrival instant on the cluster's *absolute* virtual clock.
+    pub arrive_abs_s: f64,
+    /// Global edge-phase counter the report was trained in.
+    pub origin_phase: u64,
+}
+
 /// The CFEL system runtime.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
@@ -109,12 +124,21 @@ pub struct Coordinator {
     /// Round-latency estimator (closed-form Eq. 8 or the event sim),
     /// selected by the config's `latency` field.
     pub latency: Box<dyn LatencyEstimator>,
+    /// Edge-round close policy (full barrier / deadline-drop / semi-sync),
+    /// from the config's `agg_policy` / `deadline_s` fields.
+    pub policy: Box<dyn AggregationPolicy>,
     pub eval_set: Vec<Batch>,
     pub rng: Rng,
     /// Alive flag per cluster (fault injection).
     pub alive: Vec<bool>,
     /// Whether the central aggregator (cloud/hub) is alive.
     pub aggregator_alive: bool,
+    /// Absolute virtual time per cluster, advanced at every simulated
+    /// phase close and re-synced at inter-cluster barriers (event mode;
+    /// stays 0 in closed-form mode). Anchors late-report arrivals.
+    pub(crate) cluster_clock_s: Vec<f64>,
+    /// Kept-late reports per cluster, awaiting their stale merge.
+    pub(crate) pending: Vec<Vec<PendingReport>>,
     /// Scratch buffer reused by gossip.
     pub(crate) scratch: Vec<f32>,
     /// Verbose per-round logging.
@@ -197,6 +221,7 @@ impl Coordinator {
             LatencyMode::ClosedForm => Box::new(ClosedFormEstimator),
             LatencyMode::EventDriven => Box::new(EventDrivenEstimator),
         };
+        let policy = cfg.resolved_policy().build(cfg.staleness_exp);
 
         let eval_set = eval_batches(&fed.test, backend.batch_size());
         let n_clusters = cfg.n_clusters;
@@ -209,10 +234,13 @@ impl Coordinator {
             h_pi,
             net,
             latency,
+            policy,
             eval_set,
             rng,
             alive: vec![true; n_clusters],
             aggregator_alive: true,
+            cluster_clock_s: vec![0.0; n_clusters],
+            pending: vec![Vec::new(); n_clusters],
             scratch: Vec::new(),
             verbose: false,
         })
@@ -395,6 +423,37 @@ impl Coordinator {
         )
     }
 
+    /// Re-sync per-cluster virtual clocks at the round's inter-cluster
+    /// barrier (event mode only). CE-FedAvg clusters barrier at the π
+    /// gossip hops; FedAvg / Hier-FAvg at the cloud aggregation —
+    /// afterwards every alive cluster has waited for the slowest one, so
+    /// all clocks jump to the round end. No barrier, no sync: Local-Edge
+    /// clusters never cooperate, and a killed cloud aggregator (Table 1
+    /// fault) stops FedAvg / Hier-FAvg from barriering too — in both
+    /// cases the independent clocks are what keep each cluster's
+    /// late-report arrival phases well defined.
+    fn sync_cluster_clocks(&mut self, lat: &RoundLatency) {
+        let barriers = match self.cfg.algorithm {
+            AlgorithmKind::CeFedAvg => true,
+            AlgorithmKind::FedAvg | AlgorithmKind::HierFAvg => self.aggregator_alive,
+            AlgorithmKind::LocalEdge => false,
+        };
+        if !barriers || self.cfg.latency != LatencyMode::EventDriven {
+            return;
+        }
+        let end = self
+            .alive_clusters()
+            .iter()
+            .map(|&ci| self.cluster_clock_s[ci])
+            .fold(f64::NEG_INFINITY, f64::max)
+            + lat.backhaul_s;
+        if end.is_finite() {
+            for &ci in &self.alive_clusters() {
+                self.cluster_clock_s[ci] = end;
+            }
+        }
+    }
+
     /// Evaluate the current models on the common test set.
     ///
     /// CE-FedAvg / Local-Edge report the mean accuracy of edge models
@@ -458,6 +517,7 @@ impl Coordinator {
             wall += t0.elapsed().as_secs_f64();
             let lat = self.round_latency(&stats);
             sim_time += lat.total();
+            self.sync_cluster_clocks(&lat);
 
             let (acc, tloss) = if (round + 1) % self.cfg.eval_every == 0
                 || round + 1 == self.cfg.rounds
@@ -474,6 +534,10 @@ impl Coordinator {
                 upload_s: lat.upload_s,
                 backhaul_s: lat.backhaul_s,
                 dropped_devices: stats.timing.dropped_devices,
+                on_time_devices: stats.timing.on_time_devices,
+                late_devices: stats.timing.late_devices,
+                stale_merged: stats.timing.stale_merged,
+                close_reason: stats.timing.close_reason_summary(),
                 train_loss: stats.mean_loss(),
                 test_accuracy: acc,
                 test_loss: tloss,
@@ -481,6 +545,17 @@ impl Coordinator {
                 steps: stats.step_count,
             };
             if self.verbose {
+                let mut extras = String::new();
+                if rec.dropped_devices > 0 {
+                    extras.push_str(&format!("  dropped {}", rec.dropped_devices));
+                }
+                if rec.late_devices > 0 || rec.stale_merged > 0 {
+                    extras.push_str(&format!(
+                        "  late {} stale-merged {}",
+                        rec.late_devices,
+                        rec.stale_merged
+                    ));
+                }
                 eprintln!(
                     "[{}] round {:>3}  loss {:.4}  acc {}  sim {:.1}s{}",
                     self.cfg.algorithm.name(),
@@ -492,11 +567,7 @@ impl Coordinator {
                         format!("{:.4}", acc)
                     },
                     sim_time,
-                    if rec.dropped_devices > 0 {
-                        format!("  dropped {}", rec.dropped_devices)
-                    } else {
-                        String::new()
-                    }
+                    extras
                 );
             }
             history.push(rec);

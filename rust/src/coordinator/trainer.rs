@@ -1,7 +1,10 @@
 //! Device-local training: τ epochs of mini-batch SGD from the edge model
 //! (paper Eqs. 4–5, epoch semantics following Reddi et al. [42]).
 
-use crate::coordinator::{ClusterState, Coordinator, RoundContext, RoundStats};
+use crate::aggregation::policy::ReportVerdict;
+use crate::coordinator::{
+    ClusterState, Coordinator, PendingReport, RoundContext, RoundStats, WeightedReport,
+};
 use crate::data::sampler::EpochSampler;
 use crate::data::Dataset;
 use crate::error::Result;
@@ -95,12 +98,16 @@ impl Coordinator {
     /// `channel` names the uplink this phase's reports travel over (edge
     /// for CE-FedAvg / Local-Edge / Hier-FAvg edge rounds, cloud for
     /// FedAvg and Hier-FAvg's final round). In event-driven latency mode
-    /// the phase is additionally simulated per device after the join:
-    /// devices whose simulated report misses the config's `deadline_s`
-    /// are dropped from the Eq. 6 aggregation (survivor weights
-    /// renormalize; a cluster whose devices all miss keeps its previous
-    /// edge model), and per-cluster virtual time accumulates into
-    /// `stats.timing`.
+    /// the phase is additionally simulated per device after the join and
+    /// closed by the configured `AggregationPolicy`: reports that miss
+    /// the close are dropped from Eq. 6 (deadline-drop; survivor weights
+    /// renormalize) or parked and folded into a *later* phase close of
+    /// the same cluster with a `1/(1+s)^a` staleness discount
+    /// (semi-sync). A cluster whose close yields no mergeable report
+    /// keeps its previous edge model. Per-cluster virtual time
+    /// accumulates into `stats.timing`, and each cluster's absolute
+    /// clock advances to its close so late-report arrivals stay
+    /// well-ordered across phases and rounds.
     pub(crate) fn edge_phase(
         &mut self,
         epochs: usize,
@@ -157,11 +164,19 @@ impl Coordinator {
             per_cluster[slot].push((dev, out));
         }
 
-        // ---- simulate phase timing + apply the reporting deadline -----
-        // Event mode only (the closed-form estimator returns None and
-        // keeps the Eq. 8 round-level path). Runs single-threaded after
-        // the join in alive-cluster order, so timing — including which
-        // devices a deadline drops — is independent of CFEL_THREADS.
+        // ---- simulate the phase close + aggregate (Eq. 6) -------------
+        // Event mode simulates each cluster's phase under the configured
+        // close policy; closed-form mode (phase_timing → None) keeps the
+        // Eq. 8 round-level path and aggregates every outcome. Runs
+        // single-threaded after the join in alive-cluster order, so
+        // timing — including which devices a policy drops or defers, and
+        // which stale reports land in which phase — is independent of
+        // CFEL_THREADS. Aggregation writes straight into each cluster's
+        // existing model buffer (O(m·p) averages are cheap next to
+        // training); weights renormalize over the reports present, and a
+        // cluster whose close produced no mergeable report keeps its
+        // previous model (the `CfelError::Aggregation` empty-set contract
+        // — here expressed as a skip rather than an error).
         for (slot, &ci) in alive.iter().enumerate() {
             let work: Vec<(usize, usize)> = per_cluster[slot]
                 .iter()
@@ -169,34 +184,75 @@ impl Coordinator {
                 .collect();
             let Some(pt) =
                 self.latency
-                    .phase_timing(&self.net, &work, channel, self.cfg.deadline_s)
+                    .phase_timing(&self.net, &work, channel, &*self.policy)
             else {
+                // Closed-form: no close policy in play, everyone merges.
+                if !per_cluster[slot].is_empty() {
+                    ClusterState::aggregate_into(
+                        &per_cluster[slot],
+                        &mut self.clusters[ci].model,
+                    )?;
+                }
                 continue;
             };
-            if pt.devices.iter().any(|t| t.dropped) {
-                let mut kept = Vec::with_capacity(per_cluster[slot].len());
-                for (outcome, timing) in per_cluster[slot].drain(..).zip(&pt.devices) {
-                    debug_assert_eq!(outcome.0, timing.device);
-                    if !timing.dropped {
-                        kept.push(outcome);
-                    }
-                }
-                per_cluster[slot] = kept;
-            }
-            stats.timing.record_phase(ci, self.clusters.len(), &pt);
-        }
 
-        // ---- aggregate (Eq. 6): in place, per shard, post-join --------
-        // O(m·p) memory-bound averages are cheap next to training; write
-        // straight into each cluster's existing model buffer rather than
-        // paying per-phase allocations or a second thread-pool spin-up.
-        // Weights renormalize over the outcomes present; a cluster whose
-        // whole participant set was dropped keeps its previous model.
-        for (slot, &ci) in alive.iter().enumerate() {
-            if per_cluster[slot].is_empty() {
+            // Advance this cluster's absolute clock to the phase close.
+            let start_abs = self.cluster_clock_s[ci];
+            let close_abs = start_abs + pt.duration_s;
+            self.cluster_clock_s[ci] = close_abs;
+
+            // Drain kept-late reports that have arrived by this close
+            // (semi-sync). Push order — (origin phase, work slot) — is
+            // preserved, so the merge order is deterministic. Draining
+            // *before* this phase's own late reports are parked below
+            // makes it structurally impossible for a report to fold back
+            // into the phase it just missed, even when f64 rounding of
+            // `start_abs + finish_s` on a large clock would let the
+            // arrival-time comparison claim otherwise.
+            let queued = std::mem::take(&mut self.pending[ci]);
+            let (stale, still_pending): (Vec<PendingReport>, Vec<PendingReport>) =
+                queued.into_iter().partition(|p| p.arrive_abs_s <= close_abs);
+            self.pending[ci] = still_pending;
+
+            // Classify this phase's fresh outcomes against the close.
+            let mut on_time: Vec<(usize, LocalOutcome)> =
+                Vec::with_capacity(per_cluster[slot].len());
+            for (outcome, timing) in per_cluster[slot].drain(..).zip(&pt.devices) {
+                debug_assert_eq!(outcome.0, timing.device);
+                match timing.verdict {
+                    ReportVerdict::OnTime => on_time.push(outcome),
+                    ReportVerdict::Late => self.pending[ci].push(PendingReport {
+                        params: outcome.1.params,
+                        n_samples: outcome.1.n_samples,
+                        arrive_abs_s: start_abs + timing.finish_s,
+                        origin_phase: phase,
+                    }),
+                    ReportVerdict::Dropped => {}
+                }
+            }
+
+            stats.timing.record_phase(ci, self.clusters.len(), &pt);
+            stats.timing.stale_merged += stale.len();
+
+            if on_time.is_empty() && stale.is_empty() {
+                // Timeout/deadline fired before any report (and nothing
+                // stale arrived): keep the previous edge model.
                 continue;
             }
-            ClusterState::aggregate_into(&per_cluster[slot], &mut self.clusters[ci].model)?;
+            let reports: Vec<WeightedReport> = on_time
+                .iter()
+                .map(|(_, o)| WeightedReport {
+                    params: &o.params,
+                    n_samples: o.n_samples,
+                    discount: 1.0,
+                })
+                .chain(stale.iter().map(|p| WeightedReport {
+                    params: &p.params,
+                    n_samples: p.n_samples,
+                    discount: self.policy.staleness_discount(phase - p.origin_phase),
+                }))
+                .collect();
+            ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
         }
         Ok(())
     }

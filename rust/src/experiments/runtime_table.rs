@@ -9,10 +9,13 @@
 //! (`netsim::event`), which must agree with the closed form in this
 //! homogeneous no-deadline regime — the table doubles as an oracle check.
 
+use crate::aggregation::policy::FullBarrier;
+use crate::config::{AggPolicyKind, ExperimentConfig, LatencyMode};
+use crate::coordinator::Coordinator;
 use crate::error::Result;
 use crate::experiments::{write_summary, FigureOpts};
-use crate::metrics::markdown_table;
-use crate::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
+use crate::metrics::{best_accuracy, markdown_table, time_to_accuracy, History};
+use crate::netsim::{EventDrivenEstimator, NetworkModel, StragglerSpec, UploadChannel};
 use crate::runtime::Manifest;
 
 struct ModelRow {
@@ -84,7 +87,7 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
         "Eq. 8 — per-global-round latency decomposition (64 devices, 8 \
          clusters, τ=2, q=8, π=10; b_d2e=10 Mbps, b_e2e=50 Mbps, \
          b_d2c=1 Mbps, devices at iPhone-X 691.2 GFLOPS). event_total_s \
-         replays the round through the discrete-event simulator.\n\n{}",
+         replays the round through the discrete-event simulator.\n\n{}\n\n{}",
         markdown_table(
             &[
                 "model",
@@ -96,10 +99,87 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
                 "event_total_s",
             ],
             &rows
-        )
+        ),
+        policy_comparison(opts)?
     );
     write_summary(opts, "runtime", &summary)?;
     Ok(summary)
+}
+
+/// Time-to-target-accuracy of the three edge-round close policies on the
+/// *same seed and straggler population*: a CE-FedAvg fleet with U[0.5,1]
+/// heterogeneity plus a 10⁴× heavy tail, run under the full barrier (the
+/// oracle), the 20 ms deadline-drop, and semi-sync K-of-N with the same
+/// 20 ms timeout. The target is 90% of the full barrier's best accuracy,
+/// so the table answers the FedBuff question directly: how much virtual
+/// time does each policy need to reach the same model quality?
+fn policy_comparison(opts: &FigureOpts) -> Result<String> {
+    let mut base = ExperimentConfig::quickstart();
+    base.name = "policy-comparison".into();
+    base.seed = opts.seed;
+    base.rounds = opts.rounds.clamp(4, 12);
+    base.backend = opts.backend.clone();
+    base.latency = LatencyMode::EventDriven;
+    base.heterogeneity = Some(0.5);
+    base.stragglers = Some(StragglerSpec { fraction: 0.125, slowdown: 1e4 });
+
+    // quickstart: 4 devices per cluster; K=3 lets each cluster close
+    // without its slowest device, the 20 ms timeout bounds the wait.
+    let policies = [
+        AggPolicyKind::FullBarrier,
+        AggPolicyKind::DeadlineDrop { deadline_s: 0.02 },
+        AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 },
+    ];
+    let mut histories: Vec<(String, History)> = Vec::new();
+    for p in policies {
+        let mut cfg = base.clone();
+        cfg.agg_policy = p;
+        let mut coord = Coordinator::from_config(&cfg)?;
+        coord.verbose = opts.verbose;
+        histories.push((p.name(), coord.run()?));
+    }
+
+    let target = 0.9 * best_accuracy(&histories[0].1);
+    let rows: Vec<Vec<String>> = histories
+        .iter()
+        .map(|(name, h)| {
+            let (round, t) = match time_to_accuracy(h, target) {
+                Some((r, t)) => (r.to_string(), format!("{t:.3}")),
+                None => ("-".into(), "-".into()),
+            };
+            let last = h.last().expect("at least one round");
+            vec![
+                name.clone(),
+                format!("{:.4}", best_accuracy(h)),
+                round,
+                t,
+                format!("{:.3}", last.sim_time_s),
+                h.iter().map(|r| r.dropped_devices).sum::<usize>().to_string(),
+                h.iter().map(|r| r.late_devices).sum::<usize>().to_string(),
+                h.iter().map(|r| r.stale_merged).sum::<usize>().to_string(),
+            ]
+        })
+        .collect();
+    Ok(format!(
+        "Close policies — time to {target:.4} accuracy (90% of the full \
+         barrier's best) on one straggler-heavy CE-FedAvg fleet (seed {}, \
+         {} rounds, 1/8 of devices 10⁴× slow):\n\n{}",
+        base.seed,
+        base.rounds,
+        markdown_table(
+            &[
+                "policy",
+                "best_acc",
+                "round@target",
+                "time_to_target_s",
+                "total_sim_s",
+                "dropped",
+                "late",
+                "stale_merged",
+            ],
+            &rows
+        )
+    ))
 }
 
 /// The same global round replayed as discrete events: q edge phases of τ
@@ -110,7 +190,7 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
 fn event_total(net: &NetworkModel, alg: &str, dpc: usize, q: usize, tau: usize, pi: usize) -> f64 {
     let phase = |channel: UploadChannel, steps: usize| {
         let work: Vec<(usize, usize)> = (0..dpc).map(|d| (d, steps)).collect();
-        EventDrivenEstimator::simulate_phase(net, &work, channel, None).duration_s
+        EventDrivenEstimator::simulate_phase(net, &work, channel, &FullBarrier).duration_s
     };
     match alg {
         "ce-fedavg" => {
@@ -137,12 +217,18 @@ mod tests {
     fn produces_rows_for_paper_models() {
         let opts = FigureOpts {
             out_dir: std::env::temp_dir().join(format!("cfel_rt_{}", std::process::id())),
+            rounds: 4, // keep the three policy-comparison runs cheap
             ..Default::default()
         };
         let s = run(&opts).unwrap();
         assert!(s.contains("vgg-11"));
         assert!(s.contains("ce-fedavg"));
         assert!(s.contains("event_total_s"));
+        // The close-policy comparison rides along on the same summary.
+        assert!(s.contains("time_to_target_s"));
+        assert!(s.contains("full"));
+        assert!(s.contains("deadline:0.02"));
+        assert!(s.contains("kofn:3:0.02"));
         std::fs::remove_dir_all(&opts.out_dir).ok();
     }
 

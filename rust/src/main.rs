@@ -14,7 +14,9 @@
 
 use std::path::PathBuf;
 
-use cfel::config::{AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, LatencyMode};
+use cfel::config::{
+    AggPolicyKind, AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, LatencyMode,
+};
 use cfel::coordinator::Coordinator;
 use cfel::experiments::{run_figure, FigureOpts};
 use cfel::metrics::{best_accuracy, time_to_accuracy, CsvWriter, ROUND_HEADER};
@@ -75,6 +77,14 @@ fn train_command() -> Command {
         .flag("heterogeneity", "device speed floor in (0,1], e.g. 0.5")
         .flag_default("latency", "closed-form", "closed-form | event (per-round latency estimator)")
         .flag("deadline", "per-edge-round reporting deadline in seconds (event mode)")
+        .flag(
+            "agg-policy",
+            "edge-round close policy: full | deadline:<T> | kofn:<K>:<timeout|inf> (event mode)",
+        )
+        .flag(
+            "staleness-exp",
+            "semi-sync staleness discount exponent a in 1/(1+s)^a [default: 1.0]",
+        )
         .flag("stragglers", "heavy-tail stragglers as <fraction>:<slowdown>, e.g. 0.1:50")
         .flag("csv", "write per-round history to this CSV file")
         .flag_default("eval-every", "1", "evaluate every k rounds")
@@ -137,6 +147,24 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     if let Some(spec) = args.get("stragglers") {
         cfg.stragglers = Some(cfel::netsim::StragglerSpec::parse(spec)?);
     }
+    if let Some(p) = args.get("agg-policy") {
+        // `--deadline` is sugar for `--agg-policy deadline:<T>`; naming
+        // both is contradictory even when the policy spelled out is
+        // `full` (config-level validation can't see that case, since an
+        // explicit `full` is indistinguishable from the default there).
+        if args.get("deadline").is_some() {
+            return Err(cfel::CfelError::Config(
+                "--agg-policy conflicts with --deadline (its sugar); pass one".into(),
+            ));
+        }
+        cfg.agg_policy = AggPolicyKind::parse(p)?;
+    }
+    if let Some(a) = args.get("staleness-exp") {
+        // Strict parse: the exponent reshapes every stale merge weight.
+        cfg.staleness_exp = a.parse().map_err(|_| {
+            cfel::CfelError::Config(format!("invalid --staleness-exp value {a:?}"))
+        })?;
+    }
     cfg.backend = match args.get_or("backend", "mock").as_str() {
         "mock" => BackendKind::Mock { hidden: 32 },
         "pjrt" => BackendKind::Pjrt {
@@ -155,7 +183,7 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     let mut coord = Coordinator::from_config(&cfg)?;
     coord.verbose = !args.get_bool("quiet");
     eprintln!(
-        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {}",
+        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {} | policy {}",
         cfg.algorithm.name(),
         coord.backend.name(),
         cfg.n_devices,
@@ -165,7 +193,8 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         cfg.pi,
         cfg.topology,
         cfg.data.name(),
-        cfg.latency.name()
+        cfg.latency.name(),
+        cfg.resolved_policy().name()
     );
     let history = coord.run()?;
 
@@ -190,7 +219,13 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     );
     if cfg.latency == LatencyMode::EventDriven {
         let dropped: usize = history.iter().map(|r| r.dropped_devices).sum();
+        println!("policy:          {}", cfg.resolved_policy().name());
         println!("deadline drops:  {dropped} device-rounds");
+        let late: usize = history.iter().map(|r| r.late_devices).sum();
+        let stale: usize = history.iter().map(|r| r.stale_merged).sum();
+        if late > 0 || stale > 0 {
+            println!("late reports:    {late} deferred, {stale} merged stale");
+        }
     }
     println!("wall time:       {:.1} s", last.wall_time_s);
     if let Some((r, t)) = time_to_accuracy(&history, best * 0.9) {

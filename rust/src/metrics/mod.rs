@@ -20,9 +20,20 @@ pub struct RoundRecord {
     pub upload_s: f64,
     /// This round's simulated backhaul (gossip) seconds.
     pub backhaul_s: f64,
-    /// Devices dropped by the reporting deadline this round (event-driven
-    /// latency mode; always 0 in closed-form mode).
+    /// Devices dropped outright by the close policy this round (the
+    /// deadline; event-driven latency mode; always 0 in closed-form mode).
     pub dropped_devices: usize,
+    /// Reports that made their phase close this round (event mode).
+    pub on_time_devices: usize,
+    /// Reports that missed their close but were kept for a stale merge
+    /// (semi-sync; event mode).
+    pub late_devices: usize,
+    /// Kept-late reports from earlier phases folded into one of this
+    /// round's aggregates with a staleness discount (semi-sync).
+    pub stale_merged: usize,
+    /// Why this round's phases closed: a `CloseReason` name when
+    /// unanimous, "mixed" otherwise, "-" in closed-form mode.
+    pub close_reason: String,
     /// Mean training loss over the round's SGD steps.
     pub train_loss: f64,
     /// Common-test-set accuracy (NaN when eval was skipped this round).
@@ -99,13 +110,18 @@ impl CsvWriter {
             format!("{:.3}", r.upload_s),
             format!("{:.3}", r.backhaul_s),
             r.dropped_devices.to_string(),
+            r.on_time_devices.to_string(),
+            r.late_devices.to_string(),
+            r.stale_merged.to_string(),
+            r.close_reason.clone(),
         ])
     }
 }
 
 /// Header matching [`CsvWriter::round_row`].
 pub const ROUND_HEADER: &str = "series,round,sim_time_s,wall_time_s,train_loss,\
-     test_accuracy,test_loss,consensus,steps,compute_s,upload_s,backhaul_s,dropped";
+     test_accuracy,test_loss,consensus,steps,compute_s,upload_s,backhaul_s,dropped,\
+     on_time,late,stale,close_reason";
 
 /// Render a small aligned markdown table.
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -134,6 +150,10 @@ mod tests {
             upload_s: 0.2,
             backhaul_s: 0.3,
             dropped_devices: 0,
+            on_time_devices: 0,
+            late_devices: 0,
+            stale_merged: 0,
+            close_reason: "-".into(),
             train_loss: 1.0,
             test_accuracy: acc,
             test_loss: 1.0,

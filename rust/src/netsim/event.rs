@@ -3,8 +3,9 @@
 //! The closed-form Eq. 8 estimator in the parent module collapses a global
 //! round into three aggregate terms. This module simulates the same round
 //! as *per-device discrete events* on a virtual clock, which is what lets
-//! the system express reporting deadlines, stragglers, and per-device
-//! timing heterogeneity that the closed form cannot.
+//! the system express reporting deadlines, stragglers, semi-synchronous
+//! round closes, and per-device timing heterogeneity that the closed form
+//! cannot.
 //!
 //! # Event model
 //!
@@ -19,38 +20,53 @@
 //! [`EventKind::BackhaulDone`] hops of `W / b_e2e` each (every edge of the
 //! backhaul transmits concurrently within a hop).
 //!
+//! # Round-close policies
+//!
+//! When the phase stops accepting reports is decided by the configured
+//! [`AggregationPolicy`]: the policy may arm one [`EventKind::RoundClose`]
+//! timeout event, and is consulted after every `UploadDone` whether the
+//! phase closes now (the full barrier closes on the last report, semi-sync
+//! on the K-th). Events scheduled past the close still pop — the
+//! *late-upload drain* — so every device's report time is known; reports
+//! that missed the close carry the policy's verdict
+//! ([`ReportVerdict::Late`] for semi-sync, [`ReportVerdict::Dropped`] for
+//! the deadline) and the coordinator either folds them into a later
+//! phase's aggregate with a staleness discount or discards them. See
+//! `aggregation::policy` for the three policies and their semantics.
+//!
 //! # Tie-breaking and determinism
 //!
 //! The event queue is a binary min-heap ordered by `(time, kind, id)`:
-//! simultaneous events pop in `ComputeDone < UploadDone < BackhaulDone`
-//! order, and within a kind by ascending id (the device's slot in the
-//! phase's work list, which the coordinator builds in sorted participant
-//! order). Simulation inputs are derived purely from the experiment seed
-//! and the simulation runs single-threaded after the training join, so
-//! event-driven timing — including which devices a deadline drops — is
-//! bit-identical for any `CFEL_THREADS` (pinned by
-//! `rust/tests/determinism.rs`).
+//! simultaneous events pop in `ComputeDone < UploadDone < BackhaulDone <
+//! RoundClose` order, and within a kind by ascending id (the device's slot
+//! in the phase's work list, which the coordinator builds in sorted
+//! participant order). `RoundClose` ordering last means a report landing
+//! exactly at a deadline/timeout still counts as on time, matching the
+//! strict `finish > T_dl` drop rule of the closed analysis. Simulation
+//! inputs are derived purely from the experiment seed and the simulation
+//! runs single-threaded after the training join, so event-driven timing —
+//! including which devices a policy drops or defers — is bit-identical for
+//! any `CFEL_THREADS` (pinned by `rust/tests/determinism.rs`).
 //!
 //! # Deadlines and Eq. 6 renormalization
 //!
-//! A reporting deadline `T_dl` (config `deadline_s`) applies per *edge
-//! phase*, relative to the phase start: a device whose `UploadDone` lands
-//! after `T_dl` is marked [`DeviceTiming::dropped`]. The coordinator
-//! excludes dropped devices from the Eq. 6 intra-cluster average, which
+//! Under [`aggregation::policy::DeadlineDrop`](crate::aggregation::policy::DeadlineDrop)
+//! the phase ends at `min(T_dl, latest report)` — the edge server never
+//! waits past the deadline — and a device whose `UploadDone` lands after
+//! `T_dl` is excluded from the Eq. 6 intra-cluster average, which
 //! renormalizes the surviving sample-count weights automatically (the
 //! average is taken over survivors only). If *every* device of a cluster
-//! misses the deadline the cluster skips aggregation and keeps its previous
-//! edge model for that phase. The phase itself ends at
-//! `min(T_dl, latest report)` — the edge server never waits past the
-//! deadline.
+//! misses the deadline the cluster skips aggregation and keeps its
+//! previous edge model for that phase — the same contract semi-sync
+//! applies when its timeout fires before any report.
 //!
 //! # Closed-form equivalence
 //!
 //! With homogeneous (or merely per-device-constant) workloads, full
-//! participation and no deadline, summing the per-phase barriers
-//! reproduces Eq. 8 exactly: `Σ_r max_k(steps·C/c_k) = max_k Σ_r` when the
-//! slowest device is the same each phase, and uploads/backhaul hops add up
-//! to the closed-form `q·W/b` and `π·W/b_e2e` terms
+//! participation and the full-barrier policy, summing the per-phase
+//! barriers reproduces Eq. 8 exactly: `Σ_r max_k(steps·C/c_k) = max_k Σ_r`
+//! when the slowest device is the same each phase, and uploads/backhaul
+//! hops add up to the closed-form `q·W/b` and `π·W/b_e2e` terms
 //! (`rust/tests/event_sim.rs` pins ≤1e-9 relative error for all four
 //! algorithms). Under partial participation the two models legitimately
 //! diverge: the closed form takes the max over *round-total* per-device
@@ -60,6 +76,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::aggregation::policy::{AggregationPolicy, CloseReason, ReportVerdict};
 use crate::config::AlgorithmKind;
 use crate::netsim::{NetworkModel, RoundLatency};
 
@@ -73,6 +90,10 @@ pub enum EventKind {
     UploadDone,
     /// One inter-cluster gossip hop completed on the backhaul.
     BackhaulDone,
+    /// The policy's timeout fired — the phase closes if it hasn't already.
+    /// Ordered after `UploadDone` so a report landing exactly at the
+    /// cutoff still counts as on time.
+    RoundClose,
 }
 
 /// One scheduled occurrence on the virtual clock.
@@ -81,7 +102,8 @@ pub struct Event {
     /// Virtual time of the occurrence, seconds from the phase start.
     pub time_s: f64,
     pub kind: EventKind,
-    /// Work-list slot for compute/upload events; hop index for backhaul.
+    /// Work-list slot for compute/upload events; hop index for backhaul;
+    /// 0 for the (unique) round-close timeout.
     pub id: usize,
 }
 
@@ -178,24 +200,39 @@ pub struct DeviceTiming {
     pub upload_s: f64,
     /// Report arrival, seconds from the phase start.
     pub finish_s: f64,
-    /// Missed the reporting deadline — excluded from Eq. 6 aggregation.
-    pub dropped: bool,
+    /// How the report fared against the policy's close.
+    pub verdict: ReportVerdict,
+}
+
+impl DeviceTiming {
+    /// Discarded outright by the close policy (deadline-drop).
+    pub fn dropped(&self) -> bool {
+        self.verdict == ReportVerdict::Dropped
+    }
+
+    /// Missed the close but kept for a stale merge (semi-sync).
+    pub fn late(&self) -> bool {
+        self.verdict == ReportVerdict::Late
+    }
 }
 
 /// Simulated timing of one cluster's edge phase.
 #[derive(Debug, Clone)]
 pub struct PhaseTiming {
-    /// Phase duration: `min(deadline, latest report)`.
+    /// Phase duration: when the policy closed the round.
     pub duration_s: f64,
     /// Compute portion of the duration (the straggler barrier, capped at
-    /// the deadline).
+    /// the close).
     pub compute_s: f64,
     /// Upload portion of the duration (`duration - compute`).
     pub upload_s: f64,
     /// Per-device timing, in work-list (sorted participant) order.
     pub devices: Vec<DeviceTiming>,
-    /// Events processed by the simulation.
+    /// Events processed by the simulation (includes the late-upload drain
+    /// and any timeout event).
     pub events: usize,
+    /// Why the phase stopped accepting reports.
+    pub close_reason: CloseReason,
 }
 
 /// Per-global-round accumulator the event estimator fills phase by phase;
@@ -212,8 +249,17 @@ pub struct RoundTiming {
     pub cluster_upload_s: Vec<f64>,
     /// Every simulated device timing of the round (all phases appended).
     pub device_timings: Vec<DeviceTiming>,
-    /// Devices dropped by the reporting deadline this round.
+    /// Reports that made their phase close this round.
+    pub on_time_devices: usize,
+    /// Reports that missed their close but were kept for a stale merge.
+    pub late_devices: usize,
+    /// Kept-late reports from *any* earlier phase that were folded into
+    /// one of this round's aggregates (filled by the coordinator's drain).
+    pub stale_merged: usize,
+    /// Devices discarded outright by the close policy this round.
     pub dropped_devices: usize,
+    /// Phase-close reason counts, indexed by [`CloseReason::index`].
+    pub close_reasons: [usize; 4],
     /// Total events processed this round.
     pub events_processed: usize,
 }
@@ -229,9 +275,33 @@ impl RoundTiming {
         self.cluster_time_s[cluster] += pt.duration_s;
         self.cluster_compute_s[cluster] += pt.compute_s;
         self.cluster_upload_s[cluster] += pt.upload_s;
-        self.dropped_devices += pt.devices.iter().filter(|d| d.dropped).count();
+        for d in &pt.devices {
+            match d.verdict {
+                ReportVerdict::OnTime => self.on_time_devices += 1,
+                ReportVerdict::Late => self.late_devices += 1,
+                ReportVerdict::Dropped => self.dropped_devices += 1,
+            }
+        }
+        if !pt.devices.is_empty() {
+            self.close_reasons[pt.close_reason.index()] += 1;
+        }
         self.events_processed += pt.events;
         self.device_timings.extend(pt.devices.iter().cloned());
+    }
+
+    /// Compact close-reason label for the round: "-" when no phases were
+    /// simulated, the reason's name when unanimous, "mixed" otherwise.
+    pub fn close_reason_summary(&self) -> String {
+        let total: usize = self.close_reasons.iter().sum();
+        if total == 0 {
+            return "-".into();
+        }
+        for r in CloseReason::ALL {
+            if self.close_reasons[r.index()] == total {
+                return r.name().into();
+            }
+        }
+        "mixed".into()
     }
 }
 
@@ -240,21 +310,22 @@ impl RoundTiming {
 /// Two implementations: [`ClosedFormEstimator`] replays the paper's Eq. 8
 /// (the fast default and the oracle for the equivalence tests) and
 /// [`EventDrivenEstimator`] runs the discrete-event simulation above
-/// (required for deadlines/stragglers). Selected by the config's
-/// `latency` field / the CLI's `--latency` flag.
+/// (required for any policy other than the full barrier). Selected by the
+/// config's `latency` field / the CLI's `--latency` flag.
 pub trait LatencyEstimator: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Simulate one cluster's edge phase. `work` is `(device, steps)` in
-    /// sorted participant order. Returns `None` in closed-form mode — no
-    /// per-phase simulation, nobody is dropped, the coordinator keeps its
-    /// Eq. 8 round-level path.
+    /// Simulate one cluster's edge phase under the given close policy.
+    /// `work` is `(device, steps)` in sorted participant order. Returns
+    /// `None` in closed-form mode — no per-phase simulation, nobody is
+    /// deferred or dropped, the coordinator keeps its Eq. 8 round-level
+    /// path.
     fn phase_timing(
         &self,
         net: &NetworkModel,
         work: &[(usize, usize)],
         channel: UploadChannel,
-        deadline_s: Option<f64>,
+        policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming>;
 
     /// Latency of one whole global round. `device_steps` are the merged
@@ -285,7 +356,7 @@ impl LatencyEstimator for ClosedFormEstimator {
         _net: &NetworkModel,
         _work: &[(usize, usize)],
         _channel: UploadChannel,
-        _deadline_s: Option<f64>,
+        _policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming> {
         None
     }
@@ -313,13 +384,26 @@ impl LatencyEstimator for ClosedFormEstimator {
 pub struct EventDrivenEstimator;
 
 impl EventDrivenEstimator {
-    /// Run the per-device event simulation of one cluster's edge phase.
+    /// Run the per-device event simulation of one cluster's edge phase
+    /// under `policy`. Reports landing after the policy's close are still
+    /// simulated to completion (the late-upload drain) so their arrival
+    /// times are known to the coordinator's stale-merge bookkeeping.
     pub fn simulate_phase(
         net: &NetworkModel,
         work: &[(usize, usize)],
         channel: UploadChannel,
-        deadline_s: Option<f64>,
+        policy: &dyn AggregationPolicy,
     ) -> PhaseTiming {
+        if work.is_empty() {
+            return PhaseTiming {
+                duration_s: 0.0,
+                compute_s: 0.0,
+                upload_s: 0.0,
+                devices: Vec::new(),
+                events: 0,
+                close_reason: CloseReason::AllReported,
+            };
+        }
         let upload = net.model_bits / channel.bandwidth(net);
         let mut queue = EventQueue::new();
         for (slot, &(dev, steps)) in work.iter().enumerate() {
@@ -329,8 +413,14 @@ impl EventDrivenEstimator {
                 id: slot,
             });
         }
+        let timeout = policy.timeout();
+        if let Some((t, _)) = timeout {
+            queue.schedule(Event { time_s: t, kind: EventKind::RoundClose, id: 0 });
+        }
         let mut compute = vec![0.0f64; work.len()];
         let mut finish = vec![0.0f64; work.len()];
+        let mut reported = 0usize;
+        let mut close: Option<(f64, CloseReason)> = None;
         while let Some(ev) = queue.pop() {
             match ev.kind {
                 EventKind::ComputeDone => {
@@ -341,15 +431,30 @@ impl EventDrivenEstimator {
                         id: ev.id,
                     });
                 }
-                EventKind::UploadDone => finish[ev.id] = ev.time_s,
+                EventKind::UploadDone => {
+                    finish[ev.id] = ev.time_s;
+                    reported += 1;
+                    if close.is_none() && policy.closes_at_report(reported, work.len()) {
+                        let reason = if reported == work.len() {
+                            CloseReason::AllReported
+                        } else {
+                            CloseReason::KthReport
+                        };
+                        close = Some((ev.time_s, reason));
+                    }
+                }
+                EventKind::RoundClose => {
+                    if close.is_none() {
+                        let (_, reason) =
+                            timeout.expect("RoundClose events come from the armed timeout");
+                        close = Some((ev.time_s, reason));
+                    }
+                }
                 EventKind::BackhaulDone => unreachable!("no backhaul inside an edge phase"),
             }
         }
-        let latest = finish.iter().fold(0.0, f64::max);
-        let duration = match deadline_s {
-            Some(dl) if latest > dl => dl,
-            _ => latest,
-        };
+        let (close_s, close_reason) =
+            close.expect("every report arrives eventually, so the phase must close");
         let devices: Vec<DeviceTiming> = work
             .iter()
             .enumerate()
@@ -358,16 +463,21 @@ impl EventDrivenEstimator {
                 compute_s: compute[slot],
                 upload_s: upload,
                 finish_s: finish[slot],
-                dropped: deadline_s.is_some_and(|dl| finish[slot] > dl),
+                verdict: if finish[slot] <= close_s {
+                    ReportVerdict::OnTime
+                } else {
+                    policy.late_verdict()
+                },
             })
             .collect();
-        let barrier = compute.iter().fold(0.0, f64::max).min(duration);
+        let barrier = compute.iter().fold(0.0, f64::max).min(close_s);
         PhaseTiming {
-            duration_s: duration,
+            duration_s: close_s,
             compute_s: barrier,
-            upload_s: duration - barrier,
+            upload_s: close_s - barrier,
             devices,
             events: queue.processed(),
+            close_reason,
         }
     }
 
@@ -402,9 +512,9 @@ impl LatencyEstimator for EventDrivenEstimator {
         net: &NetworkModel,
         work: &[(usize, usize)],
         channel: UploadChannel,
-        deadline_s: Option<f64>,
+        policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming> {
-        Some(Self::simulate_phase(net, work, channel, deadline_s))
+        Some(Self::simulate_phase(net, work, channel, policy))
     }
 
     fn round_latency(
@@ -450,6 +560,7 @@ impl LatencyEstimator for EventDrivenEstimator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aggregation::policy::{DeadlineDrop, FullBarrier, SemiSync};
 
     fn net() -> NetworkModel {
         // 1 MFLOP/sample, batch 50, 1M params (the parent module's fixture).
@@ -461,6 +572,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.schedule(Event { time_s: 2.0, kind: EventKind::ComputeDone, id: 0 });
         q.schedule(Event { time_s: 1.0, kind: EventKind::UploadDone, id: 1 });
+        q.schedule(Event { time_s: 1.0, kind: EventKind::RoundClose, id: 0 });
         q.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 1 });
         q.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 0 });
         let order: Vec<(f64, EventKind, usize)> = std::iter::from_fn(|| q.pop())
@@ -472,27 +584,35 @@ mod tests {
                 (1.0, EventKind::ComputeDone, 0),
                 (1.0, EventKind::ComputeDone, 1),
                 (1.0, EventKind::UploadDone, 1),
+                // The timeout pops after a simultaneous report: a device
+                // landing exactly at the cutoff is on time.
+                (1.0, EventKind::RoundClose, 0),
                 (2.0, EventKind::ComputeDone, 0),
             ]
         );
-        assert_eq!(q.processed(), 4);
+        assert_eq!(q.processed(), 5);
         assert_eq!(q.now(), 2.0);
     }
 
     #[test]
-    fn phase_matches_closed_form_without_deadline() {
+    fn phase_matches_closed_form_under_full_barrier() {
         let m = net();
         let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
-        let pt =
-            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceEdge, None);
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &FullBarrier,
+        );
         let want_compute = 16.0 * m.step_seconds(0);
         let want_upload = m.model_bits / m.b_d2e;
         assert!((pt.compute_s - want_compute).abs() < 1e-12);
         assert!((pt.upload_s - want_upload).abs() < 1e-12);
         assert!((pt.duration_s - (want_compute + want_upload)).abs() < 1e-12);
         assert_eq!(pt.devices.len(), 4);
-        assert!(pt.devices.iter().all(|d| !d.dropped));
-        // Two events per device: ComputeDone + UploadDone.
+        assert!(pt.devices.iter().all(|d| d.verdict == ReportVerdict::OnTime));
+        assert_eq!(pt.close_reason, CloseReason::AllReported);
+        // Two events per device: ComputeDone + UploadDone (no timeout).
         assert_eq!(pt.events, 8);
     }
 
@@ -507,13 +627,16 @@ mod tests {
             &m,
             &work,
             UploadChannel::DeviceEdge,
-            Some(dl),
+            &DeadlineDrop { deadline_s: dl },
         );
         let dropped: Vec<usize> =
-            pt.devices.iter().filter(|d| d.dropped).map(|d| d.device).collect();
+            pt.devices.iter().filter(|d| d.dropped()).map(|d| d.device).collect();
         assert_eq!(dropped, vec![2]);
         assert!((pt.duration_s - dl).abs() < 1e-12, "duration capped at the deadline");
         assert!(pt.devices[2].finish_s > dl);
+        assert_eq!(pt.close_reason, CloseReason::Deadline);
+        // The straggler's upload still drains after the close.
+        assert_eq!(pt.events, 9, "4 computes + 4 uploads + 1 timeout");
     }
 
     #[test]
@@ -524,10 +647,83 @@ mod tests {
             &m,
             &work,
             UploadChannel::DeviceEdge,
-            Some(1e-9),
+            &DeadlineDrop { deadline_s: 1e-9 },
         );
-        assert!(pt.devices.iter().all(|d| d.dropped));
+        assert!(pt.devices.iter().all(|d| d.dropped()));
         assert!((pt.duration_s - 1e-9).abs() < 1e-18);
+        assert_eq!(pt.close_reason, CloseReason::Deadline);
+    }
+
+    #[test]
+    fn semi_sync_closes_at_kth_report_and_keeps_late_reports() {
+        let mut m = net();
+        m.device_flops[1] /= 1000.0; // two stragglers
+        m.device_flops[3] /= 2000.0;
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &SemiSync { k: 2, timeout_s: f64::INFINITY, staleness_exp: 1.0 },
+        );
+        // Devices 0 and 2 (full speed) report first; the phase closes on
+        // the second report, the stragglers are late-but-kept.
+        assert_eq!(pt.close_reason, CloseReason::KthReport);
+        let fast_finish = 16.0 * m.step_seconds(0) + m.model_bits / m.b_d2e;
+        assert!((pt.duration_s - fast_finish).abs() < 1e-12);
+        assert!(pt.devices[0].verdict == ReportVerdict::OnTime);
+        assert!(pt.devices[2].verdict == ReportVerdict::OnTime);
+        assert!(pt.devices[1].late() && pt.devices[3].late());
+        // Late uploads drained: their true arrival times are recorded.
+        assert!(pt.devices[1].finish_s > pt.duration_s);
+        assert!(pt.devices[3].finish_s > pt.devices[1].finish_s);
+    }
+
+    #[test]
+    fn semi_sync_timeout_beats_kth_report_when_earlier() {
+        let m = net(); // homogeneous: all reports land together
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &SemiSync { k: 4, timeout_s: 1e-9, staleness_exp: 1.0 },
+        );
+        assert_eq!(pt.close_reason, CloseReason::Timeout);
+        assert!((pt.duration_s - 1e-9).abs() < 1e-18);
+        assert!(pt.devices.iter().all(|d| d.late()), "everyone is late, nobody dropped");
+    }
+
+    #[test]
+    fn semi_sync_k_equal_n_matches_full_barrier_exactly() {
+        // The degenerate policy: K = N, no timeout, zero staleness
+        // exponent. Same close instant, same verdicts, same reason —
+        // bit-identical, the oracle the integration suite leans on.
+        let mut m = net();
+        m.device_flops[1] /= 3.0;
+        m.device_flops[2] /= 7.0;
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let barrier = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &FullBarrier,
+        );
+        let degenerate = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &SemiSync { k: 4, timeout_s: f64::INFINITY, staleness_exp: 0.0 },
+        );
+        assert_eq!(barrier.duration_s.to_bits(), degenerate.duration_s.to_bits());
+        assert_eq!(barrier.compute_s.to_bits(), degenerate.compute_s.to_bits());
+        assert_eq!(barrier.upload_s.to_bits(), degenerate.upload_s.to_bits());
+        assert_eq!(barrier.close_reason, degenerate.close_reason);
+        assert_eq!(barrier.events, degenerate.events);
+        for (a, b) in barrier.devices.iter().zip(&degenerate.devices) {
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.verdict, b.verdict);
+        }
     }
 
     #[test]
@@ -536,7 +732,7 @@ mod tests {
             &net(),
             &[],
             UploadChannel::DeviceEdge,
-            Some(1.0),
+            &DeadlineDrop { deadline_s: 1.0 },
         );
         assert_eq!(pt.duration_s, 0.0);
         assert_eq!(pt.events, 0);
@@ -558,24 +754,37 @@ mod tests {
     fn cloud_channel_uses_cloud_bandwidth() {
         let m = net();
         let work = [(0usize, 16usize)];
-        let pt =
-            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceCloud, None);
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceCloud,
+            &FullBarrier,
+        );
         assert!((pt.devices[0].upload_s - m.model_bits / m.b_d2c).abs() < 1e-12);
     }
 
     #[test]
-    fn round_timing_accumulates_phases() {
-        let m = net();
+    fn round_timing_accumulates_phases_and_verdicts() {
+        let mut m = net();
+        m.device_flops[3] /= 1000.0;
         let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
-        let pt =
-            EventDrivenEstimator::simulate_phase(&m, &work, UploadChannel::DeviceEdge, None);
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 1.0 },
+        );
         let mut rt = RoundTiming::default();
         rt.record_phase(1, 2, &pt);
         rt.record_phase(1, 2, &pt);
         assert!((rt.cluster_time_s[1] - 2.0 * pt.duration_s).abs() < 1e-12);
         assert_eq!(rt.cluster_time_s[0], 0.0);
         assert_eq!(rt.device_timings.len(), 8);
-        assert_eq!(rt.events_processed, 16);
+        assert_eq!(rt.on_time_devices, 6);
+        assert_eq!(rt.late_devices, 2);
+        assert_eq!(rt.dropped_devices, 0);
+        assert_eq!(rt.close_reasons[CloseReason::KthReport.index()], 2);
+        assert_eq!(rt.close_reason_summary(), "kth-report");
         // The estimator picks cluster 1 (the slowest) for the breakdown.
         let lat = EventDrivenEstimator.round_latency(
             &m,
@@ -586,5 +795,15 @@ mod tests {
             &rt,
         );
         assert!((lat.total() - 2.0 * pt.duration_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn close_reason_summary_handles_empty_and_mixed() {
+        let rt = RoundTiming::default();
+        assert_eq!(rt.close_reason_summary(), "-");
+        let mut rt = RoundTiming::default();
+        rt.close_reasons[CloseReason::AllReported.index()] = 1;
+        rt.close_reasons[CloseReason::Timeout.index()] = 1;
+        assert_eq!(rt.close_reason_summary(), "mixed");
     }
 }

@@ -9,15 +9,17 @@
 //! (`c_k ~ U[0.5, 1]·capacity`), and an optional heavy-tail straggler
 //! population ([`StragglerSpec`]).
 //!
-//! The closed form cannot express reporting deadlines, stragglers being
-//! dropped from aggregation, or per-device timing. The [`event`] submodule
-//! simulates the same round as per-device `ComputeDone` / `UploadDone` /
-//! `BackhaulDone` events on a virtual clock; [`LatencyEstimator`] is the
-//! coordinator-facing trait with both implementations
-//! ([`ClosedFormEstimator`] — the fast default and equivalence oracle —
-//! and [`EventDrivenEstimator`]). See the [`event`] module docs for the
-//! event model, tie-breaking order, and how deadlines interact with the
-//! Eq. 6 weight renormalization.
+//! The closed form cannot express reporting deadlines, semi-synchronous
+//! round closes, stragglers being dropped from aggregation, or per-device
+//! timing. The [`event`] submodule simulates the same round as per-device
+//! `ComputeDone` / `UploadDone` / `BackhaulDone` / `RoundClose` events on
+//! a virtual clock, with the round-close condition supplied by an
+//! [`aggregation::policy::AggregationPolicy`](crate::aggregation::policy::AggregationPolicy);
+//! [`LatencyEstimator`] is the coordinator-facing trait with both
+//! implementations ([`ClosedFormEstimator`] — the fast default and
+//! equivalence oracle — and [`EventDrivenEstimator`]). See the [`event`]
+//! module docs for the event model, tie-breaking order, and how close
+//! policies interact with the Eq. 6 weight renormalization.
 
 pub mod event;
 

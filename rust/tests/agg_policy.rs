@@ -1,0 +1,181 @@
+//! Oracle-equivalence suite for the edge-round close policies.
+//!
+//! The degenerate semi-sync policy — K = every participant, no timeout,
+//! zero staleness exponent — must be *indistinguishable* from the full
+//! barrier: same models, same virtual latencies, same CSV rows, for all
+//! four algorithms, bit for bit. Likewise the deadline-drop policy
+//! expressed through the new trait must reproduce the legacy `deadline_s`
+//! path exactly. These pins are what let the semi-sync machinery ship
+//! inside the default code path without perturbing the paper's numbers.
+
+use cfel::config::{AggPolicyKind, AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{CsvWriter, History, ROUND_HEADER};
+use cfel::netsim::StragglerSpec;
+
+fn run(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn base(alg: AlgorithmKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = alg;
+    cfg.rounds = 4;
+    cfg.latency = LatencyMode::EventDriven;
+    cfg
+}
+
+fn csv_rows(series: &str, h: &History) -> String {
+    let path = std::env::temp_dir().join(format!(
+        "cfel_agg_policy_{}_{series}.csv",
+        std::process::id()
+    ));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            w.round_row(series, rec).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+fn assert_identical(alg: AlgorithmKind, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{alg:?}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{alg:?} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{alg:?} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{alg:?} r{r}");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{alg:?} r{r}");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{alg:?} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{alg:?} r{r}");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{alg:?} r{r}");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{alg:?} r{r}");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{alg:?} r{r}");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{alg:?} r{r}");
+        assert_eq!(x.late_devices, y.late_devices, "{alg:?} r{r}");
+        assert_eq!(x.stale_merged, y.stale_merged, "{alg:?} r{r}");
+        assert_eq!(x.close_reason, y.close_reason, "{alg:?} r{r}");
+        assert_eq!(x.steps, y.steps, "{alg:?} r{r}");
+    }
+}
+
+#[test]
+fn semi_sync_degenerate_case_is_the_full_barrier_for_all_algorithms() {
+    for alg in AlgorithmKind::all() {
+        // Heterogeneous speeds so report order is nontrivial.
+        let mut barrier = base(alg);
+        barrier.heterogeneity = Some(0.5);
+        let mut degenerate = barrier.clone();
+        degenerate.agg_policy = AggPolicyKind::SemiSync {
+            k: degenerate.devices_per_cluster(),
+            timeout_s: f64::INFINITY,
+        };
+        degenerate.staleness_exp = 0.0;
+        let hb = run(&barrier);
+        let hd = run(&degenerate);
+        assert_identical(alg, &hb, &hd);
+        // Degenerate semi-sync never defers or drops anything...
+        for rec in &hd {
+            assert_eq!(rec.dropped_devices + rec.late_devices + rec.stale_merged, 0);
+            assert_eq!(rec.close_reason, "all-reported");
+        }
+        // ...and the emitted CSV rows are byte-identical too.
+        assert_eq!(
+            csv_rows("oracle", &hb),
+            csv_rows("oracle", &hd),
+            "{alg:?}: CSV rows diverged"
+        );
+    }
+}
+
+#[test]
+fn semi_sync_degenerate_case_survives_stragglers() {
+    // Same pin under a heavy-tail fleet: k = N still waits for everyone,
+    // so even 10⁶× stragglers cannot distinguish it from the barrier.
+    for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::FedAvg] {
+        let mut barrier = base(alg);
+        barrier.rounds = 3;
+        barrier.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
+        let mut degenerate = barrier.clone();
+        degenerate.agg_policy = AggPolicyKind::SemiSync {
+            k: degenerate.devices_per_cluster(),
+            timeout_s: f64::INFINITY,
+        };
+        degenerate.staleness_exp = 0.0;
+        assert_identical(alg, &run(&barrier), &run(&degenerate));
+    }
+}
+
+#[test]
+fn deadline_policy_via_trait_matches_the_legacy_deadline_path() {
+    // The PR 2 `--deadline` behavior, now routed through the policy
+    // trait: `deadline_s = Some(T)` (the sugar) and an explicit
+    // `DeadlineDrop { T }` policy must be bit-identical runs — models,
+    // latencies, drop counts, CSV rows — for all four algorithms.
+    for alg in AlgorithmKind::all() {
+        let mut sugar = base(alg);
+        sugar.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
+        sugar.deadline_s = Some(0.1);
+        let mut explicit = sugar.clone();
+        explicit.deadline_s = None;
+        explicit.agg_policy = AggPolicyKind::DeadlineDrop { deadline_s: 0.1 };
+        let hs = run(&sugar);
+        let he = run(&explicit);
+        assert!(
+            hs.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
+            "{alg:?}: the deadline scenario should actually drop devices"
+        );
+        assert_identical(alg, &hs, &he);
+        assert_eq!(csv_rows("deadline", &hs), csv_rows("deadline", &he));
+    }
+}
+
+#[test]
+fn timeout_before_any_report_keeps_the_model_then_catches_up() {
+    // Empty-on-time-set regression: a semi-sync timeout shorter than any
+    // possible report closes every phase with zero on-time reports. The
+    // cluster must keep its previous model (the same empty-participant
+    // contract the deadline path established — no panic, no corruption),
+    // and because semi-sync *keeps* the late reports, they drain into
+    // later rounds once the virtual clock passes their arrival times.
+    let mut cfg = base(AlgorithmKind::CeFedAvg);
+    cfg.rounds = 5;
+    cfg.agg_policy = AggPolicyKind::SemiSync { k: 1, timeout_s: 1e-9 };
+    cfg.staleness_exp = 1.0;
+    let h = run(&cfg);
+    let first = &h[0];
+    assert_eq!(first.on_time_devices, 0, "nothing can report within 1 ns");
+    assert_eq!(first.stale_merged, 0, "nothing stale exists yet in round 1");
+    assert_eq!(first.close_reason, "timeout");
+    assert_eq!(first.dropped_devices, 0, "semi-sync never drops");
+    // Round 1 aggregated nothing: every cluster still holds the shared
+    // init model, so the consensus distance is exactly zero.
+    assert!(first.consensus < 1e-30, "consensus {}", first.consensus);
+    // The late reports fold in once the backhaul hops advance the clock
+    // past their ~8 ms arrivals — the run catches up instead of freezing.
+    let stale: usize = h.iter().map(|r| r.stale_merged).sum();
+    assert!(stale > 0, "late reports never merged");
+    let late: usize = h.iter().map(|r| r.late_devices).sum();
+    assert_eq!(late, cfg.n_devices * cfg.q * cfg.rounds, "every report deferred");
+}
+
+#[test]
+fn semi_sync_differs_from_barrier_when_k_is_partial() {
+    // Sanity inverse of the oracle pin: with K < N under stragglers the
+    // two runs must *not* coincide (otherwise the suite proves nothing).
+    let mut barrier = base(AlgorithmKind::CeFedAvg);
+    barrier.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+    let mut partial = barrier.clone();
+    partial.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+    let hb = run(&barrier);
+    let hp = run(&partial);
+    assert!(
+        hp.last().unwrap().sim_time_s < hb.last().unwrap().sim_time_s,
+        "partial K should close rounds earlier"
+    );
+    assert!(hp.iter().map(|r| r.late_devices).sum::<usize>() > 0);
+}

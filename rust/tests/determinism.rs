@@ -5,7 +5,7 @@
 //! merges happen in deterministic order after the join, so this holds
 //! bit-for-bit, not just approximately.
 
-use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::config::{AggPolicyKind, AlgorithmKind, ExperimentConfig, LatencyMode};
 use cfel::coordinator::Coordinator;
 use cfel::metrics::History;
 use cfel::netsim::StragglerSpec;
@@ -54,30 +54,47 @@ fn assert_bit_identical(alg: AlgorithmKind, a: &History, b: &History) {
         assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits());
         assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits());
         assert_eq!(x.dropped_devices, y.dropped_devices);
+        // Semi-sync bookkeeping must be thread-invariant too — including
+        // which late uploads land (merge stale) in which round.
+        assert_eq!(x.on_time_devices, y.on_time_devices);
+        assert_eq!(x.late_devices, y.late_devices);
+        assert_eq!(
+            x.stale_merged,
+            y.stale_merged,
+            "{alg:?} round {}: stale merges landed in different rounds",
+            x.round
+        );
+        assert_eq!(x.close_reason, y.close_reason);
         assert_eq!(x.steps, y.steps);
     }
+}
+
+/// Run under each thread count and pin all histories to the first.
+fn assert_thread_invariant(alg: AlgorithmKind, cfg: &ExperimentConfig) -> History {
+    let reference = run_with_threads(cfg, "1");
+    for threads in ["2", "4"] {
+        let h = run_with_threads(cfg, threads);
+        assert_bit_identical(alg, &reference, &h);
+    }
+    reference
 }
 
 /// One test body: `CFEL_THREADS` is process-global, so the env-var
 /// mutations must not race a concurrently running test.
 #[test]
-fn histories_identical_for_1_vs_4_threads() {
+fn histories_identical_across_thread_counts() {
     for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::HierFAvg] {
         let mut cfg = ExperimentConfig::quickstart();
         cfg.algorithm = alg;
         cfg.rounds = 6;
-        let h1 = run_with_threads(&cfg, "1");
-        let h4 = run_with_threads(&cfg, "4");
-        assert_bit_identical(alg, &h1, &h4);
+        assert_thread_invariant(alg, &cfg);
 
         // Partial participation exercises the per-(cluster, phase)
         // sampling streams as well.
         let mut sampled = cfg.clone();
         sampled.participation = 0.5;
         sampled.rounds = 4;
-        let s1 = run_with_threads(&sampled, "1");
-        let s4 = run_with_threads(&sampled, "4");
-        assert_bit_identical(alg, &s1, &s4);
+        assert_thread_invariant(alg, &sampled);
 
         // Event-driven latency with stragglers and a reporting deadline:
         // the simulation runs post-join in deterministic cluster order,
@@ -88,12 +105,31 @@ fn histories_identical_for_1_vs_4_threads() {
         event.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
         event.deadline_s = Some(0.1);
         event.rounds = 4;
-        let e1 = run_with_threads(&event, "1");
-        let e4 = run_with_threads(&event, "4");
+        let e = assert_thread_invariant(alg, &event);
         assert!(
-            e1.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
+            e.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
             "{alg:?}: the deadline scenario should actually drop devices"
         );
-        assert_bit_identical(alg, &e1, &e4);
+
+        // Semi-sync K-of-N with a timeout: late reports are parked and
+        // folded into later rounds — which round each one lands in is
+        // part of the pinned state (assert_bit_identical compares the
+        // per-round late/stale counts).
+        let mut semi = cfg.clone();
+        semi.latency = LatencyMode::EventDriven;
+        semi.heterogeneity = Some(0.5);
+        semi.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+        semi.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+        semi.staleness_exp = 1.0;
+        semi.rounds = 4;
+        let s = assert_thread_invariant(alg, &semi);
+        assert!(
+            s.iter().map(|r| r.late_devices).sum::<usize>() > 0,
+            "{alg:?}: the semi-sync scenario should actually defer reports"
+        );
+        assert!(
+            s.iter().map(|r| r.stale_merged).sum::<usize>() > 0,
+            "{alg:?}: deferred reports should merge stale within the run"
+        );
     }
 }

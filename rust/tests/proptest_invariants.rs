@@ -1,10 +1,13 @@
 //! Property-based tests over the coordinator's algebraic invariants
 //! (util::proptest harness; seeds reported on failure for reproduction).
 
+use cfel::aggregation::policy::{AggregationPolicy, FullBarrier, SemiSync};
 use cfel::aggregation::{
-    consensus_distance, global_average, gossip_mix, l2_distance, weighted_average,
+    consensus_distance, global_average, gossip_mix, l2_distance, report_weights,
+    weighted_average,
 };
 use cfel::data::partition;
+use cfel::netsim::{EventDrivenEstimator, NetworkModel, StragglerSpec, UploadChannel};
 use cfel::prop_assert;
 use cfel::topology::{Graph, MixingMatrix};
 use cfel::util::proptest::{check, close, default_cases, int_biased, simplex, vec_f32};
@@ -179,6 +182,98 @@ fn prop_mixing_power_converges_to_uniform() {
                 );
             }
         }
+        Ok(())
+    });
+}
+
+/// Random fleet: paper defaults with random heterogeneity and (half the
+/// time) a random heavy-tail straggler population.
+fn random_fleet(rng: &mut Rng, n: usize) -> NetworkModel {
+    let mut net = NetworkModel::paper_defaults(n, 1e6, 50, 100_000);
+    net = net.with_heterogeneity(0.2 + 0.8 * rng.f64(), &rng.split(31));
+    if rng.below(2) == 0 {
+        let spec = StragglerSpec {
+            fraction: (0.05 + 0.95 * rng.f64()).min(1.0),
+            slowdown: 1.0 + rng.f64() * 1e4,
+        };
+        net = net.with_stragglers(spec, &rng.split(32));
+    }
+    net
+}
+
+#[test]
+fn prop_semi_sync_close_monotone_in_k_and_bounded_by_barrier() {
+    check("semisync-close-bounds", 21, default_cases(), |rng| {
+        let n = int_biased(rng, 1, 12);
+        let net = random_fleet(rng, n);
+        let work: Vec<(usize, usize)> = (0..n).map(|d| (d, int_biased(rng, 1, 32))).collect();
+        let barrier = EventDrivenEstimator::simulate_phase(
+            &net,
+            &work,
+            UploadChannel::DeviceEdge,
+            &FullBarrier,
+        );
+        // Close time is monotone non-decreasing in K and never exceeds
+        // the full barrier; K = N closes exactly at the barrier.
+        let mut prev = 0.0f64;
+        for k in 1..=n {
+            let pt = EventDrivenEstimator::simulate_phase(
+                &net,
+                &work,
+                UploadChannel::DeviceEdge,
+                &SemiSync { k, timeout_s: f64::INFINITY, staleness_exp: 1.0 },
+            );
+            prop_assert!(
+                pt.duration_s >= prev,
+                "close time shrank: K={k} gives {} after {prev}",
+                pt.duration_s
+            );
+            prop_assert!(
+                pt.duration_s <= barrier.duration_s,
+                "K={k} close {} exceeds barrier {}",
+                pt.duration_s,
+                barrier.duration_s
+            );
+            prev = pt.duration_s;
+        }
+        prop_assert!(
+            prev.to_bits() == barrier.duration_s.to_bits(),
+            "K=N close {prev} != barrier {}",
+            barrier.duration_s
+        );
+        // A finite timeout can only close earlier still.
+        let k = int_biased(rng, 1, n);
+        let timeout = (0.01 + rng.f64()) * barrier.duration_s.max(1e-9);
+        let pt = EventDrivenEstimator::simulate_phase(
+            &net,
+            &work,
+            UploadChannel::DeviceEdge,
+            &SemiSync { k, timeout_s: timeout, staleness_exp: 1.0 },
+        );
+        prop_assert!(
+            pt.duration_s <= barrier.duration_s + 1e-15,
+            "timeout close {} exceeds barrier {}",
+            pt.duration_s,
+            barrier.duration_s
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_staleness_weights_always_sum_to_one() {
+    check("staleness-weights", 22, default_cases(), |rng| {
+        let n = int_biased(rng, 1, 16);
+        let ns: Vec<usize> = (0..n).map(|_| int_biased(rng, 1, 5000)).collect();
+        let pol = SemiSync { k: 1, timeout_s: 1.0, staleness_exp: rng.f64() * 4.0 };
+        let ds: Vec<f64> = (0..n).map(|_| pol.staleness_discount(rng.below(25) as u64)).collect();
+        let w = report_weights(&ns, &ds).map_err(|e| e.to_string())?;
+        let sum: f64 = w.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9, "weights sum to {sum}");
+        prop_assert!(
+            w.iter().all(|&x| (0.0..=1.0 + 1e-12).contains(&x)),
+            "weight outside [0,1]: {w:?}"
+        );
         Ok(())
     });
 }
