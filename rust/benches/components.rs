@@ -103,6 +103,20 @@ fn main() {
     }
     std::env::remove_var("CFEL_THREADS");
 
+    // ---- plan interpreter overhead --------------------------------------
+    // The same global round through the Step/Plan interpreter vs the
+    // frozen PR 3 direct-dispatch loop (`run_legacy`). Both spend their
+    // time in the shared `edge_phase`, so the interpreter's walk +
+    // plan clone must be in the noise between these two lanes.
+    std::env::set_var("CFEL_THREADS", "1");
+    let mut interp = Coordinator::from_config(&round_cfg).unwrap();
+    b.run("plan interpreter: ce round m=4", || interp.run().unwrap());
+    let mut direct = Coordinator::from_config(&round_cfg).unwrap();
+    b.run("direct dispatch (PR3 oracle): ce round m=4", || {
+        direct.run_legacy().unwrap()
+    });
+    std::env::remove_var("CFEL_THREADS");
+
     // ---- event-driven latency engine -----------------------------------
     // Simulator overhead vs the closed-form path, measured in events/sec:
     // one global-round training segment of a 128-cluster, 3072-device

@@ -9,9 +9,23 @@ use crate::aggregation::policy::{AggregationPolicy, DeadlineDrop, FullBarrier, S
 use crate::compression::Compressor;
 use crate::error::{CfelError, Result};
 use crate::netsim::StragglerSpec;
+use crate::plan::Plan;
 use crate::util::json::Json;
 
-/// Which federated optimization algorithm drives the run (paper §6.1).
+/// Uniform rejection for two spellings of the same knob being set at
+/// once (`deadline_s` vs `agg_policy`, `algorithm` vs `plan`). Shared by
+/// config-level validation and the CLI layer so every such conflict reads
+/// the same way.
+pub fn conflicting_options(primary: &str, other: &str, why: &str) -> CfelError {
+    CfelError::Config(format!(
+        "{primary} conflicts with {other} ({why}); set exactly one"
+    ))
+}
+
+/// Which canned federation plan drives the run (paper §6.1). Each
+/// variant names a `Plan` constructor (`plan::canned`); the coordinator
+/// executes the plan through one shared interpreter, and `--plan` /
+/// [`ExperimentConfig::plan`] replaces the canned schedule entirely.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AlgorithmKind {
     /// CE-FedAvg (Algorithm 1): intra-cluster FedAvg + inter-cluster gossip.
@@ -251,7 +265,13 @@ pub enum FaultSpec {
 pub struct ExperimentConfig {
     pub name: String,
     pub seed: u64,
+    /// Canned schedule selector; [`ExperimentConfig::resolved_plan`] maps
+    /// it to the matching `Plan` constructor unless `plan` overrides it.
     pub algorithm: AlgorithmKind,
+    /// Explicit federation plan (`--plan`); replaces the canned plan the
+    /// `algorithm` field names. `validate` rejects setting both (the same
+    /// sugar/primary contract as `deadline_s` vs `agg_policy`).
+    pub plan: Option<Plan>,
     /// Total devices n.
     pub n_devices: usize,
     /// Clusters / edge servers m (must divide n).
@@ -316,6 +336,7 @@ impl ExperimentConfig {
             name: "quickstart".into(),
             seed: 42,
             algorithm: AlgorithmKind::CeFedAvg,
+            plan: None,
             n_devices: 16,
             n_clusters: 4,
             tau: 2,
@@ -353,6 +374,7 @@ impl ExperimentConfig {
             name: format!("paper-{}", algorithm.name()),
             seed: 1,
             algorithm,
+            plan: None,
             n_devices: 64,
             n_clusters: 8,
             tau: 2,
@@ -387,6 +409,26 @@ impl ExperimentConfig {
         self.n_devices / self.n_clusters
     }
 
+    /// The per-round schedule this config runs: the explicit `plan` if
+    /// one is set, otherwise the canned plan `algorithm` names.
+    /// (`validate` rejects setting both, mirroring `resolved_policy`.)
+    pub fn resolved_plan(&self) -> Plan {
+        match &self.plan {
+            Some(p) => p.clone(),
+            None => Plan::for_algorithm(self.algorithm, self),
+        }
+    }
+
+    /// Series label for logs and CSV rows: the algorithm name for canned
+    /// runs (unchanged from the pre-plan CSV schema), the canonical plan
+    /// spec for explicit-plan runs.
+    pub fn run_label(&self) -> String {
+        match &self.plan {
+            Some(p) => format!("plan:{p}"),
+            None => self.algorithm.name().to_string(),
+        }
+    }
+
     /// The effective close policy: an explicit `agg_policy` wins; the
     /// legacy `deadline_s` sugar maps to [`AggPolicyKind::DeadlineDrop`];
     /// otherwise the full barrier. (`validate` rejects setting both.)
@@ -414,8 +456,23 @@ impl ExperimentConfig {
         if self.tau == 0 || self.q == 0 || self.rounds == 0 || self.eval_every == 0 {
             return Err(CfelError::Config("tau/q/rounds/eval_every must be >= 1".into()));
         }
-        if self.pi == 0 && self.algorithm == AlgorithmKind::CeFedAvg {
+        if self.pi == 0 && self.plan.is_none() && self.algorithm == AlgorithmKind::CeFedAvg {
             return Err(CfelError::Config("CE-FedAvg needs pi >= 1".into()));
+        }
+        if let Some(p) = &self.plan {
+            p.validate()?;
+            // Same contract as `deadline_s` vs `agg_policy` below: the
+            // explicit spelling cannot be combined with a non-default
+            // value of the knob it replaces. (An explicitly *default*
+            // algorithm is indistinguishable here; the CLI layer rejects
+            // that case from the flags themselves.)
+            if self.algorithm != AlgorithmKind::CeFedAvg {
+                return Err(conflicting_options(
+                    "plan",
+                    "algorithm",
+                    "an explicit plan replaces the canned algorithm schedule",
+                ));
+            }
         }
         if self.lr.is_nan() || self.lr <= 0.0 {
             return Err(CfelError::Config(format!("lr must be positive, got {}", self.lr)));
@@ -444,11 +501,11 @@ impl ExperimentConfig {
                 )));
             }
             if self.agg_policy != AggPolicyKind::FullBarrier {
-                return Err(CfelError::Config(format!(
-                    "deadline_s is sugar for the deadline-drop policy and cannot \
-                     be combined with agg_policy {:?}",
-                    self.agg_policy.name()
-                )));
+                return Err(conflicting_options(
+                    "deadline_s",
+                    &format!("agg_policy {:?}", self.agg_policy.name()),
+                    "deadline_s is sugar for the deadline-drop policy",
+                ));
             }
         }
         match self.agg_policy {
@@ -534,6 +591,9 @@ impl ExperimentConfig {
                     o.set("artifacts_dir", Json::from_str_val(&d.display().to_string()));
                 }
             }
+        }
+        if let Some(p) = &self.plan {
+            o.set("plan", Json::from_str_val(&p.to_string()));
         }
         if let Some(h) = self.heterogeneity {
             o.set("heterogeneity", Json::from_f64(h));
@@ -622,6 +682,10 @@ impl ExperimentConfig {
                 Some(v) => AlgorithmKind::parse(v.as_str()?)?,
                 None => base.algorithm,
             },
+            plan: j
+                .opt("plan")
+                .map(|v| v.as_str().and_then(Plan::parse))
+                .transpose()?,
             n_devices: get_usize("n_devices", base.n_devices)?,
             n_clusters: get_usize("n_clusters", base.n_clusters)?,
             tau: get_usize("tau", base.tau)?,
@@ -852,6 +916,47 @@ mod tests {
         c.agg_policy = AggPolicyKind::SemiSync { k: 16, timeout_s: f64::INFINITY };
         let c3 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c3.agg_policy, c.agg_policy);
+    }
+
+    #[test]
+    fn plan_resolves_overrides_and_roundtrips() {
+        let mut c = ExperimentConfig::quickstart();
+        // No explicit plan: the algorithm's canned plan, algorithm label.
+        assert_eq!(c.resolved_plan(), Plan::ce_fedavg(&c));
+        assert_eq!(c.run_label(), "ce-fedavg");
+        c.algorithm = AlgorithmKind::FedAvg;
+        assert_eq!(c.resolved_plan(), Plan::fedavg(&c));
+        c.validate().unwrap();
+        // Explicit plan wins and labels the series with its spec.
+        c.algorithm = AlgorithmKind::CeFedAvg;
+        c.plan = Some(Plan::parse("(edge(2); gossip(3))*2").unwrap());
+        c.validate().unwrap();
+        assert_eq!(c.resolved_plan().to_string(), "(edge(2); gossip(3))*2");
+        assert_eq!(c.run_label(), "plan:(edge(2); gossip(3))*2");
+        // JSON carries the spec through.
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.plan, c.plan);
+        assert_eq!(c2.resolved_plan(), c.resolved_plan());
+    }
+
+    #[test]
+    fn plan_conflicts_with_algorithm_like_deadline_with_policy() {
+        let mut c = ExperimentConfig::quickstart();
+        c.plan = Some(Plan::parse("edge(2)*2").unwrap());
+        c.algorithm = AlgorithmKind::LocalEdge;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        // The same uniform helper phrases the deadline conflict.
+        let mut d = ExperimentConfig::quickstart();
+        d.latency = LatencyMode::EventDriven;
+        d.deadline_s = Some(0.5);
+        d.agg_policy = AggPolicyKind::SemiSync { k: 2, timeout_s: 1.0 };
+        let err = d.validate().unwrap_err().to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        // An invalid explicit plan is rejected by the same validate pass.
+        let mut p = ExperimentConfig::quickstart();
+        p.plan = Some(Plan::from_steps(vec![crate::plan::Step::Gossip { pi: 3 }]));
+        assert!(p.validate().is_err(), "train-less plan accepted");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! The frozen PR 3 direct-dispatch round loop — the plan interpreter's
+//! equivalence oracle.
+//!
+//! Before the [`Plan`](crate::plan::Plan) redesign, each of the paper's
+//! four algorithms was a hand-written `impl Coordinator` method selected
+//! by a closed `match` on `AlgorithmKind`, with algorithm-specific
+//! latency dispatch and clock-barrier rules baked into the run loop. That
+//! loop survives here, verbatim in behaviour, for two jobs:
+//!
+//! * `rust/tests/plan_equivalence.rs` pins every canned plan bit-identical
+//!   to it — history rows, CSV, virtual times — under every close policy
+//!   and `CFEL_THREADS` count, so the interpreter cannot silently drift
+//!   from the paper semantics;
+//! * `rust/benches/components.rs` runs both loops on the same system to
+//!   pin the interpreter's dispatch overhead (it should be in the noise —
+//!   both paths spend their time in the same `edge_phase`).
+//!
+//! Do not extend this module: new schedules are plans, not methods.
+
+use std::time::Instant;
+
+use crate::config::{AlgorithmKind, LatencyMode};
+use crate::coordinator::{Coordinator, RoundStats};
+use crate::error::{CfelError, Result};
+use crate::metrics::{History, RoundRecord};
+use crate::netsim::{EventDrivenEstimator, RoundLatency, UploadChannel};
+use crate::util::stats::merge_steps;
+
+impl Coordinator {
+    /// One CE-FedAvg global round (Algorithm 1): q edge rounds, then π
+    /// gossip steps over the backhaul.
+    fn legacy_ce_fedavg_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        for r in 0..self.cfg.q {
+            let phase = (round * self.cfg.q + r) as u64;
+            self.edge_phase(self.cfg.tau, phase, UploadChannel::DeviceEdge, &mut stats)?;
+        }
+        self.gossip();
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    /// One cloud-FedAvg global round: qτ local epochs, one cloud upload,
+    /// one cloud aggregation (skipped if the aggregator is dead).
+    fn legacy_fedavg_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        let epochs = self.cfg.q * self.cfg.tau;
+        let phase = round as u64;
+        self.edge_phase(epochs, phase, UploadChannel::DeviceCloud, &mut stats)?;
+        if self.aggregator_alive {
+            self.cloud_aggregate()?;
+        }
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    /// One Hier-FAvg global round: q−1 edge rounds, a final cloud-reported
+    /// round, then the cloud aggregation.
+    fn legacy_hier_favg_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        for r in 0..self.cfg.q {
+            let phase = (round * self.cfg.q + r) as u64;
+            let channel = if r + 1 == self.cfg.q {
+                UploadChannel::DeviceCloud
+            } else {
+                UploadChannel::DeviceEdge
+            };
+            self.edge_phase(self.cfg.tau, phase, channel, &mut stats)?;
+        }
+        if self.aggregator_alive {
+            self.cloud_aggregate()?;
+        }
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    /// One Local-Edge global round: q edge rounds, no cooperation.
+    fn legacy_local_edge_round(&mut self, round: usize) -> Result<RoundStats> {
+        let mut stats = RoundStats::default();
+        for r in 0..self.cfg.q {
+            let phase = (round * self.cfg.q + r) as u64;
+            self.edge_phase(self.cfg.tau, phase, UploadChannel::DeviceEdge, &mut stats)?;
+        }
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    /// The pre-plan round latency: per-algorithm closed forms, or the
+    /// event accumulator with gossip charged only to CE-FedAvg.
+    fn legacy_round_latency(&self, stats: &RoundStats) -> RoundLatency {
+        let steps = &stats.device_steps;
+        let (q, pi) = (self.cfg.q, self.cfg.pi as usize);
+        match self.cfg.latency {
+            LatencyMode::ClosedForm => match self.cfg.algorithm {
+                AlgorithmKind::CeFedAvg => self.net.ce_fedavg_round(steps, q, pi),
+                AlgorithmKind::FedAvg => self.net.fedavg_round(steps),
+                AlgorithmKind::HierFAvg => self.net.hier_favg_round(steps, q),
+                AlgorithmKind::LocalEdge => self.net.local_edge_round(steps, q),
+            },
+            LatencyMode::EventDriven => {
+                let timing = &stats.timing;
+                let mut slowest = 0usize;
+                let mut t = f64::NEG_INFINITY;
+                for (i, &ct) in timing.cluster_time_s.iter().enumerate() {
+                    if ct > t {
+                        t = ct;
+                        slowest = i;
+                    }
+                }
+                let (compute, upload) = if timing.cluster_time_s.is_empty() {
+                    (0.0, 0.0)
+                } else {
+                    (
+                        timing.cluster_compute_s[slowest],
+                        timing.cluster_upload_s[slowest],
+                    )
+                };
+                let backhaul = match self.cfg.algorithm {
+                    AlgorithmKind::CeFedAvg => {
+                        EventDrivenEstimator::simulate_gossip(&self.net, pi).0
+                    }
+                    _ => 0.0,
+                };
+                RoundLatency { compute_s: compute, upload_s: upload, backhaul_s: backhaul }
+            }
+        }
+    }
+
+    /// The pre-plan end-of-round clock barrier: CE-FedAvg barriers at the
+    /// gossip hops; FedAvg / Hier-FAvg at the cloud (only while the
+    /// aggregator lives); Local-Edge never.
+    fn legacy_sync_cluster_clocks(&mut self, lat: &RoundLatency) {
+        let barriers = match self.cfg.algorithm {
+            AlgorithmKind::CeFedAvg => true,
+            AlgorithmKind::FedAvg | AlgorithmKind::HierFAvg => self.aggregator_alive,
+            AlgorithmKind::LocalEdge => false,
+        };
+        if !barriers || self.cfg.latency != LatencyMode::EventDriven {
+            return;
+        }
+        let end = self
+            .alive_clusters()
+            .iter()
+            .map(|&ci| self.cluster_clock_s[ci])
+            .fold(f64::NEG_INFINITY, f64::max)
+            + lat.backhaul_s;
+        if end.is_finite() {
+            for &ci in &self.alive_clusters() {
+                self.cluster_clock_s[ci] = end;
+            }
+        }
+    }
+
+    /// Run `cfg.rounds` global rounds through the frozen direct-dispatch
+    /// loop — `cfg.algorithm` picks the hand-written round method,
+    /// exactly as before the redesign. Configs carrying an explicit plan
+    /// are rejected: the shared fault machinery keys gossip-matrix
+    /// rebuilds off the *resolved plan*, which only matches this loop's
+    /// `cfg.algorithm` dispatch when the plan is the canned one.
+    pub fn run_legacy(&mut self) -> Result<History> {
+        if self.cfg.plan.is_some() {
+            return Err(CfelError::Config(
+                "run_legacy replays the canned algorithm loops; clear the \
+                 explicit plan (it is the new API this oracle predates)"
+                    .into(),
+            ));
+        }
+        let mut history = History::new();
+        let mut sim_time = 0.0f64;
+        let mut wall = 0.0f64;
+        for round in 0..self.cfg.rounds {
+            let t0 = Instant::now();
+            self.apply_fault(round)?;
+            let stats = match self.cfg.algorithm {
+                AlgorithmKind::CeFedAvg => self.legacy_ce_fedavg_round(round)?,
+                AlgorithmKind::FedAvg => self.legacy_fedavg_round(round)?,
+                AlgorithmKind::HierFAvg => self.legacy_hier_favg_round(round)?,
+                AlgorithmKind::LocalEdge => self.legacy_local_edge_round(round)?,
+            };
+            wall += t0.elapsed().as_secs_f64();
+            let lat = self.legacy_round_latency(&stats);
+            sim_time += lat.total();
+            self.legacy_sync_cluster_clocks(&lat);
+
+            let (acc, tloss) = if (round + 1) % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds
+            {
+                self.evaluate()?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let rec = RoundRecord {
+                round: round + 1,
+                sim_time_s: sim_time,
+                wall_time_s: wall,
+                compute_s: lat.compute_s,
+                upload_s: lat.upload_s,
+                backhaul_s: lat.backhaul_s,
+                dropped_devices: stats.timing.dropped_devices,
+                on_time_devices: stats.timing.on_time_devices,
+                late_devices: stats.timing.late_devices,
+                stale_merged: stats.timing.stale_merged,
+                close_reason: stats.timing.close_reason_summary(),
+                train_loss: stats.mean_loss(),
+                test_accuracy: acc,
+                test_loss: tloss,
+                consensus: self.consensus(),
+                steps: stats.step_count,
+            };
+            if self.verbose {
+                eprintln!(
+                    "[legacy {}] round {:>3}  loss {:.4}  sim {:.1}s",
+                    self.cfg.algorithm.name(),
+                    rec.round,
+                    rec.train_loss,
+                    sim_time
+                );
+            }
+            history.push(rec);
+        }
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{AlgorithmKind, ExperimentConfig};
+    use crate::coordinator::Coordinator;
+    use crate::metrics::best_accuracy;
+
+    #[test]
+    fn legacy_loop_learns_like_the_interpreter() {
+        // The heavy bit-for-bit pins live in rust/tests/plan_equivalence.rs;
+        // this in-crate smoke check just keeps the oracle runnable.
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.algorithm = AlgorithmKind::CeFedAvg;
+        cfg.rounds = 4;
+        let h_new = Coordinator::from_config(&cfg).unwrap().run().unwrap();
+        let h_old = Coordinator::from_config(&cfg).unwrap().run_legacy().unwrap();
+        assert_eq!(h_new.len(), h_old.len());
+        for (a, b) in h_new.iter().zip(&h_old) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+        }
+        assert!(best_accuracy(&h_old) > 0.2);
+    }
+}

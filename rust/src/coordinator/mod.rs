@@ -3,21 +3,19 @@
 //! [`Coordinator`] owns the whole CFEL system: the federated data, the
 //! cluster/device layout, the edge-backhaul graph with its gossip matrix,
 //! the network latency model, and the execution backend. [`Coordinator::run`]
-//! drives `rounds` global rounds of whichever algorithm the config selects:
-//!
-//! * **CE-FedAvg** (Algorithm 1) — `cefedavg.rs`
-//! * **FedAvg** (cloud baseline) — `fedavg.rs`
-//! * **Hier-FAvg** (hierarchical baseline) — `hierfavg.rs`
-//! * **Local-Edge** (no-cooperation baseline) — `localedge.rs`
+//! drives `rounds` global rounds of one [`Plan`] — a declarative sequence
+//! of [`Step`]s (edge phases, gossip, cloud aggregation, repetition) that
+//! a single interpreter executes. The paper's four algorithms are canned
+//! plans (`plan::canned`) selected by `AlgorithmKind`; any other schedule
+//! is just a different plan (`--plan` / `ExperimentConfig::plan`).
 //!
 //! Shared machinery (local training, intra-cluster aggregation, eval,
-//! fault bookkeeping) lives here and in `trainer.rs` / `cluster.rs`.
+//! fault bookkeeping) lives here and in `trainer.rs` / `cluster.rs`; the
+//! frozen pre-plan direct-dispatch loop survives in `legacy.rs` as the
+//! equivalence oracle (`rust/tests/plan_equivalence.rs`).
 
-pub mod cefedavg;
 pub mod cluster;
-pub mod fedavg;
-pub mod hierfavg;
-pub mod localedge;
+mod legacy;
 pub mod trainer;
 
 pub use cluster::{ClusterState, WeightedReport};
@@ -27,9 +25,7 @@ use std::time::Instant;
 
 use crate::aggregation;
 use crate::aggregation::policy::AggregationPolicy;
-use crate::config::{
-    AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode,
-};
+use crate::config::{BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode};
 use crate::data::sampler::eval_batches;
 use crate::data::synthetic::{
     femnist_federation, pool_federation, FederatedData, SyntheticSpec,
@@ -41,9 +37,11 @@ use crate::netsim::{
     ClosedFormEstimator, EventDrivenEstimator, LatencyEstimator, NetworkModel, RoundLatency,
     RoundTiming,
 };
+use crate::plan::{Plan, Step};
 use crate::runtime::{EvalResult, Manifest, MockBackend, PjrtBackend, TrainBackend};
 use crate::topology::{Graph, MixingMatrix};
 use crate::util::rng::Rng;
+use crate::util::stats::merge_steps;
 use crate::util::threadpool::{default_threads, parallel_map};
 
 /// Immutable per-round view of the coordinator, shared by the parallel
@@ -114,12 +112,19 @@ pub(crate) struct PendingReport {
 /// The CFEL system runtime.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
+    /// The per-round schedule the interpreter executes — the config's
+    /// explicit plan, or the canned plan its `algorithm` names.
+    pub plan: Plan,
     pub backend: Box<dyn TrainBackend>,
     pub fed: FederatedData,
     pub clusters: Vec<ClusterState>,
     pub graph: Graph,
-    /// H^π over the *current* alive subgraph.
+    /// H^π over the *current* alive subgraph, for the config's default π
+    /// (`cfg.pi` — what the canned CE-FedAvg plan gossips with).
     pub h_pi: MixingMatrix,
+    /// Lazily built H^π powers for plan gossip steps whose π differs from
+    /// `cfg.pi`; invalidated whenever a fault rebuilds the graph.
+    pub(crate) h_cache: Vec<(u32, MixingMatrix)>,
     pub net: NetworkModel,
     /// Round-latency estimator (closed-form Eq. 8 or the event sim),
     /// selected by the config's `latency` field.
@@ -170,6 +175,8 @@ impl Coordinator {
         backend: Box<dyn TrainBackend>,
     ) -> Result<Coordinator> {
         cfg.validate()?;
+        let plan = cfg.resolved_plan();
+        plan.validate()?;
         let rng = Rng::new(cfg.seed);
         let fed = Self::build_data(&cfg, &*backend, &rng)?;
 
@@ -227,11 +234,13 @@ impl Coordinator {
         let n_clusters = cfg.n_clusters;
         Ok(Coordinator {
             cfg,
+            plan,
             backend,
             fed,
             clusters,
             graph,
             h_pi,
+            h_cache: Vec::new(),
             net,
             latency,
             policy,
@@ -333,9 +342,9 @@ impl Coordinator {
         }
     }
 
-    /// Cloud aggregation (FedAvg / Hier-FAvg): size-weighted average over
-    /// alive clusters, broadcast back to every alive cluster. A no-op when
-    /// every cluster is dead (nothing to average).
+    /// Cloud aggregation: size-weighted average over alive clusters,
+    /// broadcast back to every alive cluster. A no-op when every cluster
+    /// is dead (nothing to average).
     pub(crate) fn cloud_aggregate(&mut self) -> Result<()> {
         let alive = self.alive_clusters();
         if alive.is_empty() {
@@ -353,13 +362,26 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Inter-cluster gossip (Eq. 7) over the alive subgraph. Backhaul
-    /// messages go through the configured compressor first (what the
-    /// neighbouring servers actually receive).
+    /// Inter-cluster gossip (Eq. 7) over the alive subgraph with the
+    /// default H^π (`cfg.pi`) — what the canned CE-FedAvg plan and the
+    /// legacy loop run.
     pub(crate) fn gossip(&mut self) {
+        self.mix_gossip(self.cfg.pi);
+    }
+
+    /// Gossip with `pi` hops. The default π uses the precomputed `h_pi`;
+    /// any other π gets its mixing matrix built for the current graph on
+    /// first use and cached (`h_cache` is cleared when a fault rebuilds
+    /// the graph). Backhaul messages go through the configured compressor
+    /// first (what the neighbouring servers actually receive).
+    fn mix_gossip(&mut self, pi: u32) {
         let alive = self.alive_clusters();
         if alive.len() <= 1 {
             return;
+        }
+        if pi != self.cfg.pi && !self.h_cache.iter().any(|(p, _)| *p == pi) {
+            let h = MixingMatrix::metropolis(&self.graph).power(pi);
+            self.h_cache.push((pi, h));
         }
         let mut models: Vec<Vec<f32>> = alive
             .iter()
@@ -368,7 +390,17 @@ impl Coordinator {
         for m in &mut models {
             self.cfg.compression.roundtrip(m);
         }
-        aggregation::gossip_mix(&mut models, &self.h_pi, &mut self.scratch);
+        let h = if pi == self.cfg.pi {
+            &self.h_pi
+        } else {
+            &self
+                .h_cache
+                .iter()
+                .find(|(p, _)| *p == pi)
+                .expect("cached above")
+                .1
+        };
+        aggregation::gossip_mix(&mut models, h, &mut self.scratch);
         for (slot, &i) in alive.iter().enumerate() {
             self.clusters[i].model = std::mem::take(&mut models[slot]);
         }
@@ -378,8 +410,8 @@ impl Coordinator {
     pub(crate) fn apply_fault(&mut self, round: usize) -> Result<()> {
         match self.cfg.fault {
             Some(FaultSpec::KillCluster { at_round, cluster }) if at_round == round => {
-                if self.cfg.algorithm == AlgorithmKind::CeFedAvg {
-                    // Rebuild the gossip matrix over the surviving graph.
+                if self.plan.has_gossip() {
+                    // Rebuild the gossip matrices over the surviving graph.
                     let (sub, _map) = self.graph.remove_node(self.count_alive_before(cluster))?;
                     if !sub.is_connected() {
                         return Err(CfelError::Topology(
@@ -387,6 +419,7 @@ impl Coordinator {
                         ));
                     }
                     self.h_pi = MixingMatrix::metropolis(&sub).power(self.cfg.pi);
+                    self.h_cache.clear();
                     self.graph = sub;
                 }
                 self.alive[cluster] = false;
@@ -410,56 +443,113 @@ impl Coordinator {
         (0..cluster).filter(|&i| self.alive[i]).count()
     }
 
-    /// Simulated latency of this round, via the configured estimator
-    /// (closed-form Eq. 8 or the discrete-event simulator).
+    /// Simulated latency of this round under the active plan, via the
+    /// configured estimator (closed-form Eq. 8 or the event simulator).
     pub(crate) fn round_latency(&self, stats: &RoundStats) -> RoundLatency {
-        self.latency.round_latency(
-            &self.net,
-            self.cfg.algorithm,
-            self.cfg.q,
-            self.cfg.pi as usize,
-            &stats.device_steps,
-            &stats.timing,
-        )
+        self.latency
+            .round_latency(&self.net, &self.plan, &stats.device_steps, &stats.timing)
     }
 
-    /// Re-sync per-cluster virtual clocks at the round's inter-cluster
-    /// barrier (event mode only). CE-FedAvg clusters barrier at the π
-    /// gossip hops; FedAvg / Hier-FAvg at the cloud aggregation —
-    /// afterwards every alive cluster has waited for the slowest one, so
-    /// all clocks jump to the round end. No barrier, no sync: Local-Edge
-    /// clusters never cooperate, and a killed cloud aggregator (Table 1
-    /// fault) stops FedAvg / Hier-FAvg from barriering too — in both
-    /// cases the independent clocks are what keep each cluster's
-    /// late-report arrival phases well defined.
-    fn sync_cluster_clocks(&mut self, lat: &RoundLatency) {
-        let barriers = match self.cfg.algorithm {
-            AlgorithmKind::CeFedAvg => true,
-            AlgorithmKind::FedAvg | AlgorithmKind::HierFAvg => self.aggregator_alive,
-            AlgorithmKind::LocalEdge => false,
-        };
-        if !barriers || self.cfg.latency != LatencyMode::EventDriven {
+    /// Re-sync per-cluster virtual clocks at an inter-cluster barrier
+    /// (event mode only; closed-form clocks stay 0). Every alive cluster
+    /// waits for the slowest one, then the shared step — `extra_s` of
+    /// gossip backhaul, or 0 for a cloud aggregation — completes, so all
+    /// alive clocks jump to the common end. Plans without barriers
+    /// (Local-Edge, a dead cloud aggregator) never call this: the
+    /// independent clocks are what keep each cluster's late-report
+    /// arrival phases well defined.
+    pub(crate) fn barrier_clocks(&mut self, extra_s: f64) {
+        if self.cfg.latency != LatencyMode::EventDriven {
             return;
         }
-        let end = self
-            .alive_clusters()
+        let alive = self.alive_clusters();
+        let end = alive
             .iter()
             .map(|&ci| self.cluster_clock_s[ci])
             .fold(f64::NEG_INFINITY, f64::max)
-            + lat.backhaul_s;
+            + extra_s;
         if end.is_finite() {
-            for &ci in &self.alive_clusters() {
+            for &ci in &alive {
                 self.cluster_clock_s[ci] = end;
             }
         }
     }
 
+    // ----- the plan interpreter --------------------------------------------
+
+    /// Execute one global round of the active plan. This is the single
+    /// round loop all algorithms share: edge phases thread `RoundStats`,
+    /// close policies, pending-report buffers and per-cluster virtual
+    /// clocks through `edge_phase`; gossip and cloud steps aggregate
+    /// across clusters and barrier the clocks.
+    ///
+    /// Edge phases are numbered globally — phase = `round ·
+    /// plan.edge_phases() + index-within-round` — which keys the
+    /// deterministic per-(phase, device) RNG streams and the staleness
+    /// arithmetic exactly as the retired per-algorithm loops did.
+    pub(crate) fn plan_round(&mut self, round: usize) -> Result<RoundStats> {
+        let plan = self.plan.clone();
+        let base_phase = round as u64 * plan.edge_phases() as u64;
+        let mut stats = RoundStats::default();
+        let mut idx = 0u64;
+        self.exec_steps(&plan.steps, base_phase, &mut idx, &mut stats)?;
+        // Eq. 8 wants per-device steps of the *whole* global round.
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    fn exec_steps(
+        &mut self,
+        steps: &[Step],
+        base_phase: u64,
+        idx: &mut u64,
+        stats: &mut RoundStats,
+    ) -> Result<()> {
+        for step in steps {
+            match step {
+                Step::EdgePhase { epochs, channel } => {
+                    self.edge_phase(*epochs, base_phase + *idx, *channel, stats)?;
+                    *idx += 1;
+                }
+                Step::Gossip { pi } => {
+                    self.mix_gossip(*pi);
+                    // The gossip hops are an inter-cluster barrier: every
+                    // alive cluster waits for the slowest, then the π
+                    // backhaul hops run (event mode advances the clocks).
+                    // The simulated hop time is recorded once here and
+                    // reused by the event estimator's round breakdown.
+                    if self.cfg.latency == LatencyMode::EventDriven {
+                        let hops_s =
+                            EventDrivenEstimator::simulate_gossip(&self.net, *pi as usize).0;
+                        stats.timing.gossip_s += hops_s;
+                        self.barrier_clocks(hops_s);
+                    }
+                }
+                Step::CloudAggregate => {
+                    // A killed cloud aggregator (Table 1 fault) skips both
+                    // the aggregation and its barrier — clusters drift on
+                    // independent clocks from then on.
+                    if self.aggregator_alive {
+                        self.cloud_aggregate()?;
+                        self.barrier_clocks(0.0);
+                    }
+                }
+                Step::Repeat { n, body } => {
+                    for _ in 0..*n {
+                        self.exec_steps(body, base_phase, idx, stats)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Evaluate the current models on the common test set.
     ///
-    /// CE-FedAvg / Local-Edge report the mean accuracy of edge models
-    /// (paper §6.2); FedAvg / Hier-FAvg report the cloud model — which
-    /// equals every cluster model right after cloud aggregation, so the
-    /// same weighted-mean computation serves all four.
+    /// Plans without a global synchronizer (Local-Edge) report the
+    /// size-weighted mean accuracy of edge models (paper §6.2); after a
+    /// cloud aggregation every cluster model is the cloud model, so the
+    /// same weighted-mean computation serves every plan.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         let alive = self.alive_clusters();
         // Per-cluster evals are independent; run them concurrently when
@@ -502,22 +592,17 @@ impl Coordinator {
 
     /// Run the configured number of global rounds; returns the history.
     pub fn run(&mut self) -> Result<History> {
+        let label = self.cfg.run_label();
         let mut history = History::new();
         let mut sim_time = 0.0f64;
         let mut wall = 0.0f64;
         for round in 0..self.cfg.rounds {
             let t0 = Instant::now();
             self.apply_fault(round)?;
-            let stats = match self.cfg.algorithm {
-                AlgorithmKind::CeFedAvg => self.ce_fedavg_round(round)?,
-                AlgorithmKind::FedAvg => self.fedavg_round(round)?,
-                AlgorithmKind::HierFAvg => self.hier_favg_round(round)?,
-                AlgorithmKind::LocalEdge => self.local_edge_round(round)?,
-            };
+            let stats = self.plan_round(round)?;
             wall += t0.elapsed().as_secs_f64();
             let lat = self.round_latency(&stats);
             sim_time += lat.total();
-            self.sync_cluster_clocks(&lat);
 
             let (acc, tloss) = if (round + 1) % self.cfg.eval_every == 0
                 || round + 1 == self.cfg.rounds
@@ -558,7 +643,7 @@ impl Coordinator {
                 }
                 eprintln!(
                     "[{}] round {:>3}  loss {:.4}  acc {}  sim {:.1}s{}",
-                    self.cfg.algorithm.name(),
+                    label,
                     rec.round,
                     rec.train_loss,
                     if acc.is_nan() {

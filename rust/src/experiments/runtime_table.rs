@@ -10,12 +10,16 @@
 //! homogeneous no-deadline regime — the table doubles as an oracle check.
 
 use crate::aggregation::policy::FullBarrier;
-use crate::config::{AggPolicyKind, ExperimentConfig, LatencyMode};
+use crate::config::{AggPolicyKind, AlgorithmKind, ExperimentConfig, LatencyMode};
 use crate::coordinator::Coordinator;
 use crate::error::Result;
 use crate::experiments::{write_summary, FigureOpts};
 use crate::metrics::{best_accuracy, markdown_table, time_to_accuracy, History};
-use crate::netsim::{EventDrivenEstimator, NetworkModel, StragglerSpec, UploadChannel};
+use crate::netsim::{
+    ClosedFormEstimator, EventDrivenEstimator, LatencyEstimator, NetworkModel, RoundTiming,
+    StragglerSpec,
+};
+use crate::plan::{Plan, Step};
 use crate::runtime::Manifest;
 
 struct ModelRow {
@@ -60,26 +64,38 @@ pub fn run(opts: &FigureOpts) -> Result<String> {
     });
 
     let (n, m_clusters, q, tau, pi) = (64usize, 8usize, 8usize, 2usize, 10usize);
+    // The paper's default system shape, stated once; the canned plan
+    // constructors derive every algorithm's schedule from it, and both
+    // latency columns are computed from that plan structure (no
+    // per-algorithm dispatch left in this table).
+    let mut shape = ExperimentConfig::quickstart();
+    shape.n_devices = n;
+    shape.n_clusters = m_clusters;
+    shape.q = q;
+    shape.tau = tau;
+    shape.pi = pi as u32;
     let mut rows = Vec::new();
     for m in &models {
         let net = NetworkModel::paper_defaults(n, m.flops_per_sample, m.batch, m.param_count);
         // One epoch ≈ 1 batch for the scaled sets; the paper's τ counts
         // steps, so use steps = qτ directly for the reference rows.
         let steps: Vec<(usize, usize)> = (0..n).map(|d| (d, q * tau)).collect();
-        for (alg, lat) in [
-            ("ce-fedavg", net.ce_fedavg_round(&steps, q, pi)),
-            ("fedavg", net.fedavg_round(&steps)),
-            ("hier-favg", net.hier_favg_round(&steps, q)),
-            ("local-edge", net.local_edge_round(&steps, q)),
-        ] {
+        for alg in AlgorithmKind::all() {
+            let plan = Plan::for_algorithm(alg, &shape);
+            let lat = ClosedFormEstimator.round_latency(
+                &net,
+                &plan,
+                &steps,
+                &RoundTiming::default(),
+            );
             rows.push(vec![
                 m.name.clone(),
-                alg.to_string(),
+                alg.name().to_string(),
                 format!("{:.3}", lat.compute_s),
                 format!("{:.3}", lat.upload_s),
                 format!("{:.3}", lat.backhaul_s),
                 format!("{:.3}", lat.total()),
-                format!("{:.3}", event_total(&net, alg, n / m_clusters, q, tau, pi)),
+                format!("{:.3}", event_total(&net, &plan, n / m_clusters)),
             ]);
         }
     }
@@ -182,31 +198,40 @@ fn policy_comparison(opts: &FigureOpts) -> Result<String> {
     ))
 }
 
-/// The same global round replayed as discrete events: q edge phases of τ
-/// steps per device (FedAvg: one phase of qτ steps on the cloud links;
-/// Hier-FAvg: the q-th phase reports to the cloud) for one representative
-/// cluster — the fleet is homogeneous, so every cluster's trajectory is
-/// identical — plus CE-FedAvg's π gossip hops.
-fn event_total(net: &NetworkModel, alg: &str, dpc: usize, q: usize, tau: usize, pi: usize) -> f64 {
-    let phase = |channel: UploadChannel, steps: usize| {
-        let work: Vec<(usize, usize)> = (0..dpc).map(|d| (d, steps)).collect();
-        EventDrivenEstimator::simulate_phase(net, &work, channel, &FullBarrier).duration_s
-    };
-    match alg {
-        "ce-fedavg" => {
-            (0..q).map(|_| phase(UploadChannel::DeviceEdge, tau)).sum::<f64>()
-                + EventDrivenEstimator::simulate_gossip(net, pi).0
+/// The same global round replayed as discrete events, driven by the plan
+/// itself: every edge phase (with repetition) is simulated for one
+/// representative cluster — the fleet is homogeneous, so every cluster's
+/// trajectory is identical — and every gossip step contributes its π
+/// backhaul hops. One epoch ≈ 1 SGD step for these reference rows.
+fn event_total(net: &NetworkModel, plan: &Plan, dpc: usize) -> f64 {
+    fn walk(net: &NetworkModel, steps: &[Step], dpc: usize, total: &mut f64) {
+        for s in steps {
+            match s {
+                Step::EdgePhase { epochs, channel } => {
+                    let work: Vec<(usize, usize)> = (0..dpc).map(|d| (d, *epochs)).collect();
+                    *total += EventDrivenEstimator::simulate_phase(
+                        net,
+                        &work,
+                        *channel,
+                        &FullBarrier,
+                    )
+                    .duration_s;
+                }
+                Step::Gossip { pi } => {
+                    *total += EventDrivenEstimator::simulate_gossip(net, *pi as usize).0;
+                }
+                Step::CloudAggregate => {}
+                Step::Repeat { n, body } => {
+                    for _ in 0..*n {
+                        walk(net, body, dpc, total);
+                    }
+                }
+            }
         }
-        "fedavg" => phase(UploadChannel::DeviceCloud, q * tau),
-        "hier-favg" => {
-            (0..q.saturating_sub(1))
-                .map(|_| phase(UploadChannel::DeviceEdge, tau))
-                .sum::<f64>()
-                + phase(UploadChannel::DeviceCloud, tau)
-        }
-        "local-edge" => (0..q).map(|_| phase(UploadChannel::DeviceEdge, tau)).sum::<f64>(),
-        other => unreachable!("unknown algorithm {other}"),
     }
+    let mut total = 0.0;
+    walk(net, &plan.steps, dpc, &mut total);
+    total
 }
 
 #[cfg(test)]
@@ -235,19 +260,27 @@ mod tests {
     #[test]
     fn event_replay_agrees_with_closed_form() {
         // Homogeneous fleet, no deadline: the event column must be the
-        // Eq. 8 total (the table's oracle property).
+        // Eq. 8 total (the table's oracle property) — now for the *plan*
+        // rather than a per-algorithm dispatch string.
         let net = NetworkModel::paper_defaults(64, 13.30e6, 50, 6_603_710);
         let steps: Vec<(usize, usize)> = (0..64).map(|d| (d, 16)).collect();
+        let mut shape = ExperimentConfig::quickstart();
+        shape.n_devices = 64;
+        shape.n_clusters = 8;
+        shape.q = 8;
+        shape.tau = 2;
+        shape.pi = 10;
         for (alg, want) in [
-            ("ce-fedavg", net.ce_fedavg_round(&steps, 8, 10).total()),
-            ("fedavg", net.fedavg_round(&steps).total()),
-            ("hier-favg", net.hier_favg_round(&steps, 8).total()),
-            ("local-edge", net.local_edge_round(&steps, 8).total()),
+            (AlgorithmKind::CeFedAvg, net.ce_fedavg_round(&steps, 8, 10).total()),
+            (AlgorithmKind::FedAvg, net.fedavg_round(&steps).total()),
+            (AlgorithmKind::HierFAvg, net.hier_favg_round(&steps, 8).total()),
+            (AlgorithmKind::LocalEdge, net.local_edge_round(&steps, 8).total()),
         ] {
-            let got = event_total(&net, alg, 8, 8, 2, 10);
+            let plan = Plan::for_algorithm(alg, &shape);
+            let got = event_total(&net, &plan, 8);
             assert!(
                 (got - want).abs() / want <= 1e-9,
-                "{alg}: event {got} vs closed {want}"
+                "{alg:?}: event {got} vs closed {want}"
             );
         }
     }

@@ -35,6 +35,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod plan;
 pub mod runtime;
 pub mod topology;
 pub mod util;

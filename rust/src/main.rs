@@ -8,6 +8,8 @@
 //!
 //! Examples:
 //!   cfel train --algorithm ce-fedavg --rounds 20
+//!   cfel train --plan "(edge(2); gossip(3))*2; cloud" --rounds 20
+//!   cfel train --plan "edge(2)*8; gossip(10)" --dry-run
 //!   cfel train --backend pjrt --model femnist_cnn --devices 16 --clusters 4
 //!   cfel figures --fig fig2 --rounds 30 --out results
 //!   cfel topology --kind er:0.4 --m 8 --pi 10
@@ -15,8 +17,10 @@
 use std::path::PathBuf;
 
 use cfel::config::{
-    AggPolicyKind, AlgorithmKind, BackendKind, DataScheme, ExperimentConfig, LatencyMode,
+    conflicting_options, AggPolicyKind, AlgorithmKind, BackendKind, DataScheme,
+    ExperimentConfig, LatencyMode,
 };
+use cfel::plan::Plan;
 use cfel::coordinator::Coordinator;
 use cfel::experiments::{run_figure, FigureOpts};
 use cfel::metrics::{best_accuracy, time_to_accuracy, CsvWriter, ROUND_HEADER};
@@ -59,7 +63,20 @@ fn print_usage() {
 
 fn train_command() -> Command {
     Command::new("cfel train", "run one CFEL experiment")
-        .flag_default("algorithm", "ce-fedavg", "ce-fedavg | fedavg | hier-favg | local-edge")
+        .flag(
+            "algorithm",
+            "ce-fedavg | fedavg | hier-favg | local-edge [default: ce-fedavg]",
+        )
+        .flag(
+            "plan",
+            "explicit federation plan, e.g. \"edge(2)*2; gossip(10)\" \
+             (replaces --algorithm; run with --dry-run to inspect)",
+        )
+        .bool_flag(
+            "dry-run",
+            "print the resolved plan, config summary and cluster layout, then exit",
+        )
+        .bool_flag("print-plan", "alias for --dry-run")
         .flag_default("devices", "16", "total devices n")
         .flag_default("clusters", "4", "edge servers m (must divide n)")
         .flag_default("tau", "2", "local epochs per edge round (τ)")
@@ -120,7 +137,25 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     } else {
         ExperimentConfig::quickstart()
     };
-    cfg.algorithm = AlgorithmKind::parse(&args.get_or("algorithm", cfg.algorithm.name()))?;
+    // `--plan` replaces the canned schedule `--algorithm` names; naming
+    // both is contradictory even when the algorithm spelled out is the
+    // default (config-level validation can't see that case, since an
+    // explicit `ce-fedavg` is indistinguishable from the default there —
+    // the same split the `--deadline` / `--agg-policy` pair uses below).
+    if args.get("plan").is_some() && args.get("algorithm").is_some() {
+        return Err(conflicting_options(
+            "--plan",
+            "--algorithm",
+            "an explicit plan replaces the canned algorithm schedule",
+        ));
+    }
+    if let Some(spec) = args.get("plan") {
+        // Plan::parse rejects unknown specs with the full grammar quoted.
+        cfg.plan = Some(Plan::parse(spec)?);
+    }
+    if let Some(alg) = args.get("algorithm") {
+        cfg.algorithm = AlgorithmKind::parse(alg)?;
+    }
     cfg.n_devices = args.get_usize("devices", cfg.n_devices);
     cfg.n_clusters = args.get_usize("clusters", cfg.n_clusters);
     cfg.tau = args.get_usize("tau", cfg.tau);
@@ -153,8 +188,10 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         // `full` (config-level validation can't see that case, since an
         // explicit `full` is indistinguishable from the default there).
         if args.get("deadline").is_some() {
-            return Err(cfel::CfelError::Config(
-                "--agg-policy conflicts with --deadline (its sugar); pass one".into(),
+            return Err(conflicting_options(
+                "--agg-policy",
+                "--deadline",
+                "--deadline is sugar for the deadline-drop policy",
             ));
         }
         cfg.agg_policy = AggPolicyKind::parse(p)?;
@@ -180,11 +217,16 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     cfg.participation = args.get_f64("participation", cfg.participation);
     cfg.validate()?;
 
+    if args.get_bool("dry-run") || args.get_bool("print-plan") {
+        print_dry_run(&cfg);
+        return Ok(());
+    }
+
     let mut coord = Coordinator::from_config(&cfg)?;
     coord.verbose = !args.get_bool("quiet");
     eprintln!(
         "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {} | policy {}",
-        cfg.algorithm.name(),
+        cfg.run_label(),
         coord.backend.name(),
         cfg.n_devices,
         cfg.n_clusters,
@@ -200,8 +242,9 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
 
     if let Some(csv_path) = args.get("csv") {
         let mut w = CsvWriter::create(std::path::Path::new(csv_path), ROUND_HEADER)?;
+        let series = cfg.run_label();
         for rec in &history {
-            w.round_row(cfg.algorithm.name(), rec)?;
+            w.round_row(&series, rec)?;
         }
         eprintln!("[cfel] wrote {csv_path}");
     }
@@ -246,6 +289,44 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         eprintln!("[cfel] saved checkpoint to {path}");
     }
     Ok(())
+}
+
+/// `--dry-run` / `--print-plan`: show what would run — the resolved plan
+/// with its per-round communication structure, the headline config, and
+/// the device/cluster layout — without building data or training anything.
+fn print_dry_run(cfg: &ExperimentConfig) {
+    let plan = cfg.resolved_plan();
+    let comms = plan.comms();
+    println!("plan:       {plan}");
+    println!(
+        "  per round: {} edge phase(s) ({} via edge uplink, {} via cloud uplink), \
+         {} gossip step(s), cloud aggregation: {}",
+        plan.edge_phases(),
+        comms.edge_uploads,
+        comms.cloud_uploads,
+        comms.gossip_pi,
+        if plan.has_cloud_aggregate() { "yes" } else { "no" }
+    );
+    println!("series:     {}", cfg.run_label());
+    println!("rounds:     {}", cfg.rounds);
+    println!("seed:       {}", cfg.seed);
+    println!("topology:   {}", cfg.topology);
+    println!("data:       {}", cfg.data.name());
+    println!("latency:    {}", cfg.latency.name());
+    println!("policy:     {}", cfg.resolved_policy().name());
+    let dpc = cfg.devices_per_cluster();
+    println!(
+        "layout:     {} devices / {} clusters ({} devices per edge server)",
+        cfg.n_devices, cfg.n_clusters, dpc
+    );
+    let shown = cfg.n_clusters.min(8);
+    for ci in 0..shown {
+        println!("  cluster {ci}: devices {}..={}", ci * dpc, (ci + 1) * dpc - 1);
+    }
+    if cfg.n_clusters > shown {
+        println!("  ... ({} more clusters)", cfg.n_clusters - shown);
+    }
+    println!("(dry run — nothing was trained)");
 }
 
 fn cmd_figures(argv: &[String]) -> i32 {

@@ -77,8 +77,8 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::aggregation::policy::{AggregationPolicy, CloseReason, ReportVerdict};
-use crate::config::AlgorithmKind;
 use crate::netsim::{NetworkModel, RoundLatency};
+use crate::plan::Plan;
 
 /// Event types, listed in tie-break order (earlier kinds pop first at
 /// equal timestamps).
@@ -256,6 +256,11 @@ pub struct RoundTiming {
     /// Kept-late reports from *any* earlier phase that were folded into
     /// one of this round's aggregates (filled by the coordinator's drain).
     pub stale_merged: usize,
+    /// Simulated backhaul seconds of this round's gossip steps, recorded
+    /// once by the plan interpreter when each step's hops are simulated
+    /// for the clock barrier (so the round-latency breakdown does not
+    /// re-simulate them).
+    pub gossip_s: f64,
     /// Devices discarded outright by the close policy this round.
     pub dropped_devices: usize,
     /// Phase-close reason counts, indexed by [`CloseReason::index`].
@@ -328,15 +333,16 @@ pub trait LatencyEstimator: Send + Sync {
         policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming>;
 
-    /// Latency of one whole global round. `device_steps` are the merged
-    /// per-device round totals (the Eq. 8 inputs); `timing` is the event
-    /// accumulator (empty in closed-form mode).
+    /// Latency of one whole global round of `plan`. `device_steps` are
+    /// the merged per-device round totals (the Eq. 8 inputs); `timing` is
+    /// the event accumulator (empty in closed-form mode). The plan's
+    /// communication structure — how many report phases ride each uplink,
+    /// how many gossip hops the backhaul carries — replaces the old
+    /// closed `AlgorithmKind` dispatch.
     fn round_latency(
         &self,
         net: &NetworkModel,
-        alg: AlgorithmKind,
-        q: usize,
-        pi: usize,
+        plan: &Plan,
         device_steps: &[(usize, usize)],
         timing: &RoundTiming,
     ) -> RoundLatency;
@@ -361,20 +367,25 @@ impl LatencyEstimator for ClosedFormEstimator {
         None
     }
 
+    /// The generalized Eq. 8: the straggler-max compute term plus one
+    /// closed-form communication term per plan upload/gossip count. For
+    /// the canned plans this reproduces the paper's per-algorithm closed
+    /// forms (`NetworkModel::{ce_fedavg,fedavg,hier_favg,local_edge}_round`)
+    /// bit for bit — same multiplication/association order, and the
+    /// absent terms contribute an exact `+ 0.0`.
     fn round_latency(
         &self,
         net: &NetworkModel,
-        alg: AlgorithmKind,
-        q: usize,
-        pi: usize,
+        plan: &Plan,
         device_steps: &[(usize, usize)],
         _timing: &RoundTiming,
     ) -> RoundLatency {
-        match alg {
-            AlgorithmKind::CeFedAvg => net.ce_fedavg_round(device_steps, q, pi),
-            AlgorithmKind::FedAvg => net.fedavg_round(device_steps),
-            AlgorithmKind::HierFAvg => net.hier_favg_round(device_steps, q),
-            AlgorithmKind::LocalEdge => net.local_edge_round(device_steps, q),
+        let comms = plan.comms();
+        RoundLatency {
+            compute_s: net.compute_seconds(device_steps),
+            upload_s: comms.edge_uploads as f64 * net.model_bits / net.b_d2e
+                + comms.cloud_uploads as f64 * net.model_bits / net.b_d2c,
+            backhaul_s: comms.gossip_pi as f64 * net.model_bits / net.b_e2e,
         }
     }
 }
@@ -519,10 +530,8 @@ impl LatencyEstimator for EventDrivenEstimator {
 
     fn round_latency(
         &self,
-        net: &NetworkModel,
-        alg: AlgorithmKind,
-        _q: usize,
-        pi: usize,
+        _net: &NetworkModel,
+        _plan: &Plan,
         _device_steps: &[(usize, usize)],
         timing: &RoundTiming,
     ) -> RoundLatency {
@@ -545,14 +554,13 @@ impl LatencyEstimator for EventDrivenEstimator {
                 timing.cluster_upload_s[slowest],
             )
         };
-        let backhaul = match alg {
-            AlgorithmKind::CeFedAvg => Self::simulate_gossip(net, pi).0,
-            _ => 0.0,
-        };
+        // The plan's gossip steps were already simulated (once each) by
+        // the interpreter for the clock barrier; reuse that accumulator
+        // rather than replaying the hops here.
         RoundLatency {
             compute_s: compute,
             upload_s: upload,
-            backhaul_s: backhaul,
+            backhaul_s: timing.gossip_s,
         }
     }
 }
@@ -785,16 +793,44 @@ mod tests {
         assert_eq!(rt.dropped_devices, 0);
         assert_eq!(rt.close_reasons[CloseReason::KthReport.index()], 2);
         assert_eq!(rt.close_reason_summary(), "kth-report");
-        // The estimator picks cluster 1 (the slowest) for the breakdown.
-        let lat = EventDrivenEstimator.round_latency(
-            &m,
-            AlgorithmKind::LocalEdge,
-            2,
-            0,
-            &[],
-            &rt,
-        );
+        // The estimator picks cluster 1 (the slowest) for the breakdown;
+        // with no gossip recorded, no backhaul is charged.
+        let plan = Plan::parse("edge(16)*2").unwrap();
+        let lat = EventDrivenEstimator.round_latency(&m, &plan, &[], &rt);
         assert!((lat.total() - 2.0 * pt.duration_s).abs() < 1e-9);
+        assert_eq!(lat.backhaul_s, 0.0);
+        // Gossip hops recorded by the interpreter ride into the breakdown.
+        let hops = EventDrivenEstimator::simulate_gossip(&m, 10).0;
+        rt.gossip_s += hops;
+        let lat_g = EventDrivenEstimator.round_latency(&m, &plan, &[], &rt);
+        assert_eq!(lat_g.backhaul_s.to_bits(), hops.to_bits());
+    }
+
+    #[test]
+    fn closed_form_round_latency_matches_the_per_algorithm_forms() {
+        // The plan-structured Eq. 8 must be bit-identical to the paper's
+        // per-algorithm closed forms for the canned shapes (tau=2, q=8,
+        // pi=10; steps = q·tau per device).
+        let m = net();
+        let steps: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let cases = [
+            ("edge(2)*8; gossip(10)", m.ce_fedavg_round(&steps, 8, 10)),
+            ("edge(16)@cloud; cloud", m.fedavg_round(&steps)),
+            ("edge(2)*7; edge(2)@cloud; cloud", m.hier_favg_round(&steps, 8)),
+            ("edge(2)*8", m.local_edge_round(&steps, 8)),
+        ];
+        for (spec, want) in cases {
+            let plan = Plan::parse(spec).unwrap();
+            let got = ClosedFormEstimator.round_latency(
+                &m,
+                &plan,
+                &steps,
+                &RoundTiming::default(),
+            );
+            assert_eq!(got.compute_s.to_bits(), want.compute_s.to_bits(), "{spec}");
+            assert_eq!(got.upload_s.to_bits(), want.upload_s.to_bits(), "{spec}");
+            assert_eq!(got.backhaul_s.to_bits(), want.backhaul_s.to_bits(), "{spec}");
+        }
     }
 
     #[test]

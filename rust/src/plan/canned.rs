@@ -1,0 +1,412 @@
+//! Canned plans — the paper's four algorithms expressed as [`Plan`]s.
+//!
+//! `AlgorithmKind` no longer selects a hand-written round loop; it merely
+//! names one of these constructors, and the coordinator's single plan
+//! interpreter runs the result. Each constructor documents the paper
+//! semantics it encodes; `rust/tests/plan_equivalence.rs` pins every one
+//! bit-identical — history rows, CSV, virtual times, all close policies,
+//! any `CFEL_THREADS` — to the frozen pre-plan direct-dispatch loop
+//! (`Coordinator::run_legacy`).
+
+use crate::config::{AlgorithmKind, ExperimentConfig};
+use crate::netsim::UploadChannel;
+use crate::plan::{Plan, Step};
+
+impl Plan {
+    /// CE-FedAvg (Algorithm 1): q edge rounds of τ local epochs with
+    /// intra-cluster Eq. 6 aggregation, then π gossip steps with the
+    /// doubly-stochastic H over the edge backhaul (Eq. 7).
+    pub fn ce_fedavg(cfg: &ExperimentConfig) -> Plan {
+        Plan::from_steps(vec![
+            Step::Repeat {
+                n: cfg.q,
+                body: vec![Step::EdgePhase {
+                    epochs: cfg.tau,
+                    channel: UploadChannel::DeviceEdge,
+                }],
+            },
+            Step::Gossip { pi: cfg.pi },
+        ])
+    }
+
+    /// Cloud FedAvg (§6.1 baseline): qτ local epochs straight from the
+    /// global model, reported over the slow device→cloud links, then one
+    /// cloud aggregation.
+    pub fn fedavg(cfg: &ExperimentConfig) -> Plan {
+        Plan::from_steps(vec![
+            Step::EdgePhase {
+                epochs: cfg.q * cfg.tau,
+                channel: UploadChannel::DeviceCloud,
+            },
+            Step::CloudAggregate,
+        ])
+    }
+
+    /// Hier-FAvg (Liu et al. [19]): q−1 edge rounds of τ epochs, one more
+    /// τ-epoch round reporting to the cloud, then a cloud aggregation.
+    pub fn hier_favg(cfg: &ExperimentConfig) -> Plan {
+        Plan::from_steps(vec![
+            Step::Repeat {
+                n: cfg.q.saturating_sub(1),
+                body: vec![Step::EdgePhase {
+                    epochs: cfg.tau,
+                    channel: UploadChannel::DeviceEdge,
+                }],
+            },
+            Step::EdgePhase { epochs: cfg.tau, channel: UploadChannel::DeviceCloud },
+            Step::CloudAggregate,
+        ])
+    }
+
+    /// Local-Edge baseline: q edge rounds per global round and no
+    /// inter-cluster cooperation of any kind.
+    pub fn local_edge(cfg: &ExperimentConfig) -> Plan {
+        Plan::from_steps(vec![Step::Repeat {
+            n: cfg.q,
+            body: vec![Step::EdgePhase {
+                epochs: cfg.tau,
+                channel: UploadChannel::DeviceEdge,
+            }],
+        }])
+    }
+
+    /// The canned plan an [`AlgorithmKind`] names.
+    pub fn for_algorithm(alg: AlgorithmKind, cfg: &ExperimentConfig) -> Plan {
+        match alg {
+            AlgorithmKind::CeFedAvg => Plan::ce_fedavg(cfg),
+            AlgorithmKind::FedAvg => Plan::fedavg(cfg),
+            AlgorithmKind::HierFAvg => Plan::hier_favg(cfg),
+            AlgorithmKind::LocalEdge => Plan::local_edge(cfg),
+        }
+    }
+}
+
+// The behavioural suites of the four retired algorithm files
+// (`coordinator/{cefedavg,fedavg,hierfavg,localedge}.rs`) live on here:
+// every test drives the same canned plan through the interpreter that the
+// old hand-written round methods implemented.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AggPolicyKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode};
+    use crate::coordinator::Coordinator;
+    use crate::metrics::best_accuracy;
+    use crate::netsim::StragglerSpec;
+
+    fn cfg_for(alg: AlgorithmKind, rounds: usize) -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart();
+        c.algorithm = alg;
+        c.rounds = rounds;
+        c
+    }
+
+    #[test]
+    fn canned_plans_have_the_papers_shape() {
+        let cfg = ExperimentConfig::quickstart(); // tau=2, q=2, pi=10
+        assert_eq!(Plan::ce_fedavg(&cfg).to_string(), "edge(2)*2; gossip(10)");
+        assert_eq!(Plan::fedavg(&cfg).to_string(), "edge(4)@cloud; cloud");
+        assert_eq!(
+            Plan::hier_favg(&cfg).to_string(),
+            "edge(2)*1; edge(2)@cloud; cloud"
+        );
+        assert_eq!(Plan::local_edge(&cfg).to_string(), "edge(2)*2");
+        for alg in AlgorithmKind::all() {
+            let p = Plan::for_algorithm(alg, &cfg);
+            p.validate().unwrap();
+            assert_eq!(p.edge_phases(), if alg == AlgorithmKind::FedAvg { 1 } else { cfg.q });
+            // Round-trip through the grammar.
+            assert_eq!(Plan::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    // ---- CE-FedAvg (was coordinator/cefedavg.rs) -----------------------
+
+    #[test]
+    fn ce_learns_on_quickstart() {
+        let c = cfg_for(AlgorithmKind::CeFedAvg, 8);
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let history = coord.run().unwrap();
+        assert_eq!(history.len(), 8);
+        let first = history[0].test_accuracy;
+        let best = best_accuracy(&history);
+        assert!(best > first + 0.1, "no learning: {first} -> {best}");
+        assert!(best > 0.35, "final accuracy too low: {best}");
+        // Simulated time strictly increases.
+        for w in history.windows(2) {
+            assert!(w[1].sim_time_s > w[0].sim_time_s);
+        }
+    }
+
+    #[test]
+    fn ce_deterministic_under_seed() {
+        let c = cfg_for(AlgorithmKind::CeFedAvg, 8);
+        let run = || {
+            let mut coord = Coordinator::from_config(&c).unwrap();
+            coord.run().unwrap()
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_accuracy, y.test_accuracy);
+        }
+    }
+
+    #[test]
+    fn ce_semi_sync_outpaces_barrier_and_merges_stragglers_stale() {
+        let mut barrier = cfg_for(AlgorithmKind::CeFedAvg, 6);
+        barrier.latency = LatencyMode::EventDriven;
+        barrier.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+        let mut semi = barrier.clone();
+        // Healthy reports land in ~8 ms (upload-dominated); a 10⁴×
+        // straggler needs ~26 ms of compute. K=3 closes a 4-device
+        // cluster on its healthy majority and the 20 ms timeout bounds
+        // the close even if the seed packs several stragglers into one
+        // cluster — so the speedup bound below is placement-proof.
+        semi.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+        semi.staleness_exp = 1.0;
+        let hb = Coordinator::from_config(&barrier).unwrap().run().unwrap();
+        let hs = Coordinator::from_config(&semi).unwrap().run().unwrap();
+        // The barrier waits ~34 ms per edge round for the stragglers;
+        // semi-sync closes in at most 20 ms — faster, with nothing
+        // dropped: stragglers merge stale into later rounds instead.
+        let (tb, ts) = (hb.last().unwrap().sim_time_s, hs.last().unwrap().sim_time_s);
+        assert!(ts < tb * 0.75, "semi-sync not faster: {ts} !< 0.75·{tb}");
+        assert_eq!(hs.iter().map(|r| r.dropped_devices).sum::<usize>(), 0);
+        let late: usize = hs.iter().map(|r| r.late_devices).sum();
+        let stale: usize = hs.iter().map(|r| r.stale_merged).sum();
+        assert!(late > 0, "stragglers should miss the K-of-N close");
+        assert!(stale > 0, "late reports should fold into later rounds");
+        // Deferred-but-kept updates keep the run learning (10-class task:
+        // chance is ~0.1).
+        assert!(best_accuracy(&hs) > 0.25, "semi-sync run failed to learn");
+    }
+
+    #[test]
+    fn ce_gossip_tightens_consensus() {
+        let mut c = cfg_for(AlgorithmKind::CeFedAvg, 4);
+        c.pi = 20; // strong mixing
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let hist = coord.run().unwrap();
+        // With π=20 on a 4-ring, post-gossip consensus must be tiny
+        // relative to the parameter scale.
+        assert!(hist.last().unwrap().consensus < 1e-3, "{}", hist.last().unwrap().consensus);
+    }
+
+    #[test]
+    fn ce_reduces_to_fedavg_when_single_cluster() {
+        // §4.3: m=1, q=1 ⇒ CE-FedAvg == FedAvg update rule. With one
+        // cluster the gossip is a no-op and the intra-cluster average is
+        // the global average, so per-round train losses must match the
+        // FedAvg plan exactly.
+        let mut c = cfg_for(AlgorithmKind::CeFedAvg, 3);
+        c.n_clusters = 1;
+        c.n_devices = 8;
+        c.q = 1;
+        c.topology = "ring".into();
+        let mut ce = Coordinator::from_config(&c).unwrap();
+        let h1 = ce.run().unwrap();
+        let mut c2 = c.clone();
+        c2.algorithm = AlgorithmKind::FedAvg;
+        let mut fa = Coordinator::from_config(&c2).unwrap();
+        let h2 = fa.run().unwrap();
+        for (a, b) in h1.iter().zip(&h2) {
+            assert!((a.train_loss - b.train_loss).abs() < 1e-9);
+            assert!((a.test_accuracy - b.test_accuracy).abs() < 1e-9);
+        }
+    }
+
+    // ---- FedAvg (was coordinator/fedavg.rs) ----------------------------
+
+    #[test]
+    fn fedavg_learns_and_reaches_consensus() {
+        let mut coord = Coordinator::from_config(&cfg_for(AlgorithmKind::FedAvg, 6)).unwrap();
+        let h = coord.run().unwrap();
+        assert!(best_accuracy(&h) > 0.3);
+        // Cloud aggregation ⇒ all cluster models identical each round.
+        assert!(h.last().unwrap().consensus < 1e-12);
+    }
+
+    #[test]
+    fn fedavg_cloud_upload_dominates_round_latency() {
+        // 1 Mbps cloud links make FedAvg rounds slower than CE rounds on
+        // the same workload (paper Fig. 2 runtime axis).
+        let mut fa = Coordinator::from_config(&cfg_for(AlgorithmKind::FedAvg, 6)).unwrap();
+        let hfa = fa.run().unwrap();
+        let mut c = cfg_for(AlgorithmKind::CeFedAvg, 6);
+        c.pi = 5;
+        let mut ce = Coordinator::from_config(&c).unwrap();
+        let hce = ce.run().unwrap();
+        assert!(
+            hfa.last().unwrap().sim_time_s > hce.last().unwrap().sim_time_s,
+            "fedavg {} !> ce {}",
+            hfa.last().unwrap().sim_time_s,
+            hce.last().unwrap().sim_time_s
+        );
+    }
+
+    #[test]
+    fn fedavg_semi_sync_bounds_the_cloud_report_wait() {
+        // Healthy cloud reports land in ~78 ms (1 Mbps uplink); the 10⁴×
+        // stragglers need ~53 ms of extra compute first. The 100 ms
+        // timeout caps every close below the straggler finish.
+        let mut barrier = cfg_for(AlgorithmKind::FedAvg, 4);
+        barrier.latency = LatencyMode::EventDriven;
+        barrier.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+        let mut semi = barrier.clone();
+        semi.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.1 };
+        let hb = Coordinator::from_config(&barrier).unwrap().run().unwrap();
+        let hs = Coordinator::from_config(&semi).unwrap().run().unwrap();
+        let (tb, ts) = (hb.last().unwrap().sim_time_s, hs.last().unwrap().sim_time_s);
+        assert!(ts < tb, "semi-sync not faster on cloud uploads: {ts} !< {tb}");
+        assert_eq!(hs.iter().map(|r| r.dropped_devices).sum::<usize>(), 0);
+        assert!(hs.iter().map(|r| r.late_devices).sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn fedavg_aggregator_death_freezes_cooperation() {
+        let mut c = cfg_for(AlgorithmKind::FedAvg, 8);
+        c.fault = Some(FaultSpec::KillAggregator { at_round: 3 });
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let h = coord.run().unwrap();
+        // Before the fault consensus is 0 (cloud sync); afterwards the
+        // cluster models drift apart.
+        assert!(h[2].consensus < 1e-12);
+        assert!(h[7].consensus > 1e-12, "no drift after aggregator death");
+    }
+
+    // ---- Hier-FAvg (was coordinator/hierfavg.rs) -----------------------
+
+    #[test]
+    fn hier_learns_and_synchronises() {
+        let mut coord = Coordinator::from_config(&cfg_for(AlgorithmKind::HierFAvg, 6)).unwrap();
+        let h = coord.run().unwrap();
+        assert!(best_accuracy(&h) > 0.3);
+        assert!(h.last().unwrap().consensus < 1e-12);
+    }
+
+    #[test]
+    fn hier_equals_ce_fedavg_under_complete_strong_gossip() {
+        // §4.3: fully-connected backhaul + full averaging ⇒ CE-FedAvg's
+        // update rule coincides with Hier-FAvg. Uniform H (π irrelevant)
+        // averages exactly, so losses must match round for round —
+        // *almost*: Hier weights the cloud average by cluster sample
+        // counts while gossip with doubly-stochastic H is uniform. Use
+        // equal cluster sizes so both weightings coincide.
+        let hier_cfg = cfg_for(AlgorithmKind::HierFAvg, 3);
+        let mut ce_cfg = hier_cfg.clone();
+        ce_cfg.algorithm = AlgorithmKind::CeFedAvg;
+        ce_cfg.topology = "complete".into();
+        ce_cfg.pi = 60; // H^60 of a complete-graph Metropolis ≈ uniform
+        let mut hier = Coordinator::from_config(&hier_cfg).unwrap();
+        let hh = hier.run().unwrap();
+        let mut ce = Coordinator::from_config(&ce_cfg).unwrap();
+        let hc = ce.run().unwrap();
+        for (a, b) in hh.iter().zip(&hc) {
+            assert!(
+                (a.train_loss - b.train_loss).abs() < 1e-3,
+                "round {}: hier {} vs ce {}",
+                a.round,
+                a.train_loss,
+                b.train_loss
+            );
+        }
+    }
+
+    #[test]
+    fn hier_semi_sync_timeout_splits_edge_and_cloud_phase_closes() {
+        // Hier-FAvg is the one canned plan whose phases ride two
+        // different uplinks per global round: q−1 edge phases (~8 ms
+        // healthy reports on 10 Mbps) and one cloud phase (~77 ms on
+        // 1 Mbps). A 20 ms semi-sync timeout therefore lands *between*
+        // the two — edge phases close with every report in, cloud phases
+        // time out with everyone late-but-kept — so the round's close
+        // reasons are genuinely mixed and nothing is ever dropped.
+        let mut c = cfg_for(AlgorithmKind::HierFAvg, 4);
+        c.latency = LatencyMode::EventDriven;
+        c.agg_policy = AggPolicyKind::SemiSync {
+            k: c.devices_per_cluster(),
+            timeout_s: 0.02,
+        };
+        let h = Coordinator::from_config(&c).unwrap().run().unwrap();
+        for rec in &h {
+            assert_eq!(rec.close_reason, "mixed", "round {}", rec.round);
+            assert_eq!(rec.dropped_devices, 0, "semi-sync never drops");
+            // Every cloud report misses the timeout; every edge report
+            // makes it.
+            assert_eq!(rec.late_devices, c.n_devices);
+            assert_eq!(rec.on_time_devices, (c.q - 1) * c.n_devices);
+        }
+    }
+
+    #[test]
+    fn hier_per_round_slower_than_local_edge() {
+        let mut hier = Coordinator::from_config(&cfg_for(AlgorithmKind::HierFAvg, 6)).unwrap();
+        let mut le = Coordinator::from_config(&cfg_for(AlgorithmKind::LocalEdge, 6)).unwrap();
+        let hh = hier.run().unwrap();
+        let hl = le.run().unwrap();
+        assert!(hh.last().unwrap().sim_time_s > hl.last().unwrap().sim_time_s);
+    }
+
+    // ---- Local-Edge (was coordinator/localedge.rs) ---------------------
+
+    #[test]
+    fn local_clusters_never_converge_to_each_other() {
+        let mut coord = Coordinator::from_config(&cfg_for(AlgorithmKind::LocalEdge, 6)).unwrap();
+        let h = coord.run().unwrap();
+        // No cooperation ⇒ models stay apart under non-IID writers.
+        assert!(h.last().unwrap().consensus > 1e-9);
+    }
+
+    #[test]
+    fn local_accuracy_below_cooperative_ce_on_noniid_data() {
+        // The paper's headline qualitative result (Fig. 2): Local-Edge
+        // plateaus below CE-FedAvg because each edge model sees a skewed
+        // fraction of the data. Use a strongly skewed cluster split.
+        let mut le_cfg = cfg_for(AlgorithmKind::LocalEdge, 10);
+        le_cfg.data = DataScheme::ClusterNonIid { c_labels: 2 };
+        let mut ce_cfg = le_cfg.clone();
+        ce_cfg.algorithm = AlgorithmKind::CeFedAvg;
+        let mut le = Coordinator::from_config(&le_cfg).unwrap();
+        let mut ce = Coordinator::from_config(&ce_cfg).unwrap();
+        let hl = le.run().unwrap();
+        let hc = ce.run().unwrap();
+        let (ble, bce) = (best_accuracy(&hl), best_accuracy(&hc));
+        assert!(bce > ble + 0.05, "ce {bce} !>> local {ble}");
+    }
+
+    #[test]
+    fn local_semi_sync_runs_on_unsynced_cluster_clocks() {
+        // No inter-cluster barrier ever syncs the clocks here; the
+        // stale-merge bookkeeping must still be stable and reproducible.
+        let mut c = cfg_for(AlgorithmKind::LocalEdge, 5);
+        c.latency = LatencyMode::EventDriven;
+        c.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+        let run = || Coordinator::from_config(&c).unwrap().run().unwrap();
+        let a = run();
+        let b = run();
+        assert_eq!(a.iter().map(|r| r.dropped_devices).sum::<usize>(), 0);
+        assert!(a.iter().map(|r| r.late_devices).sum::<usize>() > 0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits());
+            assert_eq!(x.stale_merged, y.stale_merged);
+        }
+    }
+
+    #[test]
+    fn local_cheapest_per_round() {
+        let mut le = Coordinator::from_config(&cfg_for(AlgorithmKind::LocalEdge, 6)).unwrap();
+        let hl = le.run().unwrap();
+        for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::FedAvg, AlgorithmKind::HierFAvg] {
+            let c = cfg_for(alg, 6);
+            let mut coord = Coordinator::from_config(&c).unwrap();
+            let h = coord.run().unwrap();
+            assert!(
+                hl.last().unwrap().sim_time_s <= h.last().unwrap().sim_time_s + 1e-9,
+                "local-edge not cheapest vs {alg:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Composable federation plans — the algorithm layer as *data*.
+//!
+//! The paper's four algorithms (CE-FedAvg, FedAvg, Hier-FAvg, Local-Edge)
+//! are different orderings of the same four primitives: local training
+//! with an intra-cluster Eq. 6 aggregation ([`Step::EdgePhase`]), π-step
+//! backhaul gossip (Eq. 7, [`Step::Gossip`]), a cloud aggregation
+//! ([`Step::CloudAggregate`]), and repetition ([`Step::Repeat`]). A
+//! [`Plan`] is one global round expressed as a sequence of those steps;
+//! the coordinator runs it through a single interpreter
+//! (`Coordinator::plan_round`) instead of a closed per-algorithm match.
+//!
+//! The canned constructors in [`canned`] reproduce the four paper
+//! algorithms exactly (`AlgorithmKind` now merely selects one of them —
+//! pinned bit-identical to the frozen direct-dispatch loop by
+//! `rust/tests/plan_equivalence.rs`), and any other ordering — gossip
+//! interleaved with edge rounds, cloud-assisted gossip, heterogeneous
+//! cadences — is just a different `Plan`, written in the text grammar
+//! ([`Plan::parse`] / `--plan`) or built programmatically.
+//!
+//! # Text grammar
+//!
+//! ```text
+//! plan  := step (';' step)*
+//! step  := atom ('*' N)*            repetition, left-associative
+//! atom  := 'edge(' E ')'            E local epochs, report to the edge
+//!        | 'edge(' E ')@cloud'      E local epochs, report to the cloud
+//!        | 'gossip(' P ')'          P backhaul gossip steps (Eq. 7)
+//!        | 'cloud'                  cloud aggregation over alive clusters
+//!        | '(' plan ')'             grouping
+//! ```
+//!
+//! Whitespace is insignificant. Examples:
+//!
+//! * CE-FedAvg (τ=2, q=2, π=10): `edge(2)*2; gossip(10)`
+//! * FedAvg (qτ=4): `edge(4)@cloud; cloud`
+//! * Hier-FAvg (τ=2, q=8): `edge(2)*7; edge(2)@cloud; cloud`
+//! * Local-Edge: `edge(2)*2`
+//! * A hybrid no enum variant can express: `(edge(2); gossip(3))*2; cloud`
+//!
+//! [`std::fmt::Display`] pretty-prints the canonical spelling, and
+//! `parse(print(plan)) == plan` holds for every valid plan
+//! (property-tested in `rust/tests/proptest_invariants.rs`).
+
+pub mod canned;
+mod parse;
+
+use std::fmt;
+
+use crate::error::{CfelError, Result};
+use crate::netsim::UploadChannel;
+
+/// One primitive of a global round. See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Step {
+    /// Every alive cluster trains its sampled participants `epochs` local
+    /// epochs from its edge model, then aggregates intra-cluster (Eq. 6)
+    /// under the configured close policy. `channel` names the uplink the
+    /// reports travel over (edge server or cloud).
+    EdgePhase { epochs: usize, channel: UploadChannel },
+    /// `pi` gossip steps with the doubly-stochastic H over the alive
+    /// backhaul subgraph (Eq. 7), applied as one H^π multiplication.
+    Gossip { pi: u32 },
+    /// Size-weighted cloud aggregation over alive clusters, broadcast
+    /// back (skipped while the central aggregator is dead). Charged no
+    /// latency of its own — transport is what costs in the paper's model,
+    /// so route a phase's reports `@cloud` to pay the 1 Mbps uplink
+    /// (exactly how the canned FedAvg / Hier-FAvg plans are built).
+    CloudAggregate,
+    /// Run `body` in order, `n` times (`n = 0` executes nothing).
+    Repeat { n: usize, body: Vec<Step> },
+}
+
+/// A global round as a sequence of [`Step`]s — the unit the coordinator's
+/// interpreter executes `rounds` times.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub steps: Vec<Step>,
+}
+
+/// Per-round communication totals of a plan (closed-form Eq. 8 inputs):
+/// how many report phases ride each uplink and how many gossip steps the
+/// backhaul carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanComms {
+    /// Edge phases reporting device→edge (counted with repetition).
+    pub edge_uploads: usize,
+    /// Edge phases reporting device→cloud (counted with repetition).
+    pub cloud_uploads: usize,
+    /// Total gossip steps Σπ over the round (counted with repetition).
+    pub gossip_pi: usize,
+}
+
+impl Plan {
+    pub fn from_steps(steps: Vec<Step>) -> Plan {
+        Plan { steps }
+    }
+
+    /// Effective number of edge phases one round executes (with
+    /// repetition) — the stride of the deterministic per-(phase, device)
+    /// RNG streams, so it must be a static property of the plan.
+    pub fn edge_phases(&self) -> usize {
+        let c = self.comms();
+        c.edge_uploads + c.cloud_uploads
+    }
+
+    /// Per-round communication totals (see [`PlanComms`]).
+    pub fn comms(&self) -> PlanComms {
+        fn walk(steps: &[Step], mult: usize, c: &mut PlanComms) {
+            for s in steps {
+                match s {
+                    Step::EdgePhase { channel, .. } => match channel {
+                        UploadChannel::DeviceEdge => c.edge_uploads += mult,
+                        UploadChannel::DeviceCloud => c.cloud_uploads += mult,
+                    },
+                    Step::Gossip { pi } => c.gossip_pi += mult * *pi as usize,
+                    Step::CloudAggregate => {}
+                    Step::Repeat { n, body } => walk(body, mult * n, c),
+                }
+            }
+        }
+        let mut c = PlanComms::default();
+        walk(&self.steps, 1, &mut c);
+        c
+    }
+
+    /// Whether any gossip step executes (decides fault-time gossip-matrix
+    /// rebuilds and the inter-cluster clock barrier).
+    pub fn has_gossip(&self) -> bool {
+        fn walk(steps: &[Step]) -> bool {
+            steps.iter().any(|s| match s {
+                Step::Gossip { .. } => true,
+                Step::Repeat { n, body } => *n > 0 && walk(body),
+                _ => false,
+            })
+        }
+        walk(&self.steps)
+    }
+
+    /// Whether any cloud aggregation executes.
+    pub fn has_cloud_aggregate(&self) -> bool {
+        fn walk(steps: &[Step]) -> bool {
+            steps.iter().any(|s| match s {
+                Step::CloudAggregate => true,
+                Step::Repeat { n, body } => *n > 0 && walk(body),
+                _ => false,
+            })
+        }
+        walk(&self.steps)
+    }
+
+    /// Visit every executed gossip step's π in execution order (the
+    /// event-driven estimator simulates each separately).
+    pub fn for_each_gossip<F: FnMut(u32)>(&self, f: &mut F) {
+        fn walk<F: FnMut(u32)>(steps: &[Step], f: &mut F) {
+            for s in steps {
+                match s {
+                    Step::Gossip { pi } => f(*pi),
+                    Step::Repeat { n, body } => {
+                        for _ in 0..*n {
+                            walk(body, f);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(&self.steps, f);
+    }
+
+    /// Structural validity: at least one edge phase actually executes
+    /// (otherwise no device ever trains), every edge phase runs ≥ 1
+    /// epoch, and every gossip step takes ≥ 1 hop.
+    pub fn validate(&self) -> Result<()> {
+        fn walk(steps: &[Step]) -> Result<()> {
+            for s in steps {
+                match s {
+                    Step::EdgePhase { epochs, .. } => {
+                        if *epochs == 0 {
+                            return Err(CfelError::Config(
+                                "plan edge phase needs >= 1 epoch".into(),
+                            ));
+                        }
+                    }
+                    Step::Gossip { pi } => {
+                        if *pi == 0 {
+                            return Err(CfelError::Config(
+                                "plan gossip step needs >= 1 hop".into(),
+                            ));
+                        }
+                    }
+                    Step::CloudAggregate => {}
+                    Step::Repeat { body, .. } => {
+                        // An empty body would print as `()*N`, which the
+                        // grammar rejects — it would break the
+                        // parse(print(plan)) round trip (and JSON
+                        // persistence) for an otherwise runnable plan.
+                        if body.is_empty() {
+                            return Err(CfelError::Config(
+                                "plan repeat body must not be empty".into(),
+                            ));
+                        }
+                        walk(body)?
+                    }
+                }
+            }
+            Ok(())
+        }
+        walk(&self.steps)?;
+        if self.edge_phases() == 0 {
+            return Err(CfelError::Config(format!(
+                "plan {self} never trains: it needs at least one edge \
+                 phase that executes (a repeat count of 0 runs nothing)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Parse the text grammar (see the module docs). Errors spell the
+    /// grammar out so an unknown `--plan` spec is self-documenting.
+    pub fn parse(spec: &str) -> Result<Plan> {
+        parse::parse(spec)
+    }
+
+    /// Canonical spec string (the [`fmt::Display`] output).
+    pub fn spec(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for Step {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Step::EdgePhase { epochs, channel: UploadChannel::DeviceEdge } => {
+                write!(f, "edge({epochs})")
+            }
+            Step::EdgePhase { epochs, channel: UploadChannel::DeviceCloud } => {
+                write!(f, "edge({epochs})@cloud")
+            }
+            Step::Gossip { pi } => write!(f, "gossip({pi})"),
+            Step::CloudAggregate => write!(f, "cloud"),
+            Step::Repeat { n, body } => {
+                if let [only] = body.as_slice() {
+                    // Single-step bodies chain left-associatively:
+                    // `edge(2)*2*3` is Repeat{3, [Repeat{2, [edge(2)]}]}.
+                    write!(f, "{only}*{n}")
+                } else {
+                    write!(f, "(")?;
+                    for (i, s) in body.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, "; ")?;
+                        }
+                        write!(f, "{s}")?;
+                    }
+                    write!(f, ")*{n}")
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Plan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.steps.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(epochs: usize) -> Step {
+        Step::EdgePhase { epochs, channel: UploadChannel::DeviceEdge }
+    }
+
+    #[test]
+    fn comms_count_with_repetition() {
+        let p = Plan::from_steps(vec![
+            Step::Repeat { n: 3, body: vec![edge(2), Step::Gossip { pi: 4 }] },
+            Step::EdgePhase { epochs: 1, channel: UploadChannel::DeviceCloud },
+            Step::CloudAggregate,
+        ]);
+        let c = p.comms();
+        assert_eq!(c.edge_uploads, 3);
+        assert_eq!(c.cloud_uploads, 1);
+        assert_eq!(c.gossip_pi, 12);
+        assert_eq!(p.edge_phases(), 4);
+        assert!(p.has_gossip());
+        assert!(p.has_cloud_aggregate());
+    }
+
+    #[test]
+    fn zero_repeat_executes_nothing() {
+        let p = Plan::from_steps(vec![
+            Step::Repeat { n: 0, body: vec![Step::Gossip { pi: 5 }] },
+            edge(1),
+        ]);
+        assert!(!p.has_gossip());
+        assert_eq!(p.comms().gossip_pi, 0);
+        let mut seen = Vec::new();
+        p.for_each_gossip(&mut |pi| seen.push(pi));
+        assert!(seen.is_empty());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn gossip_walk_follows_execution_order() {
+        let p = Plan::from_steps(vec![
+            edge(1),
+            Step::Repeat {
+                n: 2,
+                body: vec![Step::Gossip { pi: 3 }, Step::Gossip { pi: 7 }],
+            },
+        ]);
+        let mut seen = Vec::new();
+        p.for_each_gossip(&mut |pi| seen.push(pi));
+        assert_eq!(seen, vec![3, 7, 3, 7]);
+    }
+
+    #[test]
+    fn validate_rejects_trainless_and_degenerate_steps() {
+        assert!(Plan::from_steps(vec![Step::Gossip { pi: 2 }]).validate().is_err());
+        assert!(Plan::from_steps(vec![edge(0)]).validate().is_err());
+        assert!(Plan::from_steps(vec![edge(1), Step::Gossip { pi: 0 }])
+            .validate()
+            .is_err());
+        // An edge phase hidden behind a zero repeat never executes.
+        let p = Plan::from_steps(vec![Step::Repeat { n: 0, body: vec![edge(2)] }]);
+        assert!(p.validate().is_err());
+        // An empty repeat body would not survive the grammar round trip.
+        let p = Plan::from_steps(vec![edge(1), Step::Repeat { n: 2, body: vec![] }]);
+        assert!(p.validate().is_err(), "empty repeat body accepted");
+        Plan::from_steps(vec![edge(1)]).validate().unwrap();
+    }
+
+    #[test]
+    fn display_is_canonical() {
+        let p = Plan::from_steps(vec![
+            Step::Repeat { n: 2, body: vec![edge(2)] },
+            Step::Repeat {
+                n: 3,
+                body: vec![edge(1), Step::Gossip { pi: 4 }],
+            },
+            Step::EdgePhase { epochs: 5, channel: UploadChannel::DeviceCloud },
+            Step::CloudAggregate,
+        ]);
+        assert_eq!(p.to_string(), "edge(2)*2; (edge(1); gossip(4))*3; edge(5)@cloud; cloud");
+        // Nested single-step repeats chain with `*`.
+        let nested = Plan::from_steps(vec![Step::Repeat {
+            n: 3,
+            body: vec![Step::Repeat { n: 2, body: vec![edge(2)] }],
+        }]);
+        assert_eq!(nested.to_string(), "edge(2)*2*3");
+    }
+}

@@ -1,0 +1,260 @@
+//! Recursive-descent parser for the plan text grammar (module docs of
+//! [`crate::plan`]). Hand-rolled like the rest of the offline build — no
+//! parser-combinator dependency — with errors that quote the grammar so a
+//! bad `--plan` spec teaches its own syntax.
+
+use crate::error::{CfelError, Result};
+use crate::netsim::UploadChannel;
+use crate::plan::{Plan, Step};
+
+/// The grammar, verbatim, for error messages and `--help` text.
+pub const GRAMMAR: &str = "plan grammar:\n\
+    \x20 plan  := step (';' step)*\n\
+    \x20 step  := atom ('*' N)*\n\
+    \x20 atom  := edge(E) | edge(E)@cloud | gossip(P) | cloud | (plan)\n\
+    examples: \"edge(2)*2; gossip(10)\" (CE-FedAvg), \
+    \"edge(4)@cloud; cloud\" (FedAvg), \
+    \"(edge(2); gossip(3))*2; cloud\" (a hybrid)";
+
+pub fn parse(spec: &str) -> Result<Plan> {
+    let mut p = Parser { bytes: spec.as_bytes(), pos: 0, spec };
+    let steps = p.seq()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("unexpected trailing input"));
+    }
+    let plan = Plan::from_steps(steps);
+    plan.validate()?;
+    Ok(plan)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    spec: &'a str,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> CfelError {
+        CfelError::Config(format!(
+            "invalid plan spec {:?} at byte {}: {msg}\n{GRAMMAR}",
+            self.spec, self.pos
+        ))
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn eat_keyword(&mut self, kw: &str) -> bool {
+        self.skip_ws();
+        if self.spec[self.pos..].starts_with(kw) {
+            self.pos += kw.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit())
+        {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(self.err("expected a number"));
+        }
+        self.spec[start..self.pos]
+            .parse()
+            .map_err(|_| self.err("number out of range"))
+    }
+
+    /// `plan := step (';' step)*` — a paren group without `*` splices its
+    /// steps inline, so this returns a flat Vec.
+    fn seq(&mut self) -> Result<Vec<Step>> {
+        let mut steps = self.step()?;
+        while self.peek() == Some(b';') {
+            self.pos += 1;
+            steps.extend(self.step()?);
+        }
+        Ok(steps)
+    }
+
+    /// `step := atom ('*' N)*`, left-associative: `edge(2)*2*3` is
+    /// `Repeat{3, [Repeat{2, [edge(2)]}]}`.
+    fn step(&mut self) -> Result<Vec<Step>> {
+        let mut steps = self.atom()?;
+        while self.peek() == Some(b'*') {
+            self.pos += 1;
+            let n = self.number()?;
+            steps = vec![Step::Repeat { n, body: steps }];
+        }
+        Ok(steps)
+    }
+
+    fn atom(&mut self) -> Result<Vec<Step>> {
+        match self.peek() {
+            Some(b'(') => {
+                self.pos += 1;
+                let steps = self.seq()?;
+                self.eat(b')')?;
+                Ok(steps)
+            }
+            Some(b'e') if self.eat_keyword("edge") => {
+                self.eat(b'(')?;
+                let epochs = self.number()?;
+                self.eat(b')')?;
+                let channel = if self.peek() == Some(b'@') {
+                    self.pos += 1;
+                    if self.eat_keyword("cloud") {
+                        UploadChannel::DeviceCloud
+                    } else if self.eat_keyword("edge") {
+                        UploadChannel::DeviceEdge
+                    } else {
+                        return Err(self.err("expected 'edge' or 'cloud' after '@'"));
+                    }
+                } else {
+                    UploadChannel::DeviceEdge
+                };
+                Ok(vec![Step::EdgePhase { epochs, channel }])
+            }
+            Some(b'g') if self.eat_keyword("gossip") => {
+                self.eat(b'(')?;
+                let pi = self.number()?;
+                self.eat(b')')?;
+                let pi = u32::try_from(pi).map_err(|_| self.err("gossip π out of range"))?;
+                Ok(vec![Step::Gossip { pi }])
+            }
+            Some(b'c') if self.eat_keyword("cloud") => Ok(vec![Step::CloudAggregate]),
+            _ => Err(self.err("expected edge(E), gossip(P), cloud, or '('")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(epochs: usize) -> Step {
+        Step::EdgePhase { epochs, channel: UploadChannel::DeviceEdge }
+    }
+
+    #[test]
+    fn parses_the_canned_shapes() {
+        assert_eq!(
+            parse("edge(2)*2; gossip(10)").unwrap(),
+            Plan::from_steps(vec![
+                Step::Repeat { n: 2, body: vec![edge(2)] },
+                Step::Gossip { pi: 10 },
+            ])
+        );
+        assert_eq!(
+            parse("edge(4)@cloud; cloud").unwrap(),
+            Plan::from_steps(vec![
+                Step::EdgePhase { epochs: 4, channel: UploadChannel::DeviceCloud },
+                Step::CloudAggregate,
+            ])
+        );
+        assert_eq!(
+            parse("edge(2)*7; edge(2)@cloud; cloud").unwrap(),
+            Plan::from_steps(vec![
+                Step::Repeat { n: 7, body: vec![edge(2)] },
+                Step::EdgePhase { epochs: 2, channel: UploadChannel::DeviceCloud },
+                Step::CloudAggregate,
+            ])
+        );
+    }
+
+    #[test]
+    fn whitespace_and_explicit_edge_channel_are_accepted() {
+        assert_eq!(
+            parse("  edge( 3 ) @edge ;\n gossip( 4 ) ").unwrap(),
+            Plan::from_steps(vec![edge(3), Step::Gossip { pi: 4 }])
+        );
+    }
+
+    #[test]
+    fn groups_repeat_and_splice() {
+        assert_eq!(
+            parse("(edge(1); gossip(2))*3").unwrap(),
+            Plan::from_steps(vec![Step::Repeat {
+                n: 3,
+                body: vec![edge(1), Step::Gossip { pi: 2 }],
+            }])
+        );
+        // A bare group splices inline (no wrapper node).
+        assert_eq!(
+            parse("(edge(1); cloud)").unwrap(),
+            Plan::from_steps(vec![edge(1), Step::CloudAggregate])
+        );
+        // Chained counts nest left-associatively.
+        assert_eq!(
+            parse("edge(2)*2*3").unwrap(),
+            Plan::from_steps(vec![Step::Repeat {
+                n: 3,
+                body: vec![Step::Repeat { n: 2, body: vec![edge(2)] }],
+            }])
+        );
+    }
+
+    #[test]
+    fn errors_quote_the_grammar() {
+        for bad in [
+            "",
+            "edge(2",
+            "edge()",
+            "edge(2);;",
+            "warp(9)",
+            "edge(2) extra",
+            "gossip(2)",      // valid syntax, but never trains
+            "edge(0)",        // degenerate epoch count
+            "(edge(2))*0",    // nothing ever executes
+        ] {
+            let err = parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("plan"),
+                "error for {bad:?} should mention the plan: {err}"
+            );
+        }
+        let err = parse("warp(9)").unwrap_err().to_string();
+        assert!(err.contains("plan grammar"), "grammar not quoted: {err}");
+    }
+
+    #[test]
+    fn roundtrips_canonical_specs() {
+        for spec in [
+            "edge(2)*2; gossip(10)",
+            "edge(4)@cloud; cloud",
+            "edge(2)*7; edge(2)@cloud; cloud",
+            "edge(2)*2",
+            "(edge(1); gossip(2))*3; cloud",
+            "edge(2)*2*3",
+            "edge(1)*0; edge(3)",
+        ] {
+            let p = parse(spec).unwrap();
+            assert_eq!(p.to_string(), spec);
+            assert_eq!(parse(&p.to_string()).unwrap(), p);
+        }
+    }
+}

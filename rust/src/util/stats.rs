@@ -1,4 +1,17 @@
-//! Summary statistics shared by metrics and the bench harness.
+//! Summary statistics shared by metrics, the bench harness, and the
+//! coordinator's round accounting.
+
+/// Sum per-device SGD steps across a round's edge phases into one
+/// `(device, total_steps)` list in ascending device order — the Eq. 8
+/// workload input. Shared by the plan interpreter and the frozen legacy
+/// round loop (formerly lived in `coordinator/cefedavg.rs`).
+pub fn merge_steps(raw: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for (dev, s) in raw {
+        *map.entry(dev).or_insert(0usize) += s;
+    }
+    map.into_iter().collect()
+}
 
 /// Online mean/variance accumulator (Welford).
 #[derive(Debug, Default, Clone)]
@@ -89,6 +102,13 @@ pub fn fmt_duration(secs: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_steps_sums_per_device() {
+        let merged = merge_steps(vec![(1, 3), (0, 2), (1, 4)]);
+        assert_eq!(merged, vec![(0, 2), (1, 7)]);
+        assert!(merge_steps(Vec::new()).is_empty());
+    }
 
     #[test]
     fn welford_matches_closed_form() {

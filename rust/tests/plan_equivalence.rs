@@ -1,0 +1,189 @@
+//! Plan-interpreter equivalence suite.
+//!
+//! The algorithm layer is now data: `AlgorithmKind` selects a canned
+//! [`Plan`] and one interpreter (`Coordinator::run`) executes it. These
+//! tests pin that redesign safe against the frozen PR 3 direct-dispatch
+//! loop (`Coordinator::run_legacy`): for all four algorithms, under the
+//! closed-form and event-driven latency modes, under the full-barrier and
+//! semi-sync close policies, and under `CFEL_THREADS` 1 and 4, the two
+//! loops must produce *bit-identical* histories — losses, accuracies,
+//! consensus, virtual times and their per-round breakdowns, drop/late/
+//! stale bookkeeping — and byte-identical CSV rows.
+//!
+//! They also prove the API buys something: a plan no `AlgorithmKind` can
+//! express (gossip interleaved into every edge round) runs end-to-end and
+//! learns well above chance.
+
+use cfel::config::{AggPolicyKind, AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, CsvWriter, History, ROUND_HEADER};
+use cfel::netsim::StragglerSpec;
+use cfel::plan::Plan;
+
+fn run_plan(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_legacy(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run_legacy().unwrap()
+}
+
+/// Render a history to CSV text with the wall-clock column zeroed (real
+/// time differs between any two runs; everything else must not).
+fn csv_rows(series: &str, h: &History) -> String {
+    let path = std::env::temp_dir().join(format!(
+        "cfel_plan_equiv_{}_{series}.csv",
+        std::process::id()
+    ));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            let mut r = rec.clone();
+            r.wall_time_s = 0.0;
+            w.round_row(series, &r).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label} r{r} tloss");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{label} r{r} compute");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{label} r{r} upload");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{label} r{r} on-time");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+    }
+}
+
+/// The scenario matrix: closed-form Eq. 8, event-driven full barrier with
+/// a heterogeneous straggler fleet, and event-driven semi-sync (pending
+/// buffers, per-cluster clocks, stale merges all in play).
+fn scenarios(alg: AlgorithmKind) -> Vec<(String, ExperimentConfig)> {
+    let mut base = ExperimentConfig::quickstart();
+    base.algorithm = alg;
+    base.rounds = 4;
+
+    let mut closed = base.clone();
+    closed.heterogeneity = Some(0.5);
+
+    let mut event = base.clone();
+    event.latency = LatencyMode::EventDriven;
+    event.heterogeneity = Some(0.5);
+    event.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+
+    let mut semi = event.clone();
+    semi.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+    semi.staleness_exp = 1.0;
+
+    vec![
+        (format!("{}-closed", alg.name()), closed),
+        (format!("{}-event-barrier", alg.name()), event),
+        (format!("{}-event-semisync", alg.name()), semi),
+    ]
+}
+
+/// One test body: `CFEL_THREADS` is process-global, so the matrix runs
+/// sequentially instead of racing parallel test threads over the env var.
+#[test]
+fn canned_plans_bit_identical_to_direct_dispatch() {
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        for alg in AlgorithmKind::all() {
+            for (label, cfg) in scenarios(alg) {
+                let label = format!("{label}-t{threads}");
+                let h_plan = run_plan(&cfg);
+                let h_legacy = run_legacy(&cfg);
+                assert_identical(&label, &h_plan, &h_legacy);
+                assert_eq!(
+                    csv_rows("oracle", &h_plan),
+                    csv_rows("oracle", &h_legacy),
+                    "{label}: CSV rows diverged"
+                );
+            }
+        }
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+#[test]
+fn explicit_plan_spec_equals_the_algorithm_it_spells() {
+    // `--plan "<canned spec>"` must be indistinguishable from selecting
+    // the algorithm — the grammar and the constructors name one schedule.
+    for alg in AlgorithmKind::all() {
+        let mut by_alg = ExperimentConfig::quickstart();
+        by_alg.algorithm = alg;
+        by_alg.rounds = 3;
+        let spec = Plan::for_algorithm(alg, &by_alg).to_string();
+        let mut by_spec = by_alg.clone();
+        by_spec.algorithm = AlgorithmKind::CeFedAvg; // default: no conflict
+        by_spec.plan = Some(Plan::parse(&spec).unwrap());
+        assert_identical(
+            &format!("{}-via-spec", alg.name()),
+            &run_plan(&by_alg),
+            &run_plan(&by_spec),
+        );
+    }
+}
+
+#[test]
+fn interleaved_gossip_plan_runs_and_learns() {
+    // The point of the API: gossip folded into *every* edge round — a
+    // schedule the closed AlgorithmKind enum could not express (CE-FedAvg
+    // barriers all q edge rounds before its single gossip step).
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.rounds = 10;
+    cfg.plan = Some(Plan::parse("(edge(2); gossip(3))*2").unwrap());
+    let h = run_plan(&cfg);
+    assert_eq!(h.len(), 10);
+    let best = best_accuracy(&h);
+    assert!(best > 0.25, "interleaved-gossip plan failed to learn: {best}");
+    for rec in &h {
+        // Two gossip steps per round are charged to the backhaul.
+        assert!(rec.backhaul_s > 0.0, "round {}: no backhaul charged", rec.round);
+    }
+    // Interleaving the mixing keeps clusters closer than never mixing.
+    let mut local = cfg.clone();
+    local.plan = None;
+    local.algorithm = AlgorithmKind::LocalEdge;
+    let h_local = run_plan(&local);
+    assert!(
+        h.last().unwrap().consensus < h_local.last().unwrap().consensus,
+        "gossiping plan should out-mix local-edge"
+    );
+}
+
+#[test]
+fn custom_plan_is_deterministic_and_policy_compatible() {
+    // A cloud-assisted CE hybrid under semi-sync: the interpreter threads
+    // pending-report buffers and per-cluster clocks through a schedule no
+    // legacy method ever ran; the run must still be bit-reproducible.
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.rounds = 5;
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+    cfg.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 0.02 };
+    cfg.plan = Some(Plan::parse("edge(2)*2; gossip(4); cloud").unwrap());
+    let a = run_plan(&cfg);
+    let b = run_plan(&cfg);
+    assert_identical("cloud-assisted-ce", &a, &b);
+    assert_eq!(a.iter().map(|r| r.dropped_devices).sum::<usize>(), 0);
+    assert!(a.iter().map(|r| r.late_devices).sum::<usize>() > 0);
+    // The cloud step runs after gossip: every round ends in consensus.
+    assert!(a.last().unwrap().consensus < 1e-12);
+}

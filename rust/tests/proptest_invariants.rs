@@ -8,6 +8,7 @@ use cfel::aggregation::{
 };
 use cfel::data::partition;
 use cfel::netsim::{EventDrivenEstimator, NetworkModel, StragglerSpec, UploadChannel};
+use cfel::plan::{Plan, Step};
 use cfel::prop_assert;
 use cfel::topology::{Graph, MixingMatrix};
 use cfel::util::proptest::{check, close, default_cases, int_biased, simplex, vec_f32};
@@ -274,6 +275,97 @@ fn prop_staleness_weights_always_sum_to_one() {
             w.iter().all(|&x| (0.0..=1.0 + 1e-12).contains(&x)),
             "weight outside [0,1]: {w:?}"
         );
+        Ok(())
+    });
+}
+
+/// Random valid plan: a bounded-depth step tree over all four step
+/// kinds, with a guaranteed executing edge phase so `validate` passes.
+fn random_plan(rng: &mut Rng) -> Plan {
+    fn step(rng: &mut Rng, depth: usize) -> Step {
+        let pick = if depth == 0 { rng.below(3) } else { rng.below(4) };
+        match pick {
+            0 => Step::EdgePhase {
+                epochs: int_biased(rng, 1, 8),
+                channel: if rng.below(2) == 0 {
+                    UploadChannel::DeviceEdge
+                } else {
+                    UploadChannel::DeviceCloud
+                },
+            },
+            1 => Step::Gossip { pi: int_biased(rng, 1, 12) as u32 },
+            2 => Step::CloudAggregate,
+            _ => {
+                let len = int_biased(rng, 1, 3);
+                Step::Repeat {
+                    n: int_biased(rng, 0, 4),
+                    body: (0..len).map(|_| step(rng, depth - 1)).collect(),
+                }
+            }
+        }
+    }
+    let len = int_biased(rng, 0, 4);
+    let mut steps: Vec<Step> = (0..len).map(|_| step(rng, 2)).collect();
+    steps.push(Step::EdgePhase {
+        epochs: int_biased(rng, 1, 4),
+        channel: UploadChannel::DeviceEdge,
+    });
+    Plan::from_steps(steps)
+}
+
+#[test]
+fn prop_plan_grammar_roundtrips() {
+    // parse(print(plan)) == plan for arbitrary valid plans: the text
+    // grammar and the AST are two spellings of the same schedule.
+    check("plan-roundtrip", 23, default_cases(), |rng| {
+        let plan = random_plan(rng);
+        plan.validate().map_err(|e| e.to_string())?;
+        let spec = plan.to_string();
+        let reparsed = Plan::parse(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(
+            reparsed == plan,
+            "round trip changed the plan: {spec:?} -> {reparsed:?}"
+        );
+        // Printing is a fixpoint (canonical form).
+        prop_assert!(
+            reparsed.to_string() == spec,
+            "print not canonical: {spec:?} vs {:?}",
+            reparsed.to_string()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plans_with_aggregation_keep_report_weights_normalized() {
+    // Any plan with at least one aggregation (edge) phase merges reports
+    // through `report_weights`; whatever mix of fresh and stale reports
+    // each of its phases sees, the Eq. 6 weights must stay a convex
+    // combination — weights in [0,1] summing to 1.
+    check("plan-weights", 24, default_cases(), |rng| {
+        let plan = random_plan(rng);
+        let phases = plan.edge_phases();
+        prop_assert!(phases >= 1, "generator must produce an aggregation step");
+        let pol = SemiSync {
+            k: 1,
+            timeout_s: 1.0,
+            staleness_exp: rng.f64() * 4.0,
+        };
+        // One simulated merge per (bounded) edge phase of the plan.
+        for _ in 0..phases.min(16) {
+            let n = int_biased(rng, 1, 12);
+            let ns: Vec<usize> = (0..n).map(|_| int_biased(rng, 1, 5000)).collect();
+            let ds: Vec<f64> = (0..n)
+                .map(|_| pol.staleness_discount(rng.below(25) as u64))
+                .collect();
+            let w = report_weights(&ns, &ds).map_err(|e| e.to_string())?;
+            let sum: f64 = w.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-9, "weights sum to {sum}");
+            prop_assert!(
+                w.iter().all(|&x| (0.0..=1.0 + 1e-12).contains(&x)),
+                "weight outside [0,1]: {w:?}"
+            );
+        }
         Ok(())
     });
 }
