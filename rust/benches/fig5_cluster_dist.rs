@@ -16,11 +16,14 @@ fn main() {
     // Partitioner micro-benches (the data-plane cost of the schemes).
     let labels: Vec<u32> = (0..50_000).map(|i| (i % 10) as u32).collect();
     let rng = Rng::new(7);
+    // 8 clusters x 8 devices, the historical contiguous layout as rosters.
+    let rosters: Vec<Vec<usize>> =
+        (0..8).map(|ci| (ci * 8..(ci + 1) * 8).collect()).collect();
     b.run_throughput("partition/cluster-iid 50k", 50_000.0, || {
-        partition::cluster_iid(&labels, 8, 8, &rng).unwrap()
+        partition::cluster_iid(&labels, &rosters, 64, &rng).unwrap()
     });
     b.run_throughput("partition/cluster-noniid C=2 50k", 50_000.0, || {
-        partition::cluster_noniid(&labels, 8, 8, 2, &rng).unwrap()
+        partition::cluster_noniid(&labels, &rosters, 64, 2, &rng).unwrap()
     });
     b.run_throughput("partition/dirichlet 0.5 50k", 50_000.0, || {
         partition::dirichlet(&labels, 10, 64, 0.5, &rng)

@@ -10,6 +10,7 @@ use crate::compression::Compressor;
 use crate::error::{CfelError, Result};
 use crate::netsim::StragglerSpec;
 use crate::plan::Plan;
+use crate::scenario::{CapabilityProfiles, Scenario};
 use crate::util::json::Json;
 
 /// Uniform rejection for two spellings of the same knob being set at
@@ -272,9 +273,15 @@ pub struct ExperimentConfig {
     /// `algorithm` field names. `validate` rejects setting both (the same
     /// sugar/primary contract as `deadline_s` vs `agg_policy`).
     pub plan: Option<Plan>,
+    /// Explicit world description (`--scenario`); replaces the flat world
+    /// knobs (`n_devices`/`n_clusters` split, `heterogeneity`,
+    /// `stragglers`, `topology`), which are sugar lowering into a static
+    /// [`Scenario`] via [`ExperimentConfig::resolved_scenario`].
+    pub scenario: Option<Scenario>,
     /// Total devices n.
     pub n_devices: usize,
-    /// Clusters / edge servers m (must divide n).
+    /// Clusters / edge servers m. Need not divide n: the remainder is
+    /// spread over the first clusters ([`ExperimentConfig::cluster_sizes`]).
     pub n_clusters: usize,
     /// Intra-cluster aggregation period: local *epochs* per edge round
     /// (the paper runs epochs, following Reddi et al. [42]).
@@ -337,6 +344,7 @@ impl ExperimentConfig {
             seed: 42,
             algorithm: AlgorithmKind::CeFedAvg,
             plan: None,
+            scenario: None,
             n_devices: 16,
             n_clusters: 4,
             tau: 2,
@@ -375,6 +383,7 @@ impl ExperimentConfig {
             seed: 1,
             algorithm,
             plan: None,
+            scenario: None,
             n_devices: 64,
             n_clusters: 8,
             tau: 2,
@@ -405,8 +414,34 @@ impl ExperimentConfig {
         }
     }
 
+    /// Floor of the per-cluster device count. With a non-divisible split
+    /// the first `n % m` clusters hold one more device — use
+    /// [`ExperimentConfig::cluster_sizes`] for the exact layout.
     pub fn devices_per_cluster(&self) -> usize {
         self.n_devices / self.n_clusters
+    }
+
+    /// Per-cluster device counts: `n / m` each, with the remainder spread
+    /// one-per-cluster over the first `n % m` clusters. Identical to the
+    /// historical uniform split whenever `m` divides `n`.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let base = self.n_devices / self.n_clusters;
+        let extra = self.n_devices % self.n_clusters;
+        (0..self.n_clusters)
+            .map(|ci| base + usize::from(ci < extra))
+            .collect()
+    }
+
+    /// The world this config runs in: the explicit `scenario` if one is
+    /// set, otherwise the static lowering of the flat knobs
+    /// ([`Scenario::from_flat`]). The coordinator builds exclusively from
+    /// this, so the flat spelling and its lowered scenario are one code
+    /// path (pinned bit-identical by `rust/tests/scenario_equivalence.rs`).
+    pub fn resolved_scenario(&self) -> Scenario {
+        match &self.scenario {
+            Some(s) => s.clone(),
+            None => Scenario::from_flat(self),
+        }
     }
 
     /// The per-round schedule this config runs: the explicit `plan` if
@@ -421,11 +456,17 @@ impl ExperimentConfig {
 
     /// Series label for logs and CSV rows: the algorithm name for canned
     /// runs (unchanged from the pre-plan CSV schema), the canonical plan
-    /// spec for explicit-plan runs.
+    /// spec for explicit-plan runs. Runs under an explicit scenario append
+    /// `@<scenario name>` so their CSV rows stay distinguishable from
+    /// canned-config runs.
     pub fn run_label(&self) -> String {
-        match &self.plan {
+        let base = match &self.plan {
             Some(p) => format!("plan:{p}"),
             None => self.algorithm.name().to_string(),
+        };
+        match &self.scenario {
+            Some(s) => format!("{base}@{}", s.name),
+            None => base,
         }
     }
 
@@ -447,9 +488,10 @@ impl ExperimentConfig {
         if self.n_devices == 0 || self.n_clusters == 0 {
             return Err(CfelError::Config("need at least 1 device and cluster".into()));
         }
-        if self.n_devices % self.n_clusters != 0 {
+        if self.n_devices < self.n_clusters {
             return Err(CfelError::Config(format!(
-                "n_devices {} must be divisible by n_clusters {}",
+                "n_devices {} < n_clusters {}: every edge server needs at \
+                 least one device",
                 self.n_devices, self.n_clusters
             )));
         }
@@ -471,6 +513,83 @@ impl ExperimentConfig {
                     "plan",
                     "algorithm",
                     "an explicit plan replaces the canned algorithm schedule",
+                ));
+            }
+        }
+        if let Some(s) = &self.scenario {
+            s.validate()?;
+            if s.n_devices != self.n_devices || s.n_clusters() != self.n_clusters {
+                return Err(CfelError::Config(format!(
+                    "scenario {:?} describes {} devices / {} clusters but the \
+                     config says {} / {} (the CLI syncs these when loading \
+                     --scenario)",
+                    s.name,
+                    s.n_devices,
+                    s.n_clusters(),
+                    self.n_devices,
+                    self.n_clusters
+                )));
+            }
+            // The same sugar/primary contract as `deadline_s` vs
+            // `agg_policy`: the flat capability knobs lower *into* a
+            // scenario, so combining them with an explicit one is
+            // contradictory.
+            if self.heterogeneity.is_some() {
+                return Err(conflicting_options(
+                    "scenario",
+                    "heterogeneity",
+                    "capability profiles live in the scenario",
+                ));
+            }
+            if self.stragglers.is_some() {
+                return Err(conflicting_options(
+                    "scenario",
+                    "stragglers",
+                    "capability profiles live in the scenario",
+                ));
+            }
+            if self.fault.is_some() && !s.timeline.is_empty() {
+                return Err(conflicting_options(
+                    "scenario timeline",
+                    "fault",
+                    "both mutate the world mid-run",
+                ));
+            }
+            if self.topology != s.topology {
+                return Err(CfelError::Config(format!(
+                    "config topology {:?} does not match scenario topology \
+                     {:?} (the scenario owns the backhaul; the CLI and JSON \
+                     loaders sync this field)",
+                    self.topology, s.topology
+                )));
+            }
+            // Like `deadline_s`: per-device uplink overrides only exist in
+            // the event simulator — the closed form would silently charge
+            // the shared channel and report wrong upload times.
+            if let CapabilityProfiles::Explicit(profiles) = &s.capabilities {
+                if profiles.iter().any(|p| p.uplink_bps.is_some())
+                    && self.latency != LatencyMode::EventDriven
+                {
+                    return Err(CfelError::Config(
+                        "per-device uplink overrides require the \
+                         event-driven latency mode (set latency = \"event\" \
+                         / pass --latency event); the closed-form Eq. 8 \
+                         charges the shared channel"
+                            .into(),
+                    ));
+                }
+            }
+            if s.dormant_count() > 0
+                && matches!(
+                    self.data,
+                    DataScheme::ClusterIid | DataScheme::ClusterNonIid { .. }
+                )
+            {
+                return Err(CfelError::Config(
+                    "cluster data schemes partition the pool by roster, so \
+                     every device must appear in an initial roster (no \
+                     dormant devices)"
+                        .into(),
                 ));
             }
         }
@@ -595,6 +714,9 @@ impl ExperimentConfig {
         if let Some(p) = &self.plan {
             o.set("plan", Json::from_str_val(&p.to_string()));
         }
+        if let Some(s) = &self.scenario {
+            o.set("scenario", s.to_json());
+        }
         if let Some(h) = self.heterogeneity {
             o.set("heterogeneity", Json::from_f64(h));
         }
@@ -671,6 +793,15 @@ impl ExperimentConfig {
             }
             None => None,
         };
+        let scenario = j.opt("scenario").map(Scenario::from_json).transpose()?;
+        // An embedded scenario fixes the system shape; explicit
+        // n_devices / n_clusters / topology keys still win (validate
+        // cross-checks the result).
+        let (scen_devices, scen_clusters) = match &scenario {
+            Some(s) => (Some(s.n_devices), Some(s.n_clusters())),
+            None => (None, None),
+        };
+        let scen_topology = scenario.as_ref().map(|s| s.topology.clone());
         let cfg = ExperimentConfig {
             name: j
                 .opt("name")
@@ -686,8 +817,9 @@ impl ExperimentConfig {
                 .opt("plan")
                 .map(|v| v.as_str().and_then(Plan::parse))
                 .transpose()?,
-            n_devices: get_usize("n_devices", base.n_devices)?,
-            n_clusters: get_usize("n_clusters", base.n_clusters)?,
+            scenario,
+            n_devices: get_usize("n_devices", scen_devices.unwrap_or(base.n_devices))?,
+            n_clusters: get_usize("n_clusters", scen_clusters.unwrap_or(base.n_clusters))?,
             tau: get_usize("tau", base.tau)?,
             q: get_usize("q", base.q)?,
             pi: get_usize("pi", base.pi as usize)? as u32,
@@ -700,7 +832,7 @@ impl ExperimentConfig {
                 .opt("topology")
                 .map(|v| v.as_str().map(str::to_string))
                 .transpose()?
-                .unwrap_or_else(|| base.topology.clone()),
+                .unwrap_or_else(|| scen_topology.unwrap_or_else(|| base.topology.clone())),
             samples_per_device: get_usize("samples_per_device", base.samples_per_device)?,
             test_size: get_usize("test_size", base.test_size)?,
             data: match j.opt("data") {
@@ -764,8 +896,12 @@ mod tests {
 
     #[test]
     fn validation_catches_bad_shapes() {
+        // Non-divisible counts are legal now (remainder spreads over the
+        // first clusters); fewer devices than clusters is not.
         let mut c = ExperimentConfig::quickstart();
-        c.n_devices = 17; // not divisible by 4
+        c.n_devices = 17;
+        c.validate().unwrap();
+        c.n_devices = 3; // 3 devices cannot cover 4 edge servers
         assert!(c.validate().is_err());
         let mut c = ExperimentConfig::quickstart();
         c.tau = 0;
@@ -957,6 +1093,98 @@ mod tests {
         let mut p = ExperimentConfig::quickstart();
         p.plan = Some(Plan::from_steps(vec![crate::plan::Step::Gossip { pi: 3 }]));
         assert!(p.validate().is_err(), "train-less plan accepted");
+    }
+
+    #[test]
+    fn cluster_sizes_distribute_the_remainder() {
+        let mut c = ExperimentConfig::quickstart();
+        assert_eq!(c.cluster_sizes(), vec![4, 4, 4, 4]); // divisible: uniform
+        c.n_devices = 18;
+        assert_eq!(c.cluster_sizes(), vec![5, 5, 4, 4]);
+        c.n_devices = 5;
+        assert_eq!(c.cluster_sizes(), vec![2, 1, 1, 1]);
+        assert_eq!(c.cluster_sizes().iter().sum::<usize>(), c.n_devices);
+    }
+
+    #[test]
+    fn scenario_resolves_labels_and_roundtrips() {
+        let mut c = ExperimentConfig::quickstart();
+        // No explicit scenario: the lowering, plain label.
+        assert_eq!(c.resolved_scenario(), Scenario::from_flat(&c));
+        assert_eq!(c.run_label(), "ce-fedavg");
+        // Explicit scenario: validated, and the label carries its name.
+        let mut s = Scenario::from_flat(&c);
+        s.name = "churny".into();
+        c.scenario = Some(s);
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "ce-fedavg@churny");
+        // JSON carries the whole scenario through.
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.scenario, c.scenario);
+        assert_eq!(c2.n_devices, c.n_devices);
+        // A config JSON whose only shape source is the scenario syncs
+        // n_devices / n_clusters from it.
+        let mut small = Scenario::from_flat(&ExperimentConfig::quickstart());
+        small.rosters = vec![vec![0, 1], vec![2, 3, 4]];
+        small.n_devices = 5;
+        let mut j = Json::obj();
+        j.set("scenario", small.to_json());
+        let c3 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c3.n_devices, 5);
+        assert_eq!(c3.n_clusters, 2);
+    }
+
+    #[test]
+    fn scenario_conflicts_with_flat_capability_knobs() {
+        let mut c = ExperimentConfig::quickstart();
+        c.scenario = Some(Scenario::from_flat(&c));
+        c.heterogeneity = Some(0.5);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        let mut c = ExperimentConfig::quickstart();
+        c.scenario = Some(Scenario::from_flat(&c));
+        c.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 10.0 });
+        assert!(c.validate().is_err());
+        // Shape mismatch between config and scenario is rejected.
+        let mut c = ExperimentConfig::quickstart();
+        c.scenario = Some(Scenario::from_flat(&c));
+        c.n_devices = 32;
+        assert!(c.validate().is_err());
+        // So is a topology mismatch (the loaders sync the field).
+        let mut c = ExperimentConfig::quickstart();
+        c.scenario = Some(Scenario::from_flat(&c));
+        c.topology = "complete".into();
+        assert!(c.validate().is_err());
+        // Per-device uplink overrides need the event-driven latency mode.
+        let mut c = ExperimentConfig::quickstart();
+        let mut s = Scenario::from_flat(&c);
+        s.capabilities = CapabilityProfiles::Explicit(
+            (0..16)
+                .map(|k| crate::scenario::DeviceProfile {
+                    flops: 1e9,
+                    uplink_bps: if k == 0 { Some(5e6) } else { None },
+                })
+                .collect(),
+        );
+        c.scenario = Some(s);
+        assert!(c.validate().is_err(), "uplink override accepted in closed form");
+        c.latency = LatencyMode::EventDriven;
+        c.validate().unwrap();
+        // A fault plus a non-empty timeline is contradictory; a fault
+        // plus a *static* scenario is fine.
+        let mut c = ExperimentConfig::quickstart();
+        c.fault = Some(FaultSpec::KillCluster { at_round: 2, cluster: 1 });
+        c.scenario = Some(Scenario::from_flat(&c));
+        c.validate().unwrap();
+        let mut s = Scenario::from_flat(&c);
+        s.timeline = crate::scenario::Timeline {
+            events: vec![crate::scenario::TimelineEvent {
+                round: 1,
+                event: crate::scenario::WorldEvent::Leave { device: 0 },
+            }],
+        };
+        c.scenario = Some(s);
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -165,6 +165,14 @@ impl Coordinator {
                     .into(),
             ));
         }
+        if self.cfg.scenario.is_some() {
+            return Err(CfelError::Config(
+                "run_legacy predates the scenario API and never applies \
+                 world timelines; clear the explicit scenario (flat \
+                 configs lower to an equivalent static one)"
+                    .into(),
+            ));
+        }
         let mut history = History::new();
         let mut sim_time = 0.0f64;
         let mut wall = 0.0f64;

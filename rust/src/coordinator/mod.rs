@@ -39,6 +39,7 @@ use crate::netsim::{
 };
 use crate::plan::{Plan, Step};
 use crate::runtime::{EvalResult, Manifest, MockBackend, PjrtBackend, TrainBackend};
+use crate::scenario::{LinkKind, Scenario, WorldEvent};
 use crate::topology::{Graph, MixingMatrix};
 use crate::util::rng::Rng;
 use crate::util::stats::merge_steps;
@@ -115,6 +116,14 @@ pub struct Coordinator {
     /// The per-round schedule the interpreter executes — the config's
     /// explicit plan, or the canned plan its `algorithm` names.
     pub plan: Plan,
+    /// The resolved world description (the config's explicit scenario, or
+    /// the static lowering of its flat knobs). Owns the rosters the
+    /// clusters were built from and the event timeline
+    /// [`Coordinator::apply_timeline`] replays at round boundaries.
+    pub scenario: Scenario,
+    /// Current cluster of every device (`None` = dormant / left). Kept in
+    /// lockstep with the clusters' `device_ids` by the timeline events.
+    pub(crate) device_cluster: Vec<Option<usize>>,
     pub backend: Box<dyn TrainBackend>,
     pub fed: FederatedData,
     pub clusters: Vec<ClusterState>,
@@ -177,35 +186,47 @@ impl Coordinator {
         cfg.validate()?;
         let plan = cfg.resolved_plan();
         plan.validate()?;
+        // The world is always built from a Scenario — the flat knobs
+        // lower into a static one (`Scenario::from_flat`), so the flat
+        // spelling and explicit scenarios share this single code path
+        // (pinned bit-identical by `rust/tests/scenario_equivalence.rs`).
+        let scenario = cfg.resolved_scenario();
+        scenario.validate()?;
         let rng = Rng::new(cfg.seed);
-        let fed = Self::build_data(&cfg, &*backend, &rng)?;
+        let fed = Self::build_data(&cfg, &scenario, &*backend, &rng)?;
 
-        // Devices are assigned to clusters contiguously (paper §5.2):
-        // cluster i owns devices [i·dpc, (i+1)·dpc).
-        let dpc = cfg.devices_per_cluster();
+        // Clusters own the scenario's rosters (the flat lowering keeps
+        // the paper's §5.2 contiguous layout).
         let param_count = backend.param_count();
         let init = backend.init_state(&rng.split(0x1217)).params;
-        let clusters: Vec<ClusterState> = (0..cfg.n_clusters)
-            .map(|ci| {
-                let device_ids: Vec<usize> = (ci * dpc..(ci + 1) * dpc).collect();
-                let n_samples = device_ids
+        let clusters: Vec<ClusterState> = scenario
+            .rosters
+            .iter()
+            .map(|roster| {
+                let n_samples = roster
                     .iter()
                     .map(|&d| fed.device_train[d].len())
                     .sum();
                 ClusterState {
-                    device_ids,
+                    device_ids: roster.clone(),
                     model: init.clone(),
                     n_samples,
                 }
             })
             .collect();
         debug_assert_eq!(init.len(), param_count);
+        let mut device_cluster = vec![None; cfg.n_devices];
+        for (ci, roster) in scenario.rosters.iter().enumerate() {
+            for &d in roster {
+                device_cluster[d] = Some(ci);
+            }
+        }
 
-        let graph = Graph::by_name(&cfg.topology, cfg.n_clusters, &rng.split(0x706F))?;
+        let graph = Graph::by_name(&scenario.topology, cfg.n_clusters, &rng.split(0x706F))?;
         if !graph.is_connected() {
             return Err(CfelError::Topology(format!(
                 "backhaul {} is not connected",
-                cfg.topology
+                scenario.topology
             )));
         }
         let h_pi = MixingMatrix::metropolis(&graph).power(cfg.pi);
@@ -218,11 +239,12 @@ impl Coordinator {
         );
         // Lossy upload compression shrinks every transmitted model.
         net.model_bits *= cfg.compression.ratio();
-        if let Some(lo) = cfg.heterogeneity {
-            net = net.with_heterogeneity(lo, &rng.split(0x4E37));
-        }
-        if let Some(spec) = cfg.stragglers {
-            net = net.with_stragglers(spec, &rng.split(0x5746));
+        // Capability profiles (the scenario's per-device world view; the
+        // derived kind replays the flat heterogeneity/straggler draws
+        // from the same root-RNG splits) and link overrides.
+        scenario.capabilities.apply(&mut net, &rng)?;
+        if let Some(links) = &scenario.links {
+            links.apply(&mut net);
         }
         let latency: Box<dyn LatencyEstimator> = match cfg.latency {
             LatencyMode::ClosedForm => Box::new(ClosedFormEstimator),
@@ -235,6 +257,8 @@ impl Coordinator {
         Ok(Coordinator {
             cfg,
             plan,
+            scenario,
+            device_cluster,
             backend,
             fed,
             clusters,
@@ -257,6 +281,7 @@ impl Coordinator {
 
     fn build_data(
         cfg: &ExperimentConfig,
+        scenario: &Scenario,
         backend: &dyn TrainBackend,
         rng: &Rng,
     ) -> Result<FederatedData> {
@@ -299,14 +324,14 @@ impl Coordinator {
                     ),
                     DataScheme::ClusterIid => partition::cluster_iid(
                         &labels,
-                        cfg.n_clusters,
-                        cfg.devices_per_cluster(),
+                        &scenario.rosters,
+                        cfg.n_devices,
                         &data_rng,
                     )?,
                     DataScheme::ClusterNonIid { c_labels } => partition::cluster_noniid(
                         &labels,
-                        cfg.n_clusters,
-                        cfg.devices_per_cluster(),
+                        &scenario.rosters,
+                        cfg.n_devices,
                         *c_labels,
                         &data_rng,
                     )?,
@@ -441,6 +466,107 @@ impl Coordinator {
     /// Graph-node index of `cluster` among currently alive clusters.
     fn count_alive_before(&self, cluster: usize) -> usize {
         (0..cluster).filter(|&i| self.alive[i]).count()
+    }
+
+    /// Apply the scenario timeline's events for the start of `round`
+    /// (membership, capability and link changes), then re-derive what
+    /// hangs off membership: every cluster's Eq. 6 / cloud weight
+    /// (`n_samples` over its current roster) and the gossip mixing
+    /// matrices. Runs single-threaded at the round boundary, so world
+    /// changes are bit-identical for any `CFEL_THREADS`.
+    pub(crate) fn apply_timeline(&mut self, round: usize) -> Result<()> {
+        let events = self.scenario.timeline.at(round);
+        if events.is_empty() {
+            return Ok(());
+        }
+        let mut membership_changed = false;
+        for e in events {
+            if self.verbose {
+                eprintln!("[scenario] round {round}: {}", e.event.describe());
+            }
+            membership_changed |= self.apply_world_event(&e.event)?;
+        }
+        if membership_changed {
+            let fed = &self.fed;
+            for c in &mut self.clusters {
+                c.n_samples = c
+                    .device_ids
+                    .iter()
+                    .map(|&d| fed.device_train[d].len())
+                    .sum();
+            }
+            // Membership events do not rewire the backhaul graph (devices
+            // move, edge servers stay), but the mixing matrices are
+            // rebuilt with the weights so any roster-dependent weighting
+            // added later cannot silently go stale.
+            if self.plan.has_gossip() {
+                self.h_pi = MixingMatrix::metropolis(&self.graph).power(self.cfg.pi);
+                self.h_cache.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one world event; returns whether cluster membership changed.
+    /// Rosters stay sorted ascending (the canonical Eq. 6 merge order),
+    /// so a device re-joining lands in the same position it would have
+    /// held all along.
+    fn apply_world_event(&mut self, ev: &WorldEvent) -> Result<bool> {
+        match *ev {
+            WorldEvent::Join { device, cluster } => {
+                if self.device_cluster[device].is_some() {
+                    return Err(CfelError::Config(format!(
+                        "timeline join: device {device} is already active"
+                    )));
+                }
+                let ids = &mut self.clusters[cluster].device_ids;
+                let pos = ids.binary_search(&device).unwrap_or_else(|p| p);
+                ids.insert(pos, device);
+                self.device_cluster[device] = Some(cluster);
+                Ok(true)
+            }
+            WorldEvent::Leave { device } => {
+                let ci = self.device_cluster[device].ok_or_else(|| {
+                    CfelError::Config(format!(
+                        "timeline leave: device {device} is not active"
+                    ))
+                })?;
+                let ids = &mut self.clusters[ci].device_ids;
+                if let Ok(pos) = ids.binary_search(&device) {
+                    ids.remove(pos);
+                }
+                self.device_cluster[device] = None;
+                Ok(true)
+            }
+            WorldEvent::Handover { device, from, to } => {
+                if self.device_cluster[device] != Some(from) {
+                    return Err(CfelError::Config(format!(
+                        "timeline handover: device {device} is not in cluster {from}"
+                    )));
+                }
+                let ids = &mut self.clusters[from].device_ids;
+                if let Ok(pos) = ids.binary_search(&device) {
+                    ids.remove(pos);
+                }
+                let ids = &mut self.clusters[to].device_ids;
+                let pos = ids.binary_search(&device).unwrap_or_else(|p| p);
+                ids.insert(pos, device);
+                self.device_cluster[device] = Some(to);
+                Ok(true)
+            }
+            WorldEvent::CapacityChange { device, factor } => {
+                self.net.device_flops[device] *= factor;
+                Ok(false)
+            }
+            WorldEvent::LinkChange { link, bps } => {
+                match link {
+                    LinkKind::DeviceEdge => self.net.b_d2e = bps,
+                    LinkKind::EdgeEdge => self.net.b_e2e = bps,
+                    LinkKind::DeviceCloud => self.net.b_d2c = bps,
+                }
+                Ok(false)
+            }
+        }
     }
 
     /// Simulated latency of this round under the active plan, via the
@@ -599,6 +725,7 @@ impl Coordinator {
         for round in 0..self.cfg.rounds {
             let t0 = Instant::now();
             self.apply_fault(round)?;
+            self.apply_timeline(round)?;
             let stats = self.plan_round(round)?;
             wall += t0.elapsed().as_secs_f64();
             let lat = self.round_latency(&stats);

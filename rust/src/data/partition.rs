@@ -94,18 +94,21 @@ pub fn shards(
     Ok(out)
 }
 
-/// Fig. 5 "Cluster IID": the pool is first dealt IID across `m` clusters,
-/// then within each cluster sorted by label and cut into
-/// `2 * devices_per_cluster` shards, 2 per device. Cluster-level
-/// distributions are homogeneous; device-level are 2-label skewed.
+/// Fig. 5 "Cluster IID": the pool is first dealt IID across the clusters,
+/// then within each cluster sorted by label and cut into `2 · |roster|`
+/// shards, 2 per rostered device. Cluster-level distributions are
+/// homogeneous; device-level are 2-label skewed. `rosters` gives each
+/// cluster's device ids (arbitrary and non-uniform — the scenario API's
+/// layout); `n_devices` sizes the returned per-device index table. Every
+/// device must appear in a roster (the pool is dealt exhaustively).
 pub fn cluster_iid(
     labels: &[u32],
-    m: usize,
-    devices_per_cluster: usize,
+    rosters: &[Vec<usize>],
+    n_devices: usize,
     rng: &Rng,
 ) -> Result<Vec<Vec<usize>>> {
-    let cluster_pools = iid(labels.len(), m, &rng.split(3));
-    two_level_shards(labels, &cluster_pools, devices_per_cluster, rng)
+    let cluster_pools = iid(labels.len(), rosters.len(), &rng.split(3));
+    two_level_shards(labels, &cluster_pools, rosters, n_devices, rng)
 }
 
 /// Fig. 5 "Cluster Non-IID(C)": sort the pool by label, cut into `C * m`
@@ -113,11 +116,12 @@ pub fn cluster_iid(
 /// within each cluster the same 2-shard-per-device split.
 pub fn cluster_noniid(
     labels: &[u32],
-    m: usize,
-    devices_per_cluster: usize,
+    rosters: &[Vec<usize>],
+    n_devices: usize,
     c_labels: usize,
     rng: &Rng,
 ) -> Result<Vec<Vec<usize>>> {
+    let m = rosters.len();
     let n_shards = c_labels * m;
     if labels.len() < n_shards {
         return Err(CfelError::Data(format!(
@@ -137,22 +141,43 @@ pub fn cluster_noniid(
         let end = if sid + 1 == n_shards { labels.len() } else { start + shard_len };
         cluster_pools[cluster].extend_from_slice(&idx[start..end]);
     }
-    two_level_shards(labels, &cluster_pools, devices_per_cluster, rng)
+    two_level_shards(labels, &cluster_pools, rosters, n_devices, rng)
 }
 
 /// Shared second level of the Fig. 5 schemes: within each cluster pool,
-/// sort by label and deal 2 shards to each of its devices. Device k of
-/// cluster i gets global device index `i * devices_per_cluster + k`.
+/// sort by label and deal 2 shards to each of the cluster's rostered
+/// devices. Shard `pos` of cluster i goes to device `rosters[i][pos / 2]`
+/// — with the historical contiguous uniform rosters this is exactly the
+/// old `i * devices_per_cluster + pos / 2` layout, bit for bit.
 fn two_level_shards(
     labels: &[u32],
     cluster_pools: &[Vec<usize>],
-    devices_per_cluster: usize,
+    rosters: &[Vec<usize>],
+    n_devices: usize,
     rng: &Rng,
 ) -> Result<Vec<Vec<usize>>> {
-    let m = cluster_pools.len();
-    let mut out = vec![Vec::new(); m * devices_per_cluster];
+    if rosters.len() != cluster_pools.len() {
+        return Err(CfelError::Data(format!(
+            "{} rosters for {} cluster pools",
+            rosters.len(),
+            cluster_pools.len()
+        )));
+    }
+    let mut out = vec![Vec::new(); n_devices];
     for (ci, pool) in cluster_pools.iter().enumerate() {
-        let n_shards = 2 * devices_per_cluster;
+        let devices = &rosters[ci];
+        if devices.is_empty() {
+            return Err(CfelError::Data(format!(
+                "cluster {ci} rosters no devices; cluster data schemes \
+                 need every cluster populated"
+            )));
+        }
+        if let Some(&bad) = devices.iter().find(|&&d| d >= n_devices) {
+            return Err(CfelError::Data(format!(
+                "cluster {ci} roster names device {bad} >= n_devices {n_devices}"
+            )));
+        }
+        let n_shards = 2 * devices.len();
         if pool.len() < n_shards {
             return Err(CfelError::Data(format!(
                 "cluster {ci} pool of {} cannot fill {n_shards} shards",
@@ -165,7 +190,7 @@ fn two_level_shards(
         rng.split(5).split(ci as u64).shuffle(&mut shard_ids);
         let shard_len = idx.len() / n_shards;
         for (pos, &sid) in shard_ids.iter().enumerate() {
-            let dev = ci * devices_per_cluster + pos / 2;
+            let dev = devices[pos / 2];
             let start = sid * shard_len;
             let end = if sid + 1 == n_shards { idx.len() } else { start + shard_len };
             out[dev].extend_from_slice(&idx[start..end]);
@@ -222,6 +247,11 @@ mod tests {
 
     fn labels(n: usize, classes: u32) -> Vec<u32> {
         (0..n).map(|i| (i as u32) % classes).collect()
+    }
+
+    /// The historical contiguous uniform layout, as roster lists.
+    fn uniform_rosters(m: usize, dpc: usize) -> Vec<Vec<usize>> {
+        (0..m).map(|ci| (ci * dpc..(ci + 1) * dpc).collect()).collect()
     }
 
     #[test]
@@ -291,7 +321,7 @@ mod tests {
         let l = labels(1600, 10);
         let m = 4;
         let dpc = 4;
-        let parts = cluster_iid(&l, m, dpc, &Rng::new(5)).unwrap();
+        let parts = cluster_iid(&l, &uniform_rosters(m, dpc), m * dpc, &Rng::new(5)).unwrap();
         validate_partition(&parts, 1600, true).unwrap();
         assert_eq!(parts.len(), 16);
         // Cluster-level histograms near-uniform; device-level skewed.
@@ -325,7 +355,8 @@ mod tests {
         let m = 4;
         let dpc = 4;
         for c in [2usize, 5] {
-            let parts = cluster_noniid(&l, m, dpc, c, &Rng::new(6)).unwrap();
+            let parts =
+                cluster_noniid(&l, &uniform_rosters(m, dpc), m * dpc, c, &Rng::new(6)).unwrap();
             validate_partition(&parts, 1600, true).unwrap();
             for ci in 0..m {
                 let mut distinct: Vec<u32> = Vec::new();
@@ -354,7 +385,8 @@ mod tests {
         let m = 8;
         let dpc = 2;
         let spread = |c: usize| {
-            let parts = cluster_noniid(&l, m, dpc, c, &Rng::new(7)).unwrap();
+            let parts =
+                cluster_noniid(&l, &uniform_rosters(m, dpc), m * dpc, c, &Rng::new(7)).unwrap();
             // Mean per-cluster max-label fraction (1.0 = single label).
             let mut acc = 0.0;
             for ci in 0..m {
@@ -370,6 +402,25 @@ mod tests {
             acc / m as f64
         };
         assert!(spread(2) > spread(8) + 0.1, "{} vs {}", spread(2), spread(8));
+    }
+
+    #[test]
+    fn uneven_rosters_partition_by_roster_ids() {
+        // Non-uniform, non-contiguous rosters (the scenario layout): the
+        // pool must land exactly on the rostered device ids, exhaustively.
+        let l = labels(1200, 10);
+        let rosters: Vec<Vec<usize>> = vec![vec![0, 2, 4, 6, 8], vec![1, 3, 5], vec![7, 9]];
+        let parts = cluster_iid(&l, &rosters, 10, &Rng::new(8)).unwrap();
+        validate_partition(&parts, 1200, true).unwrap();
+        assert!(parts.iter().all(|p| !p.is_empty()));
+        let parts = cluster_noniid(&l, &rosters, 10, 3, &Rng::new(8)).unwrap();
+        validate_partition(&parts, 1200, true).unwrap();
+        // An empty roster cannot receive its cluster pool.
+        let holey: Vec<Vec<usize>> = vec![vec![0, 1], vec![]];
+        assert!(cluster_iid(&l, &holey, 2, &Rng::new(8)).is_err());
+        // Out-of-range roster ids are rejected.
+        let oob: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 99]];
+        assert!(cluster_iid(&l, &oob, 4, &Rng::new(8)).is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod model;
 pub mod netsim;
 pub mod plan;
 pub mod runtime;
+pub mod scenario;
 pub mod topology;
 pub mod util;
 

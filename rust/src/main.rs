@@ -72,13 +72,20 @@ fn train_command() -> Command {
             "explicit federation plan, e.g. \"edge(2)*2; gossip(10)\" \
              (replaces --algorithm; run with --dry-run to inspect)",
         )
+        .flag(
+            "scenario",
+            "load a Scenario JSON (world description: rosters, capability \
+             profiles, churn/handover timeline; fixes devices/clusters/topology \
+             — see examples/scenarios/)",
+        )
         .bool_flag(
             "dry-run",
-            "print the resolved plan, config summary and cluster layout, then exit",
+            "print the resolved plan, config summary, cluster layout and \
+             scenario timeline, then exit",
         )
         .bool_flag("print-plan", "alias for --dry-run")
         .flag_default("devices", "16", "total devices n")
-        .flag_default("clusters", "4", "edge servers m (must divide n)")
+        .flag_default("clusters", "4", "edge servers m (uneven splits allowed; remainder goes to the first clusters)")
         .flag_default("tau", "2", "local epochs per edge round (τ)")
         .flag_default("q", "2", "edge rounds per global round")
         .flag_default("pi", "10", "gossip steps per global aggregation (π)")
@@ -215,6 +222,18 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     cfg.compression =
         cfel::compression::Compressor::parse(&args.get_or("compression", &cfg.compression.name()))?;
     cfg.participation = args.get_f64("participation", cfg.participation);
+    if let Some(path) = args.get("scenario") {
+        // The scenario owns the world shape: it fixes the device/cluster
+        // counts and the topology (any --devices/--clusters/--topology
+        // values are superseded), while --heterogeneity/--stragglers are
+        // rejected by validate below — capability profiles live in the
+        // scenario.
+        let s = cfel::scenario::Scenario::load(std::path::Path::new(path))?;
+        cfg.n_devices = s.n_devices;
+        cfg.n_clusters = s.n_clusters();
+        cfg.topology = s.topology.clone();
+        cfg.scenario = Some(s);
+    }
     cfg.validate()?;
 
     if args.get_bool("dry-run") || args.get_bool("print-plan") {
@@ -233,7 +252,7 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         cfg.tau,
         cfg.q,
         cfg.pi,
-        cfg.topology,
+        coord.scenario.topology,
         cfg.data.name(),
         cfg.latency.name(),
         cfg.resolved_policy().name()
@@ -292,11 +311,15 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
 }
 
 /// `--dry-run` / `--print-plan`: show what would run — the resolved plan
-/// with its per-round communication structure, the headline config, and
-/// the device/cluster layout — without building data or training anything.
+/// with its per-round communication structure, the headline config, the
+/// resolved scenario's roster layout and its world-event timeline —
+/// without building data or training anything. The scenario (explicit or
+/// the flat lowering) is fully validated here, so a broken `--scenario`
+/// file fails in the dry run.
 fn print_dry_run(cfg: &ExperimentConfig) {
     let plan = cfg.resolved_plan();
     let comms = plan.comms();
+    let scenario = cfg.resolved_scenario();
     println!("plan:       {plan}");
     println!(
         "  per round: {} edge phase(s) ({} via edge uplink, {} via cloud uplink), \
@@ -310,23 +333,49 @@ fn print_dry_run(cfg: &ExperimentConfig) {
     println!("series:     {}", cfg.run_label());
     println!("rounds:     {}", cfg.rounds);
     println!("seed:       {}", cfg.seed);
-    println!("topology:   {}", cfg.topology);
+    println!("scenario:   {}", scenario.name);
+    println!("topology:   {}", scenario.topology);
     println!("data:       {}", cfg.data.name());
     println!("latency:    {}", cfg.latency.name());
     println!("policy:     {}", cfg.resolved_policy().name());
-    let dpc = cfg.devices_per_cluster();
+    let dormant = scenario.dormant_count();
     println!(
-        "layout:     {} devices / {} clusters ({} devices per edge server)",
-        cfg.n_devices, cfg.n_clusters, dpc
+        "layout:     {} devices / {} clusters{}",
+        cfg.n_devices,
+        cfg.n_clusters,
+        if dormant > 0 {
+            format!(" ({dormant} dormant until a join event)")
+        } else {
+            String::new()
+        }
     );
-    let shown = cfg.n_clusters.min(8);
-    for ci in 0..shown {
-        println!("  cluster {ci}: devices {}..={}", ci * dpc, (ci + 1) * dpc - 1);
+    let shown = scenario.rosters.len().min(8);
+    for (ci, roster) in scenario.rosters.iter().take(shown).enumerate() {
+        println!("  cluster {ci}: {} device(s) {}", roster.len(), roster_label(roster));
     }
-    if cfg.n_clusters > shown {
-        println!("  ... ({} more clusters)", cfg.n_clusters - shown);
+    if scenario.rosters.len() > shown {
+        println!("  ... ({} more clusters)", scenario.rosters.len() - shown);
     }
+    println!("timeline:   {}", scenario.timeline.summary());
     println!("(dry run — nothing was trained)");
+}
+
+/// Compact roster rendering: a contiguous range as `a..=b`, anything else
+/// as an id list capped at 8 entries.
+fn roster_label(roster: &[usize]) -> String {
+    if roster.is_empty() {
+        return "(empty)".into();
+    }
+    if roster.windows(2).all(|w| w[1] == w[0] + 1) {
+        return format!("{}..={}", roster[0], roster[roster.len() - 1]);
+    }
+    let ids: Vec<String> = roster.iter().take(8).map(|d| d.to_string()).collect();
+    let more = if roster.len() > 8 {
+        format!(", +{} more", roster.len() - 8)
+    } else {
+        String::new()
+    };
+    format!("[{}{}]", ids.join(", "), more)
 }
 
 fn cmd_figures(argv: &[String]) -> i32 {

@@ -187,6 +187,22 @@ impl UploadChannel {
             UploadChannel::DeviceCloud => net.b_d2c,
         }
     }
+
+    /// Bandwidth the given device reports over: a per-device uplink
+    /// override (scenario capability profiles) applies to the edge
+    /// channel; the cloud channel is always the shared `b_d2c`. With no
+    /// override this is exactly [`UploadChannel::bandwidth`].
+    pub fn device_bandwidth(self, net: &NetworkModel, device: usize) -> f64 {
+        match self {
+            UploadChannel::DeviceEdge => net
+                .device_uplink
+                .get(device)
+                .copied()
+                .flatten()
+                .unwrap_or(net.b_d2e),
+            UploadChannel::DeviceCloud => net.b_d2c,
+        }
+    }
 }
 
 /// One device's simulated timing within an edge phase.
@@ -415,7 +431,14 @@ impl EventDrivenEstimator {
                 close_reason: CloseReason::AllReported,
             };
         }
-        let upload = net.model_bits / channel.bandwidth(net);
+        // Per-device upload seconds: devices transmit on dedicated links,
+        // and a scenario capability profile may give a device its own
+        // uplink bandwidth. Without overrides every entry is the shared
+        // `W / b` the pre-scenario simulator charged (bit-identical).
+        let upload: Vec<f64> = work
+            .iter()
+            .map(|&(dev, _)| net.model_bits / channel.device_bandwidth(net, dev))
+            .collect();
         let mut queue = EventQueue::new();
         for (slot, &(dev, steps)) in work.iter().enumerate() {
             queue.schedule(Event {
@@ -437,7 +460,7 @@ impl EventDrivenEstimator {
                 EventKind::ComputeDone => {
                     compute[ev.id] = ev.time_s;
                     queue.schedule(Event {
-                        time_s: ev.time_s + upload,
+                        time_s: ev.time_s + upload[ev.id],
                         kind: EventKind::UploadDone,
                         id: ev.id,
                     });
@@ -472,7 +495,7 @@ impl EventDrivenEstimator {
             .map(|(slot, &(dev, _))| DeviceTiming {
                 device: dev,
                 compute_s: compute[slot],
-                upload_s: upload,
+                upload_s: upload[slot],
                 finish_s: finish[slot],
                 verdict: if finish[slot] <= close_s {
                     ReportVerdict::OnTime
@@ -756,6 +779,35 @@ mod tests {
         assert_eq!(events, 10);
         let (t0, e0) = EventDrivenEstimator::simulate_gossip(&m, 0);
         assert_eq!((t0, e0), (0.0, 0));
+    }
+
+    #[test]
+    fn per_device_uplink_override_slows_only_that_device() {
+        let mut m = net();
+        // Device 1 reports over a 1 Mbps radio instead of the shared 10.
+        m.device_uplink[1] = Some(1e6);
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let pt = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &FullBarrier,
+        );
+        assert!((pt.devices[1].upload_s - m.model_bits / 1e6).abs() < 1e-9);
+        for d in [0usize, 2, 3] {
+            assert!((pt.devices[d].upload_s - m.model_bits / m.b_d2e).abs() < 1e-9);
+        }
+        // The barrier waits for the overridden device's slower report.
+        assert!(pt.devices[1].finish_s > pt.devices[0].finish_s);
+        assert_eq!(pt.duration_s.to_bits(), pt.devices[1].finish_s.to_bits());
+        // Overrides never touch the cloud channel.
+        let cloud = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceCloud,
+            &FullBarrier,
+        );
+        assert!((cloud.devices[1].upload_s - m.model_bits / m.b_d2c).abs() < 1e-9);
     }
 
     #[test]

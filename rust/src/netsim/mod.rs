@@ -58,6 +58,11 @@ pub struct NetworkModel {
     pub model_bits: f64,
     /// Per-device processing capability c_k in FLOP/s.
     pub device_flops: Vec<f64>,
+    /// Per-device device→edge uplink override, bits/s (`None` = the
+    /// shared `b_d2e`). Filled by explicit scenario capability profiles;
+    /// honored by the event simulator, which models uploads per device
+    /// (the closed-form Eq. 8 keeps the shared channel).
+    pub device_uplink: Vec<Option<f64>>,
     /// Device→edge uplink, bits/s (paper: 10 Mbps).
     pub b_d2e: f64,
     /// Edge↔edge backhaul, bits/s (paper: 50 Mbps).
@@ -133,6 +138,7 @@ impl NetworkModel {
             batch_size,
             model_bits: 32.0 * param_count as f64,
             device_flops: vec![IPHONE_X_FLOPS; n_devices],
+            device_uplink: vec![None; n_devices],
             b_d2e: 10.0 * MBPS,
             b_e2e: 50.0 * MBPS,
             b_d2c: 1.0 * MBPS,

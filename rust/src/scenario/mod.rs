@@ -1,0 +1,616 @@
+//! The `Scenario` API — the *world* as a first-class, time-varying object.
+//!
+//! The flat `ExperimentConfig` knobs describe one static uniform world: a
+//! forced-even `n_devices / n_clusters` split, a frozen capability table
+//! drawn once from `heterogeneity` / `stragglers`, a topology named by a
+//! string. The mobile-edge setting of the paper (§3) is the opposite —
+//! coverage is uneven and devices move, appear and disappear. A
+//! [`Scenario`] owns that description:
+//!
+//! * **rosters** — per-cluster device lists, arbitrary and non-uniform;
+//!   devices absent from every roster are *dormant* until a
+//!   [`WorldEvent::Join`] activates them;
+//! * **capability profiles** ([`CapabilityProfiles`]) — per-device compute
+//!   capacity and optional per-device uplink bandwidth, either drawn from
+//!   the experiment seed exactly like the flat `heterogeneity` /
+//!   `stragglers` knobs ([`CapabilityProfiles::Derived`]) or spelled out
+//!   per device ([`CapabilityProfiles::Explicit`]);
+//! * **links** ([`LinkSpec`]) — overrides for the shared d2e/e2e/d2c
+//!   bandwidths;
+//! * a round-indexed [`Timeline`] of world events (churn, handover,
+//!   capacity and link changes) that the coordinator applies at round
+//!   boundaries, re-deriving the Eq. 6 weights and the gossip mixing
+//!   matrices when membership changes.
+//!
+//! Every flat config *lowers* into a static scenario
+//! ([`Scenario::from_flat`]) that reproduces it bit for bit — the flat
+//! knobs are sugar, pinned by `rust/tests/scenario_equivalence.rs`.
+//! Scenarios round-trip through JSON (`--scenario <file.json>`, like
+//! `--plan`); see `examples/scenarios/` for shipped files and the README
+//! for the schema.
+
+pub mod timeline;
+
+pub use timeline::{ChurnSpec, LinkKind, Timeline, TimelineEvent, WorldEvent};
+
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::error::{CfelError, Result};
+use crate::netsim::{NetworkModel, StragglerSpec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One device's explicit capability profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// Compute capacity c_k in FLOP/s (Eq. 8's denominator).
+    pub flops: f64,
+    /// Optional device→edge uplink override in bits/s (None = the shared
+    /// `b_d2e`). Only the event-driven latency mode simulates uploads per
+    /// device, so `ExperimentConfig::validate` rejects overrides under the
+    /// closed-form Eq. 8 (which could only charge the shared channel).
+    pub uplink_bps: Option<f64>,
+}
+
+/// Where the per-device capability table comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CapabilityProfiles {
+    /// Draw from the experiment seed exactly like the flat knobs: every
+    /// device at the paper's iPhone-X capacity, optionally rescaled by
+    /// `c_k ~ U[lo,1]` heterogeneity and a heavy-tail straggler subset.
+    /// This is what flat configs lower to — the same RNG streams, so the
+    /// lowering is bit-identical.
+    Derived {
+        heterogeneity: Option<f64>,
+        stragglers: Option<StragglerSpec>,
+    },
+    /// One explicit [`DeviceProfile`] per device (length = `n_devices`).
+    Explicit(Vec<DeviceProfile>),
+}
+
+impl CapabilityProfiles {
+    /// The paper's homogeneous fleet.
+    pub fn uniform() -> CapabilityProfiles {
+        CapabilityProfiles::Derived { heterogeneity: None, stragglers: None }
+    }
+
+    /// Write this profile set into the network model. `rng` is the
+    /// coordinator's root stream; the derived path splits it exactly as
+    /// the pre-scenario coordinator did (0x4E37 / 0x5746).
+    pub fn apply(&self, net: &mut NetworkModel, rng: &Rng) -> Result<()> {
+        match self {
+            CapabilityProfiles::Derived { heterogeneity, stragglers } => {
+                if let Some(lo) = heterogeneity {
+                    *net = net.clone().with_heterogeneity(*lo, &rng.split(0x4E37));
+                }
+                if let Some(spec) = stragglers {
+                    *net = net.clone().with_stragglers(*spec, &rng.split(0x5746));
+                }
+                Ok(())
+            }
+            CapabilityProfiles::Explicit(profiles) => {
+                if profiles.len() != net.device_flops.len() {
+                    return Err(CfelError::Config(format!(
+                        "{} capability profiles for {} devices",
+                        profiles.len(),
+                        net.device_flops.len()
+                    )));
+                }
+                for (k, p) in profiles.iter().enumerate() {
+                    net.device_flops[k] = p.flops;
+                    net.device_uplink[k] = p.uplink_bps;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn validate(&self, n_devices: usize) -> Result<()> {
+        match self {
+            CapabilityProfiles::Derived { heterogeneity, stragglers } => {
+                if let Some(lo) = heterogeneity {
+                    if !(0.0 < *lo && *lo <= 1.0) {
+                        return Err(CfelError::Config(format!(
+                            "scenario heterogeneity {lo} outside (0,1]"
+                        )));
+                    }
+                }
+                if let Some(spec) = stragglers {
+                    spec.validate()?;
+                }
+                Ok(())
+            }
+            CapabilityProfiles::Explicit(profiles) => {
+                if profiles.len() != n_devices {
+                    return Err(CfelError::Config(format!(
+                        "scenario lists {} capability profiles for {n_devices} devices",
+                        profiles.len()
+                    )));
+                }
+                for (k, p) in profiles.iter().enumerate() {
+                    if !(p.flops > 0.0 && p.flops.is_finite()) {
+                        return Err(CfelError::Config(format!(
+                            "device {k} capability {} FLOP/s must be positive and finite",
+                            p.flops
+                        )));
+                    }
+                    if let Some(u) = p.uplink_bps {
+                        if !(u > 0.0 && u.is_finite()) {
+                            return Err(CfelError::Config(format!(
+                                "device {k} uplink {u} bit/s must be positive and finite"
+                            )));
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Optional shared-link bandwidth overrides (paper §6.1 defaults apply
+/// where `None`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LinkSpec {
+    /// Device → edge uplink, bits/s (default 10 Mbps).
+    pub b_d2e: Option<f64>,
+    /// Edge ↔ edge backhaul, bits/s (default 50 Mbps).
+    pub b_e2e: Option<f64>,
+    /// Device → cloud uplink, bits/s (default 1 Mbps).
+    pub b_d2c: Option<f64>,
+}
+
+impl LinkSpec {
+    pub fn apply(&self, net: &mut NetworkModel) {
+        if let Some(b) = self.b_d2e {
+            net.b_d2e = b;
+        }
+        if let Some(b) = self.b_e2e {
+            net.b_e2e = b;
+        }
+        if let Some(b) = self.b_d2c {
+            net.b_d2c = b;
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, b) in [
+            ("b_d2e", self.b_d2e),
+            ("b_e2e", self.b_e2e),
+            ("b_d2c", self.b_d2c),
+        ] {
+            if let Some(b) = b {
+                if !(b > 0.0 && b.is_finite()) {
+                    return Err(CfelError::Config(format!(
+                        "scenario link {name} = {b} bit/s must be positive and finite"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.b_d2e.is_none() && self.b_e2e.is_none() && self.b_d2c.is_none()
+    }
+}
+
+/// The full world description one experiment runs in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Name, included in [`ExperimentConfig::run_label`] so CSV rows from
+    /// scenario runs stay distinguishable from canned-config runs.
+    pub name: String,
+    /// Total device universe (data and capability tables are sized to
+    /// it). Devices `0..n_devices` outside every roster start dormant.
+    pub n_devices: usize,
+    /// Per-cluster device id lists, each sorted strictly ascending (the
+    /// canonical order — Eq. 6 merges follow roster order).
+    pub rosters: Vec<Vec<usize>>,
+    pub capabilities: CapabilityProfiles,
+    /// Backhaul topology spec: "ring" | "complete" | "star" | "line" |
+    /// "er:<p>" (built against the experiment seed, like the flat knob).
+    pub topology: String,
+    pub links: Option<LinkSpec>,
+    pub timeline: Timeline,
+}
+
+impl Scenario {
+    /// Contiguous rosters of the given sizes: cluster i owns the next
+    /// `sizes[i]` device ids (the paper's §5.2 layout, generalized to
+    /// uneven sizes).
+    pub fn contiguous_rosters(sizes: &[usize]) -> Vec<Vec<usize>> {
+        let mut rosters = Vec::with_capacity(sizes.len());
+        let mut next = 0usize;
+        for &s in sizes {
+            rosters.push((next..next + s).collect());
+            next += s;
+        }
+        rosters
+    }
+
+    /// Lower a flat config into the static scenario it has always meant:
+    /// contiguous rosters from [`ExperimentConfig::cluster_sizes`], the
+    /// derived capability profile its `heterogeneity` / `stragglers`
+    /// knobs name, its topology, paper-default links, an empty timeline.
+    /// `rust/tests/scenario_equivalence.rs` pins this lowering
+    /// bit-identical to the flat run.
+    pub fn from_flat(cfg: &ExperimentConfig) -> Scenario {
+        Scenario {
+            name: format!("static-{}", cfg.name),
+            n_devices: cfg.n_devices,
+            rosters: Self::contiguous_rosters(&cfg.cluster_sizes()),
+            capabilities: CapabilityProfiles::Derived {
+                heterogeneity: cfg.heterogeneity,
+                stragglers: cfg.stragglers,
+            },
+            topology: cfg.topology.clone(),
+            links: None,
+            timeline: Timeline::default(),
+        }
+    }
+
+    /// Devices outside every initial roster (activatable by `Join`).
+    pub fn dormant_count(&self) -> usize {
+        let rostered: usize = self.rosters.iter().map(|r| r.len()).sum();
+        self.n_devices - rostered
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.rosters.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_devices == 0 || self.rosters.is_empty() {
+            return Err(CfelError::Config(
+                "scenario needs at least 1 device and 1 cluster".into(),
+            ));
+        }
+        let mut seen = vec![false; self.n_devices];
+        let mut rostered = 0usize;
+        for (ci, roster) in self.rosters.iter().enumerate() {
+            let mut prev: Option<usize> = None;
+            for &d in roster {
+                if d >= self.n_devices {
+                    return Err(CfelError::Config(format!(
+                        "cluster {ci} roster names device {d} >= n_devices {}",
+                        self.n_devices
+                    )));
+                }
+                if seen[d] {
+                    return Err(CfelError::Config(format!(
+                        "device {d} appears in two rosters"
+                    )));
+                }
+                seen[d] = true;
+                rostered += 1;
+                if let Some(p) = prev {
+                    if d <= p {
+                        return Err(CfelError::Config(format!(
+                            "cluster {ci} roster is not sorted strictly ascending \
+                             (the canonical Eq. 6 merge order)"
+                        )));
+                    }
+                }
+                prev = Some(d);
+            }
+        }
+        if rostered == 0 {
+            return Err(CfelError::Config(
+                "scenario rosters no devices at round 0 (nothing would train)".into(),
+            ));
+        }
+        self.capabilities.validate(self.n_devices)?;
+        if let Some(l) = &self.links {
+            l.validate()?;
+        }
+        self.timeline.validate(self.n_devices, &self.rosters)?;
+        Ok(())
+    }
+
+    // ----- JSON persistence --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::from_str_val(&self.name))
+            .set("n_devices", Json::from_usize(self.n_devices))
+            .set("topology", Json::from_str_val(&self.topology))
+            .set(
+                "rosters",
+                Json::Arr(
+                    self.rosters
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|&d| Json::from_usize(d)).collect()))
+                        .collect(),
+                ),
+            );
+        match &self.capabilities {
+            CapabilityProfiles::Derived { heterogeneity, stragglers } => {
+                let mut c = Json::obj();
+                c.set("kind", Json::from_str_val("derived"));
+                if let Some(h) = heterogeneity {
+                    c.set("heterogeneity", Json::from_f64(*h));
+                }
+                if let Some(s) = stragglers {
+                    c.set("stragglers", Json::from_str_val(&s.name()));
+                }
+                o.set("capabilities", c);
+            }
+            CapabilityProfiles::Explicit(profiles) => {
+                let mut c = Json::obj();
+                c.set("kind", Json::from_str_val("explicit")).set(
+                    "profiles",
+                    Json::Arr(
+                        profiles
+                            .iter()
+                            .map(|p| {
+                                let mut e = Json::obj();
+                                e.set("flops", Json::from_f64(p.flops));
+                                if let Some(u) = p.uplink_bps {
+                                    e.set("uplink_bps", Json::from_f64(u));
+                                }
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o.set("capabilities", c);
+            }
+        }
+        if let Some(l) = &self.links {
+            if !l.is_empty() {
+                let mut lj = Json::obj();
+                if let Some(b) = l.b_d2e {
+                    lj.set("b_d2e", Json::from_f64(b));
+                }
+                if let Some(b) = l.b_e2e {
+                    lj.set("b_e2e", Json::from_f64(b));
+                }
+                if let Some(b) = l.b_d2c {
+                    lj.set("b_d2c", Json::from_f64(b));
+                }
+                o.set("links", lj);
+            }
+        }
+        if !self.timeline.is_empty() {
+            o.set("timeline", self.timeline.to_json());
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let mut rosters = Vec::new();
+        for r in j.get("rosters")?.as_arr()? {
+            let mut ids = Vec::new();
+            for d in r.as_arr()? {
+                ids.push(d.as_usize()?);
+            }
+            rosters.push(ids);
+        }
+        let n_devices = match j.opt("n_devices") {
+            Some(v) => v.as_usize()?,
+            // Default: the smallest universe covering every rostered id.
+            None => rosters.iter().flatten().max().map_or(0, |&m| m + 1),
+        };
+        let capabilities = match j.opt("capabilities") {
+            None => CapabilityProfiles::uniform(),
+            Some(c) => match c.get("kind")?.as_str()? {
+                "derived" => CapabilityProfiles::Derived {
+                    heterogeneity: c.opt("heterogeneity").map(|v| v.as_f64()).transpose()?,
+                    stragglers: c
+                        .opt("stragglers")
+                        .map(|v| v.as_str().and_then(StragglerSpec::parse))
+                        .transpose()?,
+                },
+                "explicit" => {
+                    let mut profiles = Vec::new();
+                    for p in c.get("profiles")?.as_arr()? {
+                        profiles.push(DeviceProfile {
+                            flops: p.get("flops")?.as_f64()?,
+                            uplink_bps: p.opt("uplink_bps").map(|v| v.as_f64()).transpose()?,
+                        });
+                    }
+                    CapabilityProfiles::Explicit(profiles)
+                }
+                other => {
+                    return Err(CfelError::Config(format!(
+                        "unknown capabilities kind {other:?} (derived | explicit)"
+                    )))
+                }
+            },
+        };
+        let links = match j.opt("links") {
+            None => None,
+            Some(l) => Some(LinkSpec {
+                b_d2e: l.opt("b_d2e").map(|v| v.as_f64()).transpose()?,
+                b_e2e: l.opt("b_e2e").map(|v| v.as_f64()).transpose()?,
+                b_d2c: l.opt("b_d2c").map(|v| v.as_f64()).transpose()?,
+            }),
+        };
+        let timeline = match j.opt("timeline") {
+            Some(t) => Timeline::from_json(t, &rosters)?,
+            None => Timeline::default(),
+        };
+        let scenario = Scenario {
+            name: j
+                .opt("name")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "scenario".into()),
+            n_devices,
+            rosters,
+            capabilities,
+            topology: j
+                .opt("topology")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "ring".into()),
+            links,
+            timeline,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    /// Load and validate a scenario JSON file (the `--scenario` path).
+    pub fn load(path: &Path) -> Result<Scenario> {
+        Scenario::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_flat_matches_the_legacy_contiguous_layout() {
+        let cfg = ExperimentConfig::quickstart(); // 16 devices / 4 clusters
+        let s = Scenario::from_flat(&cfg);
+        assert_eq!(s.n_devices, 16);
+        assert_eq!(s.rosters.len(), 4);
+        for (ci, roster) in s.rosters.iter().enumerate() {
+            let want: Vec<usize> = (ci * 4..(ci + 1) * 4).collect();
+            assert_eq!(roster, &want);
+        }
+        assert_eq!(s.topology, "ring");
+        assert_eq!(s.dormant_count(), 0);
+        assert!(s.timeline.is_empty());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn from_flat_distributes_the_remainder_to_the_first_clusters() {
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.n_devices = 18; // 18 / 4 = 4 rem 2
+        let s = Scenario::from_flat(&cfg);
+        let sizes: Vec<usize> = s.rosters.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![5, 5, 4, 4]);
+        assert_eq!(s.rosters[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(s.rosters[3], vec![14, 15, 16, 17]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn derived_apply_matches_the_flat_knob_draws() {
+        // The lowering contract: Derived::apply must reproduce the exact
+        // RNG streams the pre-scenario coordinator used.
+        let rng = Rng::new(11);
+        let spec = StragglerSpec { fraction: 0.25, slowdown: 50.0 };
+        let direct = NetworkModel::paper_defaults(8, 1e6, 16, 1000)
+            .with_heterogeneity(0.5, &rng.split(0x4E37))
+            .with_stragglers(spec, &rng.split(0x5746));
+        let mut via = NetworkModel::paper_defaults(8, 1e6, 16, 1000);
+        CapabilityProfiles::Derived { heterogeneity: Some(0.5), stragglers: Some(spec) }
+            .apply(&mut via, &rng)
+            .unwrap();
+        assert_eq!(direct.device_flops, via.device_flops);
+    }
+
+    #[test]
+    fn explicit_profiles_write_flops_and_uplinks() {
+        let mut net = NetworkModel::paper_defaults(2, 1e6, 16, 1000);
+        let profiles = vec![
+            DeviceProfile { flops: 1e9, uplink_bps: Some(5e6) },
+            DeviceProfile { flops: 2e9, uplink_bps: None },
+        ];
+        CapabilityProfiles::Explicit(profiles.clone())
+            .apply(&mut net, &Rng::new(0))
+            .unwrap();
+        assert_eq!(net.device_flops, vec![1e9, 2e9]);
+        assert_eq!(net.device_uplink, vec![Some(5e6), None]);
+        // Wrong length rejected by both apply and validate.
+        let short = CapabilityProfiles::Explicit(profiles[..1].to_vec());
+        assert!(short.apply(&mut net, &Rng::new(0)).is_err());
+        assert!(short.validate(2).is_err());
+    }
+
+    #[test]
+    fn link_spec_applies_only_what_it_names() {
+        let mut net = NetworkModel::paper_defaults(2, 1e6, 16, 1000);
+        let d2e = net.b_d2e;
+        LinkSpec { b_d2e: None, b_e2e: Some(2.5e7), b_d2c: None }.apply(&mut net);
+        assert_eq!(net.b_d2e, d2e);
+        assert_eq!(net.b_e2e, 2.5e7);
+        assert!(LinkSpec { b_e2e: Some(-1.0), ..LinkSpec::default() }.validate().is_err());
+        assert!(LinkSpec::default().is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_rosters() {
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        s.rosters[0] = vec![0, 0, 1, 2]; // duplicate within a roster
+        assert!(s.validate().is_err());
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        s.rosters[0] = vec![1, 0, 2, 3]; // unsorted
+        assert!(s.validate().is_err());
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        s.rosters[1][0] = 0; // device 0 in two rosters
+        assert!(s.validate().is_err());
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        s.rosters[0] = vec![0, 1, 2, 99]; // out of range
+        assert!(s.validate().is_err());
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        for r in &mut s.rosters {
+            r.clear(); // nobody rostered
+        }
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut s = Scenario::from_flat(&ExperimentConfig::quickstart());
+        s.name = "roundtrip".into();
+        s.rosters = vec![vec![0, 1, 2, 3, 4, 5], vec![6, 7, 8], vec![9, 10], vec![11]];
+        s.n_devices = 14; // devices 12, 13 dormant
+        s.capabilities = CapabilityProfiles::Derived {
+            heterogeneity: Some(0.5),
+            stragglers: Some(StragglerSpec { fraction: 0.25, slowdown: 100.0 }),
+        };
+        s.links = Some(LinkSpec { b_d2e: None, b_e2e: Some(2.5e7), b_d2c: None });
+        s.timeline = Timeline {
+            events: vec![
+                TimelineEvent { round: 2, event: WorldEvent::Join { device: 12, cluster: 3 } },
+                TimelineEvent {
+                    round: 3,
+                    event: WorldEvent::Handover { device: 0, from: 0, to: 1 },
+                },
+            ],
+        };
+        s.validate().unwrap();
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Explicit profiles survive the round trip too.
+        s.capabilities = CapabilityProfiles::Explicit(
+            (0..14)
+                .map(|k| DeviceProfile {
+                    flops: 1e9 + k as f64,
+                    uplink_bps: if k % 2 == 0 { Some(5e6) } else { None },
+                })
+                .collect(),
+        );
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn from_json_defaults_and_churn_expansion() {
+        let j = Json::parse(
+            r#"{
+                "rosters": [[0, 1, 2], [3, 4, 5]],
+                "timeline": {"churn": {"p_leave": 0.5, "p_join": 0.5, "rounds": 6, "seed": 3}}
+            }"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.n_devices, 6, "n_devices inferred from rosters");
+        assert_eq!(s.topology, "ring");
+        assert_eq!(s.capabilities, CapabilityProfiles::uniform());
+        let want = Timeline::markov_churn(
+            &s.rosters,
+            &ChurnSpec { p_leave: 0.5, p_join: 0.5, rounds: 6, seed: 3 },
+        )
+        .unwrap();
+        assert_eq!(s.timeline, want);
+    }
+}

@@ -1,0 +1,609 @@
+//! Round-indexed world-event timeline — the time-varying half of a
+//! [`Scenario`](crate::scenario::Scenario).
+//!
+//! A [`Timeline`] is a list of [`TimelineEvent`]s, each naming the global
+//! round at whose *start* it fires. The coordinator applies the events of
+//! round `r` at the round boundary (single-threaded, before any training),
+//! so world changes are deterministic for any `CFEL_THREADS`:
+//!
+//! * [`WorldEvent::Join`] / [`WorldEvent::Leave`] — a device appears in /
+//!   disappears from a cluster's roster (coverage churn);
+//! * [`WorldEvent::Handover`] — a moving device switches edge servers;
+//! * [`WorldEvent::CapacityChange`] — a device's compute capacity c_k is
+//!   rescaled (thermal throttling, background load, recovery);
+//! * [`WorldEvent::LinkChange`] — one of the shared link bandwidths is
+//!   retuned mid-run (congestion, a backhaul upgrade).
+//!
+//! [`Timeline::markov_churn`] is the canned timeline source: each rostered
+//! device flips between on and off with per-round probabilities
+//! `p_leave` / `p_join` (a two-state Markov chain, the availability model
+//! of the floating-aggregation-point setting, arXiv:2203.13950), never
+//! emptying a cluster. Timelines serialize to JSON either as an explicit
+//! event array or as a `{"churn": {..}}` generator spec.
+
+use crate::error::{CfelError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Which shared link a [`WorldEvent::LinkChange`] retunes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Device → edge uplink (`b_d2e`, paper default 10 Mbps).
+    DeviceEdge,
+    /// Edge ↔ edge backhaul (`b_e2e`, paper default 50 Mbps).
+    EdgeEdge,
+    /// Device → cloud uplink (`b_d2c`, paper default 1 Mbps).
+    DeviceCloud,
+}
+
+impl LinkKind {
+    pub fn parse(s: &str) -> Result<LinkKind> {
+        match s {
+            "d2e" => Ok(LinkKind::DeviceEdge),
+            "e2e" => Ok(LinkKind::EdgeEdge),
+            "d2c" => Ok(LinkKind::DeviceCloud),
+            _ => Err(CfelError::Config(format!(
+                "unknown link kind {s:?} (d2e | e2e | d2c)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::DeviceEdge => "d2e",
+            LinkKind::EdgeEdge => "e2e",
+            LinkKind::DeviceCloud => "d2c",
+        }
+    }
+}
+
+/// One world change, applied at a round boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorldEvent {
+    /// A dormant device becomes active in `cluster`'s roster.
+    Join { device: usize, cluster: usize },
+    /// An active device drops out of its cluster's roster.
+    Leave { device: usize },
+    /// An active device moves from edge server `from` to `to`.
+    Handover { device: usize, from: usize, to: usize },
+    /// Device compute capacity c_k is multiplied by `factor` (< 1 slows
+    /// the device down, > 1 speeds it up; composes across events).
+    CapacityChange { device: usize, factor: f64 },
+    /// The named shared link's bandwidth becomes `bps` bits/s.
+    LinkChange { link: LinkKind, bps: f64 },
+}
+
+impl WorldEvent {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            WorldEvent::Join { .. } => "join",
+            WorldEvent::Leave { .. } => "leave",
+            WorldEvent::Handover { .. } => "handover",
+            WorldEvent::CapacityChange { .. } => "capacity-change",
+            WorldEvent::LinkChange { .. } => "link-change",
+        }
+    }
+
+    /// Human-readable one-liner for verbose logs and dry runs.
+    pub fn describe(&self) -> String {
+        match *self {
+            WorldEvent::Join { device, cluster } => {
+                format!("device {device} joins cluster {cluster}")
+            }
+            WorldEvent::Leave { device } => format!("device {device} leaves"),
+            WorldEvent::Handover { device, from, to } => {
+                format!("device {device} hands over from cluster {from} to {to}")
+            }
+            WorldEvent::CapacityChange { device, factor } => {
+                format!("device {device} capacity x{factor}")
+            }
+            WorldEvent::LinkChange { link, bps } => {
+                format!("link {} -> {bps} bit/s", link.name())
+            }
+        }
+    }
+}
+
+/// A [`WorldEvent`] pinned to the global round at whose start it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelineEvent {
+    pub round: usize,
+    pub event: WorldEvent,
+}
+
+/// The ordered world-event schedule of a scenario. Events of the same
+/// round apply in list order; rounds past the run's horizon simply never
+/// fire.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Timeline {
+    pub events: Vec<TimelineEvent>,
+}
+
+/// Two-state Markov on/off availability model: per round, an active
+/// device leaves with probability `p_leave` and an offline device
+/// returns (to its home cluster) with probability `p_join`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnSpec {
+    /// Per-round P(active → offline), in [0, 1].
+    pub p_leave: f64,
+    /// Per-round P(offline → active), in [0, 1].
+    pub p_join: f64,
+    /// Rounds to generate events for (events fire in rounds 1..rounds;
+    /// round 0 is the initial roster state).
+    pub rounds: usize,
+    /// Generator seed — the timeline is a pure function of (rosters,
+    /// spec), independent of the experiment seed.
+    pub seed: u64,
+}
+
+impl ChurnSpec {
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [("p_leave", self.p_leave), ("p_join", self.p_join)] {
+            if !(0.0..=1.0).contains(&p) || p.is_nan() {
+                return Err(CfelError::Config(format!(
+                    "churn {name} {p} outside [0,1]"
+                )));
+            }
+        }
+        if self.rounds == 0 {
+            return Err(CfelError::Config("churn rounds must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+impl Timeline {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events firing at the start of `round`, in timeline order.
+    pub fn at(&self, round: usize) -> Vec<TimelineEvent> {
+        self.events
+            .iter()
+            .filter(|e| e.round == round)
+            .copied()
+            .collect()
+    }
+
+    /// Generate a Markov on/off churn timeline over `rosters` (each
+    /// device's home cluster is where it starts). A leave that would
+    /// empty its cluster is skipped, so every cluster always keeps at
+    /// least one active device. Deterministic: each (round, device) pair
+    /// draws from its own split of `spec.seed`.
+    pub fn markov_churn(rosters: &[Vec<usize>], spec: &ChurnSpec) -> Result<Timeline> {
+        spec.validate()?;
+        let rng = Rng::new(spec.seed);
+        let mut active: Vec<Vec<bool>> = rosters.iter().map(|r| vec![true; r.len()]).collect();
+        let mut counts: Vec<usize> = rosters.iter().map(|r| r.len()).collect();
+        let mut events = Vec::new();
+        for round in 1..spec.rounds {
+            for (ci, roster) in rosters.iter().enumerate() {
+                for (slot, &dev) in roster.iter().enumerate() {
+                    let mut r = rng.split(round as u64).split(dev as u64);
+                    if active[ci][slot] {
+                        if counts[ci] > 1 && r.f64() < spec.p_leave {
+                            active[ci][slot] = false;
+                            counts[ci] -= 1;
+                            events.push(TimelineEvent {
+                                round,
+                                event: WorldEvent::Leave { device: dev },
+                            });
+                        }
+                    } else if r.f64() < spec.p_join {
+                        active[ci][slot] = true;
+                        counts[ci] += 1;
+                        events.push(TimelineEvent {
+                            round,
+                            event: WorldEvent::Join { device: dev, cluster: ci },
+                        });
+                    }
+                }
+            }
+        }
+        Ok(Timeline { events })
+    }
+
+    /// Structural + semantic validation against the scenario's shape:
+    /// every id in range, factors/bandwidths positive, and — replaying
+    /// membership events in firing order from the initial rosters — no
+    /// join of an active device, no leave/handover of an inactive one,
+    /// and no handover from the wrong cluster. This is what `--dry-run`
+    /// checks, so a broken timeline fails before anything trains.
+    pub fn validate(&self, n_devices: usize, rosters: &[Vec<usize>]) -> Result<()> {
+        let n_clusters = rosters.len();
+        let mut cluster_of: Vec<Option<usize>> = vec![None; n_devices];
+        for (ci, roster) in rosters.iter().enumerate() {
+            for &d in roster {
+                if d < n_devices {
+                    cluster_of[d] = Some(ci);
+                }
+            }
+        }
+        // Stable sort by round reproduces the coordinator's firing order
+        // (per-round batches in list order).
+        let mut order: Vec<&TimelineEvent> = self.events.iter().collect();
+        order.sort_by_key(|e| e.round);
+        for ev in order {
+            let bad = |msg: String| {
+                CfelError::Config(format!("timeline round {}: {msg}", ev.round))
+            };
+            let check_device = |d: usize| {
+                if d >= n_devices {
+                    Err(bad(format!("device {d} out of range (n_devices {n_devices})")))
+                } else {
+                    Ok(())
+                }
+            };
+            let check_cluster = |c: usize| {
+                if c >= n_clusters {
+                    Err(bad(format!("cluster {c} out of range (m {n_clusters})")))
+                } else {
+                    Ok(())
+                }
+            };
+            match ev.event {
+                WorldEvent::Join { device, cluster } => {
+                    check_device(device)?;
+                    check_cluster(cluster)?;
+                    if cluster_of[device].is_some() {
+                        return Err(bad(format!("join of already-active device {device}")));
+                    }
+                    cluster_of[device] = Some(cluster);
+                }
+                WorldEvent::Leave { device } => {
+                    check_device(device)?;
+                    if cluster_of[device].is_none() {
+                        return Err(bad(format!("leave of inactive device {device}")));
+                    }
+                    cluster_of[device] = None;
+                }
+                WorldEvent::Handover { device, from, to } => {
+                    check_device(device)?;
+                    check_cluster(from)?;
+                    check_cluster(to)?;
+                    if from == to {
+                        return Err(bad(format!("handover of device {device} to itself")));
+                    }
+                    if cluster_of[device] != Some(from) {
+                        return Err(bad(format!(
+                            "handover of device {device} from cluster {from}, but it is {}",
+                            match cluster_of[device] {
+                                Some(c) => format!("in cluster {c}"),
+                                None => "inactive".into(),
+                            }
+                        )));
+                    }
+                    cluster_of[device] = Some(to);
+                }
+                WorldEvent::CapacityChange { device, factor } => {
+                    check_device(device)?;
+                    if !(factor > 0.0 && factor.is_finite()) {
+                        return Err(bad(format!(
+                            "capacity factor {factor} must be positive and finite"
+                        )));
+                    }
+                }
+                WorldEvent::LinkChange { bps, .. } => {
+                    if !(bps > 0.0 && bps.is_finite()) {
+                        return Err(bad(format!(
+                            "link bandwidth {bps} must be positive and finite"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact description for `--dry-run` and verbose logs.
+    pub fn summary(&self) -> String {
+        if self.events.is_empty() {
+            return "static world (no events)".into();
+        }
+        let mut counts = [0usize; 5];
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        for e in &self.events {
+            let slot = match e.event {
+                WorldEvent::Join { .. } => 0,
+                WorldEvent::Leave { .. } => 1,
+                WorldEvent::Handover { .. } => 2,
+                WorldEvent::CapacityChange { .. } => 3,
+                WorldEvent::LinkChange { .. } => 4,
+            };
+            counts[slot] += 1;
+            lo = lo.min(e.round);
+            hi = hi.max(e.round);
+        }
+        format!(
+            "{} events over rounds {lo}..={hi}: {} join, {} leave, {} handover, \
+             {} capacity-change, {} link-change",
+            self.events.len(),
+            counts[0],
+            counts[1],
+            counts[2],
+            counts[3],
+            counts[4]
+        )
+    }
+
+    // ----- JSON persistence --------------------------------------------------
+
+    /// Serialize as an explicit event array (a generator-spec input is
+    /// expanded at parse time, so round trips preserve the events).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(event_to_json).collect())
+    }
+
+    /// Parse either an explicit event array or a `{"churn": {...}}`
+    /// generator spec (expanded against `rosters`).
+    pub fn from_json(j: &Json, rosters: &[Vec<usize>]) -> Result<Timeline> {
+        if let Some(churn) = j.opt("churn") {
+            let spec = ChurnSpec {
+                p_leave: churn.get("p_leave")?.as_f64()?,
+                p_join: churn.get("p_join")?.as_f64()?,
+                rounds: churn.get("rounds")?.as_usize()?,
+                seed: match churn.opt("seed") {
+                    Some(v) => v.as_usize()? as u64,
+                    None => 0,
+                },
+            };
+            return Timeline::markov_churn(rosters, &spec);
+        }
+        let mut events = Vec::new();
+        for item in j.as_arr()? {
+            events.push(event_from_json(item)?);
+        }
+        Ok(Timeline { events })
+    }
+}
+
+fn event_to_json(e: &TimelineEvent) -> Json {
+    let mut o = Json::obj();
+    o.set("round", Json::from_usize(e.round))
+        .set("kind", Json::from_str_val(e.event.kind_name()));
+    match e.event {
+        WorldEvent::Join { device, cluster } => {
+            o.set("device", Json::from_usize(device))
+                .set("cluster", Json::from_usize(cluster));
+        }
+        WorldEvent::Leave { device } => {
+            o.set("device", Json::from_usize(device));
+        }
+        WorldEvent::Handover { device, from, to } => {
+            o.set("device", Json::from_usize(device))
+                .set("from", Json::from_usize(from))
+                .set("to", Json::from_usize(to));
+        }
+        WorldEvent::CapacityChange { device, factor } => {
+            o.set("device", Json::from_usize(device))
+                .set("factor", Json::from_f64(factor));
+        }
+        WorldEvent::LinkChange { link, bps } => {
+            o.set("link", Json::from_str_val(link.name()))
+                .set("bps", Json::from_f64(bps));
+        }
+    }
+    o
+}
+
+fn event_from_json(j: &Json) -> Result<TimelineEvent> {
+    let round = j.get("round")?.as_usize()?;
+    let kind = j.get("kind")?.as_str()?;
+    let event = match kind {
+        "join" => WorldEvent::Join {
+            device: j.get("device")?.as_usize()?,
+            cluster: j.get("cluster")?.as_usize()?,
+        },
+        "leave" => WorldEvent::Leave { device: j.get("device")?.as_usize()? },
+        "handover" => WorldEvent::Handover {
+            device: j.get("device")?.as_usize()?,
+            from: j.get("from")?.as_usize()?,
+            to: j.get("to")?.as_usize()?,
+        },
+        "capacity-change" => WorldEvent::CapacityChange {
+            device: j.get("device")?.as_usize()?,
+            factor: j.get("factor")?.as_f64()?,
+        },
+        "link-change" => WorldEvent::LinkChange {
+            link: LinkKind::parse(j.get("link")?.as_str()?)?,
+            bps: j.get("bps")?.as_f64()?,
+        },
+        other => {
+            return Err(CfelError::Config(format!(
+                "unknown timeline event kind {other:?} \
+                 (join | leave | handover | capacity-change | link-change)"
+            )))
+        }
+    };
+    Ok(TimelineEvent { round, event })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rosters() -> Vec<Vec<usize>> {
+        vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]
+    }
+
+    #[test]
+    fn link_kind_parse_roundtrip() {
+        for k in [LinkKind::DeviceEdge, LinkKind::EdgeEdge, LinkKind::DeviceCloud] {
+            assert_eq!(LinkKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(LinkKind::parse("wifi").is_err());
+    }
+
+    #[test]
+    fn markov_churn_is_deterministic_and_never_empties_a_cluster() {
+        let spec = ChurnSpec { p_leave: 0.5, p_join: 0.3, rounds: 20, seed: 9 };
+        let a = Timeline::markov_churn(&rosters(), &spec).unwrap();
+        let b = Timeline::markov_churn(&rosters(), &spec).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "p=0.5 over 20 rounds must churn something");
+        // Replay: per-cluster active counts never hit zero.
+        let r = rosters();
+        let mut cluster_of: Vec<Option<usize>> = vec![None; 8];
+        for (ci, ros) in r.iter().enumerate() {
+            for &d in ros {
+                cluster_of[d] = Some(ci);
+            }
+        }
+        let mut counts = [4usize, 4];
+        for e in &a.events {
+            match e.event {
+                WorldEvent::Leave { device } => {
+                    let ci = cluster_of[device].expect("leave of inactive device");
+                    counts[ci] -= 1;
+                    cluster_of[device] = None;
+                    assert!(counts[ci] >= 1, "cluster {ci} emptied at round {}", e.round);
+                }
+                WorldEvent::Join { device, cluster } => {
+                    assert!(cluster_of[device].is_none(), "join of active device");
+                    cluster_of[device] = Some(cluster);
+                    counts[cluster] += 1;
+                }
+                _ => unreachable!("churn only emits join/leave"),
+            }
+        }
+        // The generated timeline passes its own validator.
+        a.validate(8, &rosters()).unwrap();
+    }
+
+    #[test]
+    fn churn_extremes() {
+        let never = ChurnSpec { p_leave: 0.0, p_join: 1.0, rounds: 10, seed: 1 };
+        assert!(Timeline::markov_churn(&rosters(), &never).unwrap().is_empty());
+        assert!(ChurnSpec { p_leave: 1.5, p_join: 0.0, rounds: 5, seed: 0 }
+            .validate()
+            .is_err());
+        assert!(ChurnSpec { p_leave: 0.1, p_join: 0.1, rounds: 0, seed: 0 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn validate_replays_membership() {
+        let r = rosters();
+        // Leave then re-join elsewhere is fine.
+        let ok = Timeline {
+            events: vec![
+                TimelineEvent { round: 1, event: WorldEvent::Leave { device: 0 } },
+                TimelineEvent { round: 3, event: WorldEvent::Join { device: 0, cluster: 1 } },
+                TimelineEvent {
+                    round: 4,
+                    event: WorldEvent::Handover { device: 0, from: 1, to: 0 },
+                },
+            ],
+        };
+        ok.validate(8, &r).unwrap();
+        // Join of an active device is rejected.
+        let dup = Timeline {
+            events: vec![TimelineEvent {
+                round: 1,
+                event: WorldEvent::Join { device: 0, cluster: 1 },
+            }],
+        };
+        assert!(dup.validate(8, &r).is_err());
+        // Handover from the wrong cluster is rejected.
+        let wrong = Timeline {
+            events: vec![TimelineEvent {
+                round: 2,
+                event: WorldEvent::Handover { device: 0, from: 1, to: 0 },
+            }],
+        };
+        assert!(wrong.validate(8, &r).is_err());
+        // Out-of-range ids, bad factors, bad bandwidths.
+        let oob = Timeline {
+            events: vec![TimelineEvent { round: 1, event: WorldEvent::Leave { device: 99 } }],
+        };
+        assert!(oob.validate(8, &r).is_err());
+        let badf = Timeline {
+            events: vec![TimelineEvent {
+                round: 1,
+                event: WorldEvent::CapacityChange { device: 1, factor: 0.0 },
+            }],
+        };
+        assert!(badf.validate(8, &r).is_err());
+        let badb = Timeline {
+            events: vec![TimelineEvent {
+                round: 1,
+                event: WorldEvent::LinkChange { link: LinkKind::EdgeEdge, bps: -1.0 },
+            }],
+        };
+        assert!(badb.validate(8, &r).is_err());
+    }
+
+    #[test]
+    fn at_preserves_list_order_within_a_round() {
+        let t = Timeline {
+            events: vec![
+                TimelineEvent { round: 2, event: WorldEvent::Leave { device: 1 } },
+                TimelineEvent { round: 1, event: WorldEvent::Leave { device: 0 } },
+                TimelineEvent { round: 2, event: WorldEvent::Join { device: 1, cluster: 0 } },
+            ],
+        };
+        let r2 = t.at(2);
+        assert_eq!(r2.len(), 2);
+        assert_eq!(r2[0].event, WorldEvent::Leave { device: 1 });
+        assert_eq!(r2[1].event, WorldEvent::Join { device: 1, cluster: 0 });
+        assert!(t.at(7).is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_events_and_churn_spec() {
+        let t = Timeline {
+            events: vec![
+                TimelineEvent { round: 1, event: WorldEvent::Leave { device: 3 } },
+                TimelineEvent { round: 2, event: WorldEvent::Join { device: 3, cluster: 1 } },
+                TimelineEvent {
+                    round: 3,
+                    event: WorldEvent::Handover { device: 4, from: 1, to: 0 },
+                },
+                TimelineEvent {
+                    round: 4,
+                    event: WorldEvent::CapacityChange { device: 0, factor: 0.25 },
+                },
+                TimelineEvent {
+                    round: 5,
+                    event: WorldEvent::LinkChange { link: LinkKind::EdgeEdge, bps: 1e7 },
+                },
+            ],
+        };
+        let back = Timeline::from_json(&t.to_json(), &rosters()).unwrap();
+        assert_eq!(back, t);
+        // Generator-spec form expands to the same events as the API call.
+        let spec = ChurnSpec { p_leave: 0.4, p_join: 0.4, rounds: 8, seed: 5 };
+        let api = Timeline::markov_churn(&rosters(), &spec).unwrap();
+        let j = Json::parse(
+            r#"{"churn": {"p_leave": 0.4, "p_join": 0.4, "rounds": 8, "seed": 5}}"#,
+        )
+        .unwrap();
+        let parsed = Timeline::from_json(&j, &rosters()).unwrap();
+        assert_eq!(parsed, api);
+        // And its serialization round-trips as explicit events.
+        assert_eq!(Timeline::from_json(&parsed.to_json(), &rosters()).unwrap(), parsed);
+    }
+
+    #[test]
+    fn summary_counts_kinds() {
+        assert_eq!(Timeline::default().summary(), "static world (no events)");
+        let t = Timeline {
+            events: vec![
+                TimelineEvent { round: 2, event: WorldEvent::Leave { device: 0 } },
+                TimelineEvent { round: 5, event: WorldEvent::Join { device: 0, cluster: 0 } },
+            ],
+        };
+        let s = t.summary();
+        assert!(s.contains("2 events over rounds 2..=5"), "{s}");
+        assert!(s.contains("1 join, 1 leave"), "{s}");
+    }
+
+    #[test]
+    fn unknown_event_kind_rejected() {
+        let j = Json::parse(r#"[{"round": 1, "kind": "teleport", "device": 0}]"#).unwrap();
+        assert!(Timeline::from_json(&j, &rosters()).is_err());
+    }
+}

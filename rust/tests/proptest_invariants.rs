@@ -35,6 +35,65 @@ fn prop_metropolis_doubly_stochastic_on_random_graphs() {
 }
 
 #[test]
+fn prop_every_builder_connected_with_tightly_doubly_stochastic_metropolis() {
+    // Every Graph builder — ring, complete, star, line, Erdős–Rényi —
+    // must return a connected graph, and Metropolis–Hastings weights on
+    // any of them must be symmetric and doubly stochastic with rows and
+    // columns summing to 1 within 1e-12 (Assumption 4, at a tolerance
+    // three decades tighter than MixingMatrix::validate's 1e-9).
+    check("builders-connected-ds-1e12", 25, default_cases(), |rng| {
+        let m = int_biased(rng, 2, 12);
+        let p = 0.2 + 0.7 * rng.f64();
+        let graphs = [
+            Graph::ring(m).map_err(|e| e.to_string())?,
+            Graph::complete(m).map_err(|e| e.to_string())?,
+            Graph::star(m).map_err(|e| e.to_string())?,
+            Graph::line(m).map_err(|e| e.to_string())?,
+            Graph::erdos_renyi(m, p, &rng.split(41)).map_err(|e| e.to_string())?,
+        ];
+        for g in &graphs {
+            prop_assert!(
+                g.is_connected(),
+                "builder {:?} returned a disconnected graph (m={m})",
+                g.name()
+            );
+            let h = MixingMatrix::metropolis(g);
+            for i in 0..m {
+                let mut row = 0.0f64;
+                let mut col = 0.0f64;
+                for j in 0..m {
+                    let v = h.get(i, j);
+                    prop_assert!(
+                        v >= -1e-15,
+                        "{}: negative weight H[{i}][{j}] = {v}",
+                        g.name()
+                    );
+                    prop_assert!(
+                        (v - h.get(j, i)).abs() <= 1e-12,
+                        "{}: asymmetric H at ({i},{j}): {v} vs {}",
+                        g.name(),
+                        h.get(j, i)
+                    );
+                    row += v;
+                    col += h.get(j, i);
+                }
+                prop_assert!(
+                    (row - 1.0).abs() <= 1e-12,
+                    "{}: row {i} sums to {row}",
+                    g.name()
+                );
+                prop_assert!(
+                    (col - 1.0).abs() <= 1e-12,
+                    "{}: column {i} sums to {col}",
+                    g.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_zeta_bounds_and_monotone_contraction() {
     check("zeta-bounds", 12, default_cases(), |rng| {
         let g = random_graph(rng);
@@ -154,11 +213,24 @@ fn prop_two_level_partitions_cover_everything() {
         let n = m * dpc * per_dev;
         let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
         let prng = rng.split(6);
-        let parts = partition::cluster_iid(&labels, m, dpc, &prng).map_err(|e| e.to_string())?;
+        let rosters: Vec<Vec<usize>> =
+            (0..m).map(|ci| (ci * dpc..(ci + 1) * dpc).collect()).collect();
+        let parts = partition::cluster_iid(&labels, &rosters, m * dpc, &prng)
+            .map_err(|e| e.to_string())?;
         partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
         let c = int_biased(rng, 1, classes);
-        let parts =
-            partition::cluster_noniid(&labels, m, dpc, c, &prng).map_err(|e| e.to_string())?;
+        let parts = partition::cluster_noniid(&labels, &rosters, m * dpc, c, &prng)
+            .map_err(|e| e.to_string())?;
+        partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
+        // Uneven rosters (the scenario layout): move the last device of
+        // cluster 0 into cluster 1 and re-partition — still disjoint and
+        // exhaustive over the same device universe.
+        let mut uneven = rosters.clone();
+        let moved = uneven[0].pop().expect("dpc >= 2");
+        uneven[1].push(moved);
+        uneven[1].sort_unstable();
+        let parts = partition::cluster_iid(&labels, &uneven, m * dpc, &prng)
+            .map_err(|e| e.to_string())?;
         partition::validate_partition(&parts, n, true).map_err(|e| e.to_string())?;
         Ok(())
     });

@@ -1,0 +1,297 @@
+//! Scenario-API equivalence suite.
+//!
+//! The world is now data: the coordinator builds exclusively from a
+//! [`Scenario`] (rosters, capability profiles, links, timeline), and the
+//! flat `ExperimentConfig` knobs are sugar that lowers into a static one
+//! (`Scenario::from_flat`). These tests pin that redesign safe:
+//!
+//! * lowering `quickstart()` and `paper_system()` (all four algorithms)
+//!   to an explicit static `Scenario` — including a JSON round trip of
+//!   the scenario — reproduces the flat-config history and CSV rows
+//!   *bit-identically*, under the closed-form and event-driven latency
+//!   modes and under `CFEL_THREADS` 1 and 4;
+//! * a churn timeline (Markov join/leave plus a handover, a capacity
+//!   change and a link change mid-run) runs all four canned plans,
+//!   learns well above chance, and is bit-deterministic across thread
+//!   counts — in closed-form and event-driven mode.
+
+use std::sync::Mutex;
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, CsvWriter, History, ROUND_HEADER};
+use cfel::scenario::{
+    ChurnSpec, LinkKind, Scenario, Timeline, TimelineEvent, WorldEvent,
+};
+
+/// `CFEL_THREADS` is process-global and the CSV helper reuses one temp
+/// path, so every test that touches either serializes on this lock
+/// (tests in one binary run on parallel threads).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn run(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+/// Render a history to CSV text with the wall-clock column zeroed (real
+/// time differs between any two runs; everything else must not).
+fn csv_rows(series: &str, h: &History) -> String {
+    let path = std::env::temp_dir().join(format!(
+        "cfel_scenario_equiv_{}_{series}.csv",
+        std::process::id()
+    ));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            let mut r = rec.clone();
+            r.wall_time_s = 0.0;
+            w.round_row(series, &r).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label} r{r} tloss");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{label} r{r} compute");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{label} r{r} upload");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{label} r{r} on-time");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+    }
+}
+
+/// The flat configs the acceptance matrix names: the quickstart preset
+/// plus the paper's §6.1 system under each of the four algorithms
+/// (rounds trimmed so the 2-latency x 2-thread matrix stays fast).
+fn flat_cases() -> Vec<ExperimentConfig> {
+    let mut quick = ExperimentConfig::quickstart();
+    quick.rounds = 4;
+    let mut cases = vec![quick];
+    for alg in AlgorithmKind::all() {
+        let mut c = ExperimentConfig::paper_system(alg);
+        c.rounds = 3;
+        cases.push(c);
+    }
+    cases
+}
+
+/// One test body: `CFEL_THREADS` is process-global, so the matrix runs
+/// sequentially instead of racing parallel test threads over the env var.
+#[test]
+fn flat_configs_lower_to_static_scenarios_bit_identically() {
+    let _guard = env_guard();
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        for base in flat_cases() {
+            for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+                let mut flat = base.clone();
+                flat.latency = latency;
+                // The lowering, sent through the JSON round trip the
+                // `--scenario` path uses.
+                let lowered = Scenario::from_flat(&flat);
+                let reparsed = Scenario::from_json(&lowered.to_json()).unwrap();
+                assert_eq!(reparsed, lowered, "scenario JSON round trip drifted");
+                let mut scenic = flat.clone();
+                scenic.scenario = Some(reparsed);
+                scenic.validate().unwrap();
+                let label = format!("{}-{}-t{threads}", flat.name, latency.name());
+                let h_flat = run(&flat);
+                let h_scenic = run(&scenic);
+                assert_identical(&label, &h_flat, &h_scenic);
+                assert_eq!(
+                    csv_rows("oracle", &h_flat),
+                    csv_rows("oracle", &h_scenic),
+                    "{label}: CSV rows diverged"
+                );
+            }
+        }
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+#[test]
+fn heterogeneous_straggler_knobs_lower_bit_identically_too() {
+    // The capability-profile half of the lowering: heterogeneity and
+    // stragglers must reproduce the exact same capability draws when
+    // routed through Derived profiles.
+    let _guard = env_guard();
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        let mut flat = ExperimentConfig::quickstart();
+        flat.rounds = 3;
+        flat.latency = LatencyMode::EventDriven;
+        flat.heterogeneity = Some(0.5);
+        flat.stragglers =
+            Some(cfel::netsim::StragglerSpec { fraction: 0.25, slowdown: 1e4 });
+        let mut scenic = flat.clone();
+        scenic.scenario = Some(Scenario::from_flat(&flat));
+        // The lowering owns the capability knobs; the flat fields clear.
+        scenic.heterogeneity = None;
+        scenic.stragglers = None;
+        scenic.validate().unwrap();
+        let label = format!("hetero-stragglers-t{threads}");
+        assert_identical(&label, &run(&flat), &run(&scenic));
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+/// Where `device` is (home cluster or after replaying `timeline`) at the
+/// start of round `round` — events of that round included, as the
+/// coordinator applies them at the boundary before training.
+fn cluster_at(
+    timeline: &Timeline,
+    rosters: &[Vec<usize>],
+    device: usize,
+    round: usize,
+) -> Option<usize> {
+    let mut cur = rosters.iter().position(|r| r.contains(&device));
+    for ev in &timeline.events {
+        if ev.round > round {
+            continue;
+        }
+        match ev.event {
+            WorldEvent::Join { device: d, cluster } if d == device => cur = Some(cluster),
+            WorldEvent::Leave { device: d } if d == device => cur = None,
+            WorldEvent::Handover { device: d, to, .. } if d == device => cur = Some(to),
+            _ => {}
+        }
+    }
+    cur
+}
+
+/// Markov churn over the quickstart rosters plus one handover, one
+/// capacity change and one link change — the full event vocabulary.
+fn churn_scenario(cfg: &ExperimentConfig) -> Scenario {
+    let mut s = Scenario::from_flat(cfg);
+    s.name = "churn".into();
+    let spec = ChurnSpec { p_leave: 0.2, p_join: 0.6, rounds: cfg.rounds, seed: 7 };
+    let mut tl = Timeline::markov_churn(&s.rosters, &spec).unwrap();
+    assert!(!tl.is_empty(), "churn spec produced a static world");
+    // Hand over the first device that is still active at round 2.
+    let (dev, from) = (0..cfg.n_devices)
+        .find_map(|d| cluster_at(&tl, &s.rosters, d, 2).map(|c| (d, c)))
+        .expect("some device survives to round 2");
+    tl.events.push(TimelineEvent {
+        round: 2,
+        event: WorldEvent::Handover {
+            device: dev,
+            from,
+            to: (from + 1) % s.rosters.len(),
+        },
+    });
+    tl.events.push(TimelineEvent {
+        round: 3,
+        event: WorldEvent::CapacityChange { device: dev, factor: 0.5 },
+    });
+    tl.events.push(TimelineEvent {
+        round: 3,
+        event: WorldEvent::LinkChange { link: LinkKind::EdgeEdge, bps: 2.5e7 },
+    });
+    s.timeline = tl;
+    s
+}
+
+#[test]
+fn churn_timeline_runs_all_plans_learns_and_is_thread_deterministic() {
+    let _guard = env_guard();
+    for alg in AlgorithmKind::all() {
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.algorithm = alg;
+        cfg.rounds = 8;
+        let scenario = churn_scenario(&cfg);
+        // The time-varying scenario survives the JSON round trip intact.
+        assert_eq!(
+            Scenario::from_json(&scenario.to_json()).unwrap(),
+            scenario,
+            "churn scenario JSON round trip drifted"
+        );
+        cfg.scenario = Some(scenario);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.run_label(), format!("{}@churn", alg.name()));
+
+        let mut histories = Vec::new();
+        for threads in ["1", "4"] {
+            std::env::set_var("CFEL_THREADS", threads);
+            histories.push(run(&cfg));
+            std::env::remove_var("CFEL_THREADS");
+        }
+        let label = format!("churn-{}", alg.name());
+        assert_identical(&label, &histories[0], &histories[1]);
+        assert_eq!(
+            csv_rows("oracle", &histories[0]),
+            csv_rows("oracle", &histories[1]),
+            "{label}: CSV rows diverged across thread counts"
+        );
+        let best = best_accuracy(&histories[0]);
+        assert!(best > 0.25, "{label} failed to learn under churn: {best}");
+    }
+}
+
+#[test]
+fn churn_is_deterministic_under_the_event_simulator_too() {
+    // Membership churn interleaved with per-device event timing: the
+    // virtual clocks, close verdicts and latency breakdowns must stay
+    // bit-identical across thread counts.
+    let _guard = env_guard();
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.rounds = 6;
+    cfg.latency = LatencyMode::EventDriven;
+    let scenario = churn_scenario(&cfg);
+    cfg.scenario = Some(scenario);
+    cfg.validate().unwrap();
+    let mut histories = Vec::new();
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        histories.push(run(&cfg));
+        std::env::remove_var("CFEL_THREADS");
+    }
+    assert_identical("churn-event", &histories[0], &histories[1]);
+    assert!(best_accuracy(&histories[0]) > 0.2);
+    // The round-3 capacity + link changes actually moved the simulated
+    // clock: per-round latency differs from the static world's.
+    let mut static_cfg = ExperimentConfig::quickstart();
+    static_cfg.rounds = 6;
+    static_cfg.latency = LatencyMode::EventDriven;
+    let h_static = run(&static_cfg);
+    let churn_total = histories[0].last().unwrap().sim_time_s;
+    let static_total = h_static.last().unwrap().sim_time_s;
+    assert_ne!(
+        churn_total.to_bits(),
+        static_total.to_bits(),
+        "the timeline should change the simulated runtime"
+    );
+}
+
+#[test]
+fn uneven_split_keeps_learning_and_the_flat_path_stays_default() {
+    // Satellite: n need not divide m anymore. 18 devices over 4 clusters
+    // (5/5/4/4) trains end to end through the same lowering.
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.n_devices = 18;
+    cfg.rounds = 6;
+    cfg.validate().unwrap();
+    assert_eq!(cfg.cluster_sizes(), vec![5, 5, 4, 4]);
+    let h = run(&cfg);
+    assert!(best_accuracy(&h) > 0.25, "uneven split failed to learn");
+    // No explicit scenario => plain label (CSV schema unchanged).
+    assert_eq!(cfg.run_label(), "ce-fedavg");
+}
