@@ -119,49 +119,72 @@ fn main() {
 
     // ---- event-driven latency engine -----------------------------------
     // Simulator overhead vs the closed-form path, measured in events/sec:
-    // one global-round training segment of a 128-cluster, 3072-device
-    // system (femnist-CNN-sized model, 16 steps/device, reporting
-    // deadline armed) plus the π=10 backhaul gossip hops. Two events per
-    // device per phase + one RoundClose timeout per cluster phase + the
-    // gossip hops = 6282 events per iteration.
-    let net = NetworkModel::paper_defaults(3072, 13.30e6, 50, 6_603_710);
-    let cluster_work: Vec<Vec<(usize, usize)>> = (0..128)
-        .map(|c| (0..24).map(|d| (c * 24 + d, 16)).collect())
+    // one global-round training segment of a heterogeneous fleet
+    // (femnist-CNN-sized model, 16 steps/device, 24 devices per cluster,
+    // reporting deadline armed) plus the π=10 backhaul gossip hops, run
+    // through the sharded calendar-queue engine (`simulate_phases`).
+    // Cohort batching makes the processed-event count data-dependent
+    // (identical devices collapse into one cohort — the heterogeneity
+    // keeps them distinct here), so the events/iteration denominator is
+    // probed from a dry run instead of hardcoded.
+    // CFEL_BENCH_EVENT_DEVICES scales the fleet (default 3072 devices =
+    // 128 clusters).
+    let ev_devices: usize = std::env::var("CFEL_BENCH_EVENT_DEVICES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3072);
+    let dev_per_cluster = 24usize;
+    let n_clusters = ev_devices.div_ceil(dev_per_cluster).max(1);
+    let mut net = NetworkModel::paper_defaults(ev_devices, 13.30e6, 50, 6_603_710);
+    net.apply_heterogeneity(0.2, &Rng::new(42));
+    let cluster_work: Vec<Vec<(usize, usize)>> = (0..n_clusters)
+        .map(|c| {
+            (c * dev_per_cluster..((c + 1) * dev_per_cluster).min(ev_devices))
+                .map(|d| (d, 16))
+                .collect()
+        })
         .collect();
-    let n_events = (3072 * 2 + 128 + 10) as f64;
     let deadline = DeadlineDrop { deadline_s: 30.0 };
-    b.run_throughput("event-sim round 128cl x 24dev (events)", n_events, || {
-        let mut t = 0.0f64;
-        for work in &cluster_work {
-            t += EventDrivenEstimator::simulate_phase(
+    let probe = EventDrivenEstimator::simulate_phases(
+        &net,
+        &cluster_work,
+        UploadChannel::DeviceEdge,
+        &deadline,
+    );
+    let (_, gossip_events) = EventDrivenEstimator::simulate_gossip(&net, 10);
+    let n_events = (probe.iter().map(|pt| pt.events).sum::<usize>() + gossip_events) as f64;
+    b.run_throughput(
+        &format!("event-sim round {n_clusters}cl x {dev_per_cluster}dev (events)"),
+        n_events,
+        || {
+            let pts = EventDrivenEstimator::simulate_phases(
                 &net,
-                work,
+                &cluster_work,
                 UploadChannel::DeviceEdge,
                 &deadline,
-            )
-            .duration_s;
-        }
-        t += EventDrivenEstimator::simulate_gossip(&net, 10).0;
-        t
-    });
+            );
+            let t: f64 = pts.iter().map(|pt| pt.duration_s).sum();
+            t + EventDrivenEstimator::simulate_gossip(&net, 10).0
+        },
+    );
     // Same fleet under a semi-sync K-of-N close: the policy decision adds
-    // one predicate per report, so throughput should track the deadline
+    // one predicate per cohort, so throughput should track the deadline
     // path — this bench guards that the policy abstraction stays free.
     let kofn = SemiSync { k: 18, timeout_s: 30.0, staleness_exp: 1.0 };
-    b.run_throughput("event-sim round 128cl x 24dev (kofn:18)", n_events, || {
-        let mut t = 0.0f64;
-        for work in &cluster_work {
-            t += EventDrivenEstimator::simulate_phase(
+    b.run_throughput(
+        &format!("event-sim round {n_clusters}cl x {dev_per_cluster}dev (kofn:18)"),
+        n_events,
+        || {
+            let pts = EventDrivenEstimator::simulate_phases(
                 &net,
-                work,
+                &cluster_work,
                 UploadChannel::DeviceEdge,
                 &kofn,
-            )
-            .duration_s;
-        }
-        t += EventDrivenEstimator::simulate_gossip(&net, 10).0;
-        t
-    });
+            );
+            let t: f64 = pts.iter().map(|pt| pt.duration_s).sum();
+            t + EventDrivenEstimator::simulate_gossip(&net, 10).0
+        },
+    );
 
     if manifest_path.exists() && cfg!(feature = "xla") {
         bench_pjrt(&mut b, Manifest::default_dir().as_path());
@@ -170,6 +193,13 @@ fn main() {
             "(PJRT path skipped — needs `make artifacts` and a build with \
              --features xla)"
         );
+    }
+
+    // Machine-readable dump: CFEL_BENCH_JSON=/path/to/out.json.
+    if let Ok(path) = std::env::var("CFEL_BENCH_JSON") {
+        let path = Path::new(&path);
+        b.write_json(path, "components").unwrap();
+        println!("wrote {}", path.display());
     }
 }
 

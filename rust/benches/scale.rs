@@ -1,0 +1,153 @@
+//! Scale bench: one CE-FedAvg round of virtual-clock simulation swept
+//! over fleet sizes — the metropolitan regime the sharded calendar-queue
+//! engine exists for.
+//!
+//! Each lane builds a tiered-capability fleet of `n` devices split into
+//! `m` clusters with the same remainder-spread sizes as
+//! `ExperimentConfig::cluster_sizes`, then simulates a full CE-FedAvg
+//! round: γ=8 edge phases through `EventDrivenEstimator::simulate_phases`
+//! (all clusters as shards of one sharded calendar queue, FullBarrier
+//! close) plus π=10 backhaul gossip hops. The fleet uses 12 capability
+//! tiers, so cohort batching is exercised realistically: every cluster
+//! collapses to ≤ 12 cohorts no matter how many devices it holds.
+//!
+//! Throughput is reported in processed events/sec (probed from a dry run
+//! — cohort batching makes the count data-dependent). Results land in
+//! `BENCH_scale.json` at the repo root (override: `CFEL_BENCH_SCALE_OUT`).
+//!
+//! Env knobs:
+//! - `CFEL_SCALE_MAX_DEVICES` — skip lanes with more devices (CI smoke
+//!   runs with `100000`).
+//! - `CFEL_SCALE_ASSERT_SECS` — fail the run if any executed lane's mean
+//!   wall-clock meets or exceeds this bound.
+//! - `CFEL_BENCH_ITERS` / `CFEL_BENCH_WARMUP` — iteration counts.
+
+use std::path::{Path, PathBuf};
+
+use cfel::aggregation::policy::FullBarrier;
+use cfel::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
+use cfel::util::bench::{header, Bench};
+use cfel::util::stats;
+
+/// Capability multipliers applied round-robin over device ids. 12 tiers
+/// keep cohort batching honest: enough classes that close predicates see
+/// a real finish-time spread, few enough that batching has leverage.
+const TIERS: [f64; 12] = [
+    1.0, 0.92, 0.85, 0.78, 0.71, 0.64, 0.57, 0.50, 0.43, 0.36, 0.29, 0.22,
+];
+
+/// (devices, clusters) sweep. The 1M × 100 lane is the ISSUE acceptance
+/// lane: one CE-FedAvg round in under 10 s of wall-clock.
+const SWEEP: [(usize, usize); 6] = [
+    (10_000, 10),
+    (10_000, 100),
+    (100_000, 10),
+    (100_000, 100),
+    (1_000_000, 10),
+    (1_000_000, 100),
+];
+
+/// Paper round shape: γ edge phases per global round, π gossip hops.
+const EDGE_PHASES: usize = 8;
+const GOSSIP_HOPS: usize = 10;
+/// SGD steps per device per phase (netsim Eq. 8 workload).
+const STEPS: usize = 16;
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+fn env_f64(name: &str) -> Option<f64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// femnist-CNN-sized fleet with tiered device capabilities.
+fn fleet(n: usize) -> NetworkModel {
+    let mut net = NetworkModel::paper_defaults(n, 13.30e6, 50, 6_603_710);
+    for (k, f) in net.device_flops.iter_mut().enumerate() {
+        *f *= TIERS[k % TIERS.len()];
+    }
+    net
+}
+
+/// Same remainder-spread split as `ExperimentConfig::cluster_sizes`.
+fn cluster_sizes(n: usize, m: usize) -> Vec<usize> {
+    let q = n / m;
+    let r = n % m;
+    (0..m).map(|i| q + usize::from(i < r)).collect()
+}
+
+/// One CE-FedAvg round over the whole fleet. Returns (virtual round
+/// time, processed events). Per-cluster virtual clocks accumulate in a
+/// flat vector — no `RoundTiming` / per-device state is retained, so
+/// the bench's own memory stays O(n) for the timing rows of the phase
+/// in flight.
+fn ce_round(net: &NetworkModel, work: &[Vec<(usize, usize)>]) -> (f64, usize) {
+    let policy = FullBarrier;
+    let mut per_cluster = vec![0.0f64; work.len()];
+    let mut events = 0usize;
+    for _ in 0..EDGE_PHASES {
+        let pts = EventDrivenEstimator::simulate_phases(
+            net,
+            work,
+            UploadChannel::DeviceEdge,
+            &policy,
+        );
+        for (ci, pt) in pts.iter().enumerate() {
+            per_cluster[ci] += pt.duration_s;
+            events += pt.events;
+        }
+    }
+    let (gossip_t, gossip_ev) = EventDrivenEstimator::simulate_gossip(net, GOSSIP_HOPS);
+    let slowest = per_cluster.iter().fold(0.0f64, |a, &b| a.max(b));
+    (slowest + gossip_t, events + gossip_ev)
+}
+
+fn main() {
+    header(
+        "scale",
+        "sharded calendar-queue engine: one CE-FedAvg round (8 edge phases \
+         + 10 gossip hops) per iteration",
+    );
+    let max_devices = env_usize("CFEL_SCALE_MAX_DEVICES").unwrap_or(usize::MAX);
+    let assert_secs = env_f64("CFEL_SCALE_ASSERT_SECS");
+    let mut b = Bench::new();
+
+    for &(n, m) in &SWEEP {
+        if n > max_devices {
+            println!("(skipping n={n} m={m}: CFEL_SCALE_MAX_DEVICES={max_devices})");
+            continue;
+        }
+        let net = fleet(n);
+        let sizes = cluster_sizes(n, m);
+        let mut work: Vec<Vec<(usize, usize)>> = Vec::with_capacity(m);
+        let mut next = 0usize;
+        for &s in &sizes {
+            work.push((next..next + s).map(|d| (d, STEPS)).collect());
+            next += s;
+        }
+        // Dry run: virtual round time + the data-dependent event count.
+        let (virtual_s, events) = ce_round(&net, &work);
+        let sample = b.run_throughput(&format!("ce-round n={n} m={m}"), events as f64, || {
+            ce_round(&net, &work)
+        });
+        let mean = stats::mean(&sample.secs);
+        println!("    virtual round time {virtual_s:.2}s, {events} events/iter");
+        if let Some(bound) = assert_secs {
+            assert!(
+                mean < bound,
+                "lane n={n} m={m}: mean {mean:.3}s >= CFEL_SCALE_ASSERT_SECS={bound}s"
+            );
+        }
+    }
+
+    let out = env_var_path().unwrap_or_else(|| {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_scale.json")
+    });
+    b.write_json(&out, "scale").unwrap();
+    println!("wrote {}", out.display());
+}
+
+fn env_var_path() -> Option<PathBuf> {
+    std::env::var("CFEL_BENCH_SCALE_OUT").ok().map(PathBuf::from)
+}

@@ -99,7 +99,8 @@ pub fn gossip_mix(models: &mut [Vec<f32>], h_pi: &MixingMatrix, scratch: &mut Ve
 
 /// Mean squared consensus distance: (1/m) Σ_i ‖x_i − x̄‖² — the residual
 /// error tracked by Lemmas 2–3 and reported by the figure harnesses.
-pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
+/// Borrow-based: callers pass row views, never cloned models.
+pub fn consensus_distance_refs(models: &[&[f32]]) -> f64 {
     let m = models.len();
     if m <= 1 {
         return 0.0;
@@ -122,6 +123,12 @@ pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
         }
     }
     total / m as f64
+}
+
+/// Owned-vector convenience wrapper around [`consensus_distance_refs`].
+pub fn consensus_distance(models: &[Vec<f32>]) -> f64 {
+    let rows: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    consensus_distance_refs(&rows)
 }
 
 /// Normalized merge weights for a staleness-discounted Eq. 6 aggregate:
@@ -153,9 +160,16 @@ pub fn report_weights(n_samples: &[usize], discounts: &[f64]) -> Result<Vec<f64>
         .collect())
 }
 
-/// Size-weighted global average of cluster models — the quantity u_t whose
-/// invariance under gossip (Eq. 12) the property tests pin down.
-pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Result<Vec<f32>> {
+/// Size-weighted global average of cluster models into a caller-provided
+/// buffer — the delta-free cloud-aggregation hot path (borrowed rows in,
+/// scratch out; a round never clones the per-cluster weights it only
+/// reads). Same weight arithmetic and accumulation order as
+/// [`global_average`], bit for bit.
+pub fn global_average_into(
+    models: &[&[f32]],
+    cluster_sizes: &[usize],
+    out: &mut [f32],
+) -> Result<()> {
     let n: usize = cluster_sizes.iter().sum();
     if n == 0 {
         return Err(CfelError::Aggregation(
@@ -163,8 +177,17 @@ pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Result<Ve
         ));
     }
     let weights: Vec<f64> = cluster_sizes.iter().map(|&s| s as f64 / n as f64).collect();
+    weighted_average_into(models, &weights, out)
+}
+
+/// Size-weighted global average of cluster models — the quantity u_t whose
+/// invariance under gossip (Eq. 12) the property tests pin down.
+/// Allocating wrapper around [`global_average_into`].
+pub fn global_average(models: &[Vec<f32>], cluster_sizes: &[usize]) -> Result<Vec<f32>> {
     let rows: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
-    weighted_average(&rows, &weights)
+    let mut out = vec![0.0; rows.first().map_or(0, |r| r.len())];
+    global_average_into(&rows, cluster_sizes, &mut out)?;
+    Ok(out)
 }
 
 /// L2 distance between two flat vectors (test/diagnostic helper).

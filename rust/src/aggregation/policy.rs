@@ -31,6 +31,17 @@
 //! `rust/tests/determinism.rs`, and the degenerate `SemiSync{k=N,
 //! timeout=∞, a=0}` case is pinned to `FullBarrier` at bit-identical
 //! precision by `rust/tests/agg_policy.rs`).
+//!
+//! Cohort batching: the sharded engine delivers reports in batches (one
+//! per capability cohort), consulting
+//! [`AggregationPolicy::closes_within_batch`]. Its contract — return the
+//! first report count within the batch at which [`closes_at_report`]
+//! would fire, or `None` — must match the per-report scan exactly; the
+//! provided default *is* that scan, and the O(1) overrides here are
+//! pinned to it over an exhaustive grid by this module's tests. See
+//! `docs/DETERMINISM.md` §2.
+//!
+//! [`closes_at_report`]: AggregationPolicy::closes_at_report
 
 /// Why an edge phase stopped accepting reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +117,25 @@ pub trait AggregationPolicy: Send + Sync {
     /// order; the first `true` fixes the close instant.
     fn closes_at_report(&self, reports_done: usize, total: usize) -> bool;
 
+    /// Batched close check for the cohort engine: a cohort of `batch`
+    /// simultaneous reports lands with `done_before` already in. Returns
+    /// the first absolute count `k` in `done_before+1 ..= done_before+batch`
+    /// at which [`closes_at_report`](AggregationPolicy::closes_at_report)
+    /// fires, or `None`. Because the reports of one cohort share an exact
+    /// timestamp, only *whether* and at *which count* the close fires is
+    /// observable — the close time is the batch's — so this provided
+    /// default (a per-report scan) is always correct; the built-in
+    /// policies override it with O(1) closed forms for million-device
+    /// batches.
+    fn closes_within_batch(
+        &self,
+        done_before: usize,
+        batch: usize,
+        total: usize,
+    ) -> Option<usize> {
+        (done_before + 1..=done_before + batch).find(|&k| self.closes_at_report(k, total))
+    }
+
     /// Fate of a report that misses the close: [`ReportVerdict::Dropped`]
     /// or [`ReportVerdict::Late`]. Never [`ReportVerdict::OnTime`].
     fn late_verdict(&self) -> ReportVerdict;
@@ -127,6 +157,16 @@ impl AggregationPolicy for FullBarrier {
 
     fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
         reports_done == total
+    }
+
+    fn closes_within_batch(
+        &self,
+        done_before: usize,
+        batch: usize,
+        total: usize,
+    ) -> Option<usize> {
+        // Only the final report closes; the count never overshoots total.
+        (done_before + batch == total).then_some(total)
     }
 
     fn late_verdict(&self) -> ReportVerdict {
@@ -154,6 +194,15 @@ impl AggregationPolicy for DeadlineDrop {
 
     fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
         reports_done == total
+    }
+
+    fn closes_within_batch(
+        &self,
+        done_before: usize,
+        batch: usize,
+        total: usize,
+    ) -> Option<usize> {
+        (done_before + batch == total).then_some(total)
     }
 
     fn late_verdict(&self) -> ReportVerdict {
@@ -190,6 +239,18 @@ impl AggregationPolicy for SemiSync {
 
     fn closes_at_report(&self, reports_done: usize, total: usize) -> bool {
         reports_done >= self.k.min(total)
+    }
+
+    fn closes_within_batch(
+        &self,
+        done_before: usize,
+        batch: usize,
+        total: usize,
+    ) -> Option<usize> {
+        // First count >= k.min(total) (>= 1 — counts start at one) inside
+        // the batch window; identical to the per-report scan.
+        let k_star = self.k.min(total).max(1).max(done_before + 1);
+        (k_star <= done_before + batch).then_some(k_star)
     }
 
     fn late_verdict(&self) -> ReportVerdict {
@@ -247,6 +308,37 @@ mod tests {
         for s in 0..10 {
             // Bit-exact 1.0: the oracle-equivalence tests rely on it.
             assert_eq!(flat.staleness_discount(s).to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_close_overrides_match_the_per_report_scan() {
+        // The O(1) closes_within_batch overrides must agree with the
+        // provided default (a closes_at_report scan) on every reachable
+        // (done_before, batch, total) cell — this is what licenses the
+        // cohort engine to consult the policy once per batch.
+        fn scan(p: &dyn AggregationPolicy, done: usize, batch: usize, total: usize) -> Option<usize> {
+            (done + 1..=done + batch).find(|&k| p.closes_at_report(k, total))
+        }
+        let policies: Vec<Box<dyn AggregationPolicy>> = vec![
+            Box::new(FullBarrier),
+            Box::new(DeadlineDrop { deadline_s: 1.0 }),
+            Box::new(SemiSync { k: 0, timeout_s: 1.0, staleness_exp: 1.0 }),
+            Box::new(SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 1.0 }),
+            Box::new(SemiSync { k: 99, timeout_s: 1.0, staleness_exp: 0.0 }),
+        ];
+        for p in &policies {
+            for total in 1..=8usize {
+                for done in 0..total {
+                    for batch in 1..=(total - done) {
+                        assert_eq!(
+                            p.closes_within_batch(done, batch, total),
+                            scan(&**p, done, batch, total),
+                            "done={done} batch={batch} total={total}"
+                        );
+                    }
+                }
+            }
         }
     }
 

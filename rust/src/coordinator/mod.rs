@@ -375,14 +375,21 @@ impl Coordinator {
         if alive.is_empty() {
             return Ok(());
         }
-        let models: Vec<Vec<f32>> = alive
-            .iter()
-            .map(|&i| self.clusters[i].model.clone())
-            .collect();
         let sizes: Vec<usize> = alive.iter().map(|&i| self.clusters[i].n_samples).collect();
-        let global = aggregation::global_average(&models, &sizes)?;
+        let mut global = std::mem::take(&mut self.scratch);
+        {
+            let rows: Vec<&[f32]> = alive
+                .iter()
+                .map(|&i| self.clusters[i].model.as_slice())
+                .collect();
+            global.resize(rows[0].len(), 0.0);
+            let res = aggregation::global_average_into(&rows, &sizes, &mut global);
+            drop(rows);
+            self.scratch = global;
+            res?;
+        }
         for &i in &alive {
-            self.clusters[i].model.copy_from_slice(&global);
+            self.clusters[i].model.copy_from_slice(&self.scratch);
         }
         Ok(())
     }
@@ -709,11 +716,11 @@ impl Coordinator {
     /// Consensus distance across alive cluster models (diagnostic).
     pub fn consensus(&self) -> f64 {
         let alive = self.alive_clusters();
-        let models: Vec<Vec<f32>> = alive
+        let models: Vec<&[f32]> = alive
             .iter()
-            .map(|&i| self.clusters[i].model.clone())
+            .map(|&i| self.clusters[i].model.as_slice())
             .collect();
-        aggregation::consensus_distance(&models)
+        aggregation::consensus_distance_refs(&models)
     }
 
     /// Run the configured number of global rounds; returns the history.

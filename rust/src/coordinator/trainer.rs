@@ -98,8 +98,10 @@ impl Coordinator {
     /// `channel` names the uplink this phase's reports travel over (edge
     /// for CE-FedAvg / Local-Edge / Hier-FAvg edge rounds, cloud for
     /// FedAvg and Hier-FAvg's final round). In event-driven latency mode
-    /// the phase is additionally simulated per device after the join and
-    /// closed by the configured `AggregationPolicy`: reports that miss
+    /// every alive cluster's phase is additionally simulated after the
+    /// join — one batched `phase_timings` call, each cluster a shard of
+    /// the event engine — and closed by the configured
+    /// `AggregationPolicy`: reports that miss
     /// the close are dropped from Eq. 6 (deadline-drop; survivor weights
     /// renormalize) or parked and folded into a *later* phase close of
     /// the same cluster with a `1/(1+s)^a` staleness discount
@@ -165,37 +167,41 @@ impl Coordinator {
         }
 
         // ---- simulate the phase close + aggregate (Eq. 6) -------------
-        // Event mode simulates each cluster's phase under the configured
-        // close policy; closed-form mode (phase_timing → None) keeps the
-        // Eq. 8 round-level path and aggregates every outcome. Runs
-        // single-threaded after the join in alive-cluster order, so
-        // timing — including which devices a policy drops or defers, and
-        // which stale reports land in which phase — is independent of
-        // CFEL_THREADS. Aggregation writes straight into each cluster's
-        // existing model buffer (O(m·p) averages are cheap next to
-        // training); weights renormalize over the reports present, and a
-        // cluster whose close produced no mergeable report keeps its
-        // previous model (the `CfelError::Aggregation` empty-set contract
-        // — here expressed as a skip rather than an error).
-        for (slot, &ci) in alive.iter().enumerate() {
-            let work: Vec<(usize, usize)> = per_cluster[slot]
-                .iter()
-                .map(|(dev, out)| (*dev, out.steps))
-                .collect();
-            let Some(pt) =
-                self.latency
-                    .phase_timing(&self.net, &work, channel, &*self.policy)
-            else {
-                // Closed-form: no close policy in play, everyone merges.
+        // Event mode simulates every alive cluster's phase in one batched
+        // `phase_timings` call (the event engine runs them as shards of
+        // one sharded calendar queue); closed-form mode (phase_timings →
+        // None) keeps the Eq. 8 round-level path and aggregates every
+        // outcome. Runs single-threaded after the join in alive-cluster
+        // order, so timing — including which devices a policy drops or
+        // defers, and which stale reports land in which phase — is
+        // independent of CFEL_THREADS. Aggregation writes straight into
+        // each cluster's existing model buffer (O(m·p) averages are cheap
+        // next to training); weights renormalize over the reports
+        // present, and a cluster whose close produced no mergeable report
+        // keeps its previous model (the `CfelError::Aggregation`
+        // empty-set contract — here expressed as a skip rather than an
+        // error).
+        let work_lists: Vec<Vec<(usize, usize)>> = per_cluster
+            .iter()
+            .map(|outs| outs.iter().map(|(dev, out)| (*dev, out.steps)).collect())
+            .collect();
+        let Some(pts) =
+            self.latency
+                .phase_timings(&self.net, &work_lists, channel, &*self.policy)
+        else {
+            // Closed-form: no close policy in play, everyone merges.
+            for (slot, &ci) in alive.iter().enumerate() {
                 if !per_cluster[slot].is_empty() {
                     ClusterState::aggregate_into(
                         &per_cluster[slot],
                         &mut self.clusters[ci].model,
                     )?;
                 }
-                continue;
-            };
+            }
+            return Ok(());
+        };
 
+        for ((slot, &ci), pt) in alive.iter().enumerate().zip(&pts) {
             // Advance this cluster's absolute clock to the phase close.
             let start_abs = self.cluster_clock_s[ci];
             let close_abs = start_abs + pt.duration_s;
@@ -217,21 +223,21 @@ impl Coordinator {
             // Classify this phase's fresh outcomes against the close.
             let mut on_time: Vec<(usize, LocalOutcome)> =
                 Vec::with_capacity(per_cluster[slot].len());
-            for (outcome, timing) in per_cluster[slot].drain(..).zip(&pt.devices) {
-                debug_assert_eq!(outcome.0, timing.device);
-                match timing.verdict {
+            for (i, outcome) in per_cluster[slot].drain(..).enumerate() {
+                debug_assert_eq!(outcome.0, pt.devices.device[i]);
+                match pt.devices.verdict[i] {
                     ReportVerdict::OnTime => on_time.push(outcome),
                     ReportVerdict::Late => self.pending[ci].push(PendingReport {
                         params: outcome.1.params,
                         n_samples: outcome.1.n_samples,
-                        arrive_abs_s: start_abs + timing.finish_s,
+                        arrive_abs_s: start_abs + pt.devices.finish_s[i],
                         origin_phase: phase,
                     }),
                     ReportVerdict::Dropped => {}
                 }
             }
 
-            stats.timing.record_phase(ci, self.clusters.len(), &pt);
+            stats.timing.record_phase(ci, self.clusters.len(), pt);
             stats.timing.stale_merged += stale.len();
 
             if on_time.is_empty() && stale.is_empty() {

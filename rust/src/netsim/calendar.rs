@@ -1,0 +1,377 @@
+//! Calendar (bucket) event queues and their per-cluster sharding.
+//!
+//! The metropolitan regime — hundreds of clusters, up to a million
+//! devices — makes one global `BinaryHeap` the event engine's bottleneck:
+//! every `ComputeDone`/`UploadDone` of every cluster funnels through a
+//! single `O(log n)` heap even though clusters never exchange events
+//! inside an edge phase. This module replaces it with:
+//!
+//! - [`CalendarQueue`]: a bucket queue over the phase's time horizon.
+//!   Events hash into fixed-width time buckets; only the bucket under the
+//!   pop cursor is kept sorted (descending, so the minimum pops from the
+//!   end), future buckets absorb pushes unsorted and are sorted once when
+//!   the cursor reaches them. Pop order is exactly the global sorted
+//!   `(time, kind, id)` order — see the invariant notes on
+//!   [`CalendarQueue::schedule`] — so swapping the heap for the calendar
+//!   is observationally invisible (pinned by the unit tests below and by
+//!   `rust/tests/sharded_queue.rs` against the heap reference).
+//! - [`ShardedEventQueue`]: one `CalendarQueue` per cluster. Within a
+//!   phase each shard drains independently (clusters only interact at
+//!   gossip/cloud barriers, where [`ShardedEventQueue::barrier_clock`]
+//!   merges the shard clocks by max, ties toward the lowest shard).
+//!   [`ShardedEventQueue::pop_merged`] exposes the deterministic global
+//!   interleaving — ordered by the same `(time, kind, id)` tie-break,
+//!   then lowest shard index — which the equivalence proptest compares
+//!   against a single-heap run.
+//!
+//! Determinism: nothing here consults wall-clock time, iteration order of
+//! hashed containers, or thread identity. Bucket membership is a pure
+//! function of the event timestamp, ties within a bucket resolve by the
+//! total [`Event`] order, and the merged view breaks residual ties by
+//! shard index. See `docs/DETERMINISM.md`.
+
+use crate::netsim::event::Event;
+
+/// Bucket queue over `[0, horizon]` with a monotone virtual clock.
+///
+/// The final bucket is the open overflow interval `[horizon, ∞)` so late
+/// drains and generous timeouts never fall off the calendar.
+#[derive(Debug)]
+pub struct CalendarQueue {
+    buckets: Vec<Vec<Event>>,
+    /// Seconds per bucket; `∞` collapses the calendar to one bucket
+    /// (degenerate horizons — empty phases — still behave).
+    width_s: f64,
+    /// Index of the bucket currently being drained. Buckets behind the
+    /// cursor are empty forever; the cursor bucket is sorted descending.
+    cursor: usize,
+    clock_s: f64,
+    processed: usize,
+    len: usize,
+}
+
+impl CalendarQueue {
+    /// A calendar sized for `expected_events` spread over `horizon_s`
+    /// seconds. Both are hints: more events or later timestamps still
+    /// work, they just share buckets (the last bucket catches everything
+    /// past the horizon).
+    pub fn new(horizon_s: f64, expected_events: usize) -> CalendarQueue {
+        let n_buckets = (expected_events / 4).clamp(1, 4096) + 1;
+        let width_s = if horizon_s.is_finite() && horizon_s > 0.0 {
+            horizon_s / (n_buckets - 1) as f64
+        } else {
+            f64::INFINITY
+        };
+        CalendarQueue {
+            buckets: vec![Vec::new(); n_buckets],
+            width_s,
+            cursor: 0,
+            clock_s: 0.0,
+            processed: 0,
+            len: 0,
+        }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Events popped so far (the simulator-throughput metric).
+    pub fn processed(&self) -> usize {
+        self.processed
+    }
+
+    /// Events currently scheduled.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn bucket_of(&self, time_s: f64) -> usize {
+        // f64→usize casts saturate, so past-horizon (and +∞) timestamps
+        // land in the overflow bucket; width ∞ maps everything to 0.
+        ((time_s / self.width_s) as usize).min(self.buckets.len() - 1)
+    }
+
+    /// Schedule an event; must not be in the virtual past.
+    ///
+    /// Invariant: every live event sits in a bucket `>= cursor`. An event
+    /// whose natural bucket is behind the cursor (its timestamp is `>=
+    /// clock` but earlier in the cursor bucket's range) is clamped into
+    /// the cursor bucket, where the sorted insert restores its place in
+    /// the global order; events in later buckets all carry later
+    /// timestamps than anything clampable, so cross-bucket order holds.
+    pub fn schedule(&mut self, ev: Event) {
+        debug_assert!(
+            ev.time_s >= self.clock_s,
+            "event at {} scheduled before clock {}",
+            ev.time_s,
+            self.clock_s
+        );
+        let b = self.bucket_of(ev.time_s).max(self.cursor);
+        if b == self.cursor {
+            // The cursor bucket is sorted descending; keep it that way.
+            let bucket = &mut self.buckets[b];
+            let pos = bucket.partition_point(|e| *e > ev);
+            bucket.insert(pos, ev);
+        } else {
+            self.buckets[b].push(ev);
+        }
+        self.len += 1;
+    }
+
+    /// The earliest scheduled event, without popping it.
+    pub fn peek(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+            // Entering a new bucket: sort it once, descending, so the
+            // minimum is at the end. Later pushes binary-insert.
+            let c = self.cursor;
+            self.buckets[c].sort_unstable_by(|a, b| b.cmp(a));
+        }
+        self.buckets[self.cursor].last().copied()
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.peek()?;
+        let ev = self.buckets[self.cursor].pop().expect("peek saw an event");
+        self.len -= 1;
+        self.clock_s = ev.time_s;
+        self.processed += 1;
+        Some(ev)
+    }
+}
+
+/// Per-cluster calendar shards with a deterministic merged view.
+#[derive(Debug)]
+pub struct ShardedEventQueue {
+    shards: Vec<CalendarQueue>,
+}
+
+impl ShardedEventQueue {
+    /// One shard per `(horizon_s, expected_events)` sizing hint.
+    pub fn with_horizons(horizons: &[(f64, usize)]) -> ShardedEventQueue {
+        ShardedEventQueue {
+            shards: horizons
+                .iter()
+                .map(|&(h, n)| CalendarQueue::new(h, n))
+                .collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_mut(&mut self, shard: usize) -> &mut CalendarQueue {
+        &mut self.shards[shard]
+    }
+
+    /// Schedule an event on one shard.
+    pub fn schedule(&mut self, shard: usize, ev: Event) {
+        self.shards[shard].schedule(ev);
+    }
+
+    /// Pop the globally earliest event across all shards: the usual
+    /// `(time, kind, id)` order, residual ties broken toward the lowest
+    /// shard index. This is the deterministic interleaving a single
+    /// global heap would produce when every event id is globally unique
+    /// (pinned by `rust/tests/sharded_queue.rs`).
+    pub fn pop_merged(&mut self) -> Option<(usize, Event)> {
+        let mut best: Option<(usize, Event)> = None;
+        for (s, q) in self.shards.iter_mut().enumerate() {
+            if let Some(ev) = q.peek() {
+                let better = match best {
+                    None => true,
+                    Some((_, b)) => ev < b,
+                };
+                if better {
+                    best = Some((s, ev));
+                }
+            }
+        }
+        let (s, _) = best?;
+        let ev = self.shards[s].pop().expect("peek saw an event");
+        Some((s, ev))
+    }
+
+    /// Barrier merge of the shard clocks: the latest shard time, ties
+    /// toward the lowest shard index — the same fold the coordinator's
+    /// `barrier_clocks` applies at gossip/cloud steps.
+    pub fn barrier_clock(&self) -> f64 {
+        let mut t = 0.0f64;
+        for q in &self.shards {
+            if q.now() > t {
+                t = q.now();
+            }
+        }
+        t
+    }
+
+    /// Total events popped across all shards.
+    pub fn processed(&self) -> usize {
+        self.shards.iter().map(|q| q.processed()).sum()
+    }
+
+    /// Events currently scheduled across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|q| q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::event::{EventKind, EventQueue};
+    use crate::util::rng::Rng;
+
+    fn random_events(rng: &mut Rng, n: usize, horizon: f64) -> Vec<Event> {
+        (0..n)
+            .map(|id| {
+                let kind = match rng.below(4) {
+                    0 => EventKind::ComputeDone,
+                    1 => EventKind::UploadDone,
+                    2 => EventKind::BackhaulDone,
+                    _ => EventKind::RoundClose,
+                };
+                // Coarse timestamps force plenty of exact ties.
+                let time_s = (rng.f64() * horizon * 8.0).floor() / 8.0;
+                Event { time_s, kind, id }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn calendar_pop_order_matches_heap() {
+        let mut rng = Rng::new(42);
+        for case in 0..50 {
+            let n = 1 + (case % 40);
+            let horizon = 10.0;
+            let events = random_events(&mut rng, n, horizon);
+            let mut cal = CalendarQueue::new(horizon, n);
+            let mut heap = EventQueue::new();
+            for &ev in &events {
+                cal.schedule(ev);
+                heap.schedule(ev);
+            }
+            loop {
+                match (cal.pop(), heap.pop()) {
+                    (None, None) => break,
+                    (a, b) => assert_eq!(a, b, "case {case}"),
+                }
+            }
+            assert_eq!(cal.processed(), n);
+        }
+    }
+
+    #[test]
+    fn interleaved_schedule_during_pops_stays_sorted() {
+        // Pops trigger pushes at later times — the event-engine access
+        // pattern — including times behind the cursor's bucket start
+        // (clamped into the cursor bucket).
+        let mut cal = CalendarQueue::new(8.0, 16);
+        let mut heap = EventQueue::new();
+        for id in 0..8 {
+            let ev = Event {
+                time_s: id as f64,
+                kind: EventKind::ComputeDone,
+                id,
+            };
+            cal.schedule(ev);
+            heap.schedule(ev);
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            let Some(ev) = a else { break };
+            if ev.kind == EventKind::ComputeDone {
+                let up = Event {
+                    time_s: ev.time_s + 0.25,
+                    kind: EventKind::UploadDone,
+                    id: ev.id,
+                };
+                cal.schedule(up);
+                heap.schedule(up);
+            }
+        }
+        assert_eq!(cal.processed(), 16);
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn overflow_bucket_catches_past_horizon_events() {
+        let mut cal = CalendarQueue::new(1.0, 4);
+        cal.schedule(Event { time_s: 50.0, kind: EventKind::UploadDone, id: 1 });
+        cal.schedule(Event { time_s: 0.5, kind: EventKind::ComputeDone, id: 0 });
+        cal.schedule(Event { time_s: 9.0, kind: EventKind::UploadDone, id: 0 });
+        assert_eq!(cal.pop().unwrap().time_s, 0.5);
+        assert_eq!(cal.pop().unwrap().time_s, 9.0);
+        assert_eq!(cal.pop().unwrap().time_s, 50.0);
+        assert_eq!(cal.pop(), None);
+        assert_eq!(cal.now(), 50.0);
+    }
+
+    #[test]
+    fn degenerate_horizon_still_orders() {
+        let mut cal = CalendarQueue::new(0.0, 0);
+        cal.schedule(Event { time_s: 2.0, kind: EventKind::ComputeDone, id: 0 });
+        cal.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 1 });
+        assert_eq!(cal.pop().unwrap().id, 1);
+        assert_eq!(cal.pop().unwrap().id, 0);
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_heap_with_unique_ids() {
+        let mut rng = Rng::new(7);
+        let shards_n = 5;
+        let horizon = 4.0;
+        let hints: Vec<(f64, usize)> = (0..shards_n).map(|_| (horizon, 8)).collect();
+        let mut sharded = ShardedEventQueue::with_horizons(&hints);
+        let mut heap = EventQueue::new();
+        let mut id = 0usize;
+        for s in 0..shards_n {
+            for _ in 0..8 {
+                let ev = Event {
+                    time_s: (rng.f64() * horizon * 4.0).floor() / 4.0,
+                    kind: EventKind::ComputeDone,
+                    id,
+                };
+                id += 1;
+                sharded.schedule(s, ev);
+                heap.schedule(ev);
+            }
+        }
+        assert_eq!(sharded.len(), 40);
+        let mut popped = 0usize;
+        while let Some((_, ev)) = sharded.pop_merged() {
+            assert_eq!(Some(ev), heap.pop());
+            popped += 1;
+        }
+        assert_eq!(heap.pop(), None);
+        assert_eq!(popped, 40);
+        assert_eq!(sharded.processed(), 40);
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn barrier_clock_is_max_over_shards() {
+        let mut sharded = ShardedEventQueue::with_horizons(&[(1.0, 2), (1.0, 2)]);
+        sharded.schedule(0, Event { time_s: 0.5, kind: EventKind::ComputeDone, id: 0 });
+        sharded.schedule(1, Event { time_s: 2.5, kind: EventKind::ComputeDone, id: 1 });
+        while sharded.shard_mut(0).pop().is_some() {}
+        while sharded.shard_mut(1).pop().is_some() {}
+        assert_eq!(sharded.barrier_clock(), 2.5);
+    }
+}

@@ -2,17 +2,16 @@
 //!
 //! The closed-form Eq. 8 estimator in the parent module collapses a global
 //! round into three aggregate terms. This module simulates the same round
-//! as *per-device discrete events* on a virtual clock, which is what lets
-//! the system express reporting deadlines, stragglers, semi-synchronous
-//! round closes, and per-device timing heterogeneity that the closed form
-//! cannot.
+//! as *discrete events* on a virtual clock, which is what lets the system
+//! express reporting deadlines, stragglers, semi-synchronous round closes,
+//! and per-device timing heterogeneity that the closed form cannot.
 //!
 //! # Event model
 //!
 //! One edge phase of one cluster is simulated as follows: every
-//! participating device `k` schedules a [`EventKind::ComputeDone`] event at
+//! participating device `k` owes a [`EventKind::ComputeDone`] at
 //! `steps_k · C / c_k` (its local SGD workload over its processing
-//! capacity). Popping a `ComputeDone` schedules the device's
+//! capacity). Popping a `ComputeDone` schedules the matching
 //! [`EventKind::UploadDone`] at `t + W / b` where `b` is the phase's
 //! [`UploadChannel`] bandwidth — devices transmit on dedicated links, so
 //! uploads overlap freely (the paper's model). The inter-cluster
@@ -20,13 +19,44 @@
 //! [`EventKind::BackhaulDone`] hops of `W / b_e2e` each (every edge of the
 //! backhaul transmits concurrently within a hop).
 //!
+//! # The million-device engine: shards, cohorts, SoA
+//!
+//! At metropolitan scale (hundreds of clusters, up to 10⁶ devices) the
+//! original one-event-per-device binary heap was the bottleneck. Three
+//! rearchitectures keep the observable behaviour bit-identical (see
+//! `docs/DETERMINISM.md` and `docs/ARCHITECTURE.md`) while collapsing the
+//! asymptotics:
+//!
+//! - **Sharded calendar queues** ([`crate::netsim::calendar`]): each
+//!   cluster's phase runs on its own bucket queue; shards never exchange
+//!   events inside a phase and merge only at gossip/cloud barriers, by
+//!   the same `(time, kind, id)` tie-break a global heap would apply.
+//! - **Cohort batching**: devices sharing a capability profile finish
+//!   compute and upload at *exactly* the same f64 timestamps, so each
+//!   such cohort schedules one `ComputeDone`/`UploadDone` pair carrying a
+//!   member count; the close predicate is consulted per batch via
+//!   [`AggregationPolicy::closes_within_batch`]. Because every close
+//!   predicate is a function of the cumulative report count, and counts
+//!   pass through 1..n in the same order either way, the first closing
+//!   count — hence the close time, reason, and every verdict — is
+//!   identical to the per-device simulation (pinned bitwise by the tests
+//!   below). Per-device timestamps are expanded lazily from the cohort
+//!   entry after the drain.
+//! - **Struct-of-arrays timing state** ([`DeviceTimings`]): per-device
+//!   compute/upload/finish/verdict columns instead of a `Vec` of structs,
+//!   so million-row rounds stream through caches and accumulate without
+//!   per-device allocation.
+//!
+//! `events` counts are therefore *cohort-granular*: a homogeneous
+//! 10⁴-device phase processes 2 queue events, not 2·10⁴.
+//!
 //! # Round-close policies
 //!
 //! When the phase stops accepting reports is decided by the configured
 //! [`AggregationPolicy`]: the policy may arm one [`EventKind::RoundClose`]
-//! timeout event, and is consulted after every `UploadDone` whether the
-//! phase closes now (the full barrier closes on the last report, semi-sync
-//! on the K-th). Events scheduled past the close still pop — the
+//! timeout event, and is consulted after every `UploadDone` batch whether
+//! the phase closes now (the full barrier closes on the last report,
+//! semi-sync on the K-th). Events scheduled past the close still pop — the
 //! *late-upload drain* — so every device's report time is known; reports
 //! that missed the close carry the policy's verdict
 //! ([`ReportVerdict::Late`] for semi-sync, [`ReportVerdict::Dropped`] for
@@ -36,17 +66,17 @@
 //!
 //! # Tie-breaking and determinism
 //!
-//! The event queue is a binary min-heap ordered by `(time, kind, id)`:
-//! simultaneous events pop in `ComputeDone < UploadDone < BackhaulDone <
-//! RoundClose` order, and within a kind by ascending id (the device's slot
-//! in the phase's work list, which the coordinator builds in sorted
-//! participant order). `RoundClose` ordering last means a report landing
-//! exactly at a deadline/timeout still counts as on time, matching the
-//! strict `finish > T_dl` drop rule of the closed analysis. Simulation
-//! inputs are derived purely from the experiment seed and the simulation
-//! runs single-threaded after the training join, so event-driven timing —
-//! including which devices a policy drops or defers — is bit-identical for
-//! any `CFEL_THREADS` (pinned by `rust/tests/determinism.rs`).
+//! Event order is `(time, kind, id)`: simultaneous events pop in
+//! `ComputeDone < UploadDone < BackhaulDone < RoundClose` order, and
+//! within a kind by ascending id (the cohort's first-seen position in the
+//! phase's work list, which the coordinator builds in sorted participant
+//! order). `RoundClose` ordering last means a report landing exactly at a
+//! deadline/timeout still counts as on time, matching the strict
+//! `finish > T_dl` drop rule of the closed analysis. Simulation inputs
+//! are derived purely from the experiment seed and the simulation runs
+//! single-threaded after the training join, so event-driven timing —
+//! including which devices a policy drops or defers — is bit-identical
+//! for any `CFEL_THREADS` (pinned by `rust/tests/determinism.rs`).
 //!
 //! # Deadlines and Eq. 6 renormalization
 //!
@@ -74,9 +104,10 @@
 //! the more faithful account.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::aggregation::policy::{AggregationPolicy, CloseReason, ReportVerdict};
+use crate::netsim::calendar::{CalendarQueue, ShardedEventQueue};
 use crate::netsim::{NetworkModel, RoundLatency};
 use crate::plan::Plan;
 
@@ -84,9 +115,10 @@ use crate::plan::Plan;
 /// equal timestamps).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
-    /// A device finished its local SGD steps for this edge phase.
+    /// A cohort of devices finished its local SGD steps for this edge
+    /// phase.
     ComputeDone,
-    /// A device's model report arrived at its aggregation point.
+    /// A cohort's model reports arrived at their aggregation point.
     UploadDone,
     /// One inter-cluster gossip hop completed on the backhaul.
     BackhaulDone,
@@ -102,8 +134,8 @@ pub struct Event {
     /// Virtual time of the occurrence, seconds from the phase start.
     pub time_s: f64,
     pub kind: EventKind,
-    /// Work-list slot for compute/upload events; hop index for backhaul;
-    /// 0 for the (unique) round-close timeout.
+    /// Cohort id for compute/upload events; hop index for backhaul; 0 for
+    /// the (unique) round-close timeout.
     pub id: usize,
 }
 
@@ -125,6 +157,11 @@ impl PartialOrd for Event {
 }
 
 /// Binary-heap event queue with a monotone virtual clock.
+///
+/// The single-queue reference implementation: the sharded calendar
+/// engine in [`crate::netsim::calendar`] must pop in exactly this order
+/// (`rust/tests/sharded_queue.rs` pins the equivalence). Still used
+/// directly for the tiny backhaul simulation.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<std::cmp::Reverse<Event>>,
@@ -205,8 +242,9 @@ impl UploadChannel {
     }
 }
 
-/// One device's simulated timing within an edge phase.
-#[derive(Debug, Clone)]
+/// One device's simulated timing within an edge phase — the row view of
+/// one [`DeviceTimings`] index.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceTiming {
     /// Global device id.
     pub device: usize,
@@ -232,6 +270,79 @@ impl DeviceTiming {
     }
 }
 
+/// Per-device timing state in struct-of-arrays layout: one column per
+/// field, indexed by work-list slot (sorted participant order). At
+/// million-device scale the columnar layout is what keeps verdict
+/// classification and accumulation cache-resident; [`DeviceTimings::get`]
+/// materializes a [`DeviceTiming`] row view on demand.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTimings {
+    /// Global device id per slot.
+    pub device: Vec<usize>,
+    /// Seconds of local compute per slot.
+    pub compute_s: Vec<f64>,
+    /// Seconds of model upload per slot.
+    pub upload_s: Vec<f64>,
+    /// Report arrival per slot, seconds from the phase start.
+    pub finish_s: Vec<f64>,
+    /// Close-policy verdict per slot.
+    pub verdict: Vec<ReportVerdict>,
+}
+
+impl DeviceTimings {
+    pub fn with_capacity(n: usize) -> DeviceTimings {
+        DeviceTimings {
+            device: Vec::with_capacity(n),
+            compute_s: Vec::with_capacity(n),
+            upload_s: Vec::with_capacity(n),
+            finish_s: Vec::with_capacity(n),
+            verdict: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.device.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.device.is_empty()
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, t: DeviceTiming) {
+        self.device.push(t.device);
+        self.compute_s.push(t.compute_s);
+        self.upload_s.push(t.upload_s);
+        self.finish_s.push(t.finish_s);
+        self.verdict.push(t.verdict);
+    }
+
+    /// Row view of slot `i`. Panics if out of range.
+    pub fn get(&self, i: usize) -> DeviceTiming {
+        DeviceTiming {
+            device: self.device[i],
+            compute_s: self.compute_s[i],
+            upload_s: self.upload_s[i],
+            finish_s: self.finish_s[i],
+            verdict: self.verdict[i],
+        }
+    }
+
+    /// Iterate row views in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = DeviceTiming> + '_ {
+        (0..self.len()).map(|i| self.get(i))
+    }
+
+    /// Append all rows of `other`, column-wise.
+    pub fn extend_from(&mut self, other: &DeviceTimings) {
+        self.device.extend_from_slice(&other.device);
+        self.compute_s.extend_from_slice(&other.compute_s);
+        self.upload_s.extend_from_slice(&other.upload_s);
+        self.finish_s.extend_from_slice(&other.finish_s);
+        self.verdict.extend_from_slice(&other.verdict);
+    }
+}
+
 /// Simulated timing of one cluster's edge phase.
 #[derive(Debug, Clone)]
 pub struct PhaseTiming {
@@ -242,10 +353,12 @@ pub struct PhaseTiming {
     pub compute_s: f64,
     /// Upload portion of the duration (`duration - compute`).
     pub upload_s: f64,
-    /// Per-device timing, in work-list (sorted participant) order.
-    pub devices: Vec<DeviceTiming>,
-    /// Events processed by the simulation (includes the late-upload drain
-    /// and any timeout event).
+    /// Per-device timing columns, in work-list (sorted participant) order.
+    pub devices: DeviceTimings,
+    /// Queue events processed by the simulation. Cohort-granular:
+    /// simultaneous devices sharing a capability profile ride one
+    /// `ComputeDone`/`UploadDone` pair; includes the late-upload drain
+    /// and any timeout event.
     pub events: usize,
     /// Why the phase stopped accepting reports.
     pub close_reason: CloseReason,
@@ -263,8 +376,9 @@ pub struct RoundTiming {
     pub cluster_compute_s: Vec<f64>,
     /// Accumulated upload portion per cluster.
     pub cluster_upload_s: Vec<f64>,
-    /// Every simulated device timing of the round (all phases appended).
-    pub device_timings: Vec<DeviceTiming>,
+    /// Every simulated device timing of the round (all phases appended),
+    /// in struct-of-arrays layout.
+    pub device_timings: DeviceTimings,
     /// Reports that made their phase close this round.
     pub on_time_devices: usize,
     /// Reports that missed their close but were kept for a stale merge.
@@ -281,7 +395,7 @@ pub struct RoundTiming {
     pub dropped_devices: usize,
     /// Phase-close reason counts, indexed by [`CloseReason::index`].
     pub close_reasons: [usize; 4],
-    /// Total events processed this round.
+    /// Total events processed this round (cohort-granular).
     pub events_processed: usize,
 }
 
@@ -296,8 +410,8 @@ impl RoundTiming {
         self.cluster_time_s[cluster] += pt.duration_s;
         self.cluster_compute_s[cluster] += pt.compute_s;
         self.cluster_upload_s[cluster] += pt.upload_s;
-        for d in &pt.devices {
-            match d.verdict {
+        for v in &pt.devices.verdict {
+            match v {
                 ReportVerdict::OnTime => self.on_time_devices += 1,
                 ReportVerdict::Late => self.late_devices += 1,
                 ReportVerdict::Dropped => self.dropped_devices += 1,
@@ -307,7 +421,7 @@ impl RoundTiming {
             self.close_reasons[pt.close_reason.index()] += 1;
         }
         self.events_processed += pt.events;
-        self.device_timings.extend(pt.devices.iter().cloned());
+        self.device_timings.extend_from(&pt.devices);
     }
 
     /// Compact close-reason label for the round: "-" when no phases were
@@ -348,6 +462,24 @@ pub trait LatencyEstimator: Send + Sync {
         channel: UploadChannel,
         policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming>;
+
+    /// Simulate every cluster's edge phase of one plan step in a single
+    /// call; `work[i]` is cluster `i`'s `(device, steps)` list and the
+    /// result is index-aligned. The default forwards to
+    /// [`LatencyEstimator::phase_timing`] per cluster;
+    /// [`EventDrivenEstimator`] overrides it to run all clusters on the
+    /// sharded calendar queues. Returns `None` in closed-form mode.
+    fn phase_timings(
+        &self,
+        net: &NetworkModel,
+        work: &[Vec<(usize, usize)>],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+    ) -> Option<Vec<PhaseTiming>> {
+        work.iter()
+            .map(|w| self.phase_timing(net, w, channel, policy))
+            .collect()
+    }
 
     /// Latency of one whole global round of `plan`. `device_steps` are
     /// the merged per-device round totals (the Eq. 8 inputs); `timing` is
@@ -406,81 +538,145 @@ impl LatencyEstimator for ClosedFormEstimator {
     }
 }
 
-/// The discrete-event simulator (see the module docs for the event model).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct EventDrivenEstimator;
+/// A run of devices sharing exact per-device compute and upload seconds
+/// (the same capability profile): one queue event stands in for all of
+/// them.
+#[derive(Debug, Clone, Copy)]
+struct Cohort {
+    compute_s: f64,
+    upload_s: f64,
+    count: usize,
+}
 
-impl EventDrivenEstimator {
-    /// Run the per-device event simulation of one cluster's edge phase
-    /// under `policy`. Reports landing after the policy's close are still
-    /// simulated to completion (the late-upload drain) so their arrival
-    /// times are known to the coordinator's stale-merge bookkeeping.
-    pub fn simulate_phase(
+/// Per-slot timings plus the cohort table of one phase, computed before
+/// any event is scheduled.
+struct PreparedPhase {
+    /// Per-slot compute seconds (`steps · C / c_k`).
+    compute: Vec<f64>,
+    /// Per-slot upload seconds (`W / device bandwidth`). Without
+    /// per-device overrides every entry is the shared `W / b` the
+    /// pre-scenario simulator charged (bit-identical).
+    upload: Vec<f64>,
+    /// Cohorts in first-seen work-list order (the cohort id is the event
+    /// id, so ties break by earliest member slot).
+    cohorts: Vec<Cohort>,
+    timeout: Option<(f64, CloseReason)>,
+    /// Latest finish (or finite timeout) — the calendar's bucket horizon.
+    horizon_s: f64,
+}
+
+impl PreparedPhase {
+    fn new(
         net: &NetworkModel,
         work: &[(usize, usize)],
         channel: UploadChannel,
         policy: &dyn AggregationPolicy,
+    ) -> PreparedPhase {
+        let mut compute = Vec::with_capacity(work.len());
+        let mut upload = Vec::with_capacity(work.len());
+        let mut cohorts: Vec<Cohort> = Vec::new();
+        let mut index: HashMap<(u64, u64), usize> = HashMap::new();
+        for &(dev, steps) in work {
+            let c = steps as f64 * net.step_seconds(dev);
+            let u = net.model_bits / channel.device_bandwidth(net, dev);
+            compute.push(c);
+            upload.push(u);
+            // Cohort key: exact bit patterns, so members share *identical*
+            // event timestamps and the expansion below is lossless.
+            match index.entry((c.to_bits(), u.to_bits())) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    cohorts[*e.get()].count += 1;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(cohorts.len());
+                    cohorts.push(Cohort { compute_s: c, upload_s: u, count: 1 });
+                }
+            }
+        }
+        let timeout = policy.timeout();
+        let mut horizon_s = cohorts
+            .iter()
+            .map(|c| c.compute_s + c.upload_s)
+            .fold(0.0, f64::max);
+        if let Some((t, _)) = timeout {
+            if t.is_finite() {
+                horizon_s = horizon_s.max(t);
+            }
+        }
+        PreparedPhase { compute, upload, cohorts, timeout, horizon_s }
+    }
+
+    /// Queue-sizing hint: one compute + one upload event per cohort, plus
+    /// a possible timeout.
+    fn expected_events(&self) -> usize {
+        self.cohorts.len() * 2 + 1
+    }
+
+    /// Schedule the initial events (cohort `ComputeDone`s and the armed
+    /// timeout, if any) onto a fresh queue.
+    fn arm(&self, queue: &mut CalendarQueue) {
+        for (cid, c) in self.cohorts.iter().enumerate() {
+            queue.schedule(Event {
+                time_s: c.compute_s,
+                kind: EventKind::ComputeDone,
+                id: cid,
+            });
+        }
+        if let Some((t, _)) = self.timeout {
+            queue.schedule(Event { time_s: t, kind: EventKind::RoundClose, id: 0 });
+        }
+    }
+
+    /// Drain the queue to completion (the late-upload drain included) and
+    /// expand the cohort outcome into per-slot SoA timing.
+    fn run(
+        &self,
+        work: &[(usize, usize)],
+        policy: &dyn AggregationPolicy,
+        queue: &mut CalendarQueue,
     ) -> PhaseTiming {
         if work.is_empty() {
             return PhaseTiming {
                 duration_s: 0.0,
                 compute_s: 0.0,
                 upload_s: 0.0,
-                devices: Vec::new(),
+                devices: DeviceTimings::default(),
                 events: 0,
                 close_reason: CloseReason::AllReported,
             };
         }
-        // Per-device upload seconds: devices transmit on dedicated links,
-        // and a scenario capability profile may give a device its own
-        // uplink bandwidth. Without overrides every entry is the shared
-        // `W / b` the pre-scenario simulator charged (bit-identical).
-        let upload: Vec<f64> = work
-            .iter()
-            .map(|&(dev, _)| net.model_bits / channel.device_bandwidth(net, dev))
-            .collect();
-        let mut queue = EventQueue::new();
-        for (slot, &(dev, steps)) in work.iter().enumerate() {
-            queue.schedule(Event {
-                time_s: steps as f64 * net.step_seconds(dev),
-                kind: EventKind::ComputeDone,
-                id: slot,
-            });
-        }
-        let timeout = policy.timeout();
-        if let Some((t, _)) = timeout {
-            queue.schedule(Event { time_s: t, kind: EventKind::RoundClose, id: 0 });
-        }
-        let mut compute = vec![0.0f64; work.len()];
-        let mut finish = vec![0.0f64; work.len()];
+        let total = work.len();
         let mut reported = 0usize;
         let mut close: Option<(f64, CloseReason)> = None;
         while let Some(ev) = queue.pop() {
             match ev.kind {
                 EventKind::ComputeDone => {
-                    compute[ev.id] = ev.time_s;
+                    let cohort = self.cohorts[ev.id];
                     queue.schedule(Event {
-                        time_s: ev.time_s + upload[ev.id],
+                        time_s: ev.time_s + cohort.upload_s,
                         kind: EventKind::UploadDone,
                         id: ev.id,
                     });
                 }
                 EventKind::UploadDone => {
-                    finish[ev.id] = ev.time_s;
-                    reported += 1;
-                    if close.is_none() && policy.closes_at_report(reported, work.len()) {
-                        let reason = if reported == work.len() {
-                            CloseReason::AllReported
-                        } else {
-                            CloseReason::KthReport
-                        };
-                        close = Some((ev.time_s, reason));
+                    let batch = self.cohorts[ev.id].count;
+                    if close.is_none() {
+                        if let Some(k) = policy.closes_within_batch(reported, batch, total) {
+                            let reason = if k == total {
+                                CloseReason::AllReported
+                            } else {
+                                CloseReason::KthReport
+                            };
+                            close = Some((ev.time_s, reason));
+                        }
                     }
+                    reported += batch;
                 }
                 EventKind::RoundClose => {
                     if close.is_none() {
-                        let (_, reason) =
-                            timeout.expect("RoundClose events come from the armed timeout");
+                        let (_, reason) = self
+                            .timeout
+                            .expect("RoundClose events come from the armed timeout");
                         close = Some((ev.time_s, reason));
                     }
                 }
@@ -489,22 +685,24 @@ impl EventDrivenEstimator {
         }
         let (close_s, close_reason) =
             close.expect("every report arrives eventually, so the phase must close");
-        let devices: Vec<DeviceTiming> = work
-            .iter()
-            .enumerate()
-            .map(|(slot, &(dev, _))| DeviceTiming {
-                device: dev,
-                compute_s: compute[slot],
-                upload_s: upload[slot],
-                finish_s: finish[slot],
-                verdict: if finish[slot] <= close_s {
-                    ReportVerdict::OnTime
-                } else {
-                    policy.late_verdict()
-                },
-            })
-            .collect();
-        let barrier = compute.iter().fold(0.0, f64::max).min(close_s);
+        // Lazy cohort expansion: per-slot finish times re-use the exact
+        // arithmetic the cohort events carried (compute + upload on the
+        // same operand bits), so the row the per-device engine would have
+        // produced is reconstructed bit for bit.
+        let mut devices = DeviceTimings::with_capacity(total);
+        for (slot, &(dev, _)) in work.iter().enumerate() {
+            let finish = self.compute[slot] + self.upload[slot];
+            devices.device.push(dev);
+            devices.compute_s.push(self.compute[slot]);
+            devices.upload_s.push(self.upload[slot]);
+            devices.finish_s.push(finish);
+            devices.verdict.push(if finish <= close_s {
+                ReportVerdict::OnTime
+            } else {
+                policy.late_verdict()
+            });
+        }
+        let barrier = self.compute.iter().fold(0.0, f64::max).min(close_s);
         PhaseTiming {
             duration_s: close_s,
             compute_s: barrier,
@@ -513,6 +711,65 @@ impl EventDrivenEstimator {
             events: queue.processed(),
             close_reason,
         }
+    }
+}
+
+/// The discrete-event simulator (see the module docs for the event model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventDrivenEstimator;
+
+impl EventDrivenEstimator {
+    /// Run the cohort-batched event simulation of one cluster's edge
+    /// phase under `policy`. Reports landing after the policy's close are
+    /// still simulated to completion (the late-upload drain) so their
+    /// arrival times are known to the coordinator's stale-merge
+    /// bookkeeping.
+    pub fn simulate_phase(
+        net: &NetworkModel,
+        work: &[(usize, usize)],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+    ) -> PhaseTiming {
+        let prep = PreparedPhase::new(net, work, channel, policy);
+        let mut queue = CalendarQueue::new(prep.horizon_s, prep.expected_events());
+        if !work.is_empty() {
+            prep.arm(&mut queue);
+        }
+        prep.run(work, policy, &mut queue)
+    }
+
+    /// Simulate every cluster's edge phase of one plan step on the
+    /// sharded calendar queues: one shard per cluster, drained
+    /// independently (clusters never exchange events within a phase; they
+    /// merge at the coordinator's gossip/cloud barriers). Results are
+    /// index-aligned with `work` and bit-identical to calling
+    /// [`EventDrivenEstimator::simulate_phase`] per cluster.
+    pub fn simulate_phases(
+        net: &NetworkModel,
+        work: &[Vec<(usize, usize)>],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+    ) -> Vec<PhaseTiming> {
+        let preps: Vec<PreparedPhase> = work
+            .iter()
+            .map(|w| PreparedPhase::new(net, w, channel, policy))
+            .collect();
+        let horizons: Vec<(f64, usize)> = preps
+            .iter()
+            .map(|p| (p.horizon_s, p.expected_events()))
+            .collect();
+        let mut shards = ShardedEventQueue::with_horizons(&horizons);
+        for (ci, (prep, w)) in preps.iter().zip(work).enumerate() {
+            if !w.is_empty() {
+                prep.arm(shards.shard_mut(ci));
+            }
+        }
+        preps
+            .iter()
+            .zip(work)
+            .enumerate()
+            .map(|(ci, (prep, w))| prep.run(w, policy, shards.shard_mut(ci)))
+            .collect()
     }
 
     /// Simulate π sequential gossip hops on the backhaul; returns
@@ -549,6 +806,16 @@ impl LatencyEstimator for EventDrivenEstimator {
         policy: &dyn AggregationPolicy,
     ) -> Option<PhaseTiming> {
         Some(Self::simulate_phase(net, work, channel, policy))
+    }
+
+    fn phase_timings(
+        &self,
+        net: &NetworkModel,
+        work: &[Vec<(usize, usize)>],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+    ) -> Option<Vec<PhaseTiming>> {
+        Some(Self::simulate_phases(net, work, channel, policy))
     }
 
     fn round_latency(
@@ -598,6 +865,117 @@ mod tests {
         NetworkModel::paper_defaults(4, 1e6, 50, 1_000_000)
     }
 
+    /// The original one-event-per-device heap simulation, kept verbatim
+    /// as the oracle the cohort-batched engine must reproduce bitwise
+    /// (all fields except the cohort-granular `events` count).
+    fn reference_phase(
+        net: &NetworkModel,
+        work: &[(usize, usize)],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+    ) -> PhaseTiming {
+        if work.is_empty() {
+            return PhaseTiming {
+                duration_s: 0.0,
+                compute_s: 0.0,
+                upload_s: 0.0,
+                devices: DeviceTimings::default(),
+                events: 0,
+                close_reason: CloseReason::AllReported,
+            };
+        }
+        let upload: Vec<f64> = work
+            .iter()
+            .map(|&(dev, _)| net.model_bits / channel.device_bandwidth(net, dev))
+            .collect();
+        let mut queue = EventQueue::new();
+        for (slot, &(dev, steps)) in work.iter().enumerate() {
+            queue.schedule(Event {
+                time_s: steps as f64 * net.step_seconds(dev),
+                kind: EventKind::ComputeDone,
+                id: slot,
+            });
+        }
+        let timeout = policy.timeout();
+        if let Some((t, _)) = timeout {
+            queue.schedule(Event { time_s: t, kind: EventKind::RoundClose, id: 0 });
+        }
+        let mut compute = vec![0.0f64; work.len()];
+        let mut finish = vec![0.0f64; work.len()];
+        let mut reported = 0usize;
+        let mut close: Option<(f64, CloseReason)> = None;
+        while let Some(ev) = queue.pop() {
+            match ev.kind {
+                EventKind::ComputeDone => {
+                    compute[ev.id] = ev.time_s;
+                    queue.schedule(Event {
+                        time_s: ev.time_s + upload[ev.id],
+                        kind: EventKind::UploadDone,
+                        id: ev.id,
+                    });
+                }
+                EventKind::UploadDone => {
+                    finish[ev.id] = ev.time_s;
+                    reported += 1;
+                    if close.is_none() && policy.closes_at_report(reported, work.len()) {
+                        let reason = if reported == work.len() {
+                            CloseReason::AllReported
+                        } else {
+                            CloseReason::KthReport
+                        };
+                        close = Some((ev.time_s, reason));
+                    }
+                }
+                EventKind::RoundClose => {
+                    if close.is_none() {
+                        let (_, reason) = timeout.expect("armed");
+                        close = Some((ev.time_s, reason));
+                    }
+                }
+                EventKind::BackhaulDone => unreachable!(),
+            }
+        }
+        let (close_s, close_reason) = close.expect("phase closes");
+        let mut devices = DeviceTimings::with_capacity(work.len());
+        for (slot, &(dev, _)) in work.iter().enumerate() {
+            devices.push(DeviceTiming {
+                device: dev,
+                compute_s: compute[slot],
+                upload_s: upload[slot],
+                finish_s: finish[slot],
+                verdict: if finish[slot] <= close_s {
+                    ReportVerdict::OnTime
+                } else {
+                    policy.late_verdict()
+                },
+            });
+        }
+        let barrier = compute.iter().fold(0.0, f64::max).min(close_s);
+        PhaseTiming {
+            duration_s: close_s,
+            compute_s: barrier,
+            upload_s: close_s - barrier,
+            devices,
+            events: queue.processed(),
+            close_reason,
+        }
+    }
+
+    fn assert_same_phase(a: &PhaseTiming, b: &PhaseTiming) {
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(a.compute_s.to_bits(), b.compute_s.to_bits());
+        assert_eq!(a.upload_s.to_bits(), b.upload_s.to_bits());
+        assert_eq!(a.close_reason, b.close_reason);
+        assert_eq!(a.devices.len(), b.devices.len());
+        for (x, y) in a.devices.iter().zip(b.devices.iter()) {
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits());
+            assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.verdict, y.verdict);
+        }
+    }
+
     #[test]
     fn queue_orders_by_time_kind_id() {
         let mut q = EventQueue::new();
@@ -643,8 +1021,9 @@ mod tests {
         assert_eq!(pt.devices.len(), 4);
         assert!(pt.devices.iter().all(|d| d.verdict == ReportVerdict::OnTime));
         assert_eq!(pt.close_reason, CloseReason::AllReported);
-        // Two events per device: ComputeDone + UploadDone (no timeout).
-        assert_eq!(pt.events, 8);
+        // All four homogeneous devices form one cohort: one ComputeDone +
+        // one UploadDone (no timeout).
+        assert_eq!(pt.events, 2);
     }
 
     #[test]
@@ -664,10 +1043,11 @@ mod tests {
             pt.devices.iter().filter(|d| d.dropped()).map(|d| d.device).collect();
         assert_eq!(dropped, vec![2]);
         assert!((pt.duration_s - dl).abs() < 1e-12, "duration capped at the deadline");
-        assert!(pt.devices[2].finish_s > dl);
+        assert!(pt.devices.get(2).finish_s > dl);
         assert_eq!(pt.close_reason, CloseReason::Deadline);
-        // The straggler's upload still drains after the close.
-        assert_eq!(pt.events, 9, "4 computes + 4 uploads + 1 timeout");
+        // Two cohorts ({0,1,3} and the straggler {2}): 2 computes + 2
+        // uploads (the straggler's drains after the close) + 1 timeout.
+        assert_eq!(pt.events, 5);
     }
 
     #[test]
@@ -702,12 +1082,14 @@ mod tests {
         assert_eq!(pt.close_reason, CloseReason::KthReport);
         let fast_finish = 16.0 * m.step_seconds(0) + m.model_bits / m.b_d2e;
         assert!((pt.duration_s - fast_finish).abs() < 1e-12);
-        assert!(pt.devices[0].verdict == ReportVerdict::OnTime);
-        assert!(pt.devices[2].verdict == ReportVerdict::OnTime);
-        assert!(pt.devices[1].late() && pt.devices[3].late());
+        assert!(pt.devices.get(0).verdict == ReportVerdict::OnTime);
+        assert!(pt.devices.get(2).verdict == ReportVerdict::OnTime);
+        assert!(pt.devices.get(1).late() && pt.devices.get(3).late());
         // Late uploads drained: their true arrival times are recorded.
-        assert!(pt.devices[1].finish_s > pt.duration_s);
-        assert!(pt.devices[3].finish_s > pt.devices[1].finish_s);
+        assert!(pt.devices.get(1).finish_s > pt.duration_s);
+        assert!(pt.devices.get(3).finish_s > pt.devices.get(1).finish_s);
+        // Three cohorts ({0,2}, {1}, {3}), no timeout (infinite).
+        assert_eq!(pt.events, 6);
     }
 
     #[test]
@@ -723,6 +1105,8 @@ mod tests {
         assert_eq!(pt.close_reason, CloseReason::Timeout);
         assert!((pt.duration_s - 1e-9).abs() < 1e-18);
         assert!(pt.devices.iter().all(|d| d.late()), "everyone is late, nobody dropped");
+        // One homogeneous cohort + the timeout event.
+        assert_eq!(pt.events, 3);
     }
 
     #[test]
@@ -751,9 +1135,68 @@ mod tests {
         assert_eq!(barrier.upload_s.to_bits(), degenerate.upload_s.to_bits());
         assert_eq!(barrier.close_reason, degenerate.close_reason);
         assert_eq!(barrier.events, degenerate.events);
-        for (a, b) in barrier.devices.iter().zip(&degenerate.devices) {
+        for (a, b) in barrier.devices.iter().zip(degenerate.devices.iter()) {
             assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
             assert_eq!(a.verdict, b.verdict);
+        }
+    }
+
+    #[test]
+    fn cohort_engine_matches_per_device_reference_bitwise() {
+        // Heterogeneous fleet with a per-device uplink override, under
+        // all three policies: the cohort-batched calendar engine must
+        // reproduce the one-event-per-device heap oracle bit for bit.
+        let mut m = NetworkModel::paper_defaults(9, 1e6, 50, 1_000_000);
+        for (d, c) in m.device_flops.iter_mut().enumerate() {
+            *c *= 1.0 - 0.1 * (d % 3) as f64; // three capability tiers
+        }
+        m.device_uplink[4] = Some(1e6);
+        let work: Vec<(usize, usize)> = (0..9).map(|d| (d, 8 + 4 * (d % 2))).collect();
+        let fast_finish = 8.0 * m.step_seconds(0) + m.model_bits / m.b_d2e;
+        let policies: Vec<Box<dyn AggregationPolicy>> = vec![
+            Box::new(FullBarrier),
+            Box::new(DeadlineDrop { deadline_s: fast_finish * 2.0 }),
+            Box::new(SemiSync { k: 5, timeout_s: fast_finish * 3.0, staleness_exp: 1.0 }),
+            Box::new(SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 0.5 }),
+        ];
+        for channel in [UploadChannel::DeviceEdge, UploadChannel::DeviceCloud] {
+            for policy in &policies {
+                let fast = EventDrivenEstimator::simulate_phase(&m, &work, channel, &**policy);
+                let oracle = reference_phase(&m, &work, channel, &**policy);
+                assert_same_phase(&fast, &oracle);
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_phases_matches_per_cluster_simulate_phase() {
+        let mut m = NetworkModel::paper_defaults(12, 1e6, 50, 1_000_000);
+        for (d, c) in m.device_flops.iter_mut().enumerate() {
+            *c *= 1.0 - 0.05 * (d % 4) as f64;
+        }
+        // Uneven split incl. an empty cluster.
+        let work: Vec<Vec<(usize, usize)>> = vec![
+            (0..5).map(|d| (d, 16)).collect(),
+            Vec::new(),
+            (5..12).map(|d| (d, 16)).collect(),
+        ];
+        let policy = SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 1.0 };
+        let batch = EventDrivenEstimator::simulate_phases(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &policy,
+        );
+        assert_eq!(batch.len(), work.len());
+        for (w, pt) in work.iter().zip(&batch) {
+            let solo = EventDrivenEstimator::simulate_phase(
+                &m,
+                w,
+                UploadChannel::DeviceEdge,
+                &policy,
+            );
+            assert_same_phase(pt, &solo);
+            assert_eq!(pt.events, solo.events);
         }
     }
 
@@ -793,13 +1236,13 @@ mod tests {
             UploadChannel::DeviceEdge,
             &FullBarrier,
         );
-        assert!((pt.devices[1].upload_s - m.model_bits / 1e6).abs() < 1e-9);
+        assert!((pt.devices.get(1).upload_s - m.model_bits / 1e6).abs() < 1e-9);
         for d in [0usize, 2, 3] {
-            assert!((pt.devices[d].upload_s - m.model_bits / m.b_d2e).abs() < 1e-9);
+            assert!((pt.devices.get(d).upload_s - m.model_bits / m.b_d2e).abs() < 1e-9);
         }
         // The barrier waits for the overridden device's slower report.
-        assert!(pt.devices[1].finish_s > pt.devices[0].finish_s);
-        assert_eq!(pt.duration_s.to_bits(), pt.devices[1].finish_s.to_bits());
+        assert!(pt.devices.get(1).finish_s > pt.devices.get(0).finish_s);
+        assert_eq!(pt.duration_s.to_bits(), pt.devices.get(1).finish_s.to_bits());
         // Overrides never touch the cloud channel.
         let cloud = EventDrivenEstimator::simulate_phase(
             &m,
@@ -807,7 +1250,7 @@ mod tests {
             UploadChannel::DeviceCloud,
             &FullBarrier,
         );
-        assert!((cloud.devices[1].upload_s - m.model_bits / m.b_d2c).abs() < 1e-9);
+        assert!((cloud.devices.get(1).upload_s - m.model_bits / m.b_d2c).abs() < 1e-9);
     }
 
     #[test]
@@ -820,7 +1263,7 @@ mod tests {
             UploadChannel::DeviceCloud,
             &FullBarrier,
         );
-        assert!((pt.devices[0].upload_s - m.model_bits / m.b_d2c).abs() < 1e-12);
+        assert!((pt.devices.get(0).upload_s - m.model_bits / m.b_d2c).abs() < 1e-12);
     }
 
     #[test]

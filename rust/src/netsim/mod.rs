@@ -11,21 +11,26 @@
 //!
 //! The closed form cannot express reporting deadlines, semi-synchronous
 //! round closes, stragglers being dropped from aggregation, or per-device
-//! timing. The [`event`] submodule simulates the same round as per-device
+//! timing. The [`event`] submodule simulates the same round as
 //! `ComputeDone` / `UploadDone` / `BackhaulDone` / `RoundClose` events on
 //! a virtual clock, with the round-close condition supplied by an
 //! [`aggregation::policy::AggregationPolicy`](crate::aggregation::policy::AggregationPolicy);
 //! [`LatencyEstimator`] is the coordinator-facing trait with both
 //! implementations ([`ClosedFormEstimator`] — the fast default and
-//! equivalence oracle — and [`EventDrivenEstimator`]). See the [`event`]
-//! module docs for the event model, tie-breaking order, and how close
+//! equivalence oracle — and [`EventDrivenEstimator`]). The [`calendar`]
+//! submodule holds the engine's sharded calendar queues (one bucket
+//! queue per cluster, merged deterministically at barriers) that carry
+//! it to the million-device regime. See the [`event`] module docs for
+//! the event model, cohort batching, tie-breaking order, and how close
 //! policies interact with the Eq. 6 weight renormalization.
 
+pub mod calendar;
 pub mod event;
 
+pub use calendar::{CalendarQueue, ShardedEventQueue};
 pub use event::{
-    ClosedFormEstimator, DeviceTiming, Event, EventDrivenEstimator, EventKind, EventQueue,
-    LatencyEstimator, PhaseTiming, RoundTiming, UploadChannel,
+    ClosedFormEstimator, DeviceTiming, DeviceTimings, Event, EventDrivenEstimator, EventKind,
+    EventQueue, LatencyEstimator, PhaseTiming, RoundTiming, UploadChannel,
 };
 
 use crate::error::{CfelError, Result};
@@ -145,23 +150,36 @@ impl NetworkModel {
         }
     }
 
-    /// Draw heterogeneous device capacities c_k ~ U[lo, 1]·capacity.
-    pub fn with_heterogeneity(mut self, lo_fraction: f64, rng: &Rng) -> NetworkModel {
+    /// Draw heterogeneous device capacities c_k ~ U[lo, 1]·capacity, in
+    /// place (no fleet-sized clone; same RNG stream as
+    /// [`NetworkModel::with_heterogeneity`]).
+    pub fn apply_heterogeneity(&mut self, lo_fraction: f64, rng: &Rng) {
         let mut r = rng.split(0xBEEF);
         for c in &mut self.device_flops {
             *c = IPHONE_X_FLOPS * r.uniform(lo_fraction as f32, 1.0) as f64;
         }
+    }
+
+    /// Draw heterogeneous device capacities c_k ~ U[lo, 1]·capacity.
+    pub fn with_heterogeneity(mut self, lo_fraction: f64, rng: &Rng) -> NetworkModel {
+        self.apply_heterogeneity(lo_fraction, rng);
         self
     }
 
-    /// Slow down a deterministic straggler subset of the fleet.
-    pub fn with_stragglers(mut self, spec: StragglerSpec, rng: &Rng) -> NetworkModel {
+    /// Slow down a deterministic straggler subset of the fleet, in place
+    /// (same RNG stream as [`NetworkModel::with_stragglers`]).
+    pub fn apply_stragglers(&mut self, spec: StragglerSpec, rng: &Rng) {
         let n = self.device_flops.len();
         let count = ((n as f64 * spec.fraction).ceil() as usize).clamp(1, n);
         let mut r = rng.split(0x57A6);
         for slot in r.choose(n, count) {
             self.device_flops[slot] /= spec.slowdown;
         }
+    }
+
+    /// Slow down a deterministic straggler subset of the fleet.
+    pub fn with_stragglers(mut self, spec: StragglerSpec, rng: &Rng) -> NetworkModel {
+        self.apply_stragglers(spec, rng);
         self
     }
 

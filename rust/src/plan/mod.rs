@@ -40,6 +40,17 @@
 //! [`std::fmt::Display`] pretty-prints the canonical spelling, and
 //! `parse(print(plan)) == plan` holds for every valid plan
 //! (property-tested in `rust/tests/proptest_invariants.rs`).
+//!
+//! # Steps and the event engine
+//!
+//! [`Step::EdgePhase`] is where the sharded event engine runs: all alive
+//! clusters' phases are simulated as shards of one calendar queue
+//! (`netsim::calendar`), independent until the next [`Step::Gossip`] /
+//! [`Step::CloudAggregate`] barrier merges them in deterministic order.
+//! The interpreter walks steps single-threaded; only device training
+//! inside an edge phase fans out. See `docs/ARCHITECTURE.md` for the
+//! full round pipeline and `docs/DETERMINISM.md` for why any step
+//! ordering stays bit-identical under `CFEL_THREADS`.
 
 pub mod canned;
 mod parse;

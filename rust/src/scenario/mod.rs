@@ -28,6 +28,14 @@
 //! Scenarios round-trip through JSON (`--scenario <file.json>`, like
 //! `--plan`); see `examples/scenarios/` for shipped files and the README
 //! for the schema.
+//!
+//! Determinism: capability application mutates the network model in
+//! place (`NetworkModel::apply_heterogeneity` /
+//! `NetworkModel::apply_stragglers`) on the same derived RNG streams the
+//! pre-scenario coordinator consumed, and timeline generation is a pure
+//! function of `(rosters, ChurnSpec)` — independent of the experiment
+//! seed. The full stream-derivation table lives in
+//! `docs/DETERMINISM.md`.
 
 pub mod timeline;
 
@@ -82,10 +90,10 @@ impl CapabilityProfiles {
         match self {
             CapabilityProfiles::Derived { heterogeneity, stragglers } => {
                 if let Some(lo) = heterogeneity {
-                    *net = net.clone().with_heterogeneity(*lo, &rng.split(0x4E37));
+                    net.apply_heterogeneity(*lo, &rng.split(0x4E37));
                 }
                 if let Some(spec) = stragglers {
-                    *net = net.clone().with_stragglers(*spec, &rng.split(0x5746));
+                    net.apply_stragglers(*spec, &rng.split(0x5746));
                 }
                 Ok(())
             }

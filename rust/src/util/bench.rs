@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One benchmark's collected samples (seconds per iteration).
@@ -39,6 +40,26 @@ impl Sample {
             }
         }
         line
+    }
+
+    /// Machine-readable form of this sample (one entry of the array
+    /// [`Bench::write_json`] emits).
+    pub fn to_json(&self) -> Json {
+        let m = stats::mean(&self.secs);
+        let mut j = Json::obj();
+        j.set("name", Json::from_str_val(&self.name))
+            .set("iters", Json::from_usize(self.secs.len()))
+            .set("mean_s", Json::from_f64(m))
+            .set("median_s", Json::from_f64(stats::percentile(&self.secs, 0.5)))
+            .set("p10_s", Json::from_f64(stats::percentile(&self.secs, 0.1)))
+            .set("p90_s", Json::from_f64(stats::percentile(&self.secs, 0.9)));
+        if let Some(items) = self.throughput_items {
+            j.set("items", Json::from_f64(items));
+            if m > 0.0 {
+                j.set("items_per_s", Json::from_f64(items / m));
+            }
+        }
+        j
     }
 }
 
@@ -121,6 +142,19 @@ impl Bench {
     pub fn samples(&self) -> &[Sample] {
         &self.samples
     }
+
+    /// Dump every collected sample as pretty JSON:
+    /// `{"bench": <name>, "samples": [<Sample::to_json>, ...]}`.
+    /// This is what `BENCH_scale.json` and the `CFEL_BENCH_JSON` lanes
+    /// are built from — stable keys, parseable with `Json::parse_file`.
+    pub fn write_json(&self, path: &std::path::Path, bench_name: &str) -> std::io::Result<()> {
+        let mut root = Json::obj();
+        root.set("bench", Json::from_str_val(bench_name)).set(
+            "samples",
+            Json::Arr(self.samples.iter().map(Sample::to_json).collect()),
+        );
+        std::fs::write(path, root.pretty() + "\n")
+    }
 }
 
 /// Standard header so all bench binaries print a uniform preamble.
@@ -142,6 +176,24 @@ mod tests {
         assert_eq!(s.secs.len(), 3);
         assert!(s.report().contains("noop"));
         assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let mut b = Bench { warmup: 0, iters: 2, samples: vec![] };
+        b.run_throughput("lane", 10.0, || 1 + 1);
+        let dir = std::env::temp_dir().join("cfel_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        b.write_json(&path, "unit").unwrap();
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "unit");
+        let samples = j.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].get("name").unwrap().as_str().unwrap(), "lane");
+        assert_eq!(samples[0].get("iters").unwrap().as_usize().unwrap(), 2);
+        assert!(samples[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

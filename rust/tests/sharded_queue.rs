@@ -1,0 +1,210 @@
+//! Property suite for the sharded calendar-queue engine.
+//!
+//! Two invariants, both under adversarial cluster splits (`n = m·q + r`
+//! with `r ∈ [1, m-1]`, so `ExperimentConfig::cluster_sizes` is forced to
+//! remainder-spread — clusters of unequal size) and a Markov churn
+//! timeline perturbing the rosters between rounds:
+//!
+//! 1. **Pop-order equivalence.** Scheduling the same events into one
+//!    global [`EventQueue`] (binary heap, the reference) and into a
+//!    [`ShardedEventQueue`] (one calendar queue per cluster, merged at
+//!    pop time) yields the identical pop sequence — including events
+//!    scheduled *during* the drain (`UploadDone` chained off each
+//!    `ComputeDone`), coarse-grid timestamps that force `(time, kind,
+//!    id)` tie-breaks, and past-horizon times landing in the overflow
+//!    bucket.
+//! 2. **Batched-phase equivalence.** `simulate_phases` (all clusters as
+//!    shards of one queue) is bit-identical, field by field, to running
+//!    `simulate_phase` per cluster — for a heterogeneous fleet under
+//!    both the full-barrier and semi-sync close policies.
+//!
+//! See docs/DETERMINISM.md for the contract these pin.
+
+use cfel::aggregation::policy::{AggregationPolicy, FullBarrier, SemiSync};
+use cfel::config::ExperimentConfig;
+use cfel::netsim::{
+    Event, EventDrivenEstimator, EventKind, EventQueue, NetworkModel, PhaseTiming,
+    ShardedEventQueue, UploadChannel,
+};
+use cfel::prop_assert;
+use cfel::scenario::{ChurnSpec, Scenario, Timeline, WorldEvent};
+use cfel::util::proptest::{check, default_cases, int_biased};
+use cfel::util::rng::Rng;
+
+/// Timestamps on a 1/8-second grid so distinct devices collide on time
+/// and the `(time, kind, id)` tie-break actually decides orderings.
+fn coarse(rng: &mut Rng, hi: f64) -> f64 {
+    (rng.f64() * hi * 8.0).floor() / 8.0
+}
+
+/// Adversarial system shape: m clusters, n = m·q + r devices with a
+/// guaranteed remainder, so cluster sizes split unevenly.
+fn uneven_split(rng: &mut Rng, max_m: usize, max_q: usize) -> (usize, usize) {
+    let m = int_biased(rng, 2, max_m);
+    let q = int_biased(rng, 1, max_q);
+    let r = int_biased(rng, 1, m - 1);
+    (n_of(m, q, r), m)
+}
+
+fn n_of(m: usize, q: usize, r: usize) -> usize {
+    m * q + r
+}
+
+#[test]
+fn churned_roster_pop_order_matches_single_heap() {
+    check("sharded pop order == single heap", 0xC0DE, default_cases(), |rng| {
+        let (n, m) = uneven_split(rng, 7, 5);
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.n_devices = n;
+        cfg.n_clusters = m;
+        let sizes = cfg.cluster_sizes();
+        prop_assert!(sizes.iter().any(|&s| s != sizes[0]), "split must be uneven: {sizes:?}");
+        let rosters = Scenario::contiguous_rosters(&sizes);
+        let spec = ChurnSpec {
+            p_leave: 0.3,
+            p_join: 0.3,
+            rounds: 4,
+            seed: rng.below(1 << 20) as u64,
+        };
+        let timeline = Timeline::markov_churn(&rosters, &spec).unwrap();
+
+        let mut active = vec![true; n];
+        let mut cluster_of = vec![0usize; n];
+        for (ci, roster) in rosters.iter().enumerate() {
+            for &d in roster {
+                cluster_of[d] = ci;
+            }
+        }
+
+        let horizon = 100.0;
+        for round in 0..spec.rounds {
+            for te in timeline.at(round) {
+                match te.event {
+                    WorldEvent::Join { device, cluster } => {
+                        active[device] = true;
+                        cluster_of[device] = cluster;
+                    }
+                    WorldEvent::Leave { device } => active[device] = false,
+                    _ => {}
+                }
+            }
+
+            let mut heap = EventQueue::new();
+            let shard_spec: Vec<(f64, usize)> =
+                sizes.iter().map(|&s| (horizon, s * 2 + 1)).collect();
+            let mut sharded = ShardedEventQueue::with_horizons(&shard_spec);
+            for d in 0..n {
+                if !active[d] {
+                    continue;
+                }
+                let ev = Event {
+                    time_s: coarse(rng, horizon),
+                    kind: EventKind::ComputeDone,
+                    id: round * n + d,
+                };
+                heap.schedule(ev);
+                sharded.schedule(cluster_of[d], ev);
+            }
+
+            loop {
+                match (heap.pop(), sharded.pop_merged()) {
+                    (None, None) => break,
+                    (Some(ea), Some((shard, eb))) => {
+                        prop_assert!(ea == eb, "round {round}: pop mismatch {ea:?} vs {eb:?}");
+                        prop_assert!(
+                            shard == cluster_of[ea.id % n],
+                            "round {round}: event {} popped from shard {shard}, home {}",
+                            ea.id,
+                            cluster_of[ea.id % n]
+                        );
+                        if ea.kind == EventKind::ComputeDone {
+                            // Chain an upload, sometimes past the horizon
+                            // (overflow-bucket path), sometimes at dt=0
+                            // (same-time kind tie-break).
+                            let dt = (ea.id % 17) as f64 * horizon / 64.0;
+                            let up = Event {
+                                time_s: ea.time_s + dt,
+                                kind: EventKind::UploadDone,
+                                id: ea.id,
+                            };
+                            heap.schedule(up);
+                            sharded.schedule(shard, up);
+                        }
+                    }
+                    (a, b) => {
+                        prop_assert!(false, "round {round}: queue lengths diverged ({a:?} vs {b:?})");
+                    }
+                }
+            }
+            prop_assert!(
+                heap.processed() == sharded.processed(),
+                "round {round}: processed counts diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+fn f64_bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bitwise PhaseTiming equality, field by field.
+fn same_phase(a: &PhaseTiming, b: &PhaseTiming) -> bool {
+    a.duration_s.to_bits() == b.duration_s.to_bits()
+        && a.compute_s.to_bits() == b.compute_s.to_bits()
+        && a.upload_s.to_bits() == b.upload_s.to_bits()
+        && a.events == b.events
+        && a.close_reason == b.close_reason
+        && a.devices.device == b.devices.device
+        && f64_bits(&a.devices.compute_s) == f64_bits(&b.devices.compute_s)
+        && f64_bits(&a.devices.upload_s) == f64_bits(&b.devices.upload_s)
+        && f64_bits(&a.devices.finish_s) == f64_bits(&b.devices.finish_s)
+        && a.devices.verdict == b.devices.verdict
+}
+
+#[test]
+fn batched_phases_match_per_cluster_bitwise() {
+    check("simulate_phases == per-cluster simulate_phase", 0xFA57, default_cases(), |rng| {
+        let (n, m) = uneven_split(rng, 6, 4);
+        let mut net = NetworkModel::paper_defaults(n, 13.30e6, 50, 10_000);
+        net.apply_heterogeneity(0.25, &Rng::new(rng.below(1 << 20) as u64));
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.n_devices = n;
+        cfg.n_clusters = m;
+        let rosters = Scenario::contiguous_rosters(&cfg.cluster_sizes());
+        let work: Vec<Vec<(usize, usize)>> = rosters
+            .iter()
+            .map(|ro| ro.iter().map(|&d| (d, 1 + d % 5)).collect())
+            .collect();
+        let k = int_biased(rng, 1, n / m + 2);
+        let policies: Vec<Box<dyn AggregationPolicy>> = vec![
+            Box::new(FullBarrier),
+            Box::new(SemiSync { k, timeout_s: 30.0, staleness_exp: 1.0 }),
+        ];
+        for policy in &policies {
+            let batched = EventDrivenEstimator::simulate_phases(
+                &net,
+                &work,
+                UploadChannel::DeviceEdge,
+                policy.as_ref(),
+            );
+            prop_assert!(batched.len() == m, "one timing per cluster");
+            for (ci, w) in work.iter().enumerate() {
+                let solo = EventDrivenEstimator::simulate_phase(
+                    &net,
+                    w,
+                    UploadChannel::DeviceEdge,
+                    policy.as_ref(),
+                );
+                prop_assert!(
+                    same_phase(&solo, &batched[ci]),
+                    "cluster {ci} diverged under {}: solo {solo:?} vs batched {:?}",
+                    batched[ci].close_reason.name(),
+                    batched[ci]
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Fail if the architecture docs reference repo paths that do not exist —
+# keeps docs/ARCHITECTURE.md / docs/DETERMINISM.md honest as modules move.
+# Run from anywhere; CI runs it in the lint job.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+for doc in docs/ARCHITECTURE.md docs/DETERMINISM.md; do
+    # Path-like references into the source tree, trailing punctuation
+    # stripped (e.g. "rust/src/plan/mod.rs." at a sentence end).
+    refs=$(grep -oE '(rust|docs|scripts|examples)/[A-Za-z0-9_./-]+' "$doc" \
+        | sed -E 's/[.,:;)]+$//' | sort -u)
+    for ref in $refs; do
+        if [ ! -e "$ref" ]; then
+            echo "ERROR: $doc references nonexistent path: $ref" >&2
+            status=1
+        fi
+    done
+done
+
+if [ "$status" -eq 0 ]; then
+    echo "doc links OK"
+fi
+exit $status
