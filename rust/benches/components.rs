@@ -186,6 +186,33 @@ fn main() {
         },
     );
 
+    // Thread sweep over the same fleet: each cluster's calendar shard
+    // drains on its own pool worker (`simulate_phases_threads`), so
+    // events/sec should scale with cores up to the cluster count. The
+    // drain is pinned bit-identical across thread counts (tests +
+    // `benches/scale.rs` assertions); this lane records the speedup.
+    for t in [1usize, 2, 4, 8] {
+        b.run_throughput(
+            &format!("event-sim round {n_clusters}cl x {dev_per_cluster}dev (threads={t})"),
+            n_events,
+            || {
+                let pts = EventDrivenEstimator::simulate_phases_threads(
+                    &net,
+                    &cluster_work,
+                    UploadChannel::DeviceEdge,
+                    &deadline,
+                    t,
+                );
+                let mut total = EventDrivenEstimator::simulate_gossip(&net, 10).0;
+                for pt in pts {
+                    total += pt.duration_s;
+                    pt.devices.recycle();
+                }
+                total
+            },
+        );
+    }
+
     if manifest_path.exists() && cfg!(feature = "xla") {
         bench_pjrt(&mut b, Manifest::default_dir().as_path());
     } else {

@@ -1,15 +1,25 @@
 //! Scale bench: one CE-FedAvg round of virtual-clock simulation swept
-//! over fleet sizes — the metropolitan regime the sharded calendar-queue
-//! engine exists for.
+//! over fleet sizes × worker-thread counts — the metropolitan regime the
+//! sharded calendar-queue engine exists for.
 //!
 //! Each lane builds a tiered-capability fleet of `n` devices split into
 //! `m` clusters with the same remainder-spread sizes as
 //! `ExperimentConfig::cluster_sizes`, then simulates a full CE-FedAvg
-//! round: γ=8 edge phases through `EventDrivenEstimator::simulate_phases`
-//! (all clusters as shards of one sharded calendar queue, FullBarrier
-//! close) plus π=10 backhaul gossip hops. The fleet uses 12 capability
-//! tiers, so cohort batching is exercised realistically: every cluster
-//! collapses to ≤ 12 cohorts no matter how many devices it holds.
+//! round: γ=8 edge phases through
+//! `EventDrivenEstimator::simulate_phases_threads` (each cluster's
+//! calendar shard drained on its own worker thread, FullBarrier close)
+//! plus π=10 backhaul gossip hops. The fleet uses 12 capability tiers,
+//! so cohort batching is exercised realistically: every cluster collapses
+//! to ≤ 12 cohorts no matter how many devices it holds.
+//!
+//! Every lane runs once per thread count (default 1/2/4, override
+//! `CFEL_SCALE_THREADS=1,8`), and the bench *asserts* that each parallel
+//! drain reproduces the single-thread virtual round time bit for bit —
+//! the sequential-vs-parallel comparison is a recorded number, not a
+//! claim. The deterministic virtual history (time bits + event counts)
+//! and its FNV-1a digest land in the JSON next to the wall-clock
+//! samples, so two runs on different machines can cross-check
+//! determinism without sharing wall-clock numbers.
 //!
 //! Throughput is reported in processed events/sec (probed from a dry run
 //! — cohort batching makes the count data-dependent). Results land in
@@ -18,6 +28,7 @@
 //! Env knobs:
 //! - `CFEL_SCALE_MAX_DEVICES` — skip lanes with more devices (CI smoke
 //!   runs with `100000`).
+//! - `CFEL_SCALE_THREADS` — comma-separated worker counts per lane.
 //! - `CFEL_SCALE_ASSERT_SECS` — fail the run if any executed lane's mean
 //!   wall-clock meets or exceeds this bound.
 //! - `CFEL_BENCH_ITERS` / `CFEL_BENCH_WARMUP` — iteration counts.
@@ -27,6 +38,7 @@ use std::path::{Path, PathBuf};
 use cfel::aggregation::policy::FullBarrier;
 use cfel::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
 use cfel::util::bench::{header, Bench};
+use cfel::util::json::Json;
 use cfel::util::stats;
 
 /// Capability multipliers applied round-robin over device ids. 12 tiers
@@ -61,6 +73,20 @@ fn env_f64(name: &str) -> Option<f64> {
     std::env::var(name).ok().and_then(|v| v.parse().ok())
 }
 
+/// Worker counts each lane runs with (the thread sweep).
+fn thread_lanes() -> Vec<usize> {
+    std::env::var("CFEL_SCALE_THREADS")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&t| t >= 1)
+                .collect()
+        })
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
 /// femnist-CNN-sized fleet with tiered device capabilities.
 fn fleet(n: usize) -> NetworkModel {
     let mut net = NetworkModel::paper_defaults(n, 13.30e6, 50, 6_603_710);
@@ -77,25 +103,40 @@ fn cluster_sizes(n: usize, m: usize) -> Vec<usize> {
     (0..m).map(|i| q + usize::from(i < r)).collect()
 }
 
-/// One CE-FedAvg round over the whole fleet. Returns (virtual round
-/// time, processed events). Per-cluster virtual clocks accumulate in a
-/// flat vector — no `RoundTiming` / per-device state is retained, so
-/// the bench's own memory stays O(n) for the timing rows of the phase
-/// in flight.
-fn ce_round(net: &NetworkModel, work: &[Vec<(usize, usize)>]) -> (f64, usize) {
+/// One CE-FedAvg round over the whole fleet with `threads` workers
+/// (`None` = the env-resolved `CFEL_THREADS` default, the path the CI
+/// matrix varies). Returns (virtual round time, processed events).
+/// Per-cluster virtual clocks accumulate in a flat vector, and each
+/// phase's device-timing columns are recycled to the engine's free
+/// list, so steady-state iterations allocate O(1).
+fn ce_round(
+    net: &NetworkModel,
+    work: &[Vec<(usize, usize)>],
+    threads: Option<usize>,
+) -> (f64, usize) {
     let policy = FullBarrier;
     let mut per_cluster = vec![0.0f64; work.len()];
     let mut events = 0usize;
     for _ in 0..EDGE_PHASES {
-        let pts = EventDrivenEstimator::simulate_phases(
-            net,
-            work,
-            UploadChannel::DeviceEdge,
-            &policy,
-        );
-        for (ci, pt) in pts.iter().enumerate() {
+        let pts = match threads {
+            Some(t) => EventDrivenEstimator::simulate_phases_threads(
+                net,
+                work,
+                UploadChannel::DeviceEdge,
+                &policy,
+                t,
+            ),
+            None => EventDrivenEstimator::simulate_phases(
+                net,
+                work,
+                UploadChannel::DeviceEdge,
+                &policy,
+            ),
+        };
+        for (ci, pt) in pts.into_iter().enumerate() {
             per_cluster[ci] += pt.duration_s;
             events += pt.events;
+            pt.devices.recycle();
         }
     }
     let (gossip_t, gossip_ev) = EventDrivenEstimator::simulate_gossip(net, GOSSIP_HOPS);
@@ -103,15 +144,29 @@ fn ce_round(net: &NetworkModel, work: &[Vec<(usize, usize)>]) -> (f64, usize) {
     (slowest + gossip_t, events + gossip_ev)
 }
 
+/// FNV-1a over the deterministic virtual history — a machine-independent
+/// fingerprint (pure IEEE-754 arithmetic, no wall clock), so two runs on
+/// different hosts or thread counts must produce the same digest.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 fn main() {
     header(
         "scale",
-        "sharded calendar-queue engine: one CE-FedAvg round (8 edge phases \
-         + 10 gossip hops) per iteration",
+        "parallel shard drain: one CE-FedAvg round (8 edge phases + 10 \
+         gossip hops) per iteration, per worker-thread count",
     );
     let max_devices = env_usize("CFEL_SCALE_MAX_DEVICES").unwrap_or(usize::MAX);
     let assert_secs = env_f64("CFEL_SCALE_ASSERT_SECS");
+    let threads = thread_lanes();
     let mut b = Bench::new();
+    // (lane, virtual_s, events) per executed (n, m) — thread-invariant.
+    let mut history: Vec<(String, f64, usize)> = Vec::new();
 
     for &(n, m) in &SWEEP {
         if n > max_devices {
@@ -126,25 +181,91 @@ fn main() {
             work.push((next..next + s).map(|d| (d, STEPS)).collect());
             next += s;
         }
-        // Dry run: virtual round time + the data-dependent event count.
-        let (virtual_s, events) = ce_round(&net, &work);
-        let sample = b.run_throughput(&format!("ce-round n={n} m={m}"), events as f64, || {
-            ce_round(&net, &work)
-        });
-        let mean = stats::mean(&sample.secs);
+        // Sequential reference: virtual round time + the data-dependent
+        // event count every parallel lane must reproduce bit for bit.
+        let (virtual_s, events) = ce_round(&net, &work, Some(1));
         println!("    virtual round time {virtual_s:.2}s, {events} events/iter");
-        if let Some(bound) = assert_secs {
-            assert!(
-                mean < bound,
-                "lane n={n} m={m}: mean {mean:.3}s >= CFEL_SCALE_ASSERT_SECS={bound}s"
+        history.push((format!("n={n} m={m}"), virtual_s, events));
+
+        // The env-resolved default path must agree too — this is the leg
+        // the CI `CFEL_THREADS` 1/4 matrix varies.
+        let (v_env, e_env) = ce_round(&net, &work, None);
+        assert_eq!(
+            v_env.to_bits(),
+            virtual_s.to_bits(),
+            "lane n={n} m={m}: CFEL_THREADS default drain diverged from sequential"
+        );
+        assert_eq!(e_env, events, "lane n={n} m={m}: CFEL_THREADS default event count diverged");
+
+        for &t in &threads {
+            let (v, e) = ce_round(&net, &work, Some(t));
+            assert_eq!(
+                v.to_bits(),
+                virtual_s.to_bits(),
+                "lane n={n} m={m}: threads={t} diverged from the sequential drain"
             );
+            assert_eq!(e, events, "lane n={n} m={m}: threads={t} event count diverged");
+            let sample = b.run_throughput(
+                &format!("ce-round n={n} m={m} threads={t}"),
+                events as f64,
+                || ce_round(&net, &work, Some(t)),
+            );
+            let mean = stats::mean(&sample.secs);
+            if let Some(bound) = assert_secs {
+                assert!(
+                    mean < bound,
+                    "lane n={n} m={m} threads={t}: mean {mean:.3}s >= \
+                     CFEL_SCALE_ASSERT_SECS={bound}s"
+                );
+            }
         }
     }
 
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    let mut hist_json: Vec<Json> = Vec::new();
+    for (lane, virtual_s, events) in &history {
+        digest = fnv1a(digest, lane.as_bytes());
+        digest = fnv1a(digest, &virtual_s.to_bits().to_le_bytes());
+        digest = fnv1a(digest, &(*events as u64).to_le_bytes());
+        let mut j = Json::obj();
+        j.set("lane", Json::from_str_val(lane))
+            .set("virtual_s", Json::from_f64(*virtual_s))
+            // Exact bit pattern as hex: f64 JSON round-trips can lose bits,
+            // the string never does. This is what CI pins across legs.
+            .set(
+                "virtual_s_bits",
+                Json::from_str_val(&format!("{:016x}", virtual_s.to_bits())),
+            )
+            .set("events", Json::from_usize(*events));
+        hist_json.push(j);
+    }
+    println!("history digest {digest:016x} over {} lanes", history.len());
+
+    let mut root = Json::obj();
+    root.set("bench", Json::from_str_val("scale"))
+        .set(
+            "threads",
+            Json::Arr(threads.iter().map(|&t| Json::from_usize(t)).collect()),
+        )
+        .set("history", Json::Arr(hist_json))
+        .set("history_digest", Json::from_str_val(&format!("{digest:016x}")))
+        .set(
+            "samples",
+            Json::Arr(b.samples().iter().map(|s| s.to_json()).collect()),
+        )
+        .set(
+            "note",
+            Json::from_str_val(
+                "samples are wall-clock (hardware-dependent, recorded by the \
+                 scale-record CI job); history/history_digest are deterministic \
+                 virtual-clock results, identical on every machine and thread \
+                 count",
+            ),
+        );
     let out = env_var_path().unwrap_or_else(|| {
         Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_scale.json")
     });
-    b.write_json(&out, "scale").unwrap();
+    std::fs::write(&out, root.pretty() + "\n").unwrap();
     println!("wrote {}", out.display());
 }
 

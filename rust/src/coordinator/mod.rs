@@ -34,8 +34,8 @@ use crate::data::{partition, Batch};
 use crate::error::{CfelError, Result};
 use crate::metrics::{History, RoundRecord};
 use crate::netsim::{
-    ClosedFormEstimator, EventDrivenEstimator, LatencyEstimator, NetworkModel, RoundLatency,
-    RoundTiming,
+    ClosedFormEstimator, DeviceTimings, EventDrivenEstimator, LatencyEstimator, NetworkModel,
+    RoundLatency, RoundTiming,
 };
 use crate::plan::{Plan, Step};
 use crate::runtime::{EvalResult, Manifest, MockBackend, PjrtBackend, TrainBackend};
@@ -623,7 +623,16 @@ impl Coordinator {
     pub(crate) fn plan_round(&mut self, round: usize) -> Result<RoundStats> {
         let plan = self.plan.clone();
         let base_phase = round as u64 * plan.edge_phases() as u64;
-        let mut stats = RoundStats::default();
+        // The round accumulator's device columns come from the free list
+        // so steady-state rounds append into recycled capacity (paired
+        // with `RoundTiming::recycle` in `run`).
+        let mut stats = RoundStats {
+            timing: RoundTiming {
+                device_timings: DeviceTimings::acquire(0),
+                ..RoundTiming::default()
+            },
+            ..RoundStats::default()
+        };
         let mut idx = 0u64;
         self.exec_steps(&plan.steps, base_phase, &mut idx, &mut stats)?;
         // Eq. 8 wants per-device steps of the *whole* global round.
@@ -733,7 +742,7 @@ impl Coordinator {
             let t0 = Instant::now();
             self.apply_fault(round)?;
             self.apply_timeline(round)?;
-            let stats = self.plan_round(round)?;
+            let mut stats = self.plan_round(round)?;
             wall += t0.elapsed().as_secs_f64();
             let lat = self.round_latency(&stats);
             sim_time += lat.total();
@@ -790,6 +799,9 @@ impl Coordinator {
                 );
             }
             history.push(rec);
+            // The record is derived; return the round's device-timing
+            // columns to the free list for the next round.
+            stats.timing.recycle();
         }
         Ok(history)
     }

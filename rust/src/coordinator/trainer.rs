@@ -168,13 +168,16 @@ impl Coordinator {
 
         // ---- simulate the phase close + aggregate (Eq. 6) -------------
         // Event mode simulates every alive cluster's phase in one batched
-        // `phase_timings` call (the event engine runs them as shards of
-        // one sharded calendar queue); closed-form mode (phase_timings →
+        // `phase_timings` call (the event engine drains each cluster's
+        // calendar shard on its own worker thread and merges the results
+        // back in cluster order); closed-form mode (phase_timings →
         // None) keeps the Eq. 8 round-level path and aggregates every
-        // outcome. Runs single-threaded after the join in alive-cluster
-        // order, so timing — including which devices a policy drops or
-        // defers, and which stale reports land in which phase — is
-        // independent of CFEL_THREADS. Aggregation writes straight into
+        // outcome. Each shard's simulation is a pure function of its
+        // cluster's inputs and the classify/aggregate loop below runs
+        // single-threaded in alive-cluster order, so timing — including
+        // which devices a policy drops or defers, and which stale reports
+        // land in which phase — is independent of CFEL_THREADS
+        // (docs/DETERMINISM.md). Aggregation writes straight into
         // each cluster's existing model buffer (O(m·p) averages are cheap
         // next to training); weights renormalize over the reports
         // present, and a cluster whose close produced no mergeable report
@@ -259,6 +262,12 @@ impl Coordinator {
                 }))
                 .collect();
             ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
+        }
+        // The per-device columns were copied into `stats.timing` above;
+        // hand the phase buffers back to the free list so next phase's
+        // expansion reuses the capacity.
+        for pt in pts {
+            pt.devices.recycle();
         }
         Ok(())
     }

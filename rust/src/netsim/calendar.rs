@@ -22,7 +22,12 @@
 //!   [`ShardedEventQueue::pop_merged`] exposes the deterministic global
 //!   interleaving — ordered by the same `(time, kind, id)` tie-break,
 //!   then lowest shard index — which the equivalence proptest compares
-//!   against a single-heap run.
+//!   against a single-heap run. Because shards are independent, the
+//!   estimator drains each cluster's calendar on its own worker thread
+//!   (`EventDrivenEstimator::simulate_phases` routes through
+//!   `util::threadpool::parallel_map`); `ShardedEventQueue` remains the
+//!   merged-view reference that the tests pin that parallel drain
+//!   against.
 //!
 //! Determinism: nothing here consults wall-clock time, iteration order of
 //! hashed containers, or thread identity. Bucket membership is a pure
@@ -56,20 +61,38 @@ impl CalendarQueue {
     /// work, they just share buckets (the last bucket catches everything
     /// past the horizon).
     pub fn new(horizon_s: f64, expected_events: usize) -> CalendarQueue {
-        let n_buckets = (expected_events / 4).clamp(1, 4096) + 1;
-        let width_s = if horizon_s.is_finite() && horizon_s > 0.0 {
-            horizon_s / (n_buckets - 1) as f64
-        } else {
-            f64::INFINITY
-        };
-        CalendarQueue {
-            buckets: vec![Vec::new(); n_buckets],
-            width_s,
+        let mut q = CalendarQueue {
+            buckets: Vec::new(),
+            width_s: f64::INFINITY,
             cursor: 0,
             clock_s: 0.0,
             processed: 0,
             len: 0,
+        };
+        q.reset(horizon_s, expected_events);
+        q
+    }
+
+    /// Restore a drained queue to the exact observable state of
+    /// `CalendarQueue::new(horizon_s, expected_events)` while keeping the
+    /// bucket allocations. The event engine's per-thread phase scratch
+    /// reuses one calendar across phases this way, so steady-state rounds
+    /// stop re-allocating bucket vectors (see `netsim::event`).
+    pub fn reset(&mut self, horizon_s: f64, expected_events: usize) {
+        let n_buckets = (expected_events / 4).clamp(1, 4096) + 1;
+        for b in &mut self.buckets {
+            b.clear();
         }
+        self.buckets.resize_with(n_buckets, Vec::new);
+        self.width_s = if horizon_s.is_finite() && horizon_s > 0.0 {
+            horizon_s / (n_buckets - 1) as f64
+        } else {
+            f64::INFINITY
+        };
+        self.cursor = 0;
+        self.clock_s = 0.0;
+        self.processed = 0;
+        self.len = 0;
     }
 
     /// Current virtual time (the timestamp of the last popped event).
@@ -330,6 +353,33 @@ mod tests {
         cal.schedule(Event { time_s: 1.0, kind: EventKind::ComputeDone, id: 1 });
         assert_eq!(cal.pop().unwrap().id, 1);
         assert_eq!(cal.pop().unwrap().id, 0);
+    }
+
+    #[test]
+    fn reset_matches_fresh_queue() {
+        // Drain a queue, reset it to a different sizing, and check it
+        // behaves exactly like a fresh one (same pops, counters zeroed).
+        let mut rng = Rng::new(9);
+        let mut recycled = CalendarQueue::new(3.0, 64);
+        for ev in random_events(&mut rng, 64, 3.0) {
+            recycled.schedule(ev);
+        }
+        while recycled.pop().is_some() {}
+        recycled.reset(10.0, 24);
+        let mut fresh = CalendarQueue::new(10.0, 24);
+        assert_eq!(recycled.processed(), 0);
+        assert_eq!(recycled.now(), 0.0);
+        let events = random_events(&mut rng, 24, 10.0);
+        for &ev in &events {
+            recycled.schedule(ev);
+            fresh.schedule(ev);
+        }
+        loop {
+            match (recycled.pop(), fresh.pop()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(a, b),
+            }
+        }
     }
 
     #[test]

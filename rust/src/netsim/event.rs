@@ -31,6 +31,11 @@
 //!   cluster's phase runs on its own bucket queue; shards never exchange
 //!   events inside a phase and merge only at gossip/cloud barriers, by
 //!   the same `(time, kind, id)` tie-break a global heap would apply.
+//!   Because shards are independent,
+//!   [`EventDrivenEstimator::simulate_phases`] drains each cluster's
+//!   calendar on its own worker thread
+//!   (`util::threadpool::parallel_map`) and merges results back in
+//!   cluster order.
 //! - **Cohort batching**: devices sharing a capability profile finish
 //!   compute and upload at *exactly* the same f64 timestamps, so each
 //!   such cohort schedules one `ComputeDone`/`UploadDone` pair carrying a
@@ -46,6 +51,13 @@
 //!   compute/upload/finish/verdict columns instead of a `Vec` of structs,
 //!   so million-row rounds stream through caches and accumulate without
 //!   per-device allocation.
+//! - **O(1) steady-state allocation**: every thread keeps a phase
+//!   scratch (prepared-phase columns, cohort-key index, calendar queue)
+//!   that survives from phase to phase — the worker pool's threads are
+//!   persistent, so the scratch stays warm across rounds — and retired
+//!   [`DeviceTimings`] column sets return to a bounded process-wide free
+//!   list via [`DeviceTimings::recycle`], where [`DeviceTimings::acquire`]
+//!   picks them up for the next phase.
 //!
 //! `events` counts are therefore *cohort-granular*: a homogeneous
 //! 10⁴-device phase processes 2 queue events, not 2·10⁴.
@@ -73,10 +85,14 @@
 //! order). `RoundClose` ordering last means a report landing exactly at a
 //! deadline/timeout still counts as on time, matching the strict
 //! `finish > T_dl` drop rule of the closed analysis. Simulation inputs
-//! are derived purely from the experiment seed and the simulation runs
-//! single-threaded after the training join, so event-driven timing —
-//! including which devices a policy drops or defers — is bit-identical
-//! for any `CFEL_THREADS` (pinned by `rust/tests/determinism.rs`).
+//! are derived purely from the experiment seed, and each cluster's phase
+//! simulation is a pure function of `(net, work, channel, policy)` —
+//! shards never exchange events inside a phase — so draining the shards
+//! on worker threads and merging the results by cluster index yields
+//! event-driven timing — including which devices a policy drops or
+//! defers — that is bit-identical for any `CFEL_THREADS` (pinned by
+//! `rust/tests/determinism.rs` and the parallel-vs-sequential proptest
+//! in `rust/tests/sharded_queue.rs`; see `docs/DETERMINISM.md`).
 //!
 //! # Deadlines and Eq. 6 renormalization
 //!
@@ -103,13 +119,16 @@
 //! steps, while the event simulator charges every phase its own barrier —
 //! the more faithful account.
 
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Mutex;
 
 use crate::aggregation::policy::{AggregationPolicy, CloseReason, ReportVerdict};
-use crate::netsim::calendar::{CalendarQueue, ShardedEventQueue};
+use crate::netsim::calendar::CalendarQueue;
 use crate::netsim::{NetworkModel, RoundLatency};
 use crate::plan::Plan;
+use crate::util::threadpool::{default_threads, parallel_map};
 
 /// Event types, listed in tie-break order (earlier kinds pop first at
 /// equal timestamps).
@@ -341,7 +360,58 @@ impl DeviceTimings {
         self.finish_s.extend_from_slice(&other.finish_s);
         self.verdict.extend_from_slice(&other.verdict);
     }
+
+    /// Take a cleared column set from the process-wide free list (or
+    /// allocate a fresh one) with room for `n` rows. Pair with
+    /// [`DeviceTimings::recycle`] so steady-state rounds reuse the same
+    /// capacity instead of growing new columns every phase.
+    pub fn acquire(n: usize) -> DeviceTimings {
+        let mut t = TIMING_POOL
+            .lock()
+            .map(|mut pool| pool.pop().unwrap_or_default())
+            .unwrap_or_default();
+        t.clear();
+        t.reserve(n);
+        t
+    }
+
+    /// Drop all rows, keeping every column's capacity.
+    pub fn clear(&mut self) {
+        self.device.clear();
+        self.compute_s.clear();
+        self.upload_s.clear();
+        self.finish_s.clear();
+        self.verdict.clear();
+    }
+
+    /// Reserve room for at least `n` additional rows in every column.
+    pub fn reserve(&mut self, n: usize) {
+        self.device.reserve(n);
+        self.compute_s.reserve(n);
+        self.upload_s.reserve(n);
+        self.finish_s.reserve(n);
+        self.verdict.reserve(n);
+    }
+
+    /// Return this column set's capacity to the process-wide free list.
+    /// A no-op when the pool is full or its lock is poisoned — recycling
+    /// is purely an allocation optimization, never a correctness
+    /// dependency.
+    pub fn recycle(mut self) {
+        self.clear();
+        if let Ok(mut pool) = TIMING_POOL.lock() {
+            if pool.len() < TIMING_POOL_MAX {
+                pool.push(self);
+            }
+        }
+    }
 }
+
+/// Process-wide free list of retired [`DeviceTimings`] column sets.
+/// Bounded so pathological fan-out cannot hoard memory; beyond the cap,
+/// recycled buffers simply drop.
+static TIMING_POOL: Mutex<Vec<DeviceTimings>> = Mutex::new(Vec::new());
+const TIMING_POOL_MAX: usize = 256;
 
 /// Simulated timing of one cluster's edge phase.
 #[derive(Debug, Clone)]
@@ -424,6 +494,15 @@ impl RoundTiming {
         self.device_timings.extend_from(&pt.devices);
     }
 
+    /// Return the round's device-timing columns to the process-wide free
+    /// list (leaving the accumulator otherwise untouched). Called by the
+    /// coordinator once the round's record has been derived, so the next
+    /// round's [`RoundTiming::record_phase`] appends into recycled
+    /// capacity.
+    pub fn recycle(&mut self) {
+        std::mem::take(&mut self.device_timings).recycle();
+    }
+
     /// Compact close-reason label for the round: "-" when no phases were
     /// simulated, the reason's name when unanimous, "mixed" otherwise.
     pub fn close_reason_summary(&self) -> String {
@@ -467,8 +546,9 @@ pub trait LatencyEstimator: Send + Sync {
     /// call; `work[i]` is cluster `i`'s `(device, steps)` list and the
     /// result is index-aligned. The default forwards to
     /// [`LatencyEstimator::phase_timing`] per cluster;
-    /// [`EventDrivenEstimator`] overrides it to run all clusters on the
-    /// sharded calendar queues. Returns `None` in closed-form mode.
+    /// [`EventDrivenEstimator`] overrides it to drain each cluster's
+    /// calendar shard on its own worker thread, merged back in cluster
+    /// order. Returns `None` in closed-form mode.
     fn phase_timings(
         &self,
         net: &NetworkModel,
@@ -549,7 +629,9 @@ struct Cohort {
 }
 
 /// Per-slot timings plus the cohort table of one phase, computed before
-/// any event is scheduled.
+/// any event is scheduled. Lives in the per-thread [`PhaseScratch`] and
+/// is refilled in place phase after phase.
+#[derive(Default)]
 struct PreparedPhase {
     /// Per-slot compute seconds (`steps · C / c_k`).
     compute: Vec<f64>,
@@ -566,44 +648,55 @@ struct PreparedPhase {
 }
 
 impl PreparedPhase {
-    fn new(
+    /// Refill this prepared phase in place for a new `(work, channel,
+    /// policy)` tuple, reusing the per-slot columns, the cohort table,
+    /// and the caller's cohort-key `index` (cleared here). Bit-identical
+    /// to building a fresh `PreparedPhase`: the `HashMap` is only probed
+    /// per key, never iterated, so its bucket order cannot influence any
+    /// output.
+    fn prepare(
+        &mut self,
+        index: &mut HashMap<(u64, u64), usize>,
         net: &NetworkModel,
         work: &[(usize, usize)],
         channel: UploadChannel,
         policy: &dyn AggregationPolicy,
-    ) -> PreparedPhase {
-        let mut compute = Vec::with_capacity(work.len());
-        let mut upload = Vec::with_capacity(work.len());
-        let mut cohorts: Vec<Cohort> = Vec::new();
-        let mut index: HashMap<(u64, u64), usize> = HashMap::new();
+    ) {
+        self.compute.clear();
+        self.upload.clear();
+        self.cohorts.clear();
+        index.clear();
+        self.compute.reserve(work.len());
+        self.upload.reserve(work.len());
         for &(dev, steps) in work {
             let c = steps as f64 * net.step_seconds(dev);
             let u = net.model_bits / channel.device_bandwidth(net, dev);
-            compute.push(c);
-            upload.push(u);
+            self.compute.push(c);
+            self.upload.push(u);
             // Cohort key: exact bit patterns, so members share *identical*
             // event timestamps and the expansion below is lossless.
             match index.entry((c.to_bits(), u.to_bits())) {
                 std::collections::hash_map::Entry::Occupied(e) => {
-                    cohorts[*e.get()].count += 1;
+                    self.cohorts[*e.get()].count += 1;
                 }
                 std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(cohorts.len());
-                    cohorts.push(Cohort { compute_s: c, upload_s: u, count: 1 });
+                    e.insert(self.cohorts.len());
+                    self.cohorts.push(Cohort { compute_s: c, upload_s: u, count: 1 });
                 }
             }
         }
-        let timeout = policy.timeout();
-        let mut horizon_s = cohorts
+        self.timeout = policy.timeout();
+        let mut horizon_s = self
+            .cohorts
             .iter()
             .map(|c| c.compute_s + c.upload_s)
             .fold(0.0, f64::max);
-        if let Some((t, _)) = timeout {
+        if let Some((t, _)) = self.timeout {
             if t.is_finite() {
                 horizon_s = horizon_s.max(t);
             }
         }
-        PreparedPhase { compute, upload, cohorts, timeout, horizon_s }
+        self.horizon_s = horizon_s;
     }
 
     /// Queue-sizing hint: one compute + one upload event per cohort, plus
@@ -689,7 +782,7 @@ impl PreparedPhase {
         // arithmetic the cohort events carried (compute + upload on the
         // same operand bits), so the row the per-device engine would have
         // produced is reconstructed bit for bit.
-        let mut devices = DeviceTimings::with_capacity(total);
+        let mut devices = DeviceTimings::acquire(total);
         for (slot, &(dev, _)) in work.iter().enumerate() {
             let finish = self.compute[slot] + self.upload[slot];
             devices.device.push(dev);
@@ -714,6 +807,25 @@ impl PreparedPhase {
     }
 }
 
+/// Per-thread simulation scratch: the prepared-phase columns, the
+/// cohort-key index, and the calendar queue are refilled in place phase
+/// after phase, so a steady-state round allocates nothing here. Pool
+/// worker threads are persistent (`util::threadpool`), which is what
+/// keeps this scratch warm across rounds.
+struct PhaseScratch {
+    prep: PreparedPhase,
+    index: HashMap<(u64, u64), usize>,
+    queue: CalendarQueue,
+}
+
+thread_local! {
+    static PHASE_SCRATCH: RefCell<PhaseScratch> = RefCell::new(PhaseScratch {
+        prep: PreparedPhase::default(),
+        index: HashMap::new(),
+        queue: CalendarQueue::new(0.0, 0),
+    });
+}
+
 /// The discrete-event simulator (see the module docs for the event model).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EventDrivenEstimator;
@@ -730,46 +842,51 @@ impl EventDrivenEstimator {
         channel: UploadChannel,
         policy: &dyn AggregationPolicy,
     ) -> PhaseTiming {
-        let prep = PreparedPhase::new(net, work, channel, policy);
-        let mut queue = CalendarQueue::new(prep.horizon_s, prep.expected_events());
-        if !work.is_empty() {
-            prep.arm(&mut queue);
-        }
-        prep.run(work, policy, &mut queue)
+        PHASE_SCRATCH.with(|scratch| {
+            let scratch = &mut *scratch.borrow_mut();
+            scratch.prep.prepare(&mut scratch.index, net, work, channel, policy);
+            scratch
+                .queue
+                .reset(scratch.prep.horizon_s, scratch.prep.expected_events());
+            if !work.is_empty() {
+                scratch.prep.arm(&mut scratch.queue);
+            }
+            scratch.prep.run(work, policy, &mut scratch.queue)
+        })
     }
 
-    /// Simulate every cluster's edge phase of one plan step on the
-    /// sharded calendar queues: one shard per cluster, drained
-    /// independently (clusters never exchange events within a phase; they
-    /// merge at the coordinator's gossip/cloud barriers). Results are
-    /// index-aligned with `work` and bit-identical to calling
-    /// [`EventDrivenEstimator::simulate_phase`] per cluster.
+    /// Simulate every cluster's edge phase of one plan step, one calendar
+    /// shard per cluster, drained in parallel on the persistent worker
+    /// pool with `default_threads(work.len())` threads. See
+    /// [`EventDrivenEstimator::simulate_phases_threads`].
     pub fn simulate_phases(
         net: &NetworkModel,
         work: &[Vec<(usize, usize)>],
         channel: UploadChannel,
         policy: &dyn AggregationPolicy,
     ) -> Vec<PhaseTiming> {
-        let preps: Vec<PreparedPhase> = work
-            .iter()
-            .map(|w| PreparedPhase::new(net, w, channel, policy))
-            .collect();
-        let horizons: Vec<(f64, usize)> = preps
-            .iter()
-            .map(|p| (p.horizon_s, p.expected_events()))
-            .collect();
-        let mut shards = ShardedEventQueue::with_horizons(&horizons);
-        for (ci, (prep, w)) in preps.iter().zip(work).enumerate() {
-            if !w.is_empty() {
-                prep.arm(shards.shard_mut(ci));
-            }
-        }
-        preps
-            .iter()
-            .zip(work)
-            .enumerate()
-            .map(|(ci, (prep, w))| prep.run(w, policy, shards.shard_mut(ci)))
-            .collect()
+        Self::simulate_phases_threads(net, work, channel, policy, default_threads(work.len()))
+    }
+
+    /// [`EventDrivenEstimator::simulate_phases`] with an explicit thread
+    /// count. Each cluster's calendar queue drains on its own worker
+    /// thread (clusters never exchange events within a phase; they merge
+    /// at the coordinator's gossip/cloud barriers) and results come back
+    /// merged in cluster order, so the output is index-aligned with
+    /// `work` and bit-identical to calling
+    /// [`EventDrivenEstimator::simulate_phase`] per cluster sequentially
+    /// — for any `threads` (pinned by the proptest in
+    /// `rust/tests/sharded_queue.rs`).
+    pub fn simulate_phases_threads(
+        net: &NetworkModel,
+        work: &[Vec<(usize, usize)>],
+        channel: UploadChannel,
+        policy: &dyn AggregationPolicy,
+        threads: usize,
+    ) -> Vec<PhaseTiming> {
+        parallel_map(work.len(), threads, |ci| {
+            Self::simulate_phase(net, &work[ci], channel, policy)
+        })
     }
 
     /// Simulate π sequential gossip hops on the backhaul; returns
@@ -1198,6 +1315,59 @@ mod tests {
             assert_same_phase(pt, &solo);
             assert_eq!(pt.events, solo.events);
         }
+    }
+
+    #[test]
+    fn parallel_drain_bit_identical_across_thread_counts() {
+        let mut m = NetworkModel::paper_defaults(12, 1e6, 50, 1_000_000);
+        for (d, c) in m.device_flops.iter_mut().enumerate() {
+            *c *= 1.0 - 0.05 * (d % 4) as f64;
+        }
+        let work: Vec<Vec<(usize, usize)>> = vec![
+            (0..5).map(|d| (d, 16)).collect(),
+            Vec::new(),
+            (5..9).map(|d| (d, 8)).collect(),
+            (9..12).map(|d| (d, 16)).collect(),
+        ];
+        let policy = SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 1.0 };
+        let sequential: Vec<PhaseTiming> = work
+            .iter()
+            .map(|w| {
+                EventDrivenEstimator::simulate_phase(&m, w, UploadChannel::DeviceEdge, &policy)
+            })
+            .collect();
+        for threads in [1usize, 2, 4, 8] {
+            let parallel = EventDrivenEstimator::simulate_phases_threads(
+                &m,
+                &work,
+                UploadChannel::DeviceEdge,
+                &policy,
+                threads,
+            );
+            assert_eq!(parallel.len(), sequential.len());
+            for (p, s) in parallel.iter().zip(&sequential) {
+                assert_same_phase(p, s);
+                assert_eq!(p.events, s.events);
+            }
+        }
+    }
+
+    #[test]
+    fn timings_acquire_recycle_round_trip() {
+        let mut t = DeviceTimings::acquire(4);
+        assert!(t.is_empty());
+        t.push(DeviceTiming {
+            device: 1,
+            compute_s: 1.0,
+            upload_s: 2.0,
+            finish_s: 3.0,
+            verdict: ReportVerdict::OnTime,
+        });
+        t.recycle();
+        // Whatever buffer comes back (recycled or fresh), it starts empty.
+        let t2 = DeviceTimings::acquire(2);
+        assert!(t2.is_empty());
+        t2.recycle();
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! * [`json`] — JSON parser + writer for the artifact manifest, configs
 //!   and results (replaces `serde_json`).
 //! * [`cli`] — flag parser for the binary and examples (replaces `clap`).
-//! * [`threadpool`] — scoped data-parallel helper (replaces `rayon`).
+//! * [`threadpool`] — persistent worker-pool `parallel_map` (replaces
+//!   `rayon`).
 //! * [`stats`] — summary statistics used by metrics and the bench harness.
 //! * [`bench`] — micro-benchmark harness behind `cargo bench`
 //!   (`harness = false` targets; replaces `criterion`).

@@ -1,11 +1,37 @@
-//! Scoped data-parallel helper (replaces `rayon` in the offline build).
+//! Persistent data-parallel worker pool (replaces `rayon` in the offline
+//! build).
 //!
-//! The coordinator's only parallel pattern is "run the same closure over a
-//! work list of device indices" (local training within a round), so the
-//! abstraction is a single [`parallel_map`] built on `std::thread::scope`
-//! with a shared atomic work queue — no channels, no per-item spawn cost.
+//! The system's only parallel pattern is "run the same closure over a work
+//! list" — device training within a round, per-cluster event-shard drains
+//! (`netsim::event`), per-cluster eval — so the abstraction stays a single
+//! [`parallel_map`]. Earlier revisions spawned `std::thread::scope` workers
+//! per call; at one call per edge phase that cost a thread spawn/join storm
+//! every round. Workers are now a process-wide pool of persistent threads
+//! that park on a condvar between jobs, so steady-state rounds pay one
+//! mutex/condvar handshake per `parallel_map` instead of `threads` spawns.
+//! Persistent workers are also what make the event engine's thread-local
+//! phase scratch effective: warm buffers survive from round to round.
+//!
+//! Determinism: work item `i` writes its result into slot `i` of a
+//! pre-sized buffer and the buffer is returned in index order, so which
+//! worker computes which index never influences the output (see
+//! docs/DETERMINISM.md). With `threads <= 1` everything runs inline on the
+//! caller's thread — the mode used by the PJRT backend, whose executables
+//! are not `Send`.
+//!
+//! Scheduling rules that keep the single job slot deadlock-free:
+//! - a nested `parallel_map` (called from inside a work item) runs inline;
+//! - a `parallel_map` submitted while another thread's job occupies the
+//!   slot runs inline (concurrent test binaries hit this; results are
+//!   index-ordered either way, so determinism is unaffected);
+//! - a panicking work item is caught on the worker, counted as done so the
+//!   submitter never blocks forever, and re-raised on the submitting
+//!   thread once the job completes.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use by default: respects
 /// `CFEL_THREADS`, otherwise `available_parallelism`, clamped to the job.
@@ -21,7 +47,152 @@ pub fn default_threads(jobs: usize) -> usize {
     hw.clamp(1, jobs.max(1))
 }
 
-/// Apply `f(i)` for every `i in 0..n` on up to `threads` workers and return
+/// Type-erased pointer to the submitter's stack-held work closure: the
+/// data pointer plus a monomorphized trampoline that calls it. Valid only
+/// while the submitting `parallel_map` frame is alive — which the
+/// completion protocol guarantees whenever the pointer is dereferenced
+/// (see the safety notes on [`Job`]).
+#[derive(Clone, Copy)]
+struct TaskPtr {
+    data: *const (),
+    call: fn(*const (), usize),
+}
+
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+fn task_ptr_of<F: Fn(usize) + Sync>(f: &F) -> TaskPtr {
+    fn call<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+        // SAFETY: `data` points at a live `F`. Items are only claimable
+        // while the submitter is blocked inside `parallel_map` (it waits
+        // for `done == n` before returning), so the closure outlives
+        // every call made through this pointer.
+        unsafe { (*(data.cast::<F>()))(i) }
+    }
+    TaskPtr { data: (f as *const F).cast::<()>(), call: call::<F> }
+}
+
+/// One `parallel_map` invocation, shared between the submitting thread
+/// and the pool workers.
+///
+/// Lifecycle: the submitter publishes the job in the pool's single slot,
+/// participates in the claim loop itself, then blocks until `done == n`
+/// and retires the slot. Workers that grab the `Arc` late (after all
+/// items are claimed) only read atomics and exit — they never touch
+/// `task` — so the raw closure pointer is dereferenced strictly within
+/// the submitter's stack frame.
+struct Job {
+    /// Next unclaimed work-item index (fetch_add claim ticket).
+    next: AtomicUsize,
+    /// Completed work items; the submitter returns at `done == n`.
+    done: AtomicUsize,
+    n: usize,
+    /// Pool workers allowed to join (the submitter is the `+1`-th hand).
+    max_workers: usize,
+    /// Workers that joined so far (concurrency cap bookkeeping).
+    joined: AtomicUsize,
+    /// Set when any work item panicked; re-raised by the submitter.
+    panicked: AtomicBool,
+    task: TaskPtr,
+}
+
+impl Job {
+    /// Claim-and-run loop shared by pool workers and the submitter.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // A panicking item must still count as done, or the submitter
+            // would wait forever; the flag re-raises it there.
+            if catch_unwind(AssertUnwindSafe(|| (self.task.call)(self.task.data, i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            // Release pairs with the submitter's Acquire in `is_done`:
+            // observing `done == n` implies every result write is visible.
+            self.done.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire) >= self.n
+    }
+}
+
+struct PoolState {
+    /// The currently published job, if any. One at a time by design:
+    /// concurrent submitters fall back to inline execution.
+    job: Option<Arc<Job>>,
+    /// Monotone publication id so a worker never re-enters a job it
+    /// already left (the slot may still hold it while the submitter
+    /// drains stragglers).
+    seq: u64,
+    /// Worker threads spawned so far; grown on demand, never reaped.
+    workers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers when a job is published.
+    work_cv: Condvar,
+    /// Wakes the submitter when the last work item completes.
+    done_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { job: None, seq: 0, workers: 0 }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+    })
+}
+
+thread_local! {
+    /// True on pool workers (always) and on a submitter inside its own
+    /// claim loop: a nested `parallel_map` sees it and runs inline
+    /// instead of deadlocking on the single job slot.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Body of every persistent worker: park until a job with a new `seq`
+/// appears, join it (unless fully staffed), drain claims, notify the
+/// submitter if the job is complete, park again. Workers live for the
+/// process — the pool is process-wide state, like the thread-locals it
+/// keeps warm.
+fn worker_loop() {
+    let pool = pool();
+    IN_POOL_JOB.with(|f| f.set(true));
+    let mut last_seq = 0u64;
+    loop {
+        let (job, seq) = {
+            let mut st = pool.state.lock().expect("pool mutex");
+            loop {
+                match (&st.job, st.seq) {
+                    (Some(j), s) if s != last_seq => break (Arc::clone(j), s),
+                    _ => st = pool.work_cv.wait(st).expect("pool mutex"),
+                }
+            }
+        };
+        last_seq = seq;
+        // Concurrency cap: at most `max_workers` pool hands per job
+        // (plus the submitter), so CFEL_THREADS stays an upper bound on
+        // the job's parallelism even when the pool has grown larger.
+        if job.joined.fetch_add(1, Ordering::Relaxed) < job.max_workers {
+            job.work();
+            if job.is_done() {
+                // The last hand out notifies under the lock so the
+                // submitter's wait cannot miss it.
+                let _guard = pool.state.lock().expect("pool mutex");
+                pool.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Apply `f(i)` for every `i in 0..n` on up to `threads` workers (the
+/// caller's thread plus `threads - 1` persistent pool workers) and return
 /// the results in index order. `f` must be `Sync` (it is shared, not
 /// cloned); captured state must be thread-safe.
 ///
@@ -36,33 +207,74 @@ where
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
-    if threads == 1 {
+    if threads == 1 || IN_POOL_JOB.with(|g| g.get()) {
         return (0..n).map(f).collect();
     }
 
     let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = AtomicUsize::new(0);
     let results_ptr = SendPtr(results.as_mut_ptr());
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let f = &f;
-            let next = &next;
-            let results_ptr = &results_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let val = f(i);
-                // SAFETY: each index i is claimed exactly once by exactly
-                // one worker (fetch_add), and the vec outlives the scope.
-                unsafe {
-                    *results_ptr.0.add(i) = Some(val);
-                }
-            });
+    let runner = move |i: usize| {
+        let val = f(i);
+        // SAFETY: each index is claimed exactly once (fetch_add ticket),
+        // so disjoint slots never alias, and `results` outlives every
+        // write — the function only returns after `done == n`.
+        unsafe {
+            *results_ptr.0.add(i) = Some(val);
         }
+    };
+
+    let job = Arc::new(Job {
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        n,
+        max_workers: threads - 1,
+        joined: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        task: task_ptr_of(&runner),
     });
+
+    let pool = pool();
+    let published = {
+        let mut st = pool.state.lock().expect("pool mutex");
+        if st.job.is_some() {
+            false
+        } else {
+            while st.workers < threads - 1 {
+                st.workers += 1;
+                std::thread::Builder::new()
+                    .name(format!("cfel-pool-{}", st.workers))
+                    .spawn(worker_loop)
+                    .expect("spawn pool worker");
+            }
+            st.seq = st.seq.wrapping_add(1);
+            st.job = Some(Arc::clone(&job));
+            pool.work_cv.notify_all();
+            true
+        }
+    };
+
+    if !published {
+        // Another thread's job occupies the slot: run inline (same
+        // index-ordered writes, no pool involvement, no deadlock).
+        for i in 0..n {
+            runner(i);
+        }
+    } else {
+        // Participate in our own job, then wait out any straggling claims
+        // still executing on pool workers and retire the slot.
+        IN_POOL_JOB.with(|g| g.set(true));
+        job.work();
+        IN_POOL_JOB.with(|g| g.set(false));
+        let mut st = pool.state.lock().expect("pool mutex");
+        while !job.is_done() {
+            st = pool.done_cv.wait(st).expect("pool mutex");
+        }
+        st.job = None;
+        drop(st);
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("parallel_map: a work item panicked on a pool worker");
+        }
+    }
 
     results
         .into_iter()
@@ -120,5 +332,55 @@ mod tests {
     fn default_threads_clamps() {
         assert_eq!(default_threads(1), 1);
         assert!(default_threads(1_000_000) >= 1);
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        // Steady-state shape: many parallel_map calls in sequence (one
+        // per edge phase) against the same persistent pool.
+        for round in 0..50 {
+            let out = parallel_map(64, 4, |i| i + round);
+            assert_eq!(out, (0..64).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline() {
+        // A work item that itself calls parallel_map must not deadlock on
+        // the single job slot; the inner call runs inline.
+        let out = parallel_map(8, 4, |i| parallel_map(4, 4, move |j| i * 10 + j));
+        for (i, inner) in out.iter().enumerate() {
+            assert_eq!(inner, &(0..4).map(|j| i * 10 + j).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_both_complete() {
+        // Two OS threads submitting at once: one wins the job slot, the
+        // other falls back inline. Both must return correct results.
+        let run = || parallel_map(500, 4, |i| i * 3);
+        let want: Vec<usize> = (0..500).map(|i| i * 3).collect();
+        std::thread::scope(|scope| {
+            let a = scope.spawn(run);
+            let b = scope.spawn(run);
+            assert_eq!(a.join().unwrap(), want);
+            assert_eq!(b.join().unwrap(), want);
+        });
+    }
+
+    #[test]
+    fn panicking_item_propagates_without_deadlock() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(16, 4, |i| {
+                if i == 7 {
+                    panic!("item 7 failed");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err());
+        // The pool must stay usable after a panicked job.
+        let out = parallel_map(16, 4, |i| i);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
     }
 }

@@ -1,6 +1,6 @@
 //! Property suite for the sharded calendar-queue engine.
 //!
-//! Two invariants, both under adversarial cluster splits (`n = m·q + r`
+//! Three invariants, all under adversarial cluster splits (`n = m·q + r`
 //! with `r ∈ [1, m-1]`, so `ExperimentConfig::cluster_sizes` is forced to
 //! remainder-spread — clusters of unequal size) and a Markov churn
 //! timeline perturbing the rosters between rounds:
@@ -13,10 +13,15 @@
 //!    `ComputeDone`), coarse-grid timestamps that force `(time, kind,
 //!    id)` tie-breaks, and past-horizon times landing in the overflow
 //!    bucket.
-//! 2. **Batched-phase equivalence.** `simulate_phases` (all clusters as
-//!    shards of one queue) is bit-identical, field by field, to running
+//! 2. **Batched-phase equivalence.** `simulate_phases` (one calendar
+//!    shard per cluster) is bit-identical, field by field, to running
 //!    `simulate_phase` per cluster — for a heterogeneous fleet under
 //!    both the full-barrier and semi-sync close policies.
+//! 3. **Parallel-drain equivalence.** `simulate_phases_threads` — each
+//!    cluster's shard drained on its own pool worker, results merged in
+//!    cluster order — is bit-identical to the sequential per-cluster
+//!    drain for `CFEL_THREADS` ∈ {1, 2, 4}, across rounds of Markov
+//!    churn over uneven rosters.
 //!
 //! See docs/DETERMINISM.md for the contract these pin.
 
@@ -207,4 +212,95 @@ fn batched_phases_match_per_cluster_bitwise() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn parallel_drain_matches_sequential_bitwise_under_churn() {
+    check(
+        "simulate_phases_threads(t) == sequential drain, t in {1,2,4}",
+        0x7EAD,
+        default_cases(),
+        |rng| {
+            let (n, m) = uneven_split(rng, 6, 4);
+            let mut net = NetworkModel::paper_defaults(n, 13.30e6, 50, 10_000);
+            net.apply_heterogeneity(0.25, &Rng::new(rng.below(1 << 20) as u64));
+            let mut cfg = ExperimentConfig::quickstart();
+            cfg.n_devices = n;
+            cfg.n_clusters = m;
+            let rosters = Scenario::contiguous_rosters(&cfg.cluster_sizes());
+            let spec = ChurnSpec {
+                p_leave: 0.3,
+                p_join: 0.3,
+                rounds: 3,
+                seed: rng.below(1 << 20) as u64,
+            };
+            let timeline = Timeline::markov_churn(&rosters, &spec).unwrap();
+            let mut active = vec![true; n];
+            let mut cluster_of = vec![0usize; n];
+            for (ci, roster) in rosters.iter().enumerate() {
+                for &d in roster {
+                    cluster_of[d] = ci;
+                }
+            }
+            let k = int_biased(rng, 1, n / m + 2);
+            let policies: Vec<Box<dyn AggregationPolicy>> = vec![
+                Box::new(FullBarrier),
+                Box::new(SemiSync { k, timeout_s: 30.0, staleness_exp: 1.0 }),
+            ];
+            for round in 0..spec.rounds {
+                for te in timeline.at(round) {
+                    match te.event {
+                        WorldEvent::Join { device, cluster } => {
+                            active[device] = true;
+                            cluster_of[device] = cluster;
+                        }
+                        WorldEvent::Leave { device } => active[device] = false,
+                        _ => {}
+                    }
+                }
+                // Work lists in ascending device order per cluster (the
+                // coordinator's sorted-participant convention); churn may
+                // leave some clusters empty.
+                let mut work: Vec<Vec<(usize, usize)>> = vec![Vec::new(); m];
+                for d in 0..n {
+                    if active[d] {
+                        work[cluster_of[d]].push((d, 1 + d % 5));
+                    }
+                }
+                for policy in &policies {
+                    let sequential: Vec<PhaseTiming> = work
+                        .iter()
+                        .map(|w| {
+                            EventDrivenEstimator::simulate_phase(
+                                &net,
+                                w,
+                                UploadChannel::DeviceEdge,
+                                policy.as_ref(),
+                            )
+                        })
+                        .collect();
+                    for threads in [1usize, 2, 4] {
+                        let parallel = EventDrivenEstimator::simulate_phases_threads(
+                            &net,
+                            &work,
+                            UploadChannel::DeviceEdge,
+                            policy.as_ref(),
+                            threads,
+                        );
+                        prop_assert!(parallel.len() == m, "one timing per cluster");
+                        for (ci, (p, s)) in parallel.iter().zip(&sequential).enumerate() {
+                            prop_assert!(
+                                same_phase(p, s),
+                                "round {round} cluster {ci} threads {threads}: parallel \
+                                 drain diverged ({:?} vs {:?})",
+                                p,
+                                s
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }

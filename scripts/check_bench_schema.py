@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate a freshly produced BENCH_scale.json and pin its deterministic
+virtual history against the committed copy.
+
+Usage: check_bench_schema.py <fresh.json> <committed.json>
+
+The fresh file is what `cargo bench --bench scale` just wrote (usually to
+/tmp via CFEL_BENCH_SCALE_OUT); the committed file is the repo's
+BENCH_scale.json. Two checks:
+
+1. Schema — both files carry the scale-bench shape: top-level keys
+   {bench, threads, history, history_digest, samples, note}; each history
+   entry {lane, virtual_s, virtual_s_bits, events} with virtual_s_bits a
+   16-hex-digit string (the exact f64 bit pattern — f64 JSON round-trips
+   can lose bits, the string never does); each sample at least
+   {name, iters, mean_s, median_s, p10_s, p90_s}. The fresh file must
+   have non-empty history and samples; the committed file may have empty
+   samples until the scale-record CI job fills them.
+
+2. History pin — for every lane name present in BOTH files, the fresh
+   virtual_s_bits and events must equal the committed ones. The virtual
+   clock is pure IEEE-754 arithmetic, so these are machine-independent:
+   any divergence is a determinism regression, not noise. Lanes only in
+   one file (e.g. the 1M lanes skipped by CFEL_SCALE_MAX_DEVICES in the
+   smoke run) are ignored.
+"""
+
+import json
+import sys
+
+TOP_KEYS = {"bench", "threads", "history", "history_digest", "samples", "note"}
+HISTORY_KEYS = {"lane", "virtual_s", "virtual_s_bits", "events"}
+SAMPLE_KEYS = {"name", "iters", "mean_s", "median_s", "p10_s", "p90_s"}
+
+
+def fail(msg):
+    sys.exit(f"check_bench_schema: FAIL: {msg}")
+
+
+def check_shape(doc, path, require_nonempty):
+    missing = TOP_KEYS - doc.keys()
+    if missing:
+        fail(f"{path}: missing top-level keys {sorted(missing)}")
+    if doc["bench"] != "scale":
+        fail(f"{path}: bench is {doc['bench']!r}, expected 'scale'")
+    for h in doc["history"]:
+        miss = HISTORY_KEYS - h.keys()
+        if miss:
+            fail(f"{path}: history entry {h.get('lane')!r} missing {sorted(miss)}")
+        bits = h["virtual_s_bits"]
+        if not (isinstance(bits, str) and len(bits) == 16):
+            fail(f"{path}: lane {h['lane']!r}: virtual_s_bits {bits!r} is not 16 hex digits")
+        try:
+            int(bits, 16)
+        except ValueError:
+            fail(f"{path}: lane {h['lane']!r}: virtual_s_bits {bits!r} is not hex")
+    for s in doc["samples"]:
+        miss = SAMPLE_KEYS - s.keys()
+        if miss:
+            fail(f"{path}: sample {s.get('name')!r} missing {sorted(miss)}")
+    if require_nonempty:
+        if not doc["history"]:
+            fail(f"{path}: fresh run recorded no history lanes")
+        if not doc["samples"]:
+            fail(f"{path}: fresh run recorded no samples")
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail("usage: check_bench_schema.py <fresh.json> <committed.json>")
+    fresh_path, committed_path = sys.argv[1], sys.argv[2]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(committed_path) as f:
+        committed = json.load(f)
+
+    check_shape(fresh, fresh_path, require_nonempty=True)
+    check_shape(committed, committed_path, require_nonempty=False)
+
+    pinned = {h["lane"]: h for h in committed["history"]}
+    compared = 0
+    for h in fresh["history"]:
+        want = pinned.get(h["lane"])
+        if want is None:
+            continue
+        if h["virtual_s_bits"] != want["virtual_s_bits"] or h["events"] != want["events"]:
+            fail(
+                f"lane {h['lane']!r}: virtual history diverged from the committed pin "
+                f"(fresh bits={h['virtual_s_bits']} events={h['events']}, "
+                f"committed bits={want['virtual_s_bits']} events={want['events']}) — "
+                f"the virtual clock is deterministic, so this is a regression"
+            )
+        compared += 1
+
+    print(
+        f"check_bench_schema: OK: {len(fresh['history'])} history lanes, "
+        f"{len(fresh['samples'])} samples, {compared} lanes pinned against "
+        f"{committed_path}"
+    )
+
+
+if __name__ == "__main__":
+    main()
