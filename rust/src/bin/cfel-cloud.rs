@@ -1,0 +1,113 @@
+//! `cfel-cloud` — the cloud side of the multi-process runtime.
+//!
+//! Binds a listener, announces the resolved address on stdout
+//! (`[cfel-cloud] listening on <addr>`), accepts `--edges` `cfel-edge`
+//! processes, and drives the experiment's plan over them. The history it
+//! produces is bit-identical to `cfel train` on the same config
+//! (`rust/tests/distributed_equivalence.rs`); `--digest` prints the
+//! wall-clock-free FNV digest so CI can diff the two.
+//!
+//! Example (two terminals + two edges):
+//!   cfel-cloud --listen 127.0.0.1:4710 --edges 2 --plan "(edge(2); gossip(3))*2" --rounds 2
+//!   cfel-edge --connect 127.0.0.1:4710   # twice
+
+use std::path::Path;
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::metrics::{history_digest, CsvWriter, ROUND_HEADER};
+use cfel::plan::Plan;
+use cfel::rpc::{run_cloud, CloudOpts};
+use cfel::util::cli::Command;
+use cfel::util::json::Json;
+
+fn command() -> Command {
+    Command::new("cfel-cloud", "plan interpreter for the multi-process runtime")
+        .flag("config", "load an ExperimentConfig JSON file (other flags override)")
+        .flag("plan", "explicit federation plan, e.g. \"(edge(2); gossip(3))*2\"")
+        .flag("algorithm", "ce-fedavg | fedavg | hier-favg | local-edge")
+        .flag("devices", "total devices n")
+        .flag("clusters", "edge servers m")
+        .flag("rounds", "global rounds")
+        .flag("seed", "experiment seed")
+        .flag("latency", "closed-form | event")
+        .flag("samples", "training samples per device")
+        .flag("eval-every", "evaluate every k rounds")
+        .flag_default("listen", "127.0.0.1:0", "bind address (host:port or unix:/path)")
+        .flag_default("edges", "1", "edge processes to accept")
+        .flag("csv", "write per-round history to this CSV file")
+        .bool_flag("digest", "print `history_digest: <hex>` (wall-clock excluded)")
+        .bool_flag("recover", "retry a failed round with a reconnecting edge")
+        .flag_default("max-retries", "1", "transport failures tolerated with --recover")
+        .flag_default("timeout", "60", "per-read and accept timeout in seconds (0 = none)")
+        .bool_flag("quiet", "suppress per-round logging")
+}
+
+fn run(args: &cfel::util::cli::Args) -> cfel::Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let j = Json::parse_file(Path::new(path))?;
+        ExperimentConfig::from_json(&j)?
+    } else {
+        ExperimentConfig::quickstart()
+    };
+    if let Some(spec) = args.get("plan") {
+        cfg.plan = Some(Plan::parse(spec)?);
+    }
+    if let Some(alg) = args.get("algorithm") {
+        cfg.algorithm = AlgorithmKind::parse(alg)?;
+    }
+    cfg.n_devices = args.get_usize("devices", cfg.n_devices);
+    cfg.n_clusters = args.get_usize("clusters", cfg.n_clusters);
+    cfg.rounds = args.get_usize("rounds", cfg.rounds);
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    if let Some(l) = args.get("latency") {
+        cfg.latency = LatencyMode::parse(l)?;
+    }
+    cfg.samples_per_device = args.get_usize("samples", cfg.samples_per_device);
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every);
+    cfg.validate()?;
+
+    let timeout = args.get_f64("timeout", 60.0);
+    let opts = CloudOpts {
+        listen: args.get_or("listen", "127.0.0.1:0"),
+        edges: args.get_usize("edges", 1),
+        read_timeout_s: timeout,
+        accept_timeout_s: timeout,
+        recover: args.get_bool("recover"),
+        max_retries: args.get_usize("max-retries", 1),
+        verbose: !args.get_bool("quiet"),
+    };
+    let history = run_cloud(&cfg, &opts)?;
+
+    if let Some(csv_path) = args.get("csv") {
+        let mut w = CsvWriter::create(Path::new(csv_path), ROUND_HEADER)?;
+        let series = cfg.run_label();
+        for rec in &history {
+            w.round_row(&series, rec)?;
+        }
+        eprintln!("[cfel-cloud] wrote {csv_path}");
+    }
+    if args.get_bool("digest") {
+        println!("history_digest: {:016x}", history_digest(&history));
+    }
+    let last = history.last().expect("at least one round");
+    println!("rounds:         {}", history.len());
+    println!("final accuracy: {:.4}", last.test_accuracy);
+    println!("sim time:       {:.1} s", last.sim_time_s);
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = command();
+    let args = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

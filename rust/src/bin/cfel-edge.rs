@@ -1,0 +1,43 @@
+//! `cfel-edge` — one edge-server process of the multi-process runtime.
+//!
+//! Connects to a `cfel-cloud`, receives its cluster assignment and the
+//! full experiment config over the wire, and serves training work orders
+//! until the cloud shuts it down. Holds no configuration of its own: the
+//! world is rebuilt deterministically from the config JSON the cloud
+//! ships in `Init`.
+
+use cfel::rpc::{run_edge, EdgeOpts};
+use cfel::util::cli::Command;
+
+fn command() -> Command {
+    Command::new("cfel-edge", "edge worker for the multi-process runtime")
+        .flag_default("connect", "127.0.0.1:4710", "cloud address (host:port or unix:/path)")
+        .flag_default("retry", "10", "seconds to keep retrying the initial connect")
+        .flag(
+            "die-after-phases",
+            "test hook: exit mid-round after serving this many phases",
+        )
+        .bool_flag("quiet", "suppress logging")
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = command();
+    let args = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let opts = EdgeOpts {
+        connect: args.get_or("connect", "127.0.0.1:4710"),
+        connect_retry_s: args.get_f64("retry", 10.0),
+        die_after_phases: args.get("die-after-phases").and_then(|v| v.parse().ok()),
+        verbose: !args.get_bool("quiet"),
+    };
+    if let Err(e) = run_edge(&opts) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

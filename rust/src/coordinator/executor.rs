@@ -1,0 +1,592 @@
+//! Transport-agnostic cluster execution — the seam the multi-process
+//! runtime splits the plan interpreter along.
+//!
+//! [`ClusterExecutor`] abstracts "run an edge phase for the clusters you
+//! own": [`LocalExecutor`] runs it in-process (a full [`Coordinator`]
+//! restricted to a subset), and `rpc::RemoteExecutor` ships the same
+//! calls over a socket to a `cfel-edge` process. [`DistRunner`] is the
+//! cloud-side interpreter: it mirrors the full world (every piece of the
+//! world is a deterministic function of the config, which round-trips
+//! f64-exactly through JSON), fans each [`crate::plan::Step::EdgePhase`]
+//! out to the executors, folds the returned [`ClusterPhase`]s back in
+//! ascending cluster order, and runs gossip / cloud aggregation / eval
+//! on the mirror. Because the fold order is fixed cloud-side — not by
+//! message arrival — the distributed history is bit-identical to
+//! [`Coordinator::run`] (pinned by `rust/tests/distributed_equivalence.rs`).
+
+use std::time::Instant;
+
+use crate::config::{ExperimentConfig, LatencyMode};
+use crate::coordinator::{ClusterPhase, Coordinator, RoundStats};
+use crate::error::{CfelError, Result};
+use crate::metrics::{History, RoundRecord};
+use crate::netsim::{DeviceTimings, EventDrivenEstimator, RoundTiming, UploadChannel};
+use crate::plan::Step;
+use crate::util::stats::merge_steps;
+
+/// One party that executes edge phases for a fixed set of clusters.
+///
+/// The phase API is split into `start_phase` / `finish_phase` so a
+/// driver can issue the work order to *every* executor before collecting
+/// any result — remote edges then train concurrently, while the collect
+/// loop (executor order = ascending cluster order) keeps the merge
+/// deterministic.
+pub trait ClusterExecutor {
+    /// The clusters this executor owns (ascending).
+    fn clusters(&self) -> &[usize];
+
+    /// Apply the round boundary (scheduled fault + timeline events) for
+    /// `round`. Each executor replays the boundary itself — world
+    /// changes are a deterministic function of (config, round), so no
+    /// state needs shipping.
+    fn begin_round(&mut self, round: usize) -> Result<()>;
+
+    /// Issue the edge-phase work order (may return before the work is
+    /// done).
+    fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()>;
+
+    /// Collect the outcome of the last `start_phase`: one
+    /// [`ClusterPhase`] per owned alive cluster, ascending, with models
+    /// collected.
+    fn finish_phase(&mut self) -> Result<Vec<ClusterPhase>>;
+
+    /// Install models / virtual clocks computed elsewhere (gossip and
+    /// cloud aggregation happen on the driver's mirror).
+    fn set_state(&mut self, models: &[(usize, &[f32])], clocks: &[(usize, f64)]) -> Result<()>;
+
+    /// Rebuild the executor's world from scratch: fresh state from the
+    /// config, the round boundaries `0..rounds_applied` replayed, then
+    /// `models` / `clocks` installed. Used when a failed round is
+    /// retried — every executor restarts from the driver's snapshot.
+    fn reinit(
+        &mut self,
+        rounds_applied: usize,
+        models: &[(usize, &[f32])],
+        clocks: &[(usize, f64)],
+    ) -> Result<()>;
+
+    /// Release the executor (close connections; no-op in-process).
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// Partition `n_clusters` clusters over `n_executors` parties into
+/// contiguous ascending ranges, spreading the remainder over the first
+/// ranges — the same remainder-spread as the device layout
+/// (`ExperimentConfig::cluster_sizes`).
+pub fn partition_clusters(n_clusters: usize, n_executors: usize) -> Vec<Vec<usize>> {
+    let n_executors = n_executors.max(1);
+    let base = n_clusters / n_executors;
+    let extra = n_clusters % n_executors;
+    let mut out = Vec::with_capacity(n_executors);
+    let mut next = 0usize;
+    for slot in 0..n_executors {
+        let take = base + usize::from(slot < extra);
+        out.push((next..next + take).collect());
+        next += take;
+    }
+    out
+}
+
+/// In-process [`ClusterExecutor`]: a full [`Coordinator`] that only ever
+/// runs edge phases for its owned subset. This is both the reference
+/// implementation the remote one is pinned against and the cheap way to
+/// exercise the distributed driver without sockets.
+pub struct LocalExecutor {
+    cfg: ExperimentConfig,
+    coord: Coordinator,
+    owned: Vec<usize>,
+    pending_phase: Option<(u64, usize, UploadChannel)>,
+}
+
+impl LocalExecutor {
+    /// Build the executor's world from the config; `owned` are the
+    /// cluster indices it will execute (ascending).
+    pub fn new(cfg: &ExperimentConfig, owned: Vec<usize>) -> Result<LocalExecutor> {
+        let coord = Coordinator::from_config(cfg)?;
+        Ok(LocalExecutor {
+            cfg: cfg.clone(),
+            coord,
+            owned,
+            pending_phase: None,
+        })
+    }
+}
+
+/// Install `(cluster, state)` pairs into a coordinator.
+pub(crate) fn install_state(
+    coord: &mut Coordinator,
+    models: &[(usize, &[f32])],
+    clocks: &[(usize, f64)],
+) -> Result<()> {
+    for &(ci, m) in models {
+        let dst = coord
+            .clusters
+            .get_mut(ci)
+            .ok_or_else(|| CfelError::Runtime(format!("set_state: no cluster {ci}")))?;
+        if dst.model.len() != m.len() {
+            return Err(CfelError::Runtime(format!(
+                "set_state: cluster {ci} model has {} params, got {}",
+                dst.model.len(),
+                m.len()
+            )));
+        }
+        dst.model.copy_from_slice(m);
+    }
+    for &(ci, t) in clocks {
+        if ci >= coord.cluster_clock_s.len() {
+            return Err(CfelError::Runtime(format!("set_state: no cluster {ci}")));
+        }
+        coord.cluster_clock_s[ci] = t;
+    }
+    Ok(())
+}
+
+/// Rebuild a coordinator from its config and replay the round boundaries
+/// `0..rounds_applied` (fault + timeline, in round order) so its world
+/// matches a driver that has started round `rounds_applied - 1`.
+pub(crate) fn rebuild_world(cfg: &ExperimentConfig, rounds_applied: usize) -> Result<Coordinator> {
+    let mut coord = Coordinator::from_config(cfg)?;
+    for round in 0..rounds_applied {
+        coord.apply_fault(round)?;
+        coord.apply_timeline(round)?;
+    }
+    Ok(coord)
+}
+
+impl ClusterExecutor for LocalExecutor {
+    fn clusters(&self) -> &[usize] {
+        &self.owned
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        self.coord.apply_fault(round)?;
+        self.coord.apply_timeline(round)
+    }
+
+    fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()> {
+        self.pending_phase = Some((phase, epochs, channel));
+        Ok(())
+    }
+
+    fn finish_phase(&mut self) -> Result<Vec<ClusterPhase>> {
+        let (phase, epochs, channel) = self
+            .pending_phase
+            .take()
+            .ok_or_else(|| CfelError::Runtime("finish_phase without start_phase".into()))?;
+        let owned = self.owned.clone();
+        self.coord.edge_phase_on(&owned, epochs, phase, channel, true)
+    }
+
+    fn set_state(&mut self, models: &[(usize, &[f32])], clocks: &[(usize, f64)]) -> Result<()> {
+        install_state(&mut self.coord, models, clocks)
+    }
+
+    fn reinit(
+        &mut self,
+        rounds_applied: usize,
+        models: &[(usize, &[f32])],
+        clocks: &[(usize, f64)],
+    ) -> Result<()> {
+        self.coord = rebuild_world(&self.cfg, rounds_applied)?;
+        self.pending_phase = None;
+        install_state(&mut self.coord, models, clocks)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Replacement-executor factory used when a round is retried after a
+/// transport failure: given the failed executor's slot, produce a fresh
+/// executor owning the same clusters (e.g. accept a reconnecting
+/// `cfel-edge`).
+pub type RecoverFn = Box<dyn FnMut(usize) -> Result<Box<dyn ClusterExecutor>>>;
+
+/// Snapshot of the mirror's per-cluster state at a round boundary (after
+/// fault/timeline application) — what a retried round restarts from.
+struct BoundarySnapshot {
+    models: Vec<Vec<f32>>,
+    clocks: Vec<f64>,
+}
+
+/// The cloud-side distributed plan interpreter. See the module docs.
+pub struct DistRunner {
+    coord: Coordinator,
+    executors: Vec<Box<dyn ClusterExecutor>>,
+    /// Executor slot owning each cluster.
+    owner: Vec<usize>,
+    recovery: Option<RecoverFn>,
+    /// Transport failures tolerated per run (each consumes a full
+    /// round retry).
+    max_retries: usize,
+    /// Per-cluster pending-report depth after the last edge phase. A
+    /// retry is only sound from an empty pending state: kept-late model
+    /// payloads live edge-side only and die with the edge process.
+    last_pending: Vec<usize>,
+    pub verbose: bool,
+}
+
+impl DistRunner {
+    /// Build the driver: a full mirror world from `cfg` plus the
+    /// executors. The executors' cluster sets must concatenate, in
+    /// order, to exactly `0..n_clusters` — executor order is merge
+    /// order, and the merge must be ascending cluster order.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        executors: Vec<Box<dyn ClusterExecutor>>,
+    ) -> Result<DistRunner> {
+        let coord = Coordinator::from_config(cfg)?;
+        let n = coord.clusters.len();
+        let mut owner = vec![0usize; n];
+        let mut next = 0usize;
+        for (slot, ex) in executors.iter().enumerate() {
+            for &ci in ex.clusters() {
+                if ci != next {
+                    return Err(CfelError::Config(format!(
+                        "executor {slot}: expected cluster {next}, owns {ci} — executor \
+                         cluster sets must concatenate to 0..{n} in ascending order"
+                    )));
+                }
+                owner[ci] = slot;
+                next += 1;
+            }
+        }
+        if next != n {
+            return Err(CfelError::Config(format!(
+                "executors cover {next} of {n} clusters"
+            )));
+        }
+        Ok(DistRunner {
+            coord,
+            executors,
+            owner,
+            recovery: None,
+            max_retries: 0,
+            last_pending: vec![0; n],
+            verbose: false,
+        })
+    }
+
+    /// Enable round-retry recovery: on a transport failure, `recover` is
+    /// called with the failed executor's slot to produce a replacement,
+    /// every executor is reinitialized from the boundary snapshot, and
+    /// the round is re-run. At most `max_retries` failures are tolerated.
+    pub fn with_recovery(mut self, recover: RecoverFn, max_retries: usize) -> DistRunner {
+        self.recovery = Some(recover);
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Read access to the mirror world (tests).
+    pub fn mirror(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    fn begin_all(&mut self, round: usize) -> Result<()> {
+        for ex in &mut self.executors {
+            ex.begin_round(round)?;
+        }
+        Ok(())
+    }
+
+    /// Push the mirror's models + clocks to every executor (after a
+    /// gossip or cloud-aggregation step rewrote them cloud-side).
+    fn push_state(&mut self) -> Result<()> {
+        let models: Vec<(usize, &[f32])> = self
+            .coord
+            .clusters
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| (ci, c.model.as_slice()))
+            .collect();
+        let clocks: Vec<(usize, f64)> = self
+            .coord
+            .cluster_clock_s
+            .iter()
+            .copied()
+            .enumerate()
+            .collect();
+        for ex in &mut self.executors {
+            ex.set_state(&models, &clocks)?;
+        }
+        Ok(())
+    }
+
+    /// Distributed mirror of [`Coordinator::plan_round`].
+    fn plan_round_dist(&mut self, round: usize) -> Result<RoundStats> {
+        let plan = self.coord.plan.clone();
+        let base_phase = round as u64 * plan.edge_phases() as u64;
+        let mut stats = RoundStats {
+            timing: RoundTiming {
+                device_timings: DeviceTimings::acquire(0),
+                ..RoundTiming::default()
+            },
+            ..RoundStats::default()
+        };
+        let mut idx = 0u64;
+        self.exec_steps_dist(&plan.steps, base_phase, &mut idx, &mut stats)?;
+        stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
+        Ok(stats)
+    }
+
+    fn exec_steps_dist(
+        &mut self,
+        steps: &[Step],
+        base_phase: u64,
+        idx: &mut u64,
+        stats: &mut RoundStats,
+    ) -> Result<()> {
+        for step in steps {
+            match step {
+                Step::EdgePhase { epochs, channel } => {
+                    let phase = base_phase + *idx;
+                    // Fan out first so remote edges train concurrently …
+                    for ex in &mut self.executors {
+                        ex.start_phase(phase, *epochs, *channel)?;
+                    }
+                    // … then collect in executor order = ascending
+                    // cluster order: the merge order is fixed here, not
+                    // by message arrival.
+                    let mut phases: Vec<ClusterPhase> = Vec::new();
+                    for ex in &mut self.executors {
+                        phases.extend(ex.finish_phase()?);
+                    }
+                    for p in &mut phases {
+                        let ci = p.cluster;
+                        if p.model.len() != self.coord.clusters[ci].model.len() {
+                            return Err(CfelError::Runtime(format!(
+                                "phase result for cluster {ci} carries {} params, \
+                                 expected {}",
+                                p.model.len(),
+                                self.coord.clusters[ci].model.len()
+                            )));
+                        }
+                        self.coord.clusters[ci].model = std::mem::take(&mut p.model);
+                        if p.timing.is_some() {
+                            self.coord.cluster_clock_s[ci] = p.clock_s;
+                        }
+                        self.last_pending[ci] = p.pending_after;
+                    }
+                    Coordinator::fold_phases(stats, &phases, self.coord.clusters.len());
+                    for p in phases {
+                        if let Some(pt) = p.timing {
+                            pt.devices.recycle();
+                        }
+                    }
+                    *idx += 1;
+                }
+                Step::Gossip { pi } => {
+                    self.coord.mix_gossip(*pi);
+                    if self.coord.cfg.latency == LatencyMode::EventDriven {
+                        let hops_s =
+                            EventDrivenEstimator::simulate_gossip(&self.coord.net, *pi as usize).0;
+                        stats.timing.gossip_s += hops_s;
+                        self.coord.barrier_clocks(hops_s);
+                    }
+                    self.push_state()?;
+                }
+                Step::CloudAggregate => {
+                    if self.coord.aggregator_alive {
+                        self.coord.cloud_aggregate()?;
+                        self.coord.barrier_clocks(0.0);
+                        self.push_state()?;
+                    }
+                }
+                Step::Repeat { n, body } => {
+                    for _ in 0..*n {
+                        self.exec_steps_dist(body, base_phase, idx, stats)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore the mirror to the boundary snapshot, replace the failed
+    /// executor, and reinitialize every executor from the snapshot with
+    /// rounds `0..=round` boundaries replayed.
+    fn recover_round(
+        &mut self,
+        round: usize,
+        snap: &BoundarySnapshot,
+        failed_cluster: Option<usize>,
+    ) -> Result<()> {
+        for (ci, m) in snap.models.iter().enumerate() {
+            self.coord.clusters[ci].model.copy_from_slice(m);
+        }
+        self.coord.cluster_clock_s.copy_from_slice(&snap.clocks);
+        if let Some(ci) = failed_cluster {
+            let slot = self.owner[ci];
+            let recover = self
+                .recovery
+                .as_mut()
+                .expect("recover_round called without recovery");
+            let fresh = recover(slot)?;
+            if fresh.clusters() != self.executors[slot].clusters() {
+                return Err(CfelError::Config(format!(
+                    "replacement executor for slot {slot} owns {:?}, expected {:?}",
+                    fresh.clusters(),
+                    self.executors[slot].clusters()
+                )));
+            }
+            let _ = self.executors[slot].shutdown();
+            self.executors[slot] = fresh;
+        }
+        let models: Vec<(usize, &[f32])> = snap
+            .models
+            .iter()
+            .enumerate()
+            .map(|(ci, m)| (ci, m.as_slice()))
+            .collect();
+        let clocks: Vec<(usize, f64)> = snap.clocks.iter().copied().enumerate().collect();
+        for ex in &mut self.executors {
+            ex.reinit(round + 1, &models, &clocks)?;
+        }
+        Ok(())
+    }
+
+    /// Drive the configured number of global rounds; bit-identical to
+    /// [`Coordinator::run`] on the same config (all but `wall_time_s`,
+    /// which is real elapsed time in both modes).
+    pub fn run(&mut self) -> Result<History> {
+        let label = self.coord.cfg.run_label();
+        let mut history = History::new();
+        let mut sim_time = 0.0f64;
+        let mut wall = 0.0f64;
+        let rounds = self.coord.cfg.rounds;
+        let mut retries_left = self.max_retries;
+        let mut round = 0usize;
+        let mut boundary_done = false;
+        let mut skip_begin = false;
+        let mut snapshot = BoundarySnapshot {
+            models: Vec::new(),
+            clocks: Vec::new(),
+        };
+        while round < rounds {
+            let t0 = Instant::now();
+            if !boundary_done {
+                self.coord.apply_fault(round)?;
+                self.coord.apply_timeline(round)?;
+                // Snapshot *after* the boundary: fault/timeline events
+                // must apply exactly once, so a retried round restores
+                // this state and skips re-application.
+                snapshot = BoundarySnapshot {
+                    models: self.coord.clusters.iter().map(|c| c.model.clone()).collect(),
+                    clocks: self.coord.cluster_clock_s.clone(),
+                };
+                boundary_done = true;
+            }
+            let res = if skip_begin {
+                self.plan_round_dist(round)
+            } else {
+                self.begin_all(round).and_then(|()| self.plan_round_dist(round))
+            };
+            let mut stats = match res {
+                Ok(s) => s,
+                Err(e) => {
+                    let retryable = matches!(e, CfelError::Transport { .. })
+                        && self.recovery.is_some()
+                        && retries_left > 0
+                        && self.last_pending.iter().all(|&p| p == 0);
+                    if !retryable {
+                        return Err(e);
+                    }
+                    let CfelError::Transport { cluster, message } = e else {
+                        unreachable!("retryable implies Transport");
+                    };
+                    retries_left -= 1;
+                    if self.verbose {
+                        eprintln!(
+                            "[dist] round {round}: transport failure ({message}); \
+                             recovering and retrying"
+                        );
+                    }
+                    self.recover_round(round, &snapshot, cluster)?;
+                    skip_begin = true;
+                    continue;
+                }
+            };
+            wall += t0.elapsed().as_secs_f64();
+            let lat = self.coord.round_latency(&stats);
+            sim_time += lat.total();
+
+            let (acc, tloss) =
+                if (round + 1) % self.coord.cfg.eval_every == 0 || round + 1 == rounds {
+                    self.coord.evaluate()?
+                } else {
+                    (f64::NAN, f64::NAN)
+                };
+            let rec = RoundRecord {
+                round: round + 1,
+                sim_time_s: sim_time,
+                wall_time_s: wall,
+                compute_s: lat.compute_s,
+                upload_s: lat.upload_s,
+                backhaul_s: lat.backhaul_s,
+                dropped_devices: stats.timing.dropped_devices,
+                on_time_devices: stats.timing.on_time_devices,
+                late_devices: stats.timing.late_devices,
+                stale_merged: stats.timing.stale_merged,
+                close_reason: stats.timing.close_reason_summary(),
+                train_loss: stats.mean_loss(),
+                test_accuracy: acc,
+                test_loss: tloss,
+                consensus: self.coord.consensus(),
+                steps: stats.step_count,
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{}|dist] round {:>3}  loss {:.4}  acc {}  sim {:.1}s",
+                    label,
+                    rec.round,
+                    rec.train_loss,
+                    if acc.is_nan() {
+                        "  -  ".to_string()
+                    } else {
+                        format!("{acc:.4}")
+                    },
+                    sim_time
+                );
+            }
+            history.push(rec);
+            stats.timing.recycle();
+            boundary_done = false;
+            skip_begin = false;
+            round += 1;
+        }
+        for ex in &mut self.executors {
+            let _ = ex.shutdown();
+        }
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_spreads_remainder_over_first_slots() {
+        assert_eq!(partition_clusters(5, 2), vec![vec![0, 1, 2], vec![3, 4]]);
+        assert_eq!(partition_clusters(4, 4), vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(partition_clusters(2, 3), vec![vec![0], vec![1], vec![]]);
+        let flat: Vec<usize> = partition_clusters(7, 3).concat();
+        assert_eq!(flat, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runner_rejects_bad_partitions() {
+        let cfg = ExperimentConfig::quickstart();
+        let a = LocalExecutor::new(&cfg, vec![0, 1]).unwrap();
+        let b = LocalExecutor::new(&cfg, vec![3, 2]).unwrap();
+        let exs: Vec<Box<dyn ClusterExecutor>> = vec![Box::new(a), Box::new(b)];
+        let err = DistRunner::new(&cfg, exs).unwrap_err();
+        assert!(err.to_string().contains("ascending order"), "{err}");
+
+        let a = LocalExecutor::new(&cfg, vec![0, 1]).unwrap();
+        let exs: Vec<Box<dyn ClusterExecutor>> = vec![Box::new(a)];
+        let err = DistRunner::new(&cfg, exs).unwrap_err();
+        assert!(err.to_string().contains("covers 2 of 4"), "{err}");
+    }
+}

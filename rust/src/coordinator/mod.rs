@@ -15,11 +15,13 @@
 //! equivalence oracle (`rust/tests/plan_equivalence.rs`).
 
 pub mod cluster;
+pub mod executor;
 mod legacy;
 pub mod trainer;
 
 pub use cluster::{ClusterState, WeightedReport};
-pub use trainer::LocalOutcome;
+pub use executor::{ClusterExecutor, DistRunner, LocalExecutor};
+pub use trainer::{ClusterPhase, LocalOutcome};
 
 use std::time::Instant;
 
@@ -406,7 +408,7 @@ impl Coordinator {
     /// first use and cached (`h_cache` is cleared when a fault rebuilds
     /// the graph). Backhaul messages go through the configured compressor
     /// first (what the neighbouring servers actually receive).
-    fn mix_gossip(&mut self, pi: u32) {
+    pub(crate) fn mix_gossip(&mut self, pi: u32) {
         let alive = self.alive_clusters();
         if alive.len() <= 1 {
             return;

@@ -9,7 +9,7 @@ use crate::data::sampler::EpochSampler;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::model::ModelState;
-use crate::netsim::UploadChannel;
+use crate::netsim::{PhaseTiming, UploadChannel};
 use crate::runtime::TrainBackend;
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_threads, parallel_map};
@@ -24,6 +24,39 @@ pub struct LocalOutcome {
     pub loss_sum: f64,
     /// Local sample count |D_k| (aggregation weight).
     pub n_samples: usize,
+}
+
+/// Everything one cluster produced in one edge phase: per-device training
+/// reports, the post-aggregation edge model, the advanced virtual clock,
+/// and the phase timing columns. This is the unit of work a
+/// [`ClusterExecutor`](crate::coordinator::executor::ClusterExecutor)
+/// hands back — computed in-process or shipped over the wire — and the
+/// cloud folds phases into round stats in ascending cluster order, which
+/// is what keeps distributed mode bit-identical to the single process
+/// (docs/DETERMINISM.md).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterPhase {
+    /// Cluster index this phase belongs to.
+    pub cluster: usize,
+    /// `(device, sgd_steps, loss_sum)` for every *trained* participant in
+    /// deterministic participant order — including reports a close policy
+    /// later dropped, because round-level loss/step stats count all
+    /// trained work (exactly as the in-process merge loop always has).
+    pub reports: Vec<(usize, usize, f64)>,
+    /// Post-aggregation edge model. Left empty unless the caller asked
+    /// for models to be collected (the in-process path reads the cluster
+    /// state directly and skips the copy).
+    pub model: Vec<f32>,
+    /// The cluster's absolute virtual clock after the phase close (event
+    /// mode; unchanged in closed-form mode).
+    pub clock_s: f64,
+    /// Event-mode phase timing columns; `None` in closed-form mode. The
+    /// consumer owns the buffers and must recycle `timing.devices`.
+    pub timing: Option<PhaseTiming>,
+    /// Kept-late reports folded into this close (semi-sync).
+    pub stale_merged: usize,
+    /// Reports still parked in the cluster's pending queue afterwards.
+    pub pending_after: usize,
 }
 
 /// Train one device for `epochs` local epochs starting from `init_params`
@@ -65,7 +98,9 @@ impl RoundContext<'_> {
         phase: u64,
     ) -> Vec<usize> {
         let ids = &cluster.device_ids;
-        if self.cfg.participation >= 1.0 {
+        if self.cfg.participation >= 1.0 || ids.is_empty() {
+            // A depopulated roster (timeline mass-leave) samples nobody;
+            // clamping `k` to [1, 0] below would panic.
             return ids.clone();
         }
         let k = ((ids.len() as f64 * self.cfg.participation).ceil() as usize)
@@ -117,9 +152,66 @@ impl Coordinator {
         channel: UploadChannel,
         stats: &mut RoundStats,
     ) -> Result<()> {
-        let alive = self.alive_clusters();
+        let all: Vec<usize> = (0..self.clusters.len()).collect();
+        let phases = self.edge_phase_on(&all, epochs, phase, channel, false)?;
+        Self::fold_phases(stats, &phases, self.clusters.len());
+        // The per-device columns were copied into `stats.timing` by the
+        // fold; hand the phase buffers back to the free list so next
+        // phase's expansion reuses the capacity.
+        for p in phases {
+            if let Some(pt) = p.timing {
+                pt.devices.recycle();
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold per-cluster phase results into the round accumulator, in the
+    /// order `phases` was produced (ascending cluster order). Distributed
+    /// mode calls this cloud-side with phases collected from remote
+    /// executors; because the fold — not the transport — fixes the merge
+    /// order, the wire cannot reorder aggregation, and the f64
+    /// `loss_sum` additions replay in the exact flattened
+    /// (alive-cluster, participant) sequence of the single process.
+    pub(crate) fn fold_phases(stats: &mut RoundStats, phases: &[ClusterPhase], n_clusters: usize) {
+        for p in phases {
+            for &(dev, steps, loss) in &p.reports {
+                stats.device_steps.push((dev, steps));
+                stats.loss_sum += loss;
+                stats.step_count += steps;
+            }
+            if let Some(pt) = &p.timing {
+                stats.timing.record_phase(p.cluster, n_clusters, pt);
+                stats.timing.stale_merged += p.stale_merged;
+            }
+        }
+    }
+
+    /// [`Coordinator::edge_phase`] restricted to the clusters in `subset`
+    /// (ascending): train, close, and aggregate only those clusters,
+    /// returning one [`ClusterPhase`] per alive subset member and leaving
+    /// the round accumulator to the caller ([`Self::fold_phases`]). This
+    /// is the executor building block: in-process mode passes every
+    /// cluster; a distributed edge process passes the clusters it owns
+    /// and ships the results back. Each cluster's training, close
+    /// simulation, and Eq. 6 merge are pure functions of that cluster's
+    /// own inputs, so a partitioned run is bit-identical to the
+    /// single-process one.
+    pub(crate) fn edge_phase_on(
+        &mut self,
+        subset: &[usize],
+        epochs: usize,
+        phase: u64,
+        channel: UploadChannel,
+        collect_models: bool,
+    ) -> Result<Vec<ClusterPhase>> {
+        let alive: Vec<usize> = subset
+            .iter()
+            .copied()
+            .filter(|&ci| self.alive[ci])
+            .collect();
         if alive.is_empty() {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let parallel = self.backend.parallel_devices();
 
@@ -155,14 +247,21 @@ impl Coordinator {
             Ok(out)
         });
 
-        // ---- merge stats + group per cluster (deterministic order) ----
+        // ---- record reports + group per cluster (deterministic order) --
         let mut per_cluster: Vec<Vec<(usize, LocalOutcome)>> =
             participants.iter().map(|p| Vec::with_capacity(p.len())).collect();
+        let mut phases: Vec<ClusterPhase> = alive
+            .iter()
+            .map(|&ci| ClusterPhase {
+                cluster: ci,
+                clock_s: self.cluster_clock_s[ci],
+                pending_after: self.pending[ci].len(),
+                ..ClusterPhase::default()
+            })
+            .collect();
         for (&(slot, dev), r) in items.iter().zip(trained) {
             let out = r?;
-            stats.device_steps.push((dev, out.steps));
-            stats.loss_sum += out.loss_sum;
-            stats.step_count += out.steps;
+            phases[slot].reports.push((dev, out.steps, out.loss_sum));
             per_cluster[slot].push((dev, out));
         }
 
@@ -200,11 +299,14 @@ impl Coordinator {
                         &mut self.clusters[ci].model,
                     )?;
                 }
+                if collect_models {
+                    phases[slot].model = self.clusters[ci].model.clone();
+                }
             }
-            return Ok(());
+            return Ok(phases);
         };
 
-        for ((slot, &ci), pt) in alive.iter().enumerate().zip(&pts) {
+        for ((slot, &ci), pt) in alive.iter().enumerate().zip(pts) {
             // Advance this cluster's absolute clock to the phase close.
             let start_abs = self.cluster_clock_s[ci];
             let close_abs = start_abs + pt.duration_s;
@@ -240,36 +342,35 @@ impl Coordinator {
                 }
             }
 
-            stats.timing.record_phase(ci, self.clusters.len(), pt);
-            stats.timing.stale_merged += stale.len();
+            phases[slot].clock_s = close_abs;
+            phases[slot].stale_merged = stale.len();
+            phases[slot].pending_after = self.pending[ci].len();
 
             if on_time.is_empty() && stale.is_empty() {
                 // Timeout/deadline fired before any report (and nothing
                 // stale arrived): keep the previous edge model.
-                continue;
+            } else {
+                let reports: Vec<WeightedReport> = on_time
+                    .iter()
+                    .map(|(_, o)| WeightedReport {
+                        params: &o.params,
+                        n_samples: o.n_samples,
+                        discount: 1.0,
+                    })
+                    .chain(stale.iter().map(|p| WeightedReport {
+                        params: &p.params,
+                        n_samples: p.n_samples,
+                        discount: self.policy.staleness_discount(phase - p.origin_phase),
+                    }))
+                    .collect();
+                ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
             }
-            let reports: Vec<WeightedReport> = on_time
-                .iter()
-                .map(|(_, o)| WeightedReport {
-                    params: &o.params,
-                    n_samples: o.n_samples,
-                    discount: 1.0,
-                })
-                .chain(stale.iter().map(|p| WeightedReport {
-                    params: &p.params,
-                    n_samples: p.n_samples,
-                    discount: self.policy.staleness_discount(phase - p.origin_phase),
-                }))
-                .collect();
-            ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
+            if collect_models {
+                phases[slot].model = self.clusters[ci].model.clone();
+            }
+            phases[slot].timing = Some(pt);
         }
-        // The per-device columns were copied into `stats.timing` above;
-        // hand the phase buffers back to the free list so next phase's
-        // expansion reuses the capacity.
-        for pt in pts {
-            pt.devices.recycle();
-        }
-        Ok(())
+        Ok(phases)
     }
 }
 

@@ -34,6 +34,18 @@ pub enum CfelError {
     /// Underlying XLA error.
     Xla(String),
 
+    /// Wire-codec failure (bad magic/version, truncated or oversized
+    /// frame, payload that does not decode).
+    Codec(String),
+
+    /// Distributed-transport failure (connection lost, read timeout,
+    /// edge process death). `cluster` names one of the clusters owned
+    /// by the failed peer when known.
+    Transport {
+        cluster: Option<usize>,
+        message: String,
+    },
+
     /// I/O failure.
     Io(std::io::Error),
 }
@@ -49,6 +61,11 @@ impl fmt::Display for CfelError {
             CfelError::Aggregation(m) => write!(f, "aggregation error: {m}"),
             CfelError::Runtime(m) => write!(f, "runtime error: {m}"),
             CfelError::Xla(m) => write!(f, "xla error: {m}"),
+            CfelError::Codec(m) => write!(f, "codec error: {m}"),
+            CfelError::Transport { cluster, message } => match cluster {
+                Some(ci) => write!(f, "transport error (cluster {ci}): {message}"),
+                None => write!(f, "transport error: {message}"),
+            },
             CfelError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -36,6 +36,7 @@ pub mod metrics;
 pub mod model;
 pub mod netsim;
 pub mod plan;
+pub mod rpc;
 pub mod runtime;
 pub mod scenario;
 pub mod topology;

@@ -117,6 +117,15 @@ fn train_command() -> Command {
         .flag("save", "write the final global model to this checkpoint file")
         .bool_flag("quiet", "suppress per-round logging")
         .flag("config", "load an ExperimentConfig JSON file (other flags override)")
+        .flag_default(
+            "mode",
+            "local",
+            "local | cloud | edge (multi-process runtime; see cfel-cloud/cfel-edge)",
+        )
+        .flag_default("listen", "127.0.0.1:0", "cloud mode: bind address (or unix:/path)")
+        .flag("connect", "edge mode: cloud address to connect to")
+        .flag_default("edges", "1", "cloud mode: number of edge processes to accept")
+        .bool_flag("digest", "print `history_digest: <hex>` (wall-clock excluded) after the run")
 }
 
 fn cmd_train(argv: &[String]) -> i32 {
@@ -138,6 +147,24 @@ fn cmd_train(argv: &[String]) -> i32 {
 }
 
 fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
+    let mode = args.get_or("mode", "local");
+    if !matches!(mode.as_str(), "local" | "cloud" | "edge") {
+        return Err(cfel::CfelError::Config(format!(
+            "unknown --mode {mode:?} (local | cloud | edge)"
+        )));
+    }
+    if mode == "edge" {
+        // The edge is config-free: the cloud ships the world over the wire.
+        let connect = args
+            .get("connect")
+            .ok_or_else(|| cfel::CfelError::Config("--mode edge requires --connect".into()))?;
+        let opts = cfel::rpc::EdgeOpts {
+            connect: connect.to_string(),
+            verbose: !args.get_bool("quiet"),
+            ..Default::default()
+        };
+        return cfel::rpc::run_edge(&opts);
+    }
     let mut cfg = if let Some(path) = args.get("config") {
         let j = cfel::util::json::Json::parse_file(std::path::Path::new(path))?;
         ExperimentConfig::from_json(&j)?
@@ -241,23 +268,36 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         return Ok(());
     }
 
-    let mut coord = Coordinator::from_config(&cfg)?;
-    coord.verbose = !args.get_bool("quiet");
-    eprintln!(
-        "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {} | policy {}",
-        cfg.run_label(),
-        coord.backend.name(),
-        cfg.n_devices,
-        cfg.n_clusters,
-        cfg.tau,
-        cfg.q,
-        cfg.pi,
-        coord.scenario.topology,
-        cfg.data.name(),
-        cfg.latency.name(),
-        cfg.resolved_policy().name()
-    );
-    let history = coord.run()?;
+    let mut saved_coord = None;
+    let history = if mode == "cloud" {
+        let opts = cfel::rpc::CloudOpts {
+            listen: args.get_or("listen", "127.0.0.1:0"),
+            edges: args.get_usize("edges", 1),
+            verbose: !args.get_bool("quiet"),
+            ..Default::default()
+        };
+        cfel::rpc::run_cloud(&cfg, &opts)?
+    } else {
+        let mut coord = Coordinator::from_config(&cfg)?;
+        coord.verbose = !args.get_bool("quiet");
+        eprintln!(
+            "[cfel] {} | backend {} | n={} m={} tau={} q={} pi={} | topology {} | data {} | latency {} | policy {}",
+            cfg.run_label(),
+            coord.backend.name(),
+            cfg.n_devices,
+            cfg.n_clusters,
+            cfg.tau,
+            cfg.q,
+            cfg.pi,
+            coord.scenario.topology,
+            cfg.data.name(),
+            cfg.latency.name(),
+            cfg.resolved_policy().name()
+        );
+        let history = coord.run()?;
+        saved_coord = Some(coord);
+        history
+    };
 
     if let Some(csv_path) = args.get("csv") {
         let mut w = CsvWriter::create(std::path::Path::new(csv_path), ROUND_HEADER)?;
@@ -266,6 +306,9 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
             w.round_row(&series, rec)?;
         }
         eprintln!("[cfel] wrote {csv_path}");
+    }
+    if args.get_bool("digest") {
+        println!("history_digest: {:016x}", cfel::metrics::history_digest(&history));
     }
 
     let last = history.last().expect("at least one round");
@@ -294,7 +337,12 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         println!("90%-of-best hit: round {r} / {t:.1} sim-s");
     }
     if let Some(path) = args.get("save") {
-        // Persist the size-weighted global model.
+        // Persist the size-weighted global model. The cloud's mirror
+        // world holds the final cluster models too, but checkpointing is
+        // a local-mode workflow — keep the failure mode explicit.
+        let coord = saved_coord
+            .as_ref()
+            .ok_or_else(|| cfel::CfelError::Config("--save requires --mode local".into()))?;
         let sizes: Vec<usize> = coord.clusters.iter().map(|c| c.n_samples).collect();
         let models: Vec<Vec<f32>> = coord.clusters.iter().map(|c| c.model.clone()).collect();
         let global = cfel::aggregation::global_average(&models, &sizes)?;

@@ -57,6 +57,44 @@ pub fn time_to_accuracy(history: &History, target: f64) -> Option<(usize, f64)> 
         .map(|r| (r.round, r.sim_time_s))
 }
 
+/// FNV-1a 64 digest over every deterministic field of the history, in
+/// declaration order. `wall_time_s` is real wall clock — the one
+/// nondeterministic field — and is skipped, so the digest of a
+/// distributed run can be diffed against the in-process interpreter's
+/// (`cfel-cloud --digest` vs `cfel train --digest` in CI's
+/// distributed-smoke job). f64s hash by bit pattern: NaN evals and
+/// negative zeros are pinned too.
+pub fn history_digest(history: &History) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x1000_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for r in history {
+        eat(&(r.round as u64).to_le_bytes());
+        eat(&r.sim_time_s.to_bits().to_le_bytes());
+        // wall_time_s deliberately skipped.
+        eat(&r.compute_s.to_bits().to_le_bytes());
+        eat(&r.upload_s.to_bits().to_le_bytes());
+        eat(&r.backhaul_s.to_bits().to_le_bytes());
+        eat(&(r.dropped_devices as u64).to_le_bytes());
+        eat(&(r.on_time_devices as u64).to_le_bytes());
+        eat(&(r.late_devices as u64).to_le_bytes());
+        eat(&(r.stale_merged as u64).to_le_bytes());
+        eat(r.close_reason.as_bytes());
+        eat(&r.train_loss.to_bits().to_le_bytes());
+        eat(&r.test_accuracy.to_bits().to_le_bytes());
+        eat(&r.test_loss.to_bits().to_le_bytes());
+        eat(&r.consensus.to_bits().to_le_bytes());
+        eat(&(r.steps as u64).to_le_bytes());
+    }
+    h
+}
+
 /// Best accuracy seen in the run.
 pub fn best_accuracy(history: &History) -> f64 {
     history

@@ -1,0 +1,275 @@
+//! Cloud side of the multi-process runtime: [`RemoteExecutor`] (a
+//! [`ClusterExecutor`] speaking the wire protocol to one `cfel-edge`
+//! process) and [`run_cloud`] (bind, handshake N edges, drive
+//! [`DistRunner`]).
+
+use std::time::Duration;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::{partition_clusters, ClusterExecutor, DistRunner};
+use crate::coordinator::ClusterPhase;
+use crate::error::{CfelError, Result};
+use crate::metrics::History;
+use crate::netsim::UploadChannel;
+use crate::rpc::codec::PROTO_VERSION;
+use crate::rpc::wire::{self, Msg};
+use crate::rpc::{Conn, Listener};
+
+/// [`ClusterExecutor`] implemented as an RPC client: every trait call is
+/// one request frame to the owning `cfel-edge`, every reply is awaited
+/// under the read timeout. Connection failures (EOF, reset, timeout)
+/// surface as [`CfelError::Transport`] naming the first owned cluster;
+/// an [`Msg::Error`] reply — the edge ran but its *work* failed — stays
+/// a runtime error and is not retried.
+pub struct RemoteExecutor {
+    conn: Conn,
+    owned: Vec<usize>,
+    config_json: String,
+    /// `RunPhase` orders sent but not yet collected. The driver aborts
+    /// its collect loop at the first failure, so a *healthy* connection
+    /// can be left with a reply in flight — `reinit` drains it before
+    /// retrying, lest `Init` be answered by a stale `phase-done`.
+    inflight: usize,
+}
+
+impl RemoteExecutor {
+    /// Consume a fresh inbound connection: verify the edge's `Hello`,
+    /// and (unless this executor replaces a dead one — the driver
+    /// reinitializes those itself) ship the initial `Init` so the edge
+    /// builds its world.
+    pub fn accept_handshake(
+        conn: Conn,
+        owned: Vec<usize>,
+        config_json: String,
+        read_timeout: Option<Duration>,
+        init_now: bool,
+    ) -> Result<RemoteExecutor> {
+        conn.set_read_timeout(read_timeout)?;
+        let mut ex = RemoteExecutor {
+            conn,
+            owned,
+            config_json,
+            inflight: 0,
+        };
+        match ex.recv()? {
+            Msg::Hello { proto } if proto == PROTO_VERSION => {}
+            Msg::Hello { proto } => {
+                return Err(ex.transport(format!(
+                    "edge speaks protocol {proto}, cloud speaks {PROTO_VERSION}"
+                )));
+            }
+            m => return Err(ex.transport(format!("expected hello, got {}", m.name()))),
+        }
+        if init_now {
+            ex.send_init(0, &[], &[])?;
+        }
+        Ok(ex)
+    }
+
+    fn transport(&self, message: String) -> CfelError {
+        CfelError::Transport {
+            cluster: self.owned.first().copied(),
+            message,
+        }
+    }
+
+    /// Map connection-level failures to `Transport`; leave everything
+    /// else (notably edge-reported execution errors) untouched.
+    fn map_err(&self, e: CfelError) -> CfelError {
+        match e {
+            CfelError::Io(ioe) => self.transport(ioe.to_string()),
+            CfelError::Codec(m) => self.transport(m),
+            other => other,
+        }
+    }
+
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        wire::send(&mut self.conn, msg).map_err(|e| self.map_err(e))
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        wire::recv(&mut self.conn).map_err(|e| self.map_err(e))
+    }
+
+    /// Await a reply, unwrapping edge-reported errors.
+    fn expect(&mut self, want: &'static str) -> Result<Msg> {
+        match self.recv()? {
+            Msg::Error { message } => Err(CfelError::Runtime(format!("edge: {message}"))),
+            m if m.name() == want => Ok(m),
+            m => Err(self.transport(format!("expected {want}, got {}", m.name()))),
+        }
+    }
+
+    fn send_init(
+        &mut self,
+        rounds_applied: usize,
+        models: &[(usize, &[f32])],
+        clocks: &[(usize, f64)],
+    ) -> Result<()> {
+        let msg = Msg::Init {
+            config_json: self.config_json.clone(),
+            clusters: self.owned.clone(),
+            rounds_applied,
+            models: models.iter().map(|&(ci, m)| (ci, m.to_vec())).collect(),
+            clocks: clocks.to_vec(),
+        };
+        self.send(&msg)?;
+        self.expect("init-ok").map(|_| ())
+    }
+}
+
+impl ClusterExecutor for RemoteExecutor {
+    fn clusters(&self) -> &[usize] {
+        &self.owned
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        self.send(&Msg::BeginRound { round })?;
+        self.expect("round-begun").map(|_| ())
+    }
+
+    fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()> {
+        // Fire the work order without awaiting: the driver issues every
+        // edge's order first, so the edges train concurrently.
+        self.send(&Msg::RunPhase {
+            phase,
+            epochs,
+            channel,
+        })?;
+        self.inflight += 1;
+        Ok(())
+    }
+
+    fn finish_phase(&mut self) -> Result<Vec<ClusterPhase>> {
+        // Decrement up front: on success (or an edge-reported error) a
+        // frame was consumed; on a transport error this executor is dead
+        // and gets replaced by one with a fresh count.
+        self.inflight = self.inflight.saturating_sub(1);
+        match self.expect("phase-done")? {
+            Msg::PhaseDone { phases } => Ok(phases),
+            _ => unreachable!("expect() returned a non-phase-done message"),
+        }
+    }
+
+    fn set_state(&mut self, models: &[(usize, &[f32])], clocks: &[(usize, f64)]) -> Result<()> {
+        let msg = Msg::SetState {
+            models: models.iter().map(|&(ci, m)| (ci, m.to_vec())).collect(),
+            clocks: clocks.to_vec(),
+        };
+        self.send(&msg)?;
+        self.expect("state-set").map(|_| ())
+    }
+
+    fn reinit(
+        &mut self,
+        rounds_applied: usize,
+        models: &[(usize, &[f32])],
+        clocks: &[(usize, f64)],
+    ) -> Result<()> {
+        while self.inflight > 0 {
+            let _ = self.recv()?;
+            self.inflight -= 1;
+        }
+        self.send_init(rounds_applied, models, clocks)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // Best effort: the run is over either way.
+        if self.send(&Msg::Shutdown).is_ok() {
+            let _ = self.recv();
+        }
+        Ok(())
+    }
+}
+
+/// Knobs for [`run_cloud`].
+pub struct CloudOpts {
+    /// Bind address (`host:port`, port 0 for ephemeral, or `unix:/path`).
+    pub listen: String,
+    /// Number of edge processes to accept; clusters are partitioned over
+    /// them contiguously ([`partition_clusters`]).
+    pub edges: usize,
+    /// Per-read timeout on every edge connection; an edge that goes
+    /// silent longer than this surfaces `CfelError::Transport` instead
+    /// of hanging the round. `0` disables the timeout.
+    pub read_timeout_s: f64,
+    /// Seconds to wait for each initial (and each replacement) edge.
+    pub accept_timeout_s: f64,
+    /// Allow a failed round to be retried with a reconnecting edge.
+    pub recover: bool,
+    /// Transport failures tolerated when `recover` is set.
+    pub max_retries: usize,
+    pub verbose: bool,
+}
+
+impl Default for CloudOpts {
+    fn default() -> CloudOpts {
+        CloudOpts {
+            listen: "127.0.0.1:0".into(),
+            edges: 1,
+            read_timeout_s: 60.0,
+            accept_timeout_s: 60.0,
+            recover: false,
+            max_retries: 1,
+            verbose: false,
+        }
+    }
+}
+
+fn opt_timeout(s: f64) -> Option<Duration> {
+    (s > 0.0).then(|| Duration::from_secs_f64(s))
+}
+
+/// Run the full experiment as the cloud process: bind, announce the
+/// resolved address on stdout (`[cfel-cloud] listening on <addr>` — the
+/// line test harnesses parse for ephemeral ports), accept and handshake
+/// `opts.edges` edges (accept order = cluster-range order), then drive
+/// the distributed interpreter to completion.
+pub fn run_cloud(cfg: &ExperimentConfig, opts: &CloudOpts) -> Result<History> {
+    cfg.validate()?;
+    let config_json = cfg.to_json().to_string();
+    let listener = Listener::bind(&opts.listen)?;
+    println!("[cfel-cloud] listening on {}", listener.local_desc());
+    let parts = partition_clusters(cfg.n_clusters, opts.edges);
+    let read_timeout = opt_timeout(opts.read_timeout_s);
+    let accept_timeout = opt_timeout(opts.accept_timeout_s).unwrap_or(Duration::from_secs(3600));
+
+    let mut executors: Vec<Box<dyn ClusterExecutor>> = Vec::with_capacity(opts.edges);
+    for (slot, part) in parts.iter().enumerate() {
+        let conn = listener.accept_deadline(accept_timeout)?;
+        if opts.verbose {
+            eprintln!("[cfel-cloud] edge {slot} connected, owns clusters {part:?}");
+        }
+        let ex = RemoteExecutor::accept_handshake(
+            conn,
+            part.clone(),
+            config_json.clone(),
+            read_timeout,
+            true,
+        )?;
+        executors.push(Box::new(ex));
+    }
+
+    let mut runner = DistRunner::new(cfg, executors)?;
+    if opts.recover {
+        let parts = parts.clone();
+        runner = runner.with_recovery(
+            Box::new(move |slot| {
+                let conn = listener.accept_deadline(accept_timeout)?;
+                let ex = RemoteExecutor::accept_handshake(
+                    conn,
+                    parts[slot].clone(),
+                    config_json.clone(),
+                    read_timeout,
+                    // The driver reinitializes every executor after
+                    // recovery; don't build the edge's world twice.
+                    false,
+                )?;
+                Ok(Box::new(ex) as Box<dyn ClusterExecutor>)
+            }),
+            opts.max_retries,
+        );
+    }
+    runner.verbose = opts.verbose;
+    runner.run()
+}

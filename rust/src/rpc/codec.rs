@@ -1,0 +1,388 @@
+//! Length-prefixed, versioned binary framing plus the primitive
+//! encoders/decoders the wire messages are built from.
+//!
+//! A frame is `b"CFRP" | version:u16 | kind:u16 | len:u32 | payload`
+//! (all integers little-endian). Floats travel as raw IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`), so NaN payloads, negative zero and
+//! subnormals survive the wire exactly — the equivalence suite compares
+//! histories bit for bit, so the codec must never canonicalize.
+//! Malformed input (bad magic, wrong version, truncated or oversized
+//! frames, trailing payload bytes, lengths that exceed the buffer)
+//! returns [`CfelError::Codec`]; nothing in this module panics on
+//! untrusted bytes.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::error::{CfelError, Result};
+
+/// Frame preamble, first bytes on every frame.
+pub const MAGIC: [u8; 4] = *b"CFRP";
+/// Protocol version; bumped on any wire-format change.
+pub const PROTO_VERSION: u16 = 1;
+/// Upper bound on a frame payload: 256 MiB holds a 64M-parameter f32
+/// model, far above anything the MLP zoo here ships per cluster.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Frame header size on the wire: magic + version + kind + len.
+const HEADER_LEN: usize = 12;
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, kind: u16, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(CfelError::Codec(format!(
+            "refusing to send {}-byte frame (cap {MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    let mut head = [0u8; HEADER_LEN];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4..6].copy_from_slice(&PROTO_VERSION.to_le_bytes());
+    head[6..8].copy_from_slice(&kind.to_le_bytes());
+    head[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF *at a frame boundary*
+/// (the peer closed the connection between messages). EOF inside a
+/// frame is a [`CfelError::Codec`] truncation error.
+pub fn read_frame_opt<R: Read>(r: &mut R) -> Result<Option<(u16, Vec<u8>)>> {
+    let mut head = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(CfelError::Codec(format!(
+                    "truncated frame header: got {got} of {HEADER_LEN} bytes"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(CfelError::Io(e)),
+        }
+    }
+    if head[..4] != MAGIC {
+        return Err(CfelError::Codec(format!(
+            "bad frame magic {:02x?} (expected {:02x?})",
+            &head[..4],
+            MAGIC
+        )));
+    }
+    let version = u16::from_le_bytes([head[4], head[5]]);
+    if version != PROTO_VERSION {
+        return Err(CfelError::Codec(format!(
+            "protocol version {version} (this build speaks {PROTO_VERSION})"
+        )));
+    }
+    let kind = u16::from_le_bytes([head[6], head[7]]);
+    let len = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize;
+    if len > MAX_FRAME {
+        return Err(CfelError::Codec(format!(
+            "frame length {len} exceeds cap {MAX_FRAME}"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            return Err(CfelError::Codec(format!(
+                "truncated frame payload: wanted {len} bytes"
+            )));
+        }
+        return Err(CfelError::Io(e));
+    }
+    Ok(Some((kind, payload)))
+}
+
+/// Read one frame, treating EOF at a frame boundary as an error too
+/// (the caller expected an answer).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>)> {
+    read_frame_opt(r)?
+        .ok_or_else(|| CfelError::Codec("connection closed while awaiting a frame".into()))
+}
+
+/// Append-only payload builder. All integers little-endian; `usize`
+/// widens to `u64`; floats are raw bit patterns.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> WireWriter {
+        WireWriter::default()
+    }
+
+    pub fn into_payload(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_f64(v);
+        }
+    }
+
+    pub fn put_usizes(&mut self, vs: &[usize]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_usize(v);
+        }
+    }
+}
+
+/// Checked cursor over a frame payload. Every read validates the
+/// remaining length first; length prefixes are checked against the
+/// bytes actually present *before* any allocation, so an adversarial
+/// length cannot trigger an OOM.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(CfelError::Codec(format!(
+                "payload underrun: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(CfelError::Codec(format!("bool byte {b} is neither 0 nor 1"))),
+        }
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        usize::try_from(self.get_u64()?)
+            .map_err(|_| CfelError::Codec("usize field overflows this platform".into()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    /// Length prefix for a sequence of `elem_size`-byte elements,
+    /// validated against the bytes actually remaining.
+    pub fn get_len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.get_usize()?;
+        let need = n
+            .checked_mul(elem_size.max(1))
+            .ok_or_else(|| CfelError::Codec(format!("length {n} overflows")))?;
+        if need > self.remaining() {
+            return Err(CfelError::Codec(format!(
+                "length prefix {n} needs {need} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| CfelError::Codec(format!("invalid UTF-8 string: {e}")))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+
+    /// A decode must consume the payload exactly; trailing bytes mean
+    /// the two sides disagree about the message layout.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(CfelError::Codec(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 7, b"hello").unwrap();
+        let mut r = &buf[..];
+        let (kind, payload) = read_frame(&mut r).unwrap();
+        assert_eq!(kind, 7);
+        assert_eq!(payload, b"hello");
+        assert!(read_frame_opt(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_is_typed_not_a_panic() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, &[9u8; 32]).unwrap();
+        for cut in 1..buf.len() {
+            let mut r = &buf[..cut];
+            let err = read_frame(&mut r).unwrap_err();
+            assert!(matches!(err, CfelError::Codec(_)), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_length_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"x").unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'Z';
+        assert!(matches!(read_frame(&mut &bad[..]).unwrap_err(), CfelError::Codec(_)));
+        let mut bad = buf.clone();
+        bad[4] = 0xFF;
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("version"));
+        let mut bad = buf;
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("exceeds cap"));
+    }
+
+    #[test]
+    fn reader_validates_lengths_before_allocating() {
+        let mut w = WireWriter::new();
+        w.put_usize(usize::MAX); // length prefix far beyond the buffer
+        let payload = w.into_payload();
+        let mut r = WireReader::new(&payload);
+        assert!(r.get_f32s().is_err());
+    }
+
+    #[test]
+    fn exotic_floats_roundtrip_bitwise() {
+        let vals = [
+            f64::NAN,
+            f64::from_bits(0x7FF8_DEAD_BEEF_0001),
+            -0.0,
+            f64::from_bits(1), // smallest subnormal
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ];
+        let mut w = WireWriter::new();
+        w.put_f64s(&vals);
+        let payload = w.into_payload();
+        let mut r = WireReader::new(&payload);
+        let back = r.get_f64s().unwrap();
+        r.finish().unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Edge side of the multi-process runtime: connect to the cloud, build
+//! the world from the shipped config, and serve work orders until
+//! shutdown.
+//!
+//! The edge holds a full [`Coordinator`] rebuilt from the config JSON
+//! (every part of the world is a deterministic function of the config,
+//! which round-trips f64-exactly), but only ever executes edge phases
+//! for the clusters the cloud assigned it. Round boundaries (faults,
+//! timeline events) are replayed locally on `BeginRound` — worlds never
+//! drift because both sides compute them from the same data. Semi-sync
+//! pending reports live here, inside the coordinator, across phases.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::{install_state, rebuild_world};
+use crate::coordinator::Coordinator;
+use crate::error::{CfelError, Result};
+use crate::rpc::codec::PROTO_VERSION;
+use crate::rpc::wire::{self, Msg};
+use crate::rpc::Conn;
+use crate::util::json::Json;
+
+/// Knobs for [`run_edge`].
+pub struct EdgeOpts {
+    /// Cloud address (`host:port` or `unix:/path`).
+    pub connect: String,
+    /// Seconds to keep retrying the connect — edges usually race the
+    /// cloud's bind at startup.
+    pub connect_retry_s: f64,
+    /// Test hook: serve this many `RunPhase` orders, then exit the
+    /// process without replying — a deterministic mid-round death for
+    /// the fault-injection suite.
+    pub die_after_phases: Option<usize>,
+    pub verbose: bool,
+}
+
+impl Default for EdgeOpts {
+    fn default() -> EdgeOpts {
+        EdgeOpts {
+            connect: "127.0.0.1:0".into(),
+            connect_retry_s: 10.0,
+            die_after_phases: None,
+            verbose: false,
+        }
+    }
+}
+
+/// The edge's world: the coordinator plus the clusters the cloud
+/// assigned to this process.
+struct EdgeWorld {
+    coord: Coordinator,
+    owned: Vec<usize>,
+}
+
+fn build_world(
+    config_json: &str,
+    rounds_applied: usize,
+    models: &[(usize, Vec<f32>)],
+    clocks: &[(usize, f64)],
+) -> Result<Coordinator> {
+    let j = Json::parse(config_json)?;
+    let cfg = ExperimentConfig::from_json(&j)?;
+    let mut coord = rebuild_world(&cfg, rounds_applied)?;
+    let model_refs: Vec<(usize, &[f32])> =
+        models.iter().map(|(ci, m)| (*ci, m.as_slice())).collect();
+    install_state(&mut coord, &model_refs, clocks)?;
+    Ok(coord)
+}
+
+fn handle(msg: Msg, world: &mut Option<EdgeWorld>, verbose: bool) -> Result<Msg> {
+    match msg {
+        Msg::Init {
+            config_json,
+            clusters,
+            rounds_applied,
+            models,
+            clocks,
+        } => {
+            if verbose {
+                eprintln!(
+                    "[cfel-edge] init: clusters {clusters:?}, {rounds_applied} boundaries applied"
+                );
+            }
+            let coord = build_world(&config_json, rounds_applied, &models, &clocks)?;
+            *world = Some(EdgeWorld {
+                coord,
+                owned: clusters,
+            });
+            Ok(Msg::InitOk)
+        }
+        Msg::BeginRound { round } => {
+            let w = need_world(world)?;
+            w.coord.apply_fault(round)?;
+            w.coord.apply_timeline(round)?;
+            Ok(Msg::RoundBegun)
+        }
+        Msg::RunPhase {
+            phase,
+            epochs,
+            channel,
+        } => {
+            let w = need_world(world)?;
+            let owned = w.owned.clone();
+            let phases = w.coord.edge_phase_on(&owned, epochs, phase, channel, true)?;
+            Ok(Msg::PhaseDone { phases })
+        }
+        Msg::SetState { models, clocks } => {
+            let w = need_world(world)?;
+            let model_refs: Vec<(usize, &[f32])> =
+                models.iter().map(|(ci, m)| (*ci, m.as_slice())).collect();
+            install_state(&mut w.coord, &model_refs, &clocks)?;
+            Ok(Msg::StateSet)
+        }
+        m => Err(CfelError::Runtime(format!(
+            "edge received unexpected message {}",
+            m.name()
+        ))),
+    }
+}
+
+fn need_world(world: &mut Option<EdgeWorld>) -> Result<&mut EdgeWorld> {
+    world
+        .as_mut()
+        .ok_or_else(|| CfelError::Runtime("work order before init".into()))
+}
+
+/// Serve one cloud connection to completion. Returns `Ok(())` on an
+/// orderly shutdown (or the cloud closing the connection between
+/// messages); execution errors are reported to the cloud as
+/// [`Msg::Error`] and then returned.
+pub fn run_edge(opts: &EdgeOpts) -> Result<()> {
+    let mut conn = Conn::connect_retry(&opts.connect, opts.connect_retry_s)?;
+    wire::send(
+        &mut conn,
+        &Msg::Hello {
+            proto: PROTO_VERSION,
+        },
+    )?;
+    let mut world: Option<EdgeWorld> = None;
+    let mut phases_served = 0usize;
+    loop {
+        let Some(msg) = wire::recv_opt(&mut conn)? else {
+            // Cloud hung up between messages: our work is done.
+            return Ok(());
+        };
+        match msg {
+            Msg::Shutdown => {
+                let _ = wire::send(&mut conn, &Msg::Bye);
+                return Ok(());
+            }
+            Msg::RunPhase { .. } if opts.die_after_phases == Some(phases_served) => {
+                // Deterministic mid-round crash: the work order is in,
+                // the reply never comes.
+                if opts.verbose {
+                    eprintln!("[cfel-edge] dying after {phases_served} phases (test hook)");
+                }
+                std::process::exit(17);
+            }
+            msg => {
+                if matches!(msg, Msg::RunPhase { .. }) {
+                    phases_served += 1;
+                }
+                match handle(msg, &mut world, opts.verbose) {
+                    Ok(reply) => wire::send(&mut conn, &reply)?,
+                    Err(e) => {
+                        let _ = wire::send(
+                            &mut conn,
+                            &Msg::Error {
+                                message: e.to_string(),
+                            },
+                        );
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! The multi-process runtime: a length-prefixed binary protocol
+//! ([`codec`], [`wire`]) over TCP or Unix sockets, the cloud-side driver
+//! ([`cloud`]) and the edge-side serve loop ([`edge`]).
+//!
+//! The split follows the paper's deployment: `cfel-cloud` interprets the
+//! plan on a full mirror world and ships `EdgePhase` work orders;
+//! `cfel-edge` processes own disjoint cluster subsets and run
+//! training/aggregation locally; gossip and cloud aggregation execute on
+//! the mirror (the cloud is the rendezvous) and the results are pushed
+//! back. Virtual clocks stay authoritative — wall-clock transport time
+//! never enters the history, which is pinned bit-identical to the
+//! in-process interpreter by `rust/tests/distributed_equivalence.rs`.
+//!
+//! Addresses: `host:port` for TCP, `unix:/path/to.sock` for Unix domain
+//! sockets.
+
+pub mod cloud;
+pub mod codec;
+pub mod edge;
+pub mod wire;
+
+pub use cloud::{run_cloud, CloudOpts, RemoteExecutor};
+pub use edge::{run_edge, EdgeOpts};
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::{Duration, Instant};
+
+use crate::error::{CfelError, Result};
+
+/// Prefix selecting a Unix-domain socket address.
+pub const UNIX_PREFIX: &str = "unix:";
+
+/// One established cloud⇄edge connection.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Connect to `addr`, retrying for up to `retry_s` seconds — the
+    /// edge processes race the cloud's bind during startup.
+    pub fn connect_retry(addr: &str, retry_s: f64) -> Result<Conn> {
+        let deadline = Instant::now() + Duration::from_secs_f64(retry_s.max(0.0));
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(CfelError::Transport {
+                            cluster: None,
+                            message: format!("connect {addr}: {e}"),
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    fn connect(addr: &str) -> io::Result<Conn> {
+        if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
+            #[cfg(unix)]
+            {
+                return Ok(Conn::Unix(UnixStream::connect(path)?));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "unix sockets are unavailable on this platform",
+                ));
+            }
+        }
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Ok(Conn::Tcp(s))
+    }
+
+    /// Bound on how long a single read blocks; `None` blocks forever.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A listening socket accepting edge connections.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, String),
+}
+
+impl Listener {
+    /// Bind `addr` (`host:port`, port 0 for an ephemeral port, or
+    /// `unix:/path`). A stale Unix socket file is removed first.
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                return Ok(Listener::Unix(UnixListener::bind(path)?, path.to_string()));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(CfelError::Config(
+                    "unix sockets are unavailable on this platform".into(),
+                ));
+            }
+        }
+        Ok(Listener::Tcp(TcpListener::bind(addr)?))
+    }
+
+    /// The bound address in connectable form (resolves port 0).
+    pub fn local_desc(&self) -> String {
+        match self {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".into()),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => format!("{UNIX_PREFIX}{path}"),
+        }
+    }
+
+    /// Accept one connection, waiting at most `timeout`.
+    pub fn accept_deadline(&self, timeout: Duration) -> Result<Conn> {
+        let deadline = Instant::now() + timeout;
+        self.set_nonblocking(true)?;
+        let out = loop {
+            match self.try_accept() {
+                Ok(c) => break Ok(c),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break Err(CfelError::Transport {
+                            cluster: None,
+                            message: format!(
+                                "no edge connected within {:.1}s",
+                                timeout.as_secs_f64()
+                            ),
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => break Err(CfelError::Io(e)),
+            }
+        };
+        let _ = self.set_nonblocking(false);
+        out
+    }
+
+    fn set_nonblocking(&self, v: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(v),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(v),
+        }
+    }
+
+    fn try_accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}

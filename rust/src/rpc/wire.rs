@@ -1,0 +1,396 @@
+//! The cloud ⇄ edge message vocabulary and its binary layout.
+//!
+//! One frame kind per message. Payload layouts are hand-rolled over
+//! [`WireWriter`]/[`WireReader`]: little-endian integers, `usize` as
+//! `u64`, floats as raw bit patterns. Decoding validates every length
+//! prefix against the bytes present, checks SoA columns agree, and
+//! requires the payload be consumed exactly — malformed input returns
+//! [`CfelError::Codec`], never a panic.
+
+use std::io::{Read, Write};
+
+use crate::aggregation::policy::{CloseReason, ReportVerdict};
+use crate::coordinator::ClusterPhase;
+use crate::error::{CfelError, Result};
+use crate::netsim::{DeviceTimings, PhaseTiming, UploadChannel};
+use crate::rpc::codec::{read_frame, read_frame_opt, write_frame, WireReader, WireWriter};
+
+/// Everything that can travel between `cfel-cloud` and `cfel-edge`.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Edge → cloud, first message on a fresh connection.
+    Hello { proto: u16 },
+    /// Cloud → edge: build your world. The config JSON round-trips every
+    /// finite f64 exactly, so the edge reconstructs the *identical*
+    /// world from it; `rounds_applied` boundaries are replayed before
+    /// `models`/`clocks` (empty on a first init) are installed.
+    Init {
+        config_json: String,
+        clusters: Vec<usize>,
+        rounds_applied: usize,
+        models: Vec<(usize, Vec<f32>)>,
+        clocks: Vec<(usize, f64)>,
+    },
+    InitOk,
+    /// Cloud → edge: apply the round boundary (fault + timeline).
+    BeginRound { round: usize },
+    RoundBegun,
+    /// Cloud → edge: run edge phase `phase` on your owned clusters.
+    RunPhase {
+        phase: u64,
+        epochs: usize,
+        channel: UploadChannel,
+    },
+    /// Edge → cloud: the phase results, owned clusters ascending.
+    PhaseDone { phases: Vec<ClusterPhase> },
+    /// Cloud → edge: install models/clocks rewritten cloud-side
+    /// (gossip, cloud aggregation).
+    SetState {
+        models: Vec<(usize, Vec<f32>)>,
+        clocks: Vec<(usize, f64)>,
+    },
+    StateSet,
+    Shutdown,
+    Bye,
+    /// Edge → cloud: the edge hit an execution error (the connection
+    /// stays up; transport is fine, the *work* failed).
+    Error { message: String },
+}
+
+const K_HELLO: u16 = 1;
+const K_INIT: u16 = 2;
+const K_INIT_OK: u16 = 3;
+const K_BEGIN_ROUND: u16 = 4;
+const K_ROUND_BEGUN: u16 = 5;
+const K_RUN_PHASE: u16 = 6;
+const K_PHASE_DONE: u16 = 7;
+const K_SET_STATE: u16 = 8;
+const K_STATE_SET: u16 = 9;
+const K_SHUTDOWN: u16 = 10;
+const K_BYE: u16 = 11;
+const K_ERROR: u16 = 12;
+
+fn put_channel(w: &mut WireWriter, c: UploadChannel) {
+    w.put_u8(match c {
+        UploadChannel::DeviceEdge => 0,
+        UploadChannel::DeviceCloud => 1,
+    });
+}
+
+fn get_channel(r: &mut WireReader) -> Result<UploadChannel> {
+    match r.get_u8()? {
+        0 => Ok(UploadChannel::DeviceEdge),
+        1 => Ok(UploadChannel::DeviceCloud),
+        t => Err(CfelError::Codec(format!("unknown upload channel tag {t}"))),
+    }
+}
+
+fn put_verdict(w: &mut WireWriter, v: ReportVerdict) {
+    w.put_u8(match v {
+        ReportVerdict::OnTime => 0,
+        ReportVerdict::Late => 1,
+        ReportVerdict::Dropped => 2,
+    });
+}
+
+fn get_verdict(r: &mut WireReader) -> Result<ReportVerdict> {
+    match r.get_u8()? {
+        0 => Ok(ReportVerdict::OnTime),
+        1 => Ok(ReportVerdict::Late),
+        2 => Ok(ReportVerdict::Dropped),
+        t => Err(CfelError::Codec(format!("unknown report verdict tag {t}"))),
+    }
+}
+
+fn put_timing(w: &mut WireWriter, pt: &PhaseTiming) {
+    w.put_f64(pt.duration_s);
+    w.put_f64(pt.compute_s);
+    w.put_f64(pt.upload_s);
+    w.put_usizes(&pt.devices.device);
+    w.put_f64s(&pt.devices.compute_s);
+    w.put_f64s(&pt.devices.upload_s);
+    w.put_f64s(&pt.devices.finish_s);
+    w.put_usize(pt.devices.verdict.len());
+    for &v in &pt.devices.verdict {
+        put_verdict(w, v);
+    }
+    w.put_usize(pt.events);
+    w.put_u8(pt.close_reason.index() as u8);
+}
+
+fn get_timing(r: &mut WireReader) -> Result<PhaseTiming> {
+    let duration_s = r.get_f64()?;
+    let compute_s = r.get_f64()?;
+    let upload_s = r.get_f64()?;
+    let device = r.get_usizes()?;
+    let dev_compute = r.get_f64s()?;
+    let dev_upload = r.get_f64s()?;
+    let finish = r.get_f64s()?;
+    let nv = r.get_len(1)?;
+    let mut verdict = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        verdict.push(get_verdict(r)?);
+    }
+    if [dev_compute.len(), dev_upload.len(), finish.len(), verdict.len()]
+        .iter()
+        .any(|&l| l != device.len())
+    {
+        return Err(CfelError::Codec(
+            "device-timing columns disagree on length".into(),
+        ));
+    }
+    let events = r.get_usize()?;
+    let reason = r.get_u8()? as usize;
+    let close_reason = *CloseReason::ALL
+        .get(reason)
+        .ok_or_else(|| CfelError::Codec(format!("unknown close reason index {reason}")))?;
+    Ok(PhaseTiming {
+        duration_s,
+        compute_s,
+        upload_s,
+        devices: DeviceTimings {
+            device,
+            compute_s: dev_compute,
+            upload_s: dev_upload,
+            finish_s: finish,
+            verdict,
+        },
+        events,
+        close_reason,
+    })
+}
+
+fn put_phase(w: &mut WireWriter, p: &ClusterPhase) {
+    w.put_usize(p.cluster);
+    w.put_usize(p.reports.len());
+    for &(dev, steps, loss) in &p.reports {
+        w.put_usize(dev);
+        w.put_usize(steps);
+        w.put_f64(loss);
+    }
+    w.put_f32s(&p.model);
+    w.put_f64(p.clock_s);
+    w.put_bool(p.timing.is_some());
+    if let Some(pt) = &p.timing {
+        put_timing(w, pt);
+    }
+    w.put_usize(p.stale_merged);
+    w.put_usize(p.pending_after);
+}
+
+fn get_phase(r: &mut WireReader) -> Result<ClusterPhase> {
+    let cluster = r.get_usize()?;
+    let nr = r.get_len(24)?;
+    let mut reports = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        let dev = r.get_usize()?;
+        let steps = r.get_usize()?;
+        let loss = r.get_f64()?;
+        reports.push((dev, steps, loss));
+    }
+    let model = r.get_f32s()?;
+    let clock_s = r.get_f64()?;
+    let timing = if r.get_bool()? {
+        Some(get_timing(r)?)
+    } else {
+        None
+    };
+    let stale_merged = r.get_usize()?;
+    let pending_after = r.get_usize()?;
+    Ok(ClusterPhase {
+        cluster,
+        reports,
+        model,
+        clock_s,
+        timing,
+        stale_merged,
+        pending_after,
+    })
+}
+
+#[allow(clippy::type_complexity)]
+fn put_state(w: &mut WireWriter, models: &[(usize, Vec<f32>)], clocks: &[(usize, f64)]) {
+    w.put_usize(models.len());
+    for (ci, m) in models {
+        w.put_usize(*ci);
+        w.put_f32s(m);
+    }
+    w.put_usize(clocks.len());
+    for &(ci, t) in clocks {
+        w.put_usize(ci);
+        w.put_f64(t);
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn get_state(r: &mut WireReader) -> Result<(Vec<(usize, Vec<f32>)>, Vec<(usize, f64)>)> {
+    let nm = r.get_len(12)?;
+    let mut models = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        let ci = r.get_usize()?;
+        let m = r.get_f32s()?;
+        models.push((ci, m));
+    }
+    let nc = r.get_len(16)?;
+    let mut clocks = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        let ci = r.get_usize()?;
+        let t = r.get_f64()?;
+        clocks.push((ci, t));
+    }
+    Ok((models, clocks))
+}
+
+impl Msg {
+    /// Short name for log and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Init { .. } => "init",
+            Msg::InitOk => "init-ok",
+            Msg::BeginRound { .. } => "begin-round",
+            Msg::RoundBegun => "round-begun",
+            Msg::RunPhase { .. } => "run-phase",
+            Msg::PhaseDone { .. } => "phase-done",
+            Msg::SetState { .. } => "set-state",
+            Msg::StateSet => "state-set",
+            Msg::Shutdown => "shutdown",
+            Msg::Bye => "bye",
+            Msg::Error { .. } => "error",
+        }
+    }
+
+    /// Frame kind + payload.
+    pub fn encode(&self) -> (u16, Vec<u8>) {
+        let mut w = WireWriter::new();
+        let kind = match self {
+            Msg::Hello { proto } => {
+                w.put_u16(*proto);
+                K_HELLO
+            }
+            Msg::Init {
+                config_json,
+                clusters,
+                rounds_applied,
+                models,
+                clocks,
+            } => {
+                w.put_str(config_json);
+                w.put_usizes(clusters);
+                w.put_usize(*rounds_applied);
+                put_state(&mut w, models, clocks);
+                K_INIT
+            }
+            Msg::InitOk => K_INIT_OK,
+            Msg::BeginRound { round } => {
+                w.put_usize(*round);
+                K_BEGIN_ROUND
+            }
+            Msg::RoundBegun => K_ROUND_BEGUN,
+            Msg::RunPhase {
+                phase,
+                epochs,
+                channel,
+            } => {
+                w.put_u64(*phase);
+                w.put_usize(*epochs);
+                put_channel(&mut w, *channel);
+                K_RUN_PHASE
+            }
+            Msg::PhaseDone { phases } => {
+                w.put_usize(phases.len());
+                for p in phases {
+                    put_phase(&mut w, p);
+                }
+                K_PHASE_DONE
+            }
+            Msg::SetState { models, clocks } => {
+                put_state(&mut w, models, clocks);
+                K_SET_STATE
+            }
+            Msg::StateSet => K_STATE_SET,
+            Msg::Shutdown => K_SHUTDOWN,
+            Msg::Bye => K_BYE,
+            Msg::Error { message } => {
+                w.put_str(message);
+                K_ERROR
+            }
+        };
+        (kind, w.into_payload())
+    }
+
+    /// Decode one frame; the payload must be consumed exactly.
+    pub fn decode(kind: u16, payload: &[u8]) -> Result<Msg> {
+        let mut r = WireReader::new(payload);
+        let msg = match kind {
+            K_HELLO => Msg::Hello {
+                proto: r.get_u16()?,
+            },
+            K_INIT => {
+                let config_json = r.get_str()?;
+                let clusters = r.get_usizes()?;
+                let rounds_applied = r.get_usize()?;
+                let (models, clocks) = get_state(&mut r)?;
+                Msg::Init {
+                    config_json,
+                    clusters,
+                    rounds_applied,
+                    models,
+                    clocks,
+                }
+            }
+            K_INIT_OK => Msg::InitOk,
+            K_BEGIN_ROUND => Msg::BeginRound {
+                round: r.get_usize()?,
+            },
+            K_ROUND_BEGUN => Msg::RoundBegun,
+            K_RUN_PHASE => Msg::RunPhase {
+                phase: r.get_u64()?,
+                epochs: r.get_usize()?,
+                channel: get_channel(&mut r)?,
+            },
+            K_PHASE_DONE => {
+                let n = r.get_len(1)?;
+                let mut phases = Vec::with_capacity(n);
+                for _ in 0..n {
+                    phases.push(get_phase(&mut r)?);
+                }
+                Msg::PhaseDone { phases }
+            }
+            K_SET_STATE => {
+                let (models, clocks) = get_state(&mut r)?;
+                Msg::SetState { models, clocks }
+            }
+            K_STATE_SET => Msg::StateSet,
+            K_SHUTDOWN => Msg::Shutdown,
+            K_BYE => Msg::Bye,
+            K_ERROR => Msg::Error {
+                message: r.get_str()?,
+            },
+            k => return Err(CfelError::Codec(format!("unknown frame kind {k}"))),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Encode and send one message as a frame.
+pub fn send<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let (kind, payload) = msg.encode();
+    write_frame(w, kind, &payload)
+}
+
+/// Receive and decode one message; errors if the peer closed cleanly.
+pub fn recv<R: Read>(r: &mut R) -> Result<Msg> {
+    let (kind, payload) = read_frame(r)?;
+    Msg::decode(kind, &payload)
+}
+
+/// Receive one message; `Ok(None)` when the peer closed the connection
+/// cleanly between messages.
+pub fn recv_opt<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    match read_frame_opt(r)? {
+        Some((kind, payload)) => Ok(Some(Msg::decode(kind, &payload)?)),
+        None => Ok(None),
+    }
+}

@@ -1,0 +1,258 @@
+//! Cross-process equivalence suite — the pin for the multi-process
+//! runtime.
+//!
+//! The distributed interpreter (cloud + N edges) must produce the same
+//! round history as the in-process interpreter, *bit for bit*, on all
+//! four canned plans under both latency modes:
+//!
+//! * in-process: [`DistRunner`] over [`LocalExecutor`]s — the driver and
+//!   the executor seam without sockets — under `CFEL_THREADS` 1 and 4;
+//! * across real OS processes: one `cfel-cloud` + two `cfel-edge`
+//!   binaries on localhost TCP (and once over a Unix socket), comparing
+//!   the wall-clock-free history digest and the CSV rows.
+//!
+//! Wall-clock time is the one nondeterministic column; every comparison
+//! excludes it (`history_digest` skips it, CSVs have it zeroed).
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::executor::partition_clusters;
+use cfel::coordinator::{ClusterExecutor, Coordinator, DistRunner, LocalExecutor};
+use cfel::metrics::{history_digest, CsvWriter, History, ROUND_HEADER};
+
+/// `CFEL_THREADS` is process-global and the CSV helper reuses temp
+/// paths, so every test serializes on this lock.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn base_cfg(alg: AlgorithmKind, latency: LatencyMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = alg;
+    cfg.latency = latency;
+    cfg.rounds = 3;
+    cfg
+}
+
+fn run_reference(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_local_dist(cfg: &ExperimentConfig, n_executors: usize) -> History {
+    let mut executors: Vec<Box<dyn ClusterExecutor>> = Vec::new();
+    for part in partition_clusters(cfg.n_clusters, n_executors) {
+        executors.push(Box::new(LocalExecutor::new(cfg, part).unwrap()));
+    }
+    let mut runner = DistRunner::new(cfg, executors).unwrap();
+    runner.run().unwrap()
+}
+
+/// Render a history to CSV text with the wall-clock column zeroed.
+fn csv_rows(series: &str, h: &History) -> String {
+    let path =
+        std::env::temp_dir().join(format!("cfel_dist_equiv_{}_{series}.csv", std::process::id()));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            let mut r = rec.clone();
+            r.wall_time_s = 0.0;
+            w.round_row(series, &r).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+/// Zero the wall_time_s column (index 3) of a CSV produced by a child
+/// process, so it compares against [`csv_rows`] output.
+fn zero_wall_column(csv: &str) -> String {
+    csv.lines()
+        .enumerate()
+        .map(|(i, line)| {
+            if i == 0 {
+                return line.to_string();
+            }
+            let mut fields: Vec<&str> = line.split(',').collect();
+            if fields.len() > 3 {
+                fields[3] = "0.000";
+            }
+            fields.join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n"
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label} r{r} tloss");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{label} r{r} compute");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{label} r{r} upload");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{label} r{r} on-time");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+    }
+}
+
+#[test]
+fn local_executor_driver_matches_the_interpreter_bit_for_bit() {
+    let _guard = env_guard();
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        for alg in AlgorithmKind::all() {
+            for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+                let cfg = base_cfg(alg, latency);
+                let label = format!("{}-{}-t{threads}", alg.name(), latency.name());
+                let h_ref = run_reference(&cfg);
+                // 2 executors is the canonical split; 1 and 4 (one per
+                // cluster) exercise the partition boundaries.
+                for n_ex in [1usize, 2, 4] {
+                    let h_dist = run_local_dist(&cfg, n_ex);
+                    let l = format!("{label}-x{n_ex}");
+                    assert_identical(&l, &h_ref, &h_dist);
+                    assert_eq!(
+                        history_digest(&h_ref),
+                        history_digest(&h_dist),
+                        "{l}: digest diverged"
+                    );
+                }
+                let h_dist = run_local_dist(&cfg, 2);
+                assert_eq!(
+                    csv_rows("oracle", &h_ref),
+                    csv_rows("oracle", &h_dist),
+                    "{label}: CSV rows diverged"
+                );
+            }
+        }
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+/// Spawn `cfel-cloud` (+2 `cfel-edge`s) on `listen`, run `cfg`, and
+/// return (digest hex, CSV text) from the child processes.
+fn run_socket_dist(cfg: &ExperimentConfig, listen: &str, cloud_threads: &str) -> (String, String) {
+    let tag = format!("{}_{}", std::process::id(), cfg.run_label().replace('@', "_"));
+    let cfg_path = std::env::temp_dir().join(format!("cfel_dist_cfg_{tag}.json"));
+    let csv_path = std::env::temp_dir().join(format!("cfel_dist_csv_{tag}.csv"));
+    std::fs::write(&cfg_path, cfg.to_json().to_string()).unwrap();
+
+    let mut cloud = Command::new(env!("CARGO_BIN_EXE_cfel-cloud"))
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--listen")
+        .arg(listen)
+        .arg("--edges")
+        .arg("2")
+        .arg("--csv")
+        .arg(&csv_path)
+        .arg("--digest")
+        .arg("--quiet")
+        .env("CFEL_THREADS", cloud_threads)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cfel-cloud");
+    let mut reader = BufReader::new(cloud.stdout.take().unwrap());
+
+    // The cloud announces its resolved address first — parse it so
+    // ephemeral ports (127.0.0.1:0) work.
+    let mut addr = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read cloud stdout");
+        assert!(n > 0, "cfel-cloud exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("[cfel-cloud] listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+
+    // Edges run at a fixed, different thread count: the history must not
+    // depend on any process's parallelism.
+    let edges: Vec<Child> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_cfel-edge"))
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--quiet")
+                .env("CFEL_THREADS", "2")
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn cfel-edge")
+        })
+        .collect();
+
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("drain cloud stdout");
+    let status = cloud.wait().expect("wait cfel-cloud");
+    assert!(status.success(), "cfel-cloud failed; stdout:\n{rest}");
+    for mut e in edges {
+        let st = e.wait().expect("wait cfel-edge");
+        assert!(st.success(), "cfel-edge failed");
+    }
+
+    let digest = rest
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("history_digest: "))
+        .unwrap_or_else(|| panic!("no digest in cloud output:\n{rest}"))
+        .to_string();
+    let csv = std::fs::read_to_string(&csv_path).expect("child CSV");
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_file(&csv_path).ok();
+    (digest, csv)
+}
+
+#[test]
+fn cloud_and_edge_processes_reproduce_the_run_over_tcp() {
+    let _guard = env_guard();
+    for alg in AlgorithmKind::all() {
+        for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+            let cfg = base_cfg(alg, latency);
+            std::env::set_var("CFEL_THREADS", "1");
+            let h_ref = run_reference(&cfg);
+            std::env::remove_var("CFEL_THREADS");
+            let want_digest = format!("{:016x}", history_digest(&h_ref));
+            let want_csv = csv_rows(&cfg.run_label(), &h_ref);
+            for cloud_threads in ["1", "4"] {
+                let label = format!("{}-{}-ct{cloud_threads}", alg.name(), latency.name());
+                let (digest, csv) = run_socket_dist(&cfg, "127.0.0.1:0", cloud_threads);
+                assert_eq!(digest, want_digest, "{label}: history digest diverged");
+                assert_eq!(zero_wall_column(&csv), want_csv, "{label}: CSV rows diverged");
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_sockets_carry_the_same_bits() {
+    let _guard = env_guard();
+    let cfg = base_cfg(AlgorithmKind::CeFedAvg, LatencyMode::EventDriven);
+    std::env::set_var("CFEL_THREADS", "1");
+    let h_ref = run_reference(&cfg);
+    std::env::remove_var("CFEL_THREADS");
+    let sock = std::env::temp_dir().join(format!("cfel_dist_{}.sock", std::process::id()));
+    let listen = format!("unix:{}", sock.display());
+    let (digest, csv) = run_socket_dist(&cfg, &listen, "4");
+    assert_eq!(digest, format!("{:016x}", history_digest(&h_ref)), "unix-socket digest");
+    assert_eq!(zero_wall_column(&csv), csv_rows(&cfg.run_label(), &h_ref), "unix-socket CSV");
+}

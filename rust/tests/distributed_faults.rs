@@ -1,0 +1,274 @@
+//! Fault injection for the multi-process runtime (satellite).
+//!
+//! * An edge killed mid-round surfaces a typed
+//!   `CfelError::Transport { cluster, .. }` at the cloud within the read
+//!   timeout — fail-fast, no hang, nonzero exit.
+//! * With `--recover`, a reconnecting edge rejoins at the round boundary
+//!   and the retried run finishes with the *same* history digest as an
+//!   uninterrupted in-process run: recovery must not leak into the
+//!   result.
+//! * The same retry logic, exercised in-process with a flaky executor,
+//!   pins the boundary-snapshot semantics bit for bit.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, ChildStderr, Command, Stdio};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use cfel::config::{ExperimentConfig, LatencyMode};
+use cfel::coordinator::executor::RecoverFn;
+use cfel::coordinator::{ClusterExecutor, ClusterPhase, Coordinator, DistRunner, LocalExecutor};
+use cfel::metrics::history_digest;
+use cfel::netsim::UploadChannel;
+use cfel::{CfelError, Result};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg_for_faults() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.rounds = 2;
+    cfg
+}
+
+struct CloudChild {
+    child: Child,
+    stdout: BufReader<std::process::ChildStdout>,
+    stderr: ChildStderr,
+    addr: String,
+}
+
+fn spawn_cloud(cfg: &ExperimentConfig, tag: &str, quiet: bool, extra: &[&str]) -> CloudChild {
+    let cfg_path =
+        std::env::temp_dir().join(format!("cfel_faults_{}_{tag}.json", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_json().to_string()).unwrap();
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_cfel-cloud"));
+    cmd.arg("--config")
+        .arg(&cfg_path)
+        .args(["--listen", "127.0.0.1:0", "--edges", "2", "--digest"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    if quiet {
+        cmd.arg("--quiet");
+    }
+    let mut child = cmd.spawn().expect("spawn cfel-cloud");
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let stderr = child.stderr.take().unwrap();
+    let mut addr = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = stdout.read_line(&mut line).expect("read cloud stdout");
+        assert!(n > 0, "cfel-cloud exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("[cfel-cloud] listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+    std::fs::remove_file(&cfg_path).ok();
+    CloudChild {
+        child,
+        stdout,
+        stderr,
+        addr,
+    }
+}
+
+fn spawn_edge(addr: &str, extra: &[&str]) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_cfel-edge"))
+        .args(["--connect", addr, "--retry", "30", "--quiet"])
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cfel-edge")
+}
+
+/// Read lines until one contains `needle` (the cloud's stderr announces
+/// each accepted edge, which lets a test pin the slot assignment).
+fn wait_for_line<R: BufRead>(reader: &mut R, needle: &str, what: &str) {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read cloud stderr");
+        assert!(n > 0, "cloud exited while waiting for {what}");
+        if line.contains(needle) {
+            return;
+        }
+    }
+}
+
+#[test]
+fn killed_edge_fails_fast_with_a_typed_transport_error() {
+    let _guard = env_guard();
+    let cfg = cfg_for_faults();
+    // Short read timeout: the hard ceiling on failure detection.
+    let mut cloud = spawn_cloud(&cfg, "failfast", true, &["--timeout", "10"]);
+    let t0 = Instant::now();
+    let mut healthy = spawn_edge(&cloud.addr, &[]);
+    // Dies on its first work order, mid-round, without replying.
+    let mut dying = spawn_edge(&cloud.addr, &["--die-after-phases", "0"]);
+
+    let mut out = String::new();
+    cloud.stdout.read_to_string(&mut out).unwrap();
+    let mut err = String::new();
+    cloud.stderr.read_to_string(&mut err).unwrap();
+    let status = cloud.child.wait().unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    assert!(!status.success(), "cloud should fail when an edge dies; stdout:\n{out}");
+    assert!(
+        err.contains("transport error"),
+        "cloud stderr should carry the typed transport error, got:\n{err}"
+    );
+    // EOF on the dead connection surfaces immediately; the 10s read
+    // timeout plus training time bounds the rest.
+    assert!(elapsed < 60.0, "fail-fast took {elapsed:.1}s");
+
+    assert!(!dying.wait().unwrap().success(), "the dying edge exits nonzero by design");
+    // The healthy edge just has to terminate once the cloud is gone —
+    // its exit code depends on whether it was mid-reply at that moment.
+    healthy.wait().unwrap();
+}
+
+#[test]
+fn reconnecting_edge_rejoins_at_the_round_boundary_with_identical_history() {
+    let _guard = env_guard();
+    let cfg = cfg_for_faults();
+    // Uninterrupted in-process reference.
+    std::env::set_var("CFEL_THREADS", "1");
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let h_ref = coord.run().unwrap();
+    std::env::remove_var("CFEL_THREADS");
+    let want = format!("{:016x}", history_digest(&h_ref));
+
+    let mut cloud = spawn_cloud(&cfg, "rejoin", false, &["--recover", "--timeout", "30"]);
+    let mut stderr = BufReader::new(&mut cloud.stderr);
+    // Slot 0 is the edge that dies after serving one work order. With
+    // the failure on slot 0, the healthy slot-1 edge is left with a
+    // reply in flight — the retry must drain it, not choke on it.
+    let mut dying = spawn_edge(&cloud.addr, &["--die-after-phases", "1"]);
+    wait_for_line(&mut stderr, "edge 0 connected", "slot-0 accept");
+    let mut healthy = spawn_edge(&cloud.addr, &[]);
+    wait_for_line(&mut stderr, "edge 1 connected", "slot-1 accept");
+    // The replacement connects immediately (kernel backlog) and sits in
+    // the handshake until recovery accepts it.
+    let mut replacement = spawn_edge(&cloud.addr, &[]);
+
+    let mut out = String::new();
+    cloud.stdout.read_to_string(&mut out).unwrap();
+    let mut rest = String::new();
+    stderr.read_to_string(&mut rest).unwrap();
+    let status = cloud.child.wait().unwrap();
+    assert!(status.success(), "recovered run failed; stderr:\n{rest}");
+    assert!(rest.contains("transport failure"), "recovery never fired:\n{rest}");
+    let digest = out
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("history_digest: "))
+        .unwrap_or_else(|| panic!("no digest in output:\n{out}"));
+    assert_eq!(digest, want, "recovered history must match the uninterrupted run");
+
+    assert!(!dying.wait().unwrap().success(), "the dying edge exits nonzero by design");
+    assert!(healthy.wait().unwrap().success());
+    assert!(replacement.wait().unwrap().success());
+}
+
+/// A [`LocalExecutor`] that fails its Nth `finish_phase` with a
+/// transport error — the in-process stand-in for a killed edge.
+struct FlakyExecutor {
+    inner: LocalExecutor,
+    calls: usize,
+    fail_at: usize,
+}
+
+impl ClusterExecutor for FlakyExecutor {
+    fn clusters(&self) -> &[usize] {
+        self.inner.clusters()
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        self.inner.begin_round(round)
+    }
+
+    fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()> {
+        self.inner.start_phase(phase, epochs, channel)
+    }
+
+    fn finish_phase(&mut self) -> Result<Vec<ClusterPhase>> {
+        let n = self.calls;
+        self.calls += 1;
+        if n == self.fail_at {
+            return Err(CfelError::Transport {
+                cluster: self.inner.clusters().first().copied(),
+                message: "injected: edge process died".into(),
+            });
+        }
+        self.inner.finish_phase()
+    }
+
+    fn set_state(&mut self, models: &[(usize, &[f32])], clocks: &[(usize, f64)]) -> Result<()> {
+        self.inner.set_state(models, clocks)
+    }
+
+    fn reinit(
+        &mut self,
+        rounds_applied: usize,
+        models: &[(usize, &[f32])],
+        clocks: &[(usize, f64)],
+    ) -> Result<()> {
+        self.inner.reinit(rounds_applied, models, clocks)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+/// Slot 0 flaky (clusters 0–1), slot 1 healthy (clusters 2–3).
+fn flaky_pair(cfg: &ExperimentConfig, fail_at: usize) -> Vec<Box<dyn ClusterExecutor>> {
+    let flaky = FlakyExecutor {
+        inner: LocalExecutor::new(cfg, vec![0, 1]).unwrap(),
+        calls: 0,
+        fail_at,
+    };
+    let healthy = LocalExecutor::new(cfg, vec![2, 3]).unwrap();
+    vec![Box::new(flaky), Box::new(healthy)]
+}
+
+#[test]
+fn in_process_retry_restores_the_boundary_snapshot_bit_for_bit() {
+    let _guard = env_guard();
+    std::env::set_var("CFEL_THREADS", "1");
+    let cfg = cfg_for_faults();
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let h_ref = coord.run().unwrap();
+
+    // Slot 0 fails its 2nd phase, mid-run, leaving the healthy slot
+    // with an uncollected phase pending; the replacement owns the same
+    // clusters.
+    let recover_cfg = cfg.clone();
+    let recover: RecoverFn = Box::new(move |_slot| {
+        Ok(Box::new(LocalExecutor::new(&recover_cfg, vec![0, 1])?) as Box<dyn ClusterExecutor>)
+    });
+    let mut runner = DistRunner::new(&cfg, flaky_pair(&cfg, 1)).unwrap().with_recovery(recover, 1);
+    let h = runner.run().unwrap();
+    assert_eq!(
+        history_digest(&h_ref),
+        history_digest(&h),
+        "retried run must be indistinguishable from an uninterrupted one"
+    );
+
+    // Without recovery the same failure is fatal and typed.
+    let mut runner = DistRunner::new(&cfg, flaky_pair(&cfg, 0)).unwrap();
+    let err = runner.run().unwrap_err();
+    assert!(
+        matches!(err, CfelError::Transport { cluster: Some(0), .. }),
+        "expected a typed transport error naming cluster 0, got: {err}"
+    );
+    std::env::remove_var("CFEL_THREADS");
+}

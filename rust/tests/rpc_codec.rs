@@ -1,0 +1,265 @@
+//! Wire-codec property suite (satellite of the multi-process runtime).
+//!
+//! The protocol carries f64 training state, so the codec must be exact
+//! on every value a run can produce — NaN payloads, negative zero,
+//! subnormals, infinities — and must reject malformed bytes with a typed
+//! [`CfelError::Codec`] instead of panicking or over-allocating. Message
+//! equality is checked by re-encoding: the encoding is deterministic, so
+//! `encode(decode(encode(m))) == encode(m)` pins every field bit for bit
+//! without needing `PartialEq` on NaN-bearing structs.
+
+use cfel::aggregation::policy::{CloseReason, ReportVerdict};
+use cfel::coordinator::ClusterPhase;
+use cfel::netsim::{DeviceTimings, PhaseTiming, UploadChannel};
+use cfel::prop_assert;
+use cfel::rpc::codec::{read_frame, write_frame, MAGIC, MAX_FRAME, PROTO_VERSION};
+use cfel::rpc::wire::Msg;
+use cfel::util::proptest::{check, default_cases, int_biased};
+use cfel::util::rng::Rng;
+use cfel::CfelError;
+
+/// Adversarial f64s: every special encoding plus ordinary magnitudes.
+fn f64_adv(rng: &mut Rng) -> f64 {
+    match rng.below(10) {
+        0 => f64::NAN,
+        1 => f64::from_bits(0x7FF8_DEAD_BEEF_0001), // NaN with payload
+        2 => -0.0,
+        3 => f64::from_bits(1), // smallest subnormal
+        4 => f64::INFINITY,
+        5 => f64::NEG_INFINITY,
+        6 => 0.0,
+        7 => f64::MAX,
+        _ => rng.normal() as f64 * 1e3,
+    }
+}
+
+fn f32_adv(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => f32::NAN,
+        1 => -0.0,
+        2 => f32::from_bits(1),
+        3 => f32::INFINITY,
+        4 => f32::NEG_INFINITY,
+        _ => rng.normal(),
+    }
+}
+
+fn vec_f64_adv(rng: &mut Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| f64_adv(rng)).collect()
+}
+
+fn gen_timing(rng: &mut Rng) -> PhaseTiming {
+    let n = int_biased(rng, 0, 5);
+    let verdicts = [ReportVerdict::OnTime, ReportVerdict::Late, ReportVerdict::Dropped];
+    PhaseTiming {
+        duration_s: f64_adv(rng),
+        compute_s: f64_adv(rng),
+        upload_s: f64_adv(rng),
+        devices: DeviceTimings {
+            device: (0..n).map(|_| rng.below(1 << 20)).collect(),
+            compute_s: vec_f64_adv(rng, n),
+            upload_s: vec_f64_adv(rng, n),
+            finish_s: vec_f64_adv(rng, n),
+            verdict: (0..n).map(|_| verdicts[rng.below(3)]).collect(),
+        },
+        events: rng.below(1 << 16),
+        close_reason: CloseReason::ALL[rng.below(CloseReason::ALL.len())],
+    }
+}
+
+fn gen_phase(rng: &mut Rng) -> ClusterPhase {
+    let nr = int_biased(rng, 0, 6);
+    ClusterPhase {
+        cluster: rng.below(64),
+        reports: (0..nr)
+            .map(|_| (rng.below(1 << 16), rng.below(1 << 10), f64_adv(rng)))
+            .collect(),
+        model: (0..int_biased(rng, 0, 32)).map(|_| f32_adv(rng)).collect(),
+        clock_s: f64_adv(rng),
+        timing: if rng.below(2) == 0 {
+            Some(gen_timing(rng))
+        } else {
+            None
+        },
+        stale_merged: rng.below(100),
+        pending_after: rng.below(100),
+    }
+}
+
+fn gen_state(rng: &mut Rng) -> (Vec<(usize, Vec<f32>)>, Vec<(usize, f64)>) {
+    let nm = int_biased(rng, 0, 4);
+    let models = (0..nm)
+        .map(|_| {
+            let len = int_biased(rng, 0, 16);
+            (rng.below(32), (0..len).map(|_| f32_adv(rng)).collect())
+        })
+        .collect();
+    let nc = int_biased(rng, 0, 4);
+    let clocks = (0..nc).map(|_| (rng.below(32), f64_adv(rng))).collect();
+    (models, clocks)
+}
+
+fn gen_msg(rng: &mut Rng) -> Msg {
+    match rng.below(12) {
+        0 => Msg::Hello { proto: rng.next_u64() as u16 },
+        1 => {
+            let (models, clocks) = gen_state(rng);
+            Msg::Init {
+                config_json: "{\"n_devices\": 16, \"weird\": \"\u{1F30D} utf8\"}".into(),
+                clusters: (0..int_biased(rng, 0, 5)).collect(),
+                rounds_applied: rng.below(100),
+                models,
+                clocks,
+            }
+        }
+        2 => Msg::InitOk,
+        3 => Msg::BeginRound { round: rng.below(1 << 20) },
+        4 => Msg::RoundBegun,
+        5 => Msg::RunPhase {
+            phase: rng.next_u64(),
+            epochs: rng.below(16),
+            channel: if rng.below(2) == 0 {
+                UploadChannel::DeviceEdge
+            } else {
+                UploadChannel::DeviceCloud
+            },
+        },
+        6 => Msg::PhaseDone {
+            phases: (0..int_biased(rng, 0, 3)).map(|_| gen_phase(rng)).collect(),
+        },
+        7 => {
+            let (models, clocks) = gen_state(rng);
+            Msg::SetState { models, clocks }
+        }
+        8 => Msg::StateSet,
+        9 => Msg::Shutdown,
+        10 => Msg::Bye,
+        _ => Msg::Error { message: "edge exploded: \u{2620} non-ascii".into() },
+    }
+}
+
+#[test]
+fn messages_roundtrip_bit_exactly_through_frames() {
+    check("wire-roundtrip", 0xC0DEC, default_cases(), |rng| {
+        let msg = gen_msg(rng);
+        let (kind, payload) = msg.encode();
+        let mut framed = Vec::new();
+        write_frame(&mut framed, kind, &payload)
+            .map_err(|e| format!("{}: write failed: {e}", msg.name()))?;
+        let (kind2, payload2) = read_frame(&mut &framed[..])
+            .map_err(|e| format!("{}: read failed: {e}", msg.name()))?;
+        prop_assert!(kind2 == kind, "{}: frame kind drifted", msg.name());
+        prop_assert!(payload2 == payload, "{}: frame payload drifted", msg.name());
+        let decoded = Msg::decode(kind2, &payload2)
+            .map_err(|e| format!("{}: decode failed: {e}", msg.name()))?;
+        prop_assert!(decoded.name() == msg.name(), "decoded as {}", decoded.name());
+        let (kind3, payload3) = decoded.encode();
+        prop_assert!(kind3 == kind, "{}: re-encoded kind drifted", msg.name());
+        prop_assert!(
+            payload3 == payload,
+            "{}: re-encode differs — some field (a NaN bit? a subnormal?) did not survive",
+            msg.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_frames_are_typed_errors_never_panics() {
+    check("wire-truncation", 0x7A7A, default_cases(), |rng| {
+        let msg = gen_msg(rng);
+        let (kind, payload) = msg.encode();
+        let mut framed = Vec::new();
+        write_frame(&mut framed, kind, &payload).map_err(|e| e.to_string())?;
+        // Cut anywhere, including inside the header and at zero bytes.
+        let cut = rng.below(framed.len());
+        let err = match read_frame(&mut &framed[..cut]) {
+            Ok(_) => return Err(format!("{}: truncation at {cut} decoded", msg.name())),
+            Err(e) => e,
+        };
+        prop_assert!(
+            matches!(err, CfelError::Codec(_)),
+            "{}: cut at {cut} gave a non-codec error: {err}",
+            msg.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_payloads_fail_decode_without_panicking() {
+    check("payload-truncation", 0xBADBED, default_cases(), |rng| {
+        let msg = gen_msg(rng);
+        let (kind, payload) = msg.encode();
+        if payload.is_empty() {
+            return Ok(());
+        }
+        let cut = rng.below(payload.len());
+        prop_assert!(
+            Msg::decode(kind, &payload[..cut]).is_err(),
+            "{}: payload cut to {cut}/{} bytes still decoded",
+            msg.name(),
+            payload.len()
+        );
+        // Trailing garbage must be rejected too (layout disagreement).
+        let mut padded = payload.clone();
+        padded.push(0x5A);
+        prop_assert!(
+            Msg::decode(kind, &padded).is_err(),
+            "{}: trailing byte accepted",
+            msg.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_and_corrupt_headers_are_rejected() {
+    // A length field beyond MAX_FRAME must be refused before allocation.
+    let mut head = Vec::new();
+    head.extend_from_slice(&MAGIC);
+    head.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    head.extend_from_slice(&1u16.to_le_bytes());
+    head.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+    let err = read_frame(&mut &head[..]).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+
+    // Unknown frame kind: typed, not a panic.
+    let err = Msg::decode(0xFFFF, &[]).unwrap_err();
+    assert!(matches!(err, CfelError::Codec(_)), "{err}");
+}
+
+#[test]
+fn exotic_floats_survive_a_full_message() {
+    let specials = [
+        f64::NAN,
+        f64::from_bits(0x7FF8_DEAD_BEEF_0001),
+        -0.0,
+        f64::from_bits(1),
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+    ];
+    let phases = vec![ClusterPhase {
+        cluster: 3,
+        reports: specials.iter().enumerate().map(|(d, &l)| (d, d + 1, l)).collect(),
+        model: vec![f32::NAN, -0.0, f32::from_bits(1)],
+        clock_s: -0.0,
+        timing: None,
+        stale_merged: 0,
+        pending_after: 0,
+    }];
+    let msg = Msg::PhaseDone { phases };
+    let (kind, payload) = msg.encode();
+    let decoded = Msg::decode(kind, &payload).unwrap();
+    let Msg::PhaseDone { phases } = decoded else {
+        panic!("decoded as {}", msg.name());
+    };
+    assert_eq!(phases.len(), 1);
+    for ((_, _, got), want) in phases[0].reports.iter().zip(&specials) {
+        assert_eq!(got.to_bits(), want.to_bits(), "loss bits drifted");
+    }
+    assert_eq!(phases[0].clock_s.to_bits(), (-0.0f64).to_bits());
+    assert_eq!(phases[0].model[0].to_bits(), f32::NAN.to_bits());
+    assert_eq!(phases[0].model[1].to_bits(), (-0.0f32).to_bits());
+    assert_eq!(phases[0].model[2].to_bits(), 1);
+}

@@ -1,0 +1,162 @@
+//! Pathological `Timeline`s and boundary faults (satellite of the
+//! multi-process runtime; lives beside `scenario_equivalence.rs`).
+//!
+//! * A mass simultaneous leave — 15 of 16 devices gone at one round
+//!   boundary, three clusters emptied outright — must not panic, and the
+//!   history must be bit-identical across worker-thread counts.
+//! * Killing the aggregator cluster (or any cluster) exactly at a round
+//!   boundary is equally deterministic, for every canned plan.
+//! * The same pathological scenario run through the distributed driver
+//!   ([`DistRunner`] over [`LocalExecutor`]s) reproduces the in-process
+//!   history bit for bit — empty rosters cross the executor seam too.
+
+use std::sync::Mutex;
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, FaultSpec, LatencyMode};
+use cfel::coordinator::executor::partition_clusters;
+use cfel::coordinator::{ClusterExecutor, Coordinator, DistRunner, LocalExecutor};
+use cfel::metrics::{history_digest, History};
+use cfel::scenario::{Scenario, Timeline, TimelineEvent, WorldEvent};
+
+/// `CFEL_THREADS` is process-global; every test serializes on this lock.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn run_reference(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_under_threads(cfg: &ExperimentConfig, threads: &str) -> History {
+    std::env::set_var("CFEL_THREADS", threads);
+    let h = run_reference(cfg);
+    std::env::remove_var("CFEL_THREADS");
+    h
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label} r{r} tloss");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{label} r{r} compute");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{label} r{r} upload");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{label} r{r} on-time");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+    }
+}
+
+/// 15 of 16 devices leave at the round-1 boundary: clusters 1–3 empty
+/// out entirely and cluster 0 keeps a single device. At round 2 the
+/// cluster-1 roster rejoins and one cluster-3 device defects to
+/// cluster 0 (a cross-cluster join); clusters 2–3 stay empty for the
+/// rest of the run.
+fn mass_leave_scenario(cfg: &ExperimentConfig) -> Scenario {
+    let mut s = Scenario::from_flat(cfg);
+    s.name = "mass-leave".into();
+    let mut events = Vec::new();
+    for roster in &s.rosters[1..] {
+        for &device in roster {
+            events.push(TimelineEvent { round: 1, event: WorldEvent::Leave { device } });
+        }
+    }
+    for &device in &s.rosters[0][1..] {
+        events.push(TimelineEvent { round: 1, event: WorldEvent::Leave { device } });
+    }
+    for &device in &s.rosters[1] {
+        events.push(TimelineEvent { round: 2, event: WorldEvent::Join { device, cluster: 1 } });
+    }
+    let refugee = s.rosters[3][0];
+    events.push(TimelineEvent {
+        round: 2,
+        event: WorldEvent::Join { device: refugee, cluster: 0 },
+    });
+    s.timeline = Timeline { events };
+    s
+}
+
+fn scenic_cfg(alg: AlgorithmKind, latency: LatencyMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = alg;
+    cfg.latency = latency;
+    cfg.rounds = 4;
+    // Sampling over one-device and freshly-rejoined rosters is exactly
+    // where a participation-clamp bug would hide.
+    cfg.participation = 0.5;
+    let scenario = mass_leave_scenario(&cfg);
+    cfg.scenario = Some(scenario);
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn mass_simultaneous_leave_keeps_every_plan_deterministic() {
+    let _guard = env_guard();
+    for alg in AlgorithmKind::all() {
+        for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+            let cfg = scenic_cfg(alg, latency);
+            let label = format!("{}-{}", alg.name(), latency.name());
+            let h1 = run_under_threads(&cfg, "1");
+            assert_eq!(h1.len(), cfg.rounds, "{label}: truncated history");
+            let h4 = run_under_threads(&cfg, "4");
+            assert_identical(&label, &h1, &h4);
+        }
+    }
+}
+
+#[test]
+fn aggregator_cluster_death_at_the_round_boundary_is_deterministic() {
+    let _guard = env_guard();
+    let faults = [
+        FaultSpec::KillAggregator { at_round: 1 },
+        FaultSpec::KillCluster { at_round: 1, cluster: 0 },
+    ];
+    for alg in AlgorithmKind::all() {
+        for fault in faults {
+            for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+                let mut cfg = ExperimentConfig::quickstart();
+                cfg.algorithm = alg;
+                cfg.latency = latency;
+                cfg.rounds = 3;
+                cfg.fault = Some(fault);
+                cfg.validate().unwrap();
+                let label = format!("{}-{}-{fault:?}", alg.name(), latency.name());
+                let h1 = run_under_threads(&cfg, "1");
+                assert_eq!(h1.len(), cfg.rounds, "{label}: truncated history");
+                let h4 = run_under_threads(&cfg, "4");
+                assert_identical(&label, &h1, &h4);
+            }
+        }
+    }
+}
+
+#[test]
+fn pathological_timeline_survives_the_distributed_driver_bit_for_bit() {
+    let _guard = env_guard();
+    std::env::set_var("CFEL_THREADS", "1");
+    let cfg = scenic_cfg(AlgorithmKind::CeFedAvg, LatencyMode::EventDriven);
+    let h_ref = run_reference(&cfg);
+
+    let mut executors: Vec<Box<dyn ClusterExecutor>> = Vec::new();
+    for part in partition_clusters(cfg.n_clusters, 2) {
+        executors.push(Box::new(LocalExecutor::new(&cfg, part).unwrap()));
+    }
+    let mut runner = DistRunner::new(&cfg, executors).unwrap();
+    let h_dist = runner.run().unwrap();
+    std::env::remove_var("CFEL_THREADS");
+
+    assert_identical("dist-mass-leave", &h_ref, &h_dist);
+    assert_eq!(history_digest(&h_ref), history_digest(&h_dist), "digest diverged");
+}
