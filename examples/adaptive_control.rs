@@ -1,0 +1,116 @@
+//! Online adaptive control plane demo: a floating aggregation point
+//! rescues a run whose cloud uplink collapses mid-training.
+//!
+//! ```sh
+//! cargo run --release --example adaptive_control
+//! ```
+//!
+//! The world is `examples/scenarios/degrading_backhaul.json`, rebuilt in
+//! code below: 16 devices on 4 edge servers, ring backhaul, and a
+//! device→cloud uplink that drops from the paper-default 1 Mbps to
+//! 200 kbps at round 4 and 100 kbps at round 6. Two cloud-FedAvg runs on
+//! the *same seed*:
+//!
+//! * **static** — the plan fixed up front (`edge(4)@cloud; cloud`); every
+//!   round pays the collapsing uplink in full.
+//! * **floating** (`--controller floating:0.5`) — at each round boundary
+//!   the controller compares the uplink bandwidth against its round-1
+//!   baseline; when it falls below 50% the plan's cloud steps are
+//!   rewritten to `gossip(pi)` consensus over the healthy 50 Mbps
+//!   edge↔edge backhaul (arXiv:2203.13950's floating aggregation point),
+//!   and restored once the link recovers. Every decision lands in the
+//!   round's `decision` CSV column, and the whole run is bit-reproducible
+//!   for any `CFEL_THREADS` and across the distributed runtime
+//!   (`rust/tests/control_equivalence.rs`).
+//!
+//! Equivalent CLI runs (the same world, loaded from JSON):
+//!
+//! ```sh
+//! cfel train --scenario examples/scenarios/degrading_backhaul.json \
+//!            --algorithm fedavg --latency event --controller floating:0.5
+//! cfel train --scenario examples/scenarios/degrading_backhaul.json --dry-run
+//! ```
+
+use cfel::config::{AlgorithmKind, ControllerKind, ExperimentConfig, LatencyMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, time_to_accuracy, History};
+use cfel::scenario::{LinkKind, Scenario, TimelineEvent, WorldEvent};
+
+fn degrading_world(cfg: &ExperimentConfig) -> Scenario {
+    let mut s = Scenario::from_flat(cfg);
+    s.name = "degrading-backhaul".into();
+    for (round, bps) in [(4usize, 2e5), (6, 1e5)] {
+        s.timeline.events.push(TimelineEvent {
+            round,
+            event: WorldEvent::LinkChange { link: LinkKind::DeviceCloud, bps },
+        });
+    }
+    s
+}
+
+fn run(cfg: &ExperimentConfig) -> cfel::Result<History> {
+    let mut coord = Coordinator::from_config(cfg)?;
+    coord.run()
+}
+
+fn main() -> cfel::Result<()> {
+    let mut base = ExperimentConfig::quickstart();
+    base.name = "adaptive-control".into();
+    base.algorithm = AlgorithmKind::FedAvg; // plan: edge(4)@cloud; cloud
+    base.latency = LatencyMode::EventDriven;
+    base.rounds = 10;
+    base.scenario = Some(degrading_world(&base));
+    base.validate()?;
+    println!("timeline: {}", base.scenario.as_ref().unwrap().timeline.summary());
+
+    let mut floating = base.clone();
+    floating.controller = ControllerKind::parse("floating:0.5")?;
+    floating.validate()?;
+
+    println!("\n== static ({}) ==", base.run_label());
+    let h_static = run(&base)?;
+    println!("== floating ({}) ==", floating.run_label());
+    let h_floating = run(&floating)?;
+
+    println!("\nround | static sim-s | floating sim-s | decision");
+    for (s, f) in h_static.iter().zip(&h_floating) {
+        println!(
+            "{:>5} | {:>12.3} | {:>14.3} | {}",
+            s.round, s.sim_time_s, f.sim_time_s, f.decision
+        );
+    }
+
+    let static_best = best_accuracy(&h_static);
+    let floating_best = best_accuracy(&h_floating);
+    println!("\nbest accuracy  static {static_best:.4}  floating {floating_best:.4}");
+
+    // The CI smoke enforces that this is a real adaptation, not a syntax
+    // demo. (1) The controller actually rewrote the plan when the link
+    // collapsed — the decision log says so...
+    let decisions: Vec<&str> = h_floating.iter().map(|r| r.decision.as_str()).collect();
+    assert!(
+        decisions.iter().any(|d| d.contains("cloud->gossip")),
+        "the link collapse never triggered a plan rewrite: {decisions:?}"
+    );
+    // ...(2) both runs learn, and (3) the adaptive run reaches the static
+    // run's target accuracy in strictly less simulated time: once the
+    // uplink collapses, every static round pays it, while the floating
+    // plan moves aggregation onto the healthy edge backhaul.
+    assert!(floating_best > 0.25, "floating run failed to learn: {floating_best}");
+    let target = 0.9 * static_best;
+    let (sr, st) = time_to_accuracy(&h_static, target).expect("static reaches its own target");
+    let (fr, ft) = time_to_accuracy(&h_floating, target)
+        .unwrap_or_else(|| panic!("floating never reached {target:.4}"));
+    println!("time to {target:.4} accuracy: static round {sr} at {st:.3} sim-s, floating round {fr} at {ft:.3} sim-s");
+    assert!(
+        ft < st,
+        "adaptive control should beat the static plan in simulated time: {ft:.3} >= {st:.3}"
+    );
+    println!(
+        "\nThe floating controller paid the collapsed uplink only until its next \
+         decision, then aggregated over the backhaul. Inspect the decisions with \
+         `--csv` (the `decision` column) or rerun under any CFEL_THREADS — the \
+         bits never change."
+    );
+    Ok(())
+}

@@ -228,6 +228,24 @@ pub struct SemiSync {
     pub staleness_exp: f64,
 }
 
+impl SemiSync {
+    /// Build a semi-sync policy from controller-fitted parameters,
+    /// enforcing the invariants the event engine assumes: `k` is clamped
+    /// to `[1, max(n, 1)]`, and a non-finite or non-positive timeout
+    /// degrades to "no timeout" (`f64::INFINITY`) rather than arming a
+    /// `RoundClose` event at a nonsense instant. Controllers
+    /// (`control::AdaptiveSemiSync`) must funnel through here so
+    /// arbitrary telemetry can never produce an invalid close condition.
+    pub fn from_fit(k: usize, timeout_s: f64, n: usize, staleness_exp: f64) -> SemiSync {
+        let timeout_s = if timeout_s.is_finite() && timeout_s > 0.0 {
+            timeout_s
+        } else {
+            f64::INFINITY
+        };
+        SemiSync { k: k.clamp(1, n.max(1)), timeout_s, staleness_exp }
+    }
+}
+
 impl AggregationPolicy for SemiSync {
     fn timeout(&self) -> Option<(f64, CloseReason)> {
         if self.timeout_s.is_finite() {
@@ -309,6 +327,21 @@ mod tests {
             // Bit-exact 1.0: the oracle-equivalence tests rely on it.
             assert_eq!(flat.staleness_discount(s).to_bits(), 1.0f64.to_bits());
         }
+    }
+
+    #[test]
+    fn from_fit_clamps_k_and_sanitizes_timeout() {
+        let p = SemiSync::from_fit(0, 2.5, 8, 1.0);
+        assert_eq!(p.k, 1);
+        assert_eq!(p.timeout_s, 2.5);
+        let p = SemiSync::from_fit(99, f64::NAN, 8, 1.0);
+        assert_eq!(p.k, 8);
+        assert!(p.timeout_s.is_infinite());
+        let p = SemiSync::from_fit(3, -1.0, 8, 1.0);
+        assert!(p.timeout_s.is_infinite(), "non-positive timeout disarms");
+        let p = SemiSync::from_fit(3, 0.0, 0, 1.0);
+        assert_eq!(p.k, 1, "empty cluster still yields a valid policy");
+        assert!(p.timeout_s.is_infinite());
     }
 
     #[test]

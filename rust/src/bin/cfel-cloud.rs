@@ -13,7 +13,7 @@
 
 use std::path::Path;
 
-use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode};
+use cfel::config::{AlgorithmKind, ControllerKind, ExperimentConfig, LatencyMode};
 use cfel::metrics::{history_digest, CsvWriter, ROUND_HEADER};
 use cfel::plan::Plan;
 use cfel::rpc::{run_cloud, CloudOpts};
@@ -30,6 +30,7 @@ fn command() -> Command {
         .flag("rounds", "global rounds")
         .flag("seed", "experiment seed")
         .flag("latency", "closed-form | event")
+        .flag("controller", "static | adaptive[:<window>] | floating[:<threshold>]")
         .flag("samples", "training samples per device")
         .flag("eval-every", "evaluate every k rounds")
         .flag_default("listen", "127.0.0.1:0", "bind address (host:port or unix:/path)")
@@ -61,6 +62,9 @@ fn run(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
     if let Some(l) = args.get("latency") {
         cfg.latency = LatencyMode::parse(l)?;
+    }
+    if let Some(spec) = args.get("controller") {
+        cfg.controller = ControllerKind::parse(spec)?;
     }
     cfg.samples_per_device = args.get_usize("samples", cfg.samples_per_device);
     cfg.eval_every = args.get_usize("eval-every", cfg.eval_every);

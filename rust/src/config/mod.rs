@@ -185,6 +185,71 @@ impl AggPolicyKind {
     }
 }
 
+/// Which round-boundary controller adapts the run (`control`). The
+/// coordinator instantiates the matching [`Controller`](crate::control::Controller)
+/// object; `Static` is the default and leaves every round untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ControllerKind {
+    /// Never adapts — bit-identical to running without a controller.
+    #[default]
+    Static,
+    /// Refit per-cluster semi-sync K/timeout each round from the
+    /// empirical report-time quantiles of a sliding telemetry window.
+    /// Requires the event-driven latency mode.
+    AdaptiveSemiSync {
+        /// Rounds of telemetry pooled per fit (>= 1).
+        window: usize,
+    },
+    /// Floating aggregation point (arXiv:2203.13950): swap `cloud` ↔
+    /// `gossip(π)` steps and migrate the aggregator anchor when cloud
+    /// backhaul bandwidth or roster churn crosses hysteresis thresholds.
+    FloatingAggregation {
+        /// Decentralize when `b_d2c` falls below `threshold` × its
+        /// baseline, in (0, 1].
+        threshold: f64,
+    },
+}
+
+impl ControllerKind {
+    /// Parse `static` | `adaptive[:<window>]` | `floating[:<threshold>]`.
+    pub fn parse(s: &str) -> Result<ControllerKind> {
+        let bad = || {
+            CfelError::Config(format!(
+                "unknown controller {s:?} \
+                 (static | adaptive:<window_rounds> | floating:<threshold>)"
+            ))
+        };
+        if s == "static" {
+            return Ok(ControllerKind::Static);
+        }
+        if let Some(rest) = s.strip_prefix("adaptive") {
+            let window = match rest.strip_prefix(':') {
+                Some(w) => w.parse().map_err(|_| bad())?,
+                None if rest.is_empty() => 5,
+                None => return Err(bad()),
+            };
+            return Ok(ControllerKind::AdaptiveSemiSync { window });
+        }
+        if let Some(rest) = s.strip_prefix("floating") {
+            let threshold = match rest.strip_prefix(':') {
+                Some(t) => t.parse().map_err(|_| bad())?,
+                None if rest.is_empty() => 0.5,
+                None => return Err(bad()),
+            };
+            return Ok(ControllerKind::FloatingAggregation { threshold });
+        }
+        Err(bad())
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ControllerKind::Static => "static".into(),
+            ControllerKind::AdaptiveSemiSync { window } => format!("adaptive:{window}"),
+            ControllerKind::FloatingAggregation { threshold } => format!("floating:{threshold}"),
+        }
+    }
+}
+
 /// How the federated data is generated/partitioned (paper §6.1 + Fig. 5).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataScheme {
@@ -334,6 +399,11 @@ pub struct ExperimentConfig {
     /// Evaluate every k-th global round (1 = every round).
     pub eval_every: usize,
     pub fault: Option<FaultSpec>,
+    /// Round-boundary controller: rewrites the next round's plan and
+    /// per-cluster close policies from observed telemetry. `Static`
+    /// (the default) never adapts and is bit-identical to the plain
+    /// interpreter (`rust/tests/control_equivalence.rs`).
+    pub controller: ControllerKind,
 }
 
 impl ExperimentConfig {
@@ -372,6 +442,7 @@ impl ExperimentConfig {
             participation: 1.0,
             eval_every: 1,
             fault: None,
+            controller: ControllerKind::Static,
         }
     }
 
@@ -411,6 +482,7 @@ impl ExperimentConfig {
             participation: 1.0,
             eval_every: 1,
             fault: None,
+            controller: ControllerKind::Static,
         }
     }
 
@@ -457,17 +529,22 @@ impl ExperimentConfig {
     /// Series label for logs and CSV rows: the algorithm name for canned
     /// runs (unchanged from the pre-plan CSV schema), the canonical plan
     /// spec for explicit-plan runs. Runs under an explicit scenario append
-    /// `@<scenario name>` so their CSV rows stay distinguishable from
+    /// `@<scenario name>`, and runs under a non-static controller append
+    /// `+<controller name>`, so their CSV rows stay distinguishable from
     /// canned-config runs.
     pub fn run_label(&self) -> String {
         let base = match &self.plan {
             Some(p) => format!("plan:{p}"),
             None => self.algorithm.name().to_string(),
         };
-        match &self.scenario {
+        let mut label = match &self.scenario {
             Some(s) => format!("{base}@{}", s.name),
             None => base,
+        };
+        if self.controller != ControllerKind::Static {
+            label.push_str(&format!("+{}", self.controller.name()));
         }
+        label
     }
 
     /// The effective close policy: an explicit `agg_policy` wins; the
@@ -663,6 +740,47 @@ impl ExperimentConfig {
                 self.staleness_exp
             )));
         }
+        match self.controller {
+            ControllerKind::Static => {}
+            ControllerKind::AdaptiveSemiSync { window } => {
+                if window == 0 {
+                    return Err(CfelError::Config(
+                        "adaptive controller window must be >= 1".into(),
+                    ));
+                }
+                if self.latency != LatencyMode::EventDriven {
+                    return Err(CfelError::Config(
+                        "the adaptive semi-sync controller fits K/timeout to \
+                         per-device report times, which only the event-driven \
+                         latency mode produces (set latency = \"event\" / pass \
+                         --latency event)"
+                            .into(),
+                    ));
+                }
+            }
+            ControllerKind::FloatingAggregation { threshold } => {
+                if !(threshold > 0.0 && threshold <= 1.0) {
+                    return Err(CfelError::Config(format!(
+                        "floating controller threshold {threshold} outside (0,1]"
+                    )));
+                }
+                if self.pi == 0 {
+                    return Err(CfelError::Config(
+                        "the floating controller rewrites cloud aggregates \
+                         into gossip(pi) consensus; set pi >= 1"
+                            .into(),
+                    ));
+                }
+            }
+        }
+        if self.controller != ControllerKind::Static && self.fault.is_some() {
+            return Err(conflicting_options(
+                "controller",
+                "fault",
+                "faults mutate the world outside the telemetry the \
+                 controller replays; use a scenario timeline instead",
+            ));
+        }
         if let Some(FaultSpec::KillCluster { cluster, .. }) = self.fault {
             if cluster >= self.n_clusters {
                 return Err(CfelError::Config(format!(
@@ -746,6 +864,9 @@ impl ExperimentConfig {
         }
         if self.participation != 1.0 {
             o.set("participation", Json::from_f64(self.participation));
+        }
+        if self.controller != ControllerKind::Static {
+            o.set("controller", Json::from_str_val(&self.controller.name()));
         }
         match self.fault {
             Some(FaultSpec::KillCluster { at_round, cluster }) => {
@@ -876,6 +997,10 @@ impl ExperimentConfig {
             },
             eval_every: get_usize("eval_every", base.eval_every)?,
             fault,
+            controller: match j.opt("controller") {
+                Some(v) => ControllerKind::parse(v.as_str()?)?,
+                None => ControllerKind::Static,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1185,6 +1310,82 @@ mod tests {
         };
         c.scenario = Some(s);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn controller_parse_roundtrip() {
+        for c in [
+            ControllerKind::Static,
+            ControllerKind::AdaptiveSemiSync { window: 3 },
+            ControllerKind::FloatingAggregation { threshold: 0.5 },
+        ] {
+            assert_eq!(ControllerKind::parse(&c.name()).unwrap(), c);
+        }
+        // Bare spellings take the documented defaults.
+        assert_eq!(
+            ControllerKind::parse("adaptive").unwrap(),
+            ControllerKind::AdaptiveSemiSync { window: 5 }
+        );
+        assert_eq!(
+            ControllerKind::parse("floating").unwrap(),
+            ControllerKind::FloatingAggregation { threshold: 0.5 }
+        );
+        assert!(ControllerKind::parse("adaptive:x").is_err());
+        assert!(ControllerKind::parse("floatingly").is_err());
+        assert!(ControllerKind::parse("pid").is_err());
+    }
+
+    #[test]
+    fn controller_validation_and_label() {
+        // Adaptive needs the event-driven latency mode and window >= 1.
+        let mut c = ExperimentConfig::quickstart();
+        c.controller = ControllerKind::AdaptiveSemiSync { window: 3 };
+        assert!(c.validate().is_err(), "adaptive accepted in closed form");
+        c.latency = LatencyMode::EventDriven;
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "ce-fedavg+adaptive:3");
+        c.controller = ControllerKind::AdaptiveSemiSync { window: 0 };
+        assert!(c.validate().is_err(), "window 0 accepted");
+        // Floating needs a threshold in (0,1] and pi >= 1, and works in
+        // either latency mode.
+        let mut c = ExperimentConfig::quickstart();
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.5 };
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "ce-fedavg+floating:0.5");
+        c.controller = ControllerKind::FloatingAggregation { threshold: 1.5 };
+        assert!(c.validate().is_err(), "threshold > 1 accepted");
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.5 };
+        c.pi = 0;
+        c.algorithm = AlgorithmKind::FedAvg;
+        assert!(c.validate().is_err(), "pi 0 accepted with floating");
+        // Controllers and faults both mutate the world mid-run.
+        let mut c = ExperimentConfig::quickstart();
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.5 };
+        c.fault = Some(FaultSpec::KillAggregator { at_round: 2 });
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        // The scenario suffix composes with the controller suffix.
+        let mut c = ExperimentConfig::quickstart();
+        let mut s = Scenario::from_flat(&c);
+        s.name = "churny".into();
+        c.scenario = Some(s);
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.25 };
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "ce-fedavg@churny+floating:0.25");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_controller() {
+        let mut c = ExperimentConfig::quickstart();
+        // Static stays implicit: no "controller" key in the JSON.
+        assert!(c.to_json().opt("controller").is_none());
+        c.latency = LatencyMode::EventDriven;
+        c.controller = ControllerKind::AdaptiveSemiSync { window: 4 };
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.controller, c.controller);
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.25 };
+        let c3 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c3.controller, c.controller);
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Online adaptive control plane — telemetry-driven per-round rewriting.
+//!
+//! CE-FedAvg as shipped fixes its schedule before training starts: one
+//! [`Plan`], one [`AggPolicyKind`](crate::config::AggPolicyKind) for every
+//! cluster, for every round. But CFEL's whole premise is a mobile edge
+//! whose churn and link quality drift round to round. Now that plans,
+//! worlds and close policies are all *data*, a [`Controller`] can rewrite
+//! them at each round boundary from observed telemetry:
+//!
+//! * [`Static`] — never adapts. Pinned bit-identical to the plain
+//!   interpreter (history digest + CSV) across `CFEL_THREADS` and across
+//!   the `ClusterExecutor` seam by `rust/tests/control_equivalence.rs`.
+//! * [`AdaptiveSemiSync`] — refits per-cluster semi-sync `K`/timeout each
+//!   round from the empirical report-time quantiles of a sliding window,
+//!   clamped to `[1, n]` via [`SemiSync::from_fit`].
+//! * [`FloatingAggregation`] — the floating aggregation point of
+//!   arXiv:2203.13950: swaps `cloud` ↔ `gossip(π)` steps (and migrates
+//!   the aggregator-anchor cluster) when cloud backhaul bandwidth or
+//!   roster churn crosses hysteresis thresholds.
+//!
+//! # Determinism contract
+//!
+//! Every decision is a **pure function of prior telemetry**, and the
+//! telemetry itself ([`RoundTelemetry`]) is derived exclusively from
+//! simulated quantities — virtual report times, verdict counts, roster
+//! sizes, configured bandwidths — never wall clocks. The coordinator
+//! invokes the controller exactly once per round boundary (before
+//! `plan_round`, after timeline events), logs the resulting note into the
+//! round's CSV row, and in the distributed runtime makes the decision
+//! *cloud-side only*, shipping the resulting policy overrides through the
+//! existing `BeginRound`/`Init` flow. Edges never decide; the wire stays
+//! decision-agnostic. See `docs/DETERMINISM.md` §"Adaptive control".
+
+use crate::config::{AggPolicyKind, ControllerKind};
+use crate::plan::Plan;
+
+/// One cluster's view of the round that just finished.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterTelemetry {
+    /// Cluster index (stable across rounds).
+    pub cluster: usize,
+    /// Whether the cluster still has members after timeline events.
+    pub alive: bool,
+    /// Roster size after this round's churn/timeline events.
+    pub roster: usize,
+    /// Per-device report times (virtual seconds from phase start), pooled
+    /// across the round's edge phases. Unordered; consumers sort.
+    pub report_s: Vec<f64>,
+    /// Reports that made their phase close.
+    pub on_time: usize,
+    /// Reports kept but merged stale (semi-sync).
+    pub late: usize,
+    /// Reports discarded outright (deadline-drop).
+    pub dropped: usize,
+}
+
+/// Everything a controller may condition on: the completed round's
+/// per-cluster report distributions plus the world state the next round
+/// will run under (bandwidths and rosters *after* timeline events).
+#[derive(Debug, Clone)]
+pub struct RoundTelemetry {
+    /// The round this telemetry describes (0-based).
+    pub round: usize,
+    /// One entry per cluster, ascending cluster index.
+    pub clusters: Vec<ClusterTelemetry>,
+    /// Phase-close counts indexed by `CloseReason::index()`.
+    pub close_reasons: [usize; 4],
+    /// Simulated backhaul seconds accumulated this round (gossip + cloud).
+    pub backhaul_s: f64,
+    /// Device→cloud bandwidth in effect for the *next* round (bit/s).
+    pub b_d2c: f64,
+    /// Edge↔edge backhaul bandwidth for the next round (bit/s).
+    pub b_e2e: f64,
+    /// Whether the current aggregator-anchor cluster is still alive.
+    pub aggregator_alive: bool,
+}
+
+impl RoundTelemetry {
+    /// Total roster across alive clusters.
+    pub fn total_roster(&self) -> usize {
+        self.clusters.iter().map(|c| c.roster).sum()
+    }
+}
+
+/// A controller's verdict for the next round. `None` fields mean "keep".
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Replacement plan for the next round, already validated by the
+    /// coordinator before installation.
+    pub plan: Option<Plan>,
+    /// Full replacement set of per-cluster close-policy overrides as
+    /// `(cluster, spec)` pairs; the spec grammar is
+    /// [`AggPolicyKind::parse`]. `Some(vec![])` clears all overrides.
+    pub policies: Option<Vec<(usize, String)>>,
+    /// New aggregator-anchor cluster (provenance only — cloud aggregation
+    /// is host-symmetric in the simulator, so this changes no arithmetic).
+    pub aggregator: Option<usize>,
+    /// Human-readable, comma-free provenance line for the CSV `decision`
+    /// column; `"-"` means "no change".
+    pub note: String,
+}
+
+impl Decision {
+    /// The no-op decision.
+    pub fn keep() -> Decision {
+        Decision { plan: None, policies: None, aggregator: None, note: "-".into() }
+    }
+
+    /// Whether this decision changes anything.
+    pub fn is_keep(&self) -> bool {
+        self.plan.is_none() && self.policies.is_none() && self.aggregator.is_none()
+    }
+}
+
+/// Round-boundary controller: consulted once per round with the previous
+/// round's telemetry (`None` before round 0) and the plan currently in
+/// force; returns a [`Decision`]. Implementations must be pure functions
+/// of their constructor parameters and the telemetry stream — no clocks,
+/// no RNG — so replaying the same run reproduces every decision bit for
+/// bit regardless of `CFEL_THREADS` or the executor seam.
+pub trait Controller: Send {
+    /// Stable name used in `run_label()` and logs.
+    fn name(&self) -> String;
+
+    /// `true` only for [`Static`]: lets the coordinator skip telemetry
+    /// capture entirely, guaranteeing zero behavioural delta.
+    fn is_static(&self) -> bool {
+        false
+    }
+
+    /// Decide what round `round` should run. `telemetry` is the completed
+    /// previous round's view (`None` for the first round); `plan` is the
+    /// plan currently in force.
+    fn decide(&mut self, round: usize, telemetry: Option<&RoundTelemetry>, plan: &Plan)
+        -> Decision;
+}
+
+/// Instantiate the configured controller. `pi` is the config's gossip
+/// step count, used when [`FloatingAggregation`] synthesizes `gossip(π)`
+/// steps.
+pub fn build(kind: ControllerKind, pi: u32) -> Box<dyn Controller> {
+    match kind {
+        ControllerKind::Static => Box::new(Static),
+        ControllerKind::AdaptiveSemiSync { window } => {
+            Box::new(AdaptiveSemiSync::new(window))
+        }
+        ControllerKind::FloatingAggregation { threshold } => {
+            Box::new(FloatingAggregation::new(threshold, pi))
+        }
+    }
+}
+
+/// Never adapts. The `is_static` fast path means the coordinator does not
+/// even extract telemetry, so a static-controlled run executes the exact
+/// instruction stream of a controller-free run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Static;
+
+impl Controller for Static {
+    fn name(&self) -> String {
+        "static".into()
+    }
+
+    fn is_static(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, _round: usize, _t: Option<&RoundTelemetry>, _plan: &Plan) -> Decision {
+        Decision::keep()
+    }
+}
+
+/// Nearest-rank quantile of an ascending-sorted slice (`q` in `[0, 1]`).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1).min(sorted.len()) - 1]
+}
+
+/// Fit semi-sync `(k, timeout_s)` to an empirical report-time sample for
+/// a cluster of `n` devices. Pure and total: any input — empty, NaN-laden,
+/// negative — yields `1 <= k <= max(n, 1)` and a timeout that is either
+/// finite-positive or `f64::INFINITY` (the invariant proptested by
+/// `rust/tests/control_equivalence.rs`).
+///
+/// The fit is the straggler heuristic from the semi-sync literature
+/// (arXiv:1909.11875): take the median report time, call everything within
+/// `2×` median "the pack", close once the pack has reported
+/// (`k = ⌈pack-fraction · n⌉`), and arm a timeout at the observed p99 so a
+/// regime shift (links degrading mid-run) cannot stall the close.
+pub fn fit(samples: &[f64], n: usize) -> (usize, f64) {
+    let mut clean: Vec<f64> =
+        samples.iter().copied().filter(|s| s.is_finite() && *s >= 0.0).collect();
+    let n_eff = n.max(1);
+    if clean.is_empty() {
+        return (n_eff, f64::INFINITY);
+    }
+    clean.sort_by(f64::total_cmp);
+    let cutoff = 2.0 * quantile(&clean, 0.5);
+    let in_pack = clean.iter().filter(|&&s| s <= cutoff).count();
+    let frac = in_pack as f64 / clean.len() as f64;
+    let k = (frac * n_eff as f64).ceil() as usize;
+    let k = k.clamp(1, n_eff);
+    let timeout = quantile(&clean, 0.99).max(cutoff);
+    let timeout =
+        if timeout.is_finite() && timeout > 0.0 { timeout } else { f64::INFINITY };
+    (k, timeout)
+}
+
+/// Refits each cluster's semi-sync close condition every round from a
+/// sliding window of report-time telemetry. Emits policy overrides only —
+/// the plan is never touched.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSemiSync {
+    window: usize,
+    /// Sliding window: one entry per completed round, each holding the
+    /// per-cluster report-time samples of that round.
+    history: Vec<Vec<Vec<f64>>>,
+}
+
+impl AdaptiveSemiSync {
+    pub fn new(window: usize) -> AdaptiveSemiSync {
+        AdaptiveSemiSync { window: window.max(1), history: Vec::new() }
+    }
+}
+
+impl Controller for AdaptiveSemiSync {
+    fn name(&self) -> String {
+        format!("adaptive:{}", self.window)
+    }
+
+    fn decide(&mut self, _round: usize, telemetry: Option<&RoundTelemetry>, _plan: &Plan)
+        -> Decision {
+        let Some(t) = telemetry else {
+            return Decision::keep();
+        };
+        let round_samples: Vec<Vec<f64>> =
+            t.clusters.iter().map(|c| c.report_s.clone()).collect();
+        self.history.push(round_samples);
+        if self.history.len() > self.window {
+            let excess = self.history.len() - self.window;
+            self.history.drain(..excess);
+        }
+        let mut policies = Vec::new();
+        let (mut k_lo, mut k_hi) = (usize::MAX, 0usize);
+        let (mut t_lo, mut t_hi) = (f64::INFINITY, 0.0f64);
+        for ct in &t.clusters {
+            if !ct.alive || ct.roster == 0 {
+                continue;
+            }
+            let pooled: Vec<f64> = self
+                .history
+                .iter()
+                .filter_map(|round| round.get(ct.cluster))
+                .flatten()
+                .copied()
+                .collect();
+            if pooled.is_empty() {
+                continue;
+            }
+            let (k, timeout_s) = fit(&pooled, ct.roster);
+            k_lo = k_lo.min(k);
+            k_hi = k_hi.max(k);
+            t_lo = t_lo.min(timeout_s);
+            t_hi = t_hi.max(timeout_s);
+            policies.push((ct.cluster, AggPolicyKind::SemiSync { k, timeout_s }.name()));
+        }
+        if policies.is_empty() {
+            return Decision::keep();
+        }
+        let note = format!(
+            "refit {} clusters k[{k_lo}-{k_hi}] t[{t_lo:.3}-{t_hi:.3}]",
+            policies.len()
+        );
+        Decision { plan: None, policies: Some(policies), aggregator: None, note }
+    }
+}
+
+/// Floating aggregation point (arXiv:2203.13950). Tracks the cloud
+/// backhaul bandwidth against its first-round baseline and the per-round
+/// roster churn; when either crosses the entry threshold (or the anchor
+/// cluster dies) the plan's `cloud` steps are rewritten to `gossip(π)`
+/// via [`Plan::decentralize`], and restored from the saved base plan once
+/// conditions recover past the (stricter) exit threshold — classic
+/// hysteresis, so a link flapping around the threshold cannot thrash the
+/// plan every round. Independently, the aggregator anchor migrates to the
+/// largest alive cluster (ties → lowest index) for provenance.
+#[derive(Debug, Clone)]
+pub struct FloatingAggregation {
+    threshold: f64,
+    pi: u32,
+    base_plan: Option<Plan>,
+    baseline_d2c: Option<f64>,
+    decentralized: bool,
+    anchor: Option<usize>,
+    prev_rosters: Vec<usize>,
+}
+
+/// Roster-churn fraction above which the controller decentralizes.
+const CHURN_ENTER: f64 = 0.25;
+/// Churn must fall back below this before recentralizing.
+const CHURN_EXIT: f64 = 0.10;
+
+impl FloatingAggregation {
+    pub fn new(threshold: f64, pi: u32) -> FloatingAggregation {
+        FloatingAggregation {
+            threshold,
+            pi: pi.max(1),
+            base_plan: None,
+            baseline_d2c: None,
+            decentralized: false,
+            anchor: None,
+            prev_rosters: Vec::new(),
+        }
+    }
+
+    /// Fraction of devices that moved since the previous round:
+    /// `Σ|rosterᵢ(t) − rosterᵢ(t−1)| / Σrosterᵢ(t−1)`.
+    fn churn(&self, t: &RoundTelemetry) -> f64 {
+        if self.prev_rosters.is_empty() {
+            return 0.0;
+        }
+        let prev_total: usize = self.prev_rosters.iter().sum();
+        if prev_total == 0 {
+            return 0.0;
+        }
+        let moved: usize = t
+            .clusters
+            .iter()
+            .map(|c| {
+                let prev = self.prev_rosters.get(c.cluster).copied().unwrap_or(0);
+                c.roster.abs_diff(prev)
+            })
+            .sum();
+        moved as f64 / prev_total as f64
+    }
+
+    /// Largest alive cluster; ties break to the lowest index.
+    fn pick_anchor(t: &RoundTelemetry) -> Option<usize> {
+        t.clusters
+            .iter()
+            .filter(|c| c.alive && c.roster > 0)
+            .max_by(|a, b| a.roster.cmp(&b.roster).then(b.cluster.cmp(&a.cluster)))
+            .map(|c| c.cluster)
+    }
+}
+
+impl Controller for FloatingAggregation {
+    fn name(&self) -> String {
+        format!("floating:{}", self.threshold)
+    }
+
+    fn decide(&mut self, _round: usize, telemetry: Option<&RoundTelemetry>, plan: &Plan)
+        -> Decision {
+        if self.base_plan.is_none() {
+            self.base_plan = Some(plan.clone());
+        }
+        let Some(t) = telemetry else {
+            return Decision::keep();
+        };
+        let baseline = *self.baseline_d2c.get_or_insert(t.b_d2c);
+        let churn = self.churn(t);
+        self.prev_rosters = {
+            let max_idx =
+                t.clusters.iter().map(|c| c.cluster).max().map_or(0, |m| m + 1);
+            let mut rosters = vec![0usize; max_idx];
+            for c in &t.clusters {
+                rosters[c.cluster] = c.roster;
+            }
+            rosters
+        };
+
+        let mut decision = Decision::keep();
+        let mut notes: Vec<String> = Vec::new();
+
+        // Anchor migration (provenance only; arithmetic is host-symmetric).
+        let anchor = Self::pick_anchor(t);
+        if anchor.is_some() && anchor != self.anchor {
+            let c = anchor.unwrap();
+            if self.anchor.is_some() {
+                notes.push(format!("aggregator->c{c}"));
+            }
+            self.anchor = anchor;
+            decision.aggregator = anchor;
+        }
+
+        // Plan rewriting only makes sense if the base plan aggregates in
+        // the cloud at all.
+        let base = self.base_plan.as_ref().expect("base plan captured above");
+        if base.has_cloud_aggregate() {
+            let degraded = t.b_d2c < self.threshold * baseline;
+            let churny = churn > CHURN_ENTER;
+            let anchor_dead = !t.aggregator_alive;
+            if !self.decentralized && (degraded || churny || anchor_dead) {
+                self.decentralized = true;
+                decision.plan = Some(base.decentralize(self.pi));
+                let why = if degraded {
+                    format!("d2c {:.0} < {:.0}", t.b_d2c, self.threshold * baseline)
+                } else if churny {
+                    format!("churn {churn:.2}")
+                } else {
+                    "aggregator lost".into()
+                };
+                notes.push(format!("cloud->gossip ({why})"));
+            } else if self.decentralized {
+                // Exit hysteresis: halfway between threshold and 1.0.
+                let exit_at = baseline * (self.threshold + 1.0) / 2.0;
+                if t.b_d2c >= exit_at && churn <= CHURN_EXIT && t.aggregator_alive {
+                    self.decentralized = false;
+                    decision.plan = Some(base.clone());
+                    notes.push("gossip->cloud (links recovered)".into());
+                }
+            }
+        }
+
+        if !notes.is_empty() {
+            decision.note = notes.join("; ");
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telemetry(rosters: &[usize], b_d2c: f64) -> RoundTelemetry {
+        RoundTelemetry {
+            round: 0,
+            clusters: rosters
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| ClusterTelemetry {
+                    cluster: i,
+                    alive: r > 0,
+                    roster: r,
+                    report_s: vec![0.5, 1.0, 1.5, 9.0],
+                    on_time: r,
+                    late: 0,
+                    dropped: 0,
+                })
+                .collect(),
+            close_reasons: [0; 4],
+            backhaul_s: 0.0,
+            b_d2c,
+            b_e2e: 5e7,
+            aggregator_alive: true,
+        }
+    }
+
+    #[test]
+    fn static_controller_always_keeps() {
+        let mut c = Static;
+        assert!(c.is_static());
+        let plan = Plan::parse("edge(2)@cloud; cloud").unwrap();
+        let t = telemetry(&[4, 4], 1e6);
+        for round in 0..5 {
+            let d = c.decide(round, Some(&t), &plan);
+            assert!(d.is_keep());
+            assert_eq!(d.note, "-");
+        }
+    }
+
+    #[test]
+    fn fit_is_total_and_clamped() {
+        // Empty / garbage samples degrade to the full barrier.
+        assert_eq!(fit(&[], 8), (8, f64::INFINITY));
+        assert_eq!(fit(&[f64::NAN, -1.0, f64::INFINITY], 8), (8, f64::INFINITY));
+        assert_eq!(fit(&[], 0).0, 1, "empty cluster still yields k >= 1");
+        // A tight pack plus one straggler: k excludes the straggler.
+        let (k, t) = fit(&[1.0, 1.1, 1.2, 1.3, 50.0], 5);
+        assert_eq!(k, 4);
+        assert!(t >= 50.0, "timeout covers the observed p99: {t}");
+        // Homogeneous reports keep the barrier (everyone is in the pack).
+        let (k, _) = fit(&[2.0, 2.0, 2.0, 2.0], 4);
+        assert_eq!(k, 4);
+        // All-zero samples: cutoff 0, pack = everyone, timeout sanitized.
+        let (k, t) = fit(&[0.0, 0.0], 4);
+        assert_eq!(k, 4);
+        assert!(t.is_infinite());
+    }
+
+    #[test]
+    fn adaptive_emits_valid_specs_and_windows() {
+        let mut c = AdaptiveSemiSync::new(2);
+        let plan = Plan::parse("edge(2)@cloud; cloud").unwrap();
+        assert!(c.decide(0, None, &plan).is_keep(), "no telemetry -> keep");
+        let t = telemetry(&[4, 0, 6], 1e6);
+        for round in 1..5 {
+            let d = c.decide(round, Some(&t), &plan);
+            let pols = d.policies.expect("telemetry present -> refit");
+            // Dead cluster 1 is skipped; the rest parse and clamp.
+            assert_eq!(pols.len(), 2);
+            for (ci, spec) in &pols {
+                assert_ne!(*ci, 1);
+                let kind = crate::config::AggPolicyKind::parse(spec).unwrap();
+                let crate::config::AggPolicyKind::SemiSync { k, timeout_s } = kind else {
+                    panic!("adaptive must emit kofn specs, got {spec}");
+                };
+                let n = t.clusters[*ci].roster;
+                assert!(k >= 1 && k <= n, "k={k} out of [1,{n}]");
+                assert!(timeout_s.is_infinite() || timeout_s > 0.0);
+            }
+            assert!(!d.note.contains(','), "CSV notes must be comma-free");
+        }
+        assert_eq!(c.history.len(), 2, "window truncates history");
+    }
+
+    #[test]
+    fn floating_enters_and_exits_with_hysteresis() {
+        let mut c = FloatingAggregation::new(0.5, 3);
+        let plan = Plan::parse("edge(2)@cloud; cloud").unwrap();
+        assert!(c.decide(0, None, &plan).is_keep());
+        // Healthy baseline round: anchor settles, plan untouched.
+        let d = c.decide(1, Some(&telemetry(&[4, 6], 1e6)), &plan);
+        assert!(d.plan.is_none());
+        assert_eq!(d.aggregator, Some(1), "largest cluster anchors");
+        // Mild degradation (60% of baseline) stays centralized.
+        let d = c.decide(2, Some(&telemetry(&[4, 6], 6e5)), &plan);
+        assert!(d.plan.is_none());
+        // Below threshold: decentralize, cloud becomes gossip(pi).
+        let d = c.decide(3, Some(&telemetry(&[4, 6], 4e5)), &plan);
+        let rewritten = d.plan.expect("threshold crossing rewrites the plan");
+        assert!(rewritten.has_gossip() && !rewritten.has_cloud_aggregate());
+        assert!(d.note.starts_with("cloud->gossip"));
+        // Recovery to 60% is inside the hysteresis band: stay gossip.
+        let gossip_plan = rewritten.clone();
+        let d = c.decide(4, Some(&telemetry(&[4, 6], 6e5)), &gossip_plan);
+        assert!(d.plan.is_none(), "hysteresis holds at 60%");
+        // Full recovery past (threshold+1)/2 = 75%: restore the base plan.
+        let d = c.decide(5, Some(&telemetry(&[4, 6], 9e5)), &gossip_plan);
+        let restored = d.plan.expect("recovery restores the base plan");
+        assert_eq!(format!("{restored}"), format!("{plan}"));
+        assert!(d.note.contains("gossip->cloud"));
+    }
+
+    #[test]
+    fn floating_reacts_to_churn_and_anchor_death() {
+        let mut c = FloatingAggregation::new(0.5, 2);
+        let plan = Plan::parse("edge(1); cloud").unwrap();
+        c.decide(0, None, &plan);
+        c.decide(1, Some(&telemetry(&[10, 10], 1e6)), &plan);
+        // 6 of 20 devices moved: churn 0.3 > 0.25 enters gossip.
+        let d = c.decide(2, Some(&telemetry(&[7, 13], 1e6)), &plan);
+        assert!(d.plan.is_some(), "churn crossing decentralizes");
+        assert!(d.note.contains("churn"));
+
+        // Anchor death also triggers entry.
+        let mut c = FloatingAggregation::new(0.5, 2);
+        c.decide(0, None, &plan);
+        c.decide(1, Some(&telemetry(&[10, 10], 1e6)), &plan);
+        let mut t = telemetry(&[10, 10], 1e6);
+        t.aggregator_alive = false;
+        let d = c.decide(2, Some(&t), &plan);
+        assert!(d.plan.is_some());
+        assert!(d.note.contains("aggregator lost"));
+    }
+
+    #[test]
+    fn build_matches_kind_names() {
+        let pairs = [
+            (ControllerKind::Static, "static"),
+            (ControllerKind::AdaptiveSemiSync { window: 3 }, "adaptive:3"),
+            (ControllerKind::FloatingAggregation { threshold: 0.5 }, "floating:0.5"),
+        ];
+        for (kind, name) in pairs {
+            assert_eq!(build(kind, 4).name(), name);
+            assert_eq!(kind.name(), name);
+        }
+        assert!(build(ControllerKind::Static, 4).is_static());
+        assert!(!build(ControllerKind::AdaptiveSemiSync { window: 3 }, 4).is_static());
+    }
+}

@@ -19,7 +19,7 @@ use std::time::Instant;
 use crate::config::{ExperimentConfig, LatencyMode};
 use crate::coordinator::{ClusterPhase, Coordinator, RoundStats};
 use crate::error::{CfelError, Result};
-use crate::metrics::{History, RoundRecord};
+use crate::metrics::{report_quantiles, History, RoundRecord};
 use crate::netsim::{DeviceTimings, EventDrivenEstimator, RoundTiming, UploadChannel};
 use crate::plan::Step;
 use crate::util::stats::merge_steps;
@@ -36,10 +36,13 @@ pub trait ClusterExecutor {
     fn clusters(&self) -> &[usize];
 
     /// Apply the round boundary (scheduled fault + timeline events) for
-    /// `round`. Each executor replays the boundary itself — world
-    /// changes are a deterministic function of (config, round), so no
-    /// state needs shipping.
-    fn begin_round(&mut self, round: usize) -> Result<()>;
+    /// `round`, then install `policies` — the driver's full per-cluster
+    /// close-policy override set for the round (empty = config-wide
+    /// policy everywhere). Each executor replays the boundary itself —
+    /// world changes are a deterministic function of (config, round), so
+    /// no state needs shipping; the overrides *are* shipped because the
+    /// controller decides cloud-side only (edges never see telemetry).
+    fn begin_round(&mut self, round: usize, policies: &[(usize, String)]) -> Result<()>;
 
     /// Issue the edge-phase work order (may return before the work is
     /// done).
@@ -56,13 +59,16 @@ pub trait ClusterExecutor {
 
     /// Rebuild the executor's world from scratch: fresh state from the
     /// config, the round boundaries `0..rounds_applied` replayed, then
-    /// `models` / `clocks` installed. Used when a failed round is
-    /// retried — every executor restarts from the driver's snapshot.
+    /// `models` / `clocks` / `policies` installed. Used when a failed
+    /// round is retried — every executor restarts from the driver's
+    /// snapshot. The recovery path replays `reinit` *without* a
+    /// `begin_round`, so the current policy overrides must ride here too.
     fn reinit(
         &mut self,
         rounds_applied: usize,
         models: &[(usize, &[f32])],
         clocks: &[(usize, f64)],
+        policies: &[(usize, String)],
     ) -> Result<()>;
 
     /// Release the executor (close connections; no-op in-process).
@@ -158,9 +164,10 @@ impl ClusterExecutor for LocalExecutor {
         &self.owned
     }
 
-    fn begin_round(&mut self, round: usize) -> Result<()> {
+    fn begin_round(&mut self, round: usize, policies: &[(usize, String)]) -> Result<()> {
         self.coord.apply_fault(round)?;
-        self.coord.apply_timeline(round)
+        self.coord.apply_timeline(round)?;
+        self.coord.set_cluster_policies(policies)
     }
 
     fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()> {
@@ -186,10 +193,12 @@ impl ClusterExecutor for LocalExecutor {
         rounds_applied: usize,
         models: &[(usize, &[f32])],
         clocks: &[(usize, f64)],
+        policies: &[(usize, String)],
     ) -> Result<()> {
         self.coord = rebuild_world(&self.cfg, rounds_applied)?;
         self.pending_phase = None;
-        install_state(&mut self.coord, models, clocks)
+        install_state(&mut self.coord, models, clocks)?;
+        self.coord.set_cluster_policies(policies)
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -208,6 +217,9 @@ pub type RecoverFn = Box<dyn FnMut(usize) -> Result<Box<dyn ClusterExecutor>>>;
 struct BoundarySnapshot {
     models: Vec<Vec<f32>>,
     clocks: Vec<f64>,
+    /// The global edge-phase cursor at the boundary (the controller may
+    /// have rewritten the plan, so the cursor is state, not arithmetic).
+    cursor: u64,
 }
 
 /// The cloud-side distributed plan interpreter. See the module docs.
@@ -224,6 +236,10 @@ pub struct DistRunner {
     /// retry is only sound from an empty pending state: kept-late model
     /// payloads live edge-side only and die with the edge process.
     last_pending: Vec<usize>,
+    /// The controller's per-cluster policy overrides for the round in
+    /// flight — decided once per boundary on the mirror, shipped with
+    /// every `begin_round`/`reinit` so retries replay the same decision.
+    current_policies: Vec<(usize, String)>,
     pub verbose: bool,
 }
 
@@ -264,6 +280,7 @@ impl DistRunner {
             recovery: None,
             max_retries: 0,
             last_pending: vec![0; n],
+            current_policies: Vec::new(),
             verbose: false,
         })
     }
@@ -285,7 +302,7 @@ impl DistRunner {
 
     fn begin_all(&mut self, round: usize) -> Result<()> {
         for ex in &mut self.executors {
-            ex.begin_round(round)?;
+            ex.begin_round(round, &self.current_policies)?;
         }
         Ok(())
     }
@@ -314,9 +331,12 @@ impl DistRunner {
     }
 
     /// Distributed mirror of [`Coordinator::plan_round`].
-    fn plan_round_dist(&mut self, round: usize) -> Result<RoundStats> {
+    fn plan_round_dist(&mut self, _round: usize) -> Result<RoundStats> {
         let plan = self.coord.plan.clone();
-        let base_phase = round as u64 * plan.edge_phases() as u64;
+        // Same running cursor as `Coordinator::plan_round`; advanced only
+        // on success, so a retried round restarts from the same phase
+        // numbering.
+        let base_phase = self.coord.phase_cursor;
         let mut stats = RoundStats {
             timing: RoundTiming {
                 device_timings: DeviceTimings::acquire(0),
@@ -326,6 +346,7 @@ impl DistRunner {
         };
         let mut idx = 0u64;
         self.exec_steps_dist(&plan.steps, base_phase, &mut idx, &mut stats)?;
+        self.coord.phase_cursor = base_phase + idx;
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
         Ok(stats)
     }
@@ -416,6 +437,7 @@ impl DistRunner {
             self.coord.clusters[ci].model.copy_from_slice(m);
         }
         self.coord.cluster_clock_s.copy_from_slice(&snap.clocks);
+        self.coord.phase_cursor = snap.cursor;
         if let Some(ci) = failed_cluster {
             let slot = self.owner[ci];
             let recover = self
@@ -441,7 +463,7 @@ impl DistRunner {
             .collect();
         let clocks: Vec<(usize, f64)> = snap.clocks.iter().copied().enumerate().collect();
         for ex in &mut self.executors {
-            ex.reinit(round + 1, &models, &clocks)?;
+            ex.reinit(round + 1, &models, &clocks, &self.current_policies)?;
         }
         Ok(())
     }
@@ -462,18 +484,25 @@ impl DistRunner {
         let mut snapshot = BoundarySnapshot {
             models: Vec::new(),
             clocks: Vec::new(),
+            cursor: 0,
         };
         while round < rounds {
             let t0 = Instant::now();
             if !boundary_done {
                 self.coord.apply_fault(round)?;
                 self.coord.apply_timeline(round)?;
+                // The controller decides exactly once per boundary, on
+                // the mirror; a retried round replays the same override
+                // set from `current_policies`, never re-decides.
+                self.coord.control_round(round)?;
+                self.current_policies = self.coord.policy_overrides();
                 // Snapshot *after* the boundary: fault/timeline events
                 // must apply exactly once, so a retried round restores
                 // this state and skips re-application.
                 snapshot = BoundarySnapshot {
                     models: self.coord.clusters.iter().map(|c| c.model.clone()).collect(),
                     clocks: self.coord.cluster_clock_s.clone(),
+                    cursor: self.coord.phase_cursor,
                 };
                 boundary_done = true;
             }
@@ -517,6 +546,8 @@ impl DistRunner {
                 } else {
                     (f64::NAN, f64::NAN)
                 };
+            let (report_p50_s, report_p90_s, report_p99_s) =
+                report_quantiles(&stats.timing.device_timings.finish_s);
             let rec = RoundRecord {
                 round: round + 1,
                 sim_time_s: sim_time,
@@ -534,6 +565,10 @@ impl DistRunner {
                 test_loss: tloss,
                 consensus: self.coord.consensus(),
                 steps: stats.step_count,
+                report_p50_s,
+                report_p90_s,
+                report_p99_s,
+                decision: self.coord.take_decision_note(),
             };
             if self.verbose {
                 eprintln!(
@@ -550,6 +585,10 @@ impl DistRunner {
                 );
             }
             history.push(rec);
+            // Telemetry extraction must precede the recycle — the mirror
+            // feeds the next boundary's decision exactly as the
+            // in-process interpreter does.
+            self.coord.capture_telemetry(round, &stats, &lat);
             stats.timing.recycle();
             boundary_done = false;
             skip_begin = false;

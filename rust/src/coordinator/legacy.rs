@@ -197,6 +197,8 @@ impl Coordinator {
             } else {
                 (f64::NAN, f64::NAN)
             };
+            let (report_p50, report_p90, report_p99) =
+                crate::metrics::report_quantiles(&stats.timing.device_timings.finish_s);
             let rec = RoundRecord {
                 round: round + 1,
                 sim_time_s: sim_time,
@@ -214,6 +216,12 @@ impl Coordinator {
                 test_loss: tloss,
                 consensus: self.consensus(),
                 steps: stats.step_count,
+                report_p50_s: report_p50,
+                report_p90_s: report_p90,
+                report_p99_s: report_p99,
+                // The legacy loop predates the control plane and never
+                // hosts a controller.
+                decision: "-".into(),
             };
             if self.verbose {
                 eprintln!(

@@ -26,15 +26,18 @@ pub use trainer::{ClusterPhase, LocalOutcome};
 use std::time::Instant;
 
 use crate::aggregation;
-use crate::aggregation::policy::AggregationPolicy;
-use crate::config::{BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode};
+use crate::aggregation::policy::{AggregationPolicy, ReportVerdict};
+use crate::config::{
+    AggPolicyKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode,
+};
+use crate::control::{ClusterTelemetry, Controller, Decision, RoundTelemetry};
 use crate::data::sampler::eval_batches;
 use crate::data::synthetic::{
     femnist_federation, pool_federation, FederatedData, SyntheticSpec,
 };
 use crate::data::{partition, Batch};
 use crate::error::{CfelError, Result};
-use crate::metrics::{History, RoundRecord};
+use crate::metrics::{report_quantiles, History, RoundRecord};
 use crate::netsim::{
     ClosedFormEstimator, DeviceTimings, EventDrivenEstimator, LatencyEstimator, NetworkModel,
     RoundLatency, RoundTiming,
@@ -155,6 +158,23 @@ pub struct Coordinator {
     pub(crate) cluster_clock_s: Vec<f64>,
     /// Kept-late reports per cluster, awaiting their stale merge.
     pub(crate) pending: Vec<Vec<PendingReport>>,
+    /// Per-cluster close-policy overrides installed by the controller:
+    /// `(spec string, built policy)`; `None` falls back to the
+    /// config-wide `policy`. The spec string is the wire/provenance form
+    /// ([`AggPolicyKind`] grammar).
+    pub(crate) cluster_policy: Vec<Option<(String, Box<dyn AggregationPolicy>)>>,
+    /// Round-boundary controller (config `controller`; `Static` default).
+    pub(crate) controller: Box<dyn Controller>,
+    /// Telemetry captured from the last completed round (non-static
+    /// controllers only), consumed by the next boundary's decision.
+    pub(crate) last_telemetry: Option<RoundTelemetry>,
+    /// Provenance note of the decision applied at this round's boundary.
+    pub(crate) decision_note: Option<String>,
+    /// Global edge-phase counter. Plan rewriting can change the per-round
+    /// phase count, so phase numbering is a running cursor; for a fixed
+    /// plan it equals `round · plan.edge_phases()` exactly — the
+    /// historical numbering, bit for bit.
+    pub(crate) phase_cursor: u64,
     /// Scratch buffer reused by gossip.
     pub(crate) scratch: Vec<f32>,
     /// Verbose per-round logging.
@@ -256,6 +276,7 @@ impl Coordinator {
 
         let eval_set = eval_batches(&fed.test, backend.batch_size());
         let n_clusters = cfg.n_clusters;
+        let controller = crate::control::build(cfg.controller, cfg.pi);
         Ok(Coordinator {
             cfg,
             plan,
@@ -276,6 +297,11 @@ impl Coordinator {
             aggregator_alive: true,
             cluster_clock_s: vec![0.0; n_clusters],
             pending: vec![Vec::new(); n_clusters],
+            cluster_policy: (0..n_clusters).map(|_| None).collect(),
+            controller,
+            last_telemetry: None,
+            decision_note: None,
+            phase_cursor: 0,
             scratch: Vec::new(),
             verbose: false,
         })
@@ -610,6 +636,143 @@ impl Coordinator {
         }
     }
 
+    // ----- the control plane -----------------------------------------------
+
+    /// Install the controller's per-cluster close-policy overrides: a
+    /// full replacement set (clusters absent from `overrides` fall back
+    /// to the config-wide policy). Specs go through
+    /// [`AggPolicyKind::parse`], so decisions, the decision log, and the
+    /// distributed wire all share one grammar — and f64 `Display` being
+    /// shortest-roundtrip makes install(spec) bit-identical on every
+    /// host that parses the same string.
+    pub fn set_cluster_policies(&mut self, overrides: &[(usize, String)]) -> Result<()> {
+        for slot in self.cluster_policy.iter_mut() {
+            *slot = None;
+        }
+        for (ci, spec) in overrides {
+            if *ci >= self.cluster_policy.len() {
+                return Err(CfelError::Config(format!(
+                    "policy override for unknown cluster {ci}"
+                )));
+            }
+            let built = AggPolicyKind::parse(spec)?.build(self.cfg.staleness_exp);
+            self.cluster_policy[*ci] = Some((spec.clone(), built));
+        }
+        Ok(())
+    }
+
+    /// The currently installed per-cluster overrides as `(cluster, spec)`
+    /// pairs — what the distributed driver ships to its edges.
+    pub fn policy_overrides(&self) -> Vec<(usize, String)> {
+        self.cluster_policy
+            .iter()
+            .enumerate()
+            .filter_map(|(ci, s)| s.as_ref().map(|(spec, _)| (ci, spec.clone())))
+            .collect()
+    }
+
+    /// Consult the controller at the boundary of `round` (after fault and
+    /// timeline application) and apply its decision. A static controller
+    /// returns immediately — the run is untouched, instruction for
+    /// instruction. Decisions are pure functions of the telemetry
+    /// stream, so every replay — any `CFEL_THREADS`, either side of the
+    /// executor seam — rewrites identically (docs/DETERMINISM.md).
+    pub(crate) fn control_round(&mut self, round: usize) -> Result<()> {
+        if self.controller.is_static() {
+            return Ok(());
+        }
+        // Refresh the world-state half of the telemetry: rosters and
+        // links must reflect what the *next* round actually sees, i.e.
+        // this boundary's timeline events.
+        let telemetry = self.last_telemetry.take().map(|mut t| {
+            for ct in &mut t.clusters {
+                ct.alive = self.alive[ct.cluster];
+                ct.roster = self.clusters[ct.cluster].device_ids.len();
+            }
+            t.b_d2c = self.net.b_d2c;
+            t.b_e2e = self.net.b_e2e;
+            t.aggregator_alive = self.aggregator_alive;
+            t
+        });
+        let decision = self.controller.decide(round, telemetry.as_ref(), &self.plan);
+        self.apply_decision(decision)
+    }
+
+    /// Install one [`Decision`]: validate and swap the plan (rebuilding
+    /// the gossip mixing matrices when the rewrite introduces gossip),
+    /// install the policy overrides, and park the provenance note for
+    /// this round's CSV row.
+    pub(crate) fn apply_decision(&mut self, d: Decision) -> Result<()> {
+        let Decision { plan, policies, aggregator: _, note } = d;
+        if let Some(new_plan) = plan {
+            new_plan.validate()?;
+            if new_plan.has_gossip() && !self.plan.has_gossip() {
+                // The constructor builds H^π eagerly, but fault/timeline
+                // rebuilds skip gossip-free plans — entering gossip
+                // re-derives it from the current graph.
+                self.h_pi = MixingMatrix::metropolis(&self.graph).power(self.cfg.pi);
+                self.h_cache.clear();
+            }
+            self.plan = new_plan;
+        }
+        if let Some(overrides) = policies {
+            self.set_cluster_policies(&overrides)?;
+        }
+        if note != "-" {
+            self.decision_note = Some(note);
+        }
+        Ok(())
+    }
+
+    /// The decision note to log for the round now closing (`"-"` if the
+    /// boundary kept everything).
+    pub(crate) fn take_decision_note(&mut self) -> String {
+        self.decision_note.take().unwrap_or_else(|| "-".into())
+    }
+
+    /// Extract the finished round's telemetry for the next boundary's
+    /// decision. Skipped entirely for static controllers — zero overhead,
+    /// zero behavioural delta. Device→cluster attribution uses the
+    /// current membership map, which is exactly the membership the round
+    /// trained under: timeline events only run at boundaries.
+    pub(crate) fn capture_telemetry(
+        &mut self,
+        round: usize,
+        stats: &RoundStats,
+        lat: &RoundLatency,
+    ) {
+        if self.controller.is_static() {
+            return;
+        }
+        let mut clusters: Vec<ClusterTelemetry> = (0..self.clusters.len())
+            .map(|ci| ClusterTelemetry { cluster: ci, ..ClusterTelemetry::default() })
+            .collect();
+        let dt = &stats.timing.device_timings;
+        for i in 0..dt.device.len() {
+            let Some(ci) = self.device_cluster[dt.device[i]] else {
+                continue;
+            };
+            let ct = &mut clusters[ci];
+            ct.report_s.push(dt.finish_s[i]);
+            match dt.verdict[i] {
+                ReportVerdict::OnTime => ct.on_time += 1,
+                ReportVerdict::Late => ct.late += 1,
+                ReportVerdict::Dropped => ct.dropped += 1,
+            }
+        }
+        // Roster / link fields are refreshed at the next boundary, after
+        // its timeline events; see `control_round`.
+        self.last_telemetry = Some(RoundTelemetry {
+            round,
+            clusters,
+            close_reasons: stats.timing.close_reasons,
+            backhaul_s: lat.backhaul_s,
+            b_d2c: self.net.b_d2c,
+            b_e2e: self.net.b_e2e,
+            aggregator_alive: self.aggregator_alive,
+        });
+    }
+
     // ----- the plan interpreter --------------------------------------------
 
     /// Execute one global round of the active plan. This is the single
@@ -622,9 +785,13 @@ impl Coordinator {
     /// plan.edge_phases() + index-within-round` — which keys the
     /// deterministic per-(phase, device) RNG streams and the staleness
     /// arithmetic exactly as the retired per-algorithm loops did.
-    pub(crate) fn plan_round(&mut self, round: usize) -> Result<RoundStats> {
+    pub(crate) fn plan_round(&mut self, _round: usize) -> Result<RoundStats> {
         let plan = self.plan.clone();
-        let base_phase = round as u64 * plan.edge_phases() as u64;
+        // Phase numbering comes from the running cursor so the control
+        // plane can rewrite the plan mid-run without perturbing the
+        // global counter; for a fixed plan the cursor equals
+        // `round · edge_phases()`, the historical numbering, bit for bit.
+        let base_phase = self.phase_cursor;
         // The round accumulator's device columns come from the free list
         // so steady-state rounds append into recycled capacity (paired
         // with `RoundTiming::recycle` in `run`).
@@ -637,6 +804,7 @@ impl Coordinator {
         };
         let mut idx = 0u64;
         self.exec_steps(&plan.steps, base_phase, &mut idx, &mut stats)?;
+        self.phase_cursor = base_phase + idx;
         // Eq. 8 wants per-device steps of the *whole* global round.
         stats.device_steps = merge_steps(std::mem::take(&mut stats.device_steps));
         Ok(stats)
@@ -744,6 +912,7 @@ impl Coordinator {
             let t0 = Instant::now();
             self.apply_fault(round)?;
             self.apply_timeline(round)?;
+            self.control_round(round)?;
             let mut stats = self.plan_round(round)?;
             wall += t0.elapsed().as_secs_f64();
             let lat = self.round_latency(&stats);
@@ -756,6 +925,8 @@ impl Coordinator {
             } else {
                 (f64::NAN, f64::NAN)
             };
+            let (report_p50_s, report_p90_s, report_p99_s) =
+                report_quantiles(&stats.timing.device_timings.finish_s);
             let rec = RoundRecord {
                 round: round + 1,
                 sim_time_s: sim_time,
@@ -773,6 +944,10 @@ impl Coordinator {
                 test_loss: tloss,
                 consensus: self.consensus(),
                 steps: stats.step_count,
+                report_p50_s,
+                report_p90_s,
+                report_p99_s,
+                decision: self.take_decision_note(),
             };
             if self.verbose {
                 let mut extras = String::new();
@@ -801,6 +976,9 @@ impl Coordinator {
                 );
             }
             history.push(rec);
+            // Telemetry extraction must precede the recycle below — the
+            // per-device columns are about to go back to the free list.
+            self.capture_telemetry(round, &stats, &lat);
             // The record is derived; return the round's device-timing
             // columns to the free list for the next round.
             stats.timing.recycle();

@@ -1,7 +1,7 @@
 //! Device-local training: τ epochs of mini-batch SGD from the edge model
 //! (paper Eqs. 4–5, epoch semantics following Reddi et al. [42]).
 
-use crate::aggregation::policy::ReportVerdict;
+use crate::aggregation::policy::{AggregationPolicy, ReportVerdict};
 use crate::coordinator::{
     ClusterState, Coordinator, PendingReport, RoundContext, RoundStats, WeightedReport,
 };
@@ -287,9 +287,17 @@ impl Coordinator {
             .iter()
             .map(|outs| outs.iter().map(|(dev, out)| (*dev, out.steps)).collect())
             .collect();
-        let Some(pts) =
+        // Controller-installed per-cluster policies take the grouped
+        // path; without overrides (every static run) this is the exact
+        // single batched call the interpreter has always made.
+        let has_overrides = alive.iter().any(|&ci| self.cluster_policy[ci].is_some());
+        let pts_opt = if has_overrides {
+            self.phase_timings_grouped(&alive, &work_lists, channel)
+        } else {
             self.latency
                 .phase_timings(&self.net, &work_lists, channel, &*self.policy)
+        };
+        let Some(pts) = pts_opt
         else {
             // Closed-form: no close policy in play, everyone merges.
             for (slot, &ci) in alive.iter().enumerate() {
@@ -350,6 +358,14 @@ impl Coordinator {
                 // Timeout/deadline fired before any report (and nothing
                 // stale arrived): keep the previous edge model.
             } else {
+                // Stale merges discount with the cluster's *effective*
+                // policy — the controller override when installed, the
+                // config-wide policy otherwise (the only policy that can
+                // have parked the report in a static run).
+                let pol: &dyn AggregationPolicy = match &self.cluster_policy[ci] {
+                    Some((_, p)) => &**p,
+                    None => &*self.policy,
+                };
                 let reports: Vec<WeightedReport> = on_time
                     .iter()
                     .map(|(_, o)| WeightedReport {
@@ -360,7 +376,7 @@ impl Coordinator {
                     .chain(stale.iter().map(|p| WeightedReport {
                         params: &p.params,
                         n_samples: p.n_samples,
-                        discount: self.policy.staleness_discount(phase - p.origin_phase),
+                        discount: pol.staleness_discount(phase - p.origin_phase),
                     }))
                     .collect();
                 ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
@@ -371,6 +387,46 @@ impl Coordinator {
             phases[slot].timing = Some(pt);
         }
         Ok(phases)
+    }
+
+    /// [`LatencyEstimator::phase_timings`](crate::netsim::LatencyEstimator::phase_timings)
+    /// with controller-installed per-cluster policies: alive slots are
+    /// grouped by effective policy spec (first-occurrence order) and each
+    /// group rides one batched call, results scattered back into slot
+    /// order. Each cluster's phase is simulated on its own independent
+    /// event-engine shard, so the grouping cannot change any cluster's
+    /// timing — only how the shards are batched into calls.
+    fn phase_timings_grouped(
+        &self,
+        alive: &[usize],
+        work_lists: &[Vec<(usize, usize)>],
+        channel: UploadChannel,
+    ) -> Option<Vec<PhaseTiming>> {
+        let spec_of = |ci: usize| -> &str {
+            self.cluster_policy[ci].as_ref().map_or("", |(s, _)| s.as_str())
+        };
+        // (representative cluster, member slots) per distinct spec.
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (slot, &ci) in alive.iter().enumerate() {
+            match groups.iter_mut().find(|(rep, _)| spec_of(*rep) == spec_of(ci)) {
+                Some((_, slots)) => slots.push(slot),
+                None => groups.push((ci, vec![slot])),
+            }
+        }
+        let mut out: Vec<Option<PhaseTiming>> = (0..alive.len()).map(|_| None).collect();
+        for (rep, slots) in groups {
+            let policy: &dyn AggregationPolicy = match &self.cluster_policy[rep] {
+                Some((_, p)) => &**p,
+                None => &*self.policy,
+            };
+            let sub: Vec<Vec<(usize, usize)>> =
+                slots.iter().map(|&s| work_lists[s].clone()).collect();
+            let pts = self.latency.phase_timings(&self.net, &sub, channel, policy)?;
+            for (s, pt) in slots.into_iter().zip(pts) {
+                out[s] = Some(pt);
+            }
+        }
+        Some(out.into_iter().map(|p| p.expect("every alive slot grouped")).collect())
     }
 }
 

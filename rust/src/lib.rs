@@ -28,6 +28,7 @@
 pub mod aggregation;
 pub mod compression;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod error;

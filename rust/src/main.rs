@@ -17,8 +17,8 @@
 use std::path::PathBuf;
 
 use cfel::config::{
-    conflicting_options, AggPolicyKind, AlgorithmKind, BackendKind, DataScheme,
-    ExperimentConfig, LatencyMode,
+    conflicting_options, AggPolicyKind, AlgorithmKind, BackendKind, ControllerKind,
+    DataScheme, ExperimentConfig, LatencyMode,
 };
 use cfel::plan::Plan;
 use cfel::coordinator::Coordinator;
@@ -108,6 +108,11 @@ fn train_command() -> Command {
         .flag(
             "staleness-exp",
             "semi-sync staleness discount exponent a in 1/(1+s)^a [default: 1.0]",
+        )
+        .flag(
+            "controller",
+            "round-boundary control plane: static | adaptive[:<window>] | \
+             floating[:<threshold>] (adaptive/floating need --latency event)",
         )
         .flag("stragglers", "heavy-tail stragglers as <fraction>:<slowdown>, e.g. 0.1:50")
         .flag("csv", "write per-round history to this CSV file")
@@ -235,6 +240,21 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
         cfg.staleness_exp = a.parse().map_err(|_| {
             cfel::CfelError::Config(format!("invalid --staleness-exp value {a:?}"))
         })?;
+    }
+    if let Some(spec) = args.get("controller") {
+        // A controller rewrites the plan round by round, so naming the
+        // canned schedule it would overwrite is contradictory — the same
+        // explicit-vs-default split as `--plan` / `--algorithm` above.
+        if args.get("algorithm").is_some() && ControllerKind::parse(spec)? != ControllerKind::Static
+        {
+            return Err(conflicting_options(
+                "--controller",
+                "--algorithm",
+                "an adaptive controller rewrites the schedule per round; \
+                 start it from --plan instead",
+            ));
+        }
+        cfg.controller = ControllerKind::parse(spec)?;
     }
     cfg.backend = match args.get_or("backend", "mock").as_str() {
         "mock" => BackendKind::Mock { hidden: 32 },
@@ -386,6 +406,7 @@ fn print_dry_run(cfg: &ExperimentConfig) {
     println!("data:       {}", cfg.data.name());
     println!("latency:    {}", cfg.latency.name());
     println!("policy:     {}", cfg.resolved_policy().name());
+    println!("controller: {}", cfg.controller.name());
     let dormant = scenario.dormant_count();
     println!(
         "layout:     {} devices / {} clusters{}",

@@ -43,6 +43,17 @@ pub struct RoundRecord {
     pub consensus: f64,
     /// Total SGD steps executed this round (all devices).
     pub steps: usize,
+    /// Median device report time across the round's simulated phase
+    /// reports, seconds from phase start (NaN in closed-form mode — the
+    /// control plane's primary input, and useful telemetry on its own).
+    pub report_p50_s: f64,
+    /// 90th-percentile report time (nearest rank).
+    pub report_p90_s: f64,
+    /// 99th-percentile report time (nearest rank).
+    pub report_p99_s: f64,
+    /// The controller decision applied at this round's boundary
+    /// (comma-free provenance note; `"-"` when nothing was rewritten).
+    pub decision: String,
 }
 
 /// Full run history.
@@ -91,8 +102,28 @@ pub fn history_digest(history: &History) -> u64 {
         eat(&r.test_loss.to_bits().to_le_bytes());
         eat(&r.consensus.to_bits().to_le_bytes());
         eat(&(r.steps as u64).to_le_bytes());
+        // report_p50/p90/p99_s and decision deliberately skipped: the
+        // digest is fed by the original columns only, so pins recorded
+        // before the control plane landed stay valid.
     }
     h
+}
+
+/// Nearest-rank p50/p90/p99 of a report-time sample (seconds from phase
+/// start, any order). Empty input — closed-form mode simulates no
+/// per-device reports — yields NaNs, which the CSV writer renders as
+/// empty fields exactly like a skipped eval.
+pub fn report_quantiles(finish_s: &[f64]) -> (f64, f64, f64) {
+    if finish_s.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    let mut sorted = finish_s.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let q = |p: f64| -> f64 {
+        let rank = (p * sorted.len() as f64).ceil() as usize;
+        sorted[rank.max(1).min(sorted.len()) - 1]
+    };
+    (q(0.5), q(0.9), q(0.99))
 }
 
 /// Best accuracy seen in the run.
@@ -152,14 +183,29 @@ impl CsvWriter {
             r.late_devices.to_string(),
             r.stale_merged.to_string(),
             r.close_reason.clone(),
+            quantile_field(r.report_p50_s),
+            quantile_field(r.report_p90_s),
+            quantile_field(r.report_p99_s),
+            r.decision.clone(),
         ])
     }
 }
 
-/// Header matching [`CsvWriter::round_row`].
+/// Report-quantile CSV field: fixed precision, empty for NaN (closed-form
+/// mode), mirroring how skipped evals render.
+fn quantile_field(v: f64) -> String {
+    if v.is_nan() {
+        String::new()
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Header matching [`CsvWriter::round_row`]. The controller columns sit
+/// at the end so field indices of the original columns are stable.
 pub const ROUND_HEADER: &str = "series,round,sim_time_s,wall_time_s,train_loss,\
      test_accuracy,test_loss,consensus,steps,compute_s,upload_s,backhaul_s,dropped,\
-     on_time,late,stale,close_reason";
+     on_time,late,stale,close_reason,report_p50_s,report_p90_s,report_p99_s,decision";
 
 /// Render a small aligned markdown table.
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -197,6 +243,10 @@ mod tests {
             test_loss: 1.0,
             consensus: 0.0,
             steps: 10,
+            report_p50_s: f64::NAN,
+            report_p90_s: f64::NAN,
+            report_p99_s: f64::NAN,
+            decision: "-".into(),
         }
     }
 
@@ -229,6 +279,58 @@ mod tests {
         assert!(lines[1].contains("ce-fedavg,1,"));
         assert!(lines[2].contains(",,")); // NaN accuracy → empty field
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn report_quantiles_nearest_rank() {
+        let (p50, p90, p99) = report_quantiles(&[]);
+        assert!(p50.is_nan() && p90.is_nan() && p99.is_nan());
+        let samples: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let (p50, p90, p99) = report_quantiles(&samples);
+        assert_eq!((p50, p90, p99), (5.0, 9.0, 10.0));
+        // Unsorted input, single element, NaN-free ordering via total_cmp.
+        assert_eq!(report_quantiles(&[3.0]), (3.0, 3.0, 3.0));
+        assert_eq!(report_quantiles(&[2.0, 1.0]).0, 1.0);
+    }
+
+    #[test]
+    fn round_row_appends_controller_columns() {
+        let tmp = std::env::temp_dir()
+            .join(format!("cfel_csv_ctrl_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&tmp, ROUND_HEADER).unwrap();
+            let mut r = rec(1, 0.5, 2.0);
+            r.report_p50_s = 0.25;
+            r.report_p90_s = 0.5;
+            r.report_p99_s = 1.0;
+            r.decision = "refit 4 clusters k[2-5] t[0.8-1.2]".into();
+            w.round_row("adaptive", &r).unwrap();
+        }
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].ends_with("report_p50_s,report_p90_s,report_p99_s,decision"));
+        assert!(lines[1].ends_with(",0.2500,0.5000,1.0000,refit 4 clusters k[2-5] t[0.8-1.2]"));
+        assert_eq!(
+            lines[1].split(',').count(),
+            lines[0].split(',').count(),
+            "decision notes must stay comma-free"
+        );
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn digest_ignores_controller_columns() {
+        let base = vec![rec(1, 0.5, 2.0)];
+        let mut adorned = base.clone();
+        adorned[0].report_p50_s = 0.25;
+        adorned[0].report_p90_s = 0.5;
+        adorned[0].report_p99_s = 1.0;
+        adorned[0].decision = "cloud->gossip (d2c 100000 < 500000)".into();
+        assert_eq!(
+            history_digest(&base),
+            history_digest(&adorned),
+            "old digest pins must stay valid"
+        );
     }
 
     #[test]

@@ -107,8 +107,12 @@ impl Plan {
     }
 
     /// Effective number of edge phases one round executes (with
-    /// repetition) — the stride of the deterministic per-(phase, device)
-    /// RNG streams, so it must be a static property of the plan.
+    /// repetition) — how far one round advances the coordinator's phase
+    /// cursor, i.e. the stride of the deterministic per-(phase, device)
+    /// RNG streams. (The cursor accumulates executed phases, so a
+    /// controller may swap plans between rounds without reusing a
+    /// stream; for a fixed plan the cursor equals `round * edge_phases()`
+    /// exactly as before.)
     pub fn edge_phases(&self) -> usize {
         let c = self.comms();
         c.edge_uploads + c.cloud_uploads
@@ -236,6 +240,55 @@ impl Plan {
     pub fn spec(&self) -> String {
         self.to_string()
     }
+
+    // ----- Controller rewrites ----------------------------------------------
+    //
+    // The adaptive control plane (`control`) rewrites plans between
+    // rounds; these two renderings are the floating-aggregation-point
+    // moves of arXiv:2203.13950. Both preserve the edge-phase count, so
+    // a swapped plan consumes the same number of per-phase RNG streams
+    // as the one it replaces.
+
+    /// Decentralized rendering: every `cloud` aggregate becomes a
+    /// `gossip(pi)` consensus step and `@cloud` report phases come back
+    /// to the edge uplink — aggregation floats off the cloud entirely.
+    pub fn decentralize(&self, pi: u32) -> Plan {
+        let pi = pi.max(1);
+        fn walk(steps: &[Step], pi: u32) -> Vec<Step> {
+            steps
+                .iter()
+                .map(|s| match s {
+                    Step::CloudAggregate => Step::Gossip { pi },
+                    Step::EdgePhase { epochs, .. } => Step::EdgePhase {
+                        epochs: *epochs,
+                        channel: UploadChannel::DeviceEdge,
+                    },
+                    Step::Repeat { n, body } => {
+                        Step::Repeat { n: *n, body: walk(body, pi) }
+                    }
+                    other => other.clone(),
+                })
+                .collect()
+        }
+        Plan { steps: walk(&self.steps, pi) }
+    }
+
+    /// Centralized rendering: every `gossip` step becomes a cloud
+    /// aggregation (the inverse move of [`Plan::decentralize`]; report
+    /// channels are left as written).
+    pub fn centralize(&self) -> Plan {
+        fn walk(steps: &[Step]) -> Vec<Step> {
+            steps
+                .iter()
+                .map(|s| match s {
+                    Step::Gossip { .. } => Step::CloudAggregate,
+                    Step::Repeat { n, body } => Step::Repeat { n: *n, body: walk(body) },
+                    other => other.clone(),
+                })
+                .collect()
+        }
+        Plan { steps: walk(&self.steps) }
+    }
 }
 
 impl fmt::Display for Step {
@@ -347,6 +400,27 @@ mod tests {
         let p = Plan::from_steps(vec![edge(1), Step::Repeat { n: 2, body: vec![] }]);
         assert!(p.validate().is_err(), "empty repeat body accepted");
         Plan::from_steps(vec![edge(1)]).validate().unwrap();
+    }
+
+    #[test]
+    fn controller_rewrites_swap_aggregation_point() {
+        // FedAvg's canned shape decentralizes into pure edge + gossip...
+        let p = Plan::parse("edge(4)@cloud; cloud").unwrap();
+        let d = p.decentralize(10);
+        assert_eq!(d.to_string(), "edge(4); gossip(10)");
+        assert_eq!(d.edge_phases(), p.edge_phases());
+        d.validate().unwrap();
+        // ...and the inverse move recentralizes a gossip plan.
+        let g = Plan::parse("(edge(2); gossip(3))*2").unwrap();
+        let c = g.centralize();
+        assert_eq!(c.to_string(), "(edge(2); cloud)*2");
+        assert_eq!(c.edge_phases(), g.edge_phases());
+        c.validate().unwrap();
+        // Rewrites are idempotent on already-converted plans.
+        assert_eq!(d.decentralize(10), d);
+        assert_eq!(c.centralize(), c);
+        // pi 0 is clamped, never emitting an invalid gossip step.
+        assert_eq!(p.decentralize(0).to_string(), "edge(4); gossip(1)");
     }
 
     #[test]

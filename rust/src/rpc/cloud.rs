@@ -61,7 +61,7 @@ impl RemoteExecutor {
             m => return Err(ex.transport(format!("expected hello, got {}", m.name()))),
         }
         if init_now {
-            ex.send_init(0, &[], &[])?;
+            ex.send_init(0, &[], &[], &[])?;
         }
         Ok(ex)
     }
@@ -105,6 +105,7 @@ impl RemoteExecutor {
         rounds_applied: usize,
         models: &[(usize, &[f32])],
         clocks: &[(usize, f64)],
+        policies: &[(usize, String)],
     ) -> Result<()> {
         let msg = Msg::Init {
             config_json: self.config_json.clone(),
@@ -112,6 +113,7 @@ impl RemoteExecutor {
             rounds_applied,
             models: models.iter().map(|&(ci, m)| (ci, m.to_vec())).collect(),
             clocks: clocks.to_vec(),
+            policies: policies.to_vec(),
         };
         self.send(&msg)?;
         self.expect("init-ok").map(|_| ())
@@ -123,8 +125,11 @@ impl ClusterExecutor for RemoteExecutor {
         &self.owned
     }
 
-    fn begin_round(&mut self, round: usize) -> Result<()> {
-        self.send(&Msg::BeginRound { round })?;
+    fn begin_round(&mut self, round: usize, policies: &[(usize, String)]) -> Result<()> {
+        self.send(&Msg::BeginRound {
+            round,
+            policies: policies.to_vec(),
+        })?;
         self.expect("round-begun").map(|_| ())
     }
 
@@ -165,12 +170,13 @@ impl ClusterExecutor for RemoteExecutor {
         rounds_applied: usize,
         models: &[(usize, &[f32])],
         clocks: &[(usize, f64)],
+        policies: &[(usize, String)],
     ) -> Result<()> {
         while self.inflight > 0 {
             let _ = self.recv()?;
             self.inflight -= 1;
         }
-        self.send_init(rounds_applied, models, clocks)
+        self.send_init(rounds_applied, models, clocks, policies)
     }
 
     fn shutdown(&mut self) -> Result<()> {

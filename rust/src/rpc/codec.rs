@@ -18,7 +18,7 @@ use crate::error::{CfelError, Result};
 /// Frame preamble, first bytes on every frame.
 pub const MAGIC: [u8; 4] = *b"CFRP";
 /// Protocol version; bumped on any wire-format change.
-pub const PROTO_VERSION: u16 = 1;
+pub const PROTO_VERSION: u16 = 2;
 /// Upper bound on a frame payload: 256 MiB holds a 64M-parameter f32
 /// model, far above anything the MLP zoo here ships per cluster.
 pub const MAX_FRAME: usize = 256 << 20;

@@ -74,23 +74,26 @@ fn handle(msg: Msg, world: &mut Option<EdgeWorld>, verbose: bool) -> Result<Msg>
             rounds_applied,
             models,
             clocks,
+            policies,
         } => {
             if verbose {
                 eprintln!(
                     "[cfel-edge] init: clusters {clusters:?}, {rounds_applied} boundaries applied"
                 );
             }
-            let coord = build_world(&config_json, rounds_applied, &models, &clocks)?;
+            let mut coord = build_world(&config_json, rounds_applied, &models, &clocks)?;
+            coord.set_cluster_policies(&policies)?;
             *world = Some(EdgeWorld {
                 coord,
                 owned: clusters,
             });
             Ok(Msg::InitOk)
         }
-        Msg::BeginRound { round } => {
+        Msg::BeginRound { round, policies } => {
             let w = need_world(world)?;
             w.coord.apply_fault(round)?;
             w.coord.apply_timeline(round)?;
+            w.coord.set_cluster_policies(&policies)?;
             Ok(Msg::RoundBegun)
         }
         Msg::RunPhase {

@@ -30,10 +30,23 @@ pub enum Msg {
         rounds_applied: usize,
         models: Vec<(usize, Vec<f32>)>,
         clocks: Vec<(usize, f64)>,
+        /// Controller-installed per-cluster close-policy overrides as
+        /// `(cluster, spec)` pairs (the [`AggPolicyKind`] grammar).
+        /// Recovery replays an `Init` *without* a fresh `BeginRound`, so
+        /// the round-in-flight's overrides must ride here too.
+        ///
+        /// [`AggPolicyKind`]: crate::config::AggPolicyKind
+        policies: Vec<(usize, String)>,
     },
     InitOk,
-    /// Cloud → edge: apply the round boundary (fault + timeline).
-    BeginRound { round: usize },
+    /// Cloud → edge: apply the round boundary (fault + timeline), then
+    /// install the driver's policy overrides for the round. The wire
+    /// stays decision-agnostic: the edge sees opaque policy specs, never
+    /// telemetry or the controller itself.
+    BeginRound {
+        round: usize,
+        policies: Vec<(usize, String)>,
+    },
     RoundBegun,
     /// Cloud → edge: run edge phase `phase` on your owned clusters.
     RunPhase {
@@ -208,6 +221,25 @@ fn get_phase(r: &mut WireReader) -> Result<ClusterPhase> {
     })
 }
 
+fn put_policies(w: &mut WireWriter, policies: &[(usize, String)]) {
+    w.put_usize(policies.len());
+    for (ci, spec) in policies {
+        w.put_usize(*ci);
+        w.put_str(spec);
+    }
+}
+
+fn get_policies(r: &mut WireReader) -> Result<Vec<(usize, String)>> {
+    let n = r.get_len(16)?;
+    let mut policies = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ci = r.get_usize()?;
+        let spec = r.get_str()?;
+        policies.push((ci, spec));
+    }
+    Ok(policies)
+}
+
 #[allow(clippy::type_complexity)]
 fn put_state(w: &mut WireWriter, models: &[(usize, Vec<f32>)], clocks: &[(usize, f64)]) {
     w.put_usize(models.len());
@@ -274,16 +306,19 @@ impl Msg {
                 rounds_applied,
                 models,
                 clocks,
+                policies,
             } => {
                 w.put_str(config_json);
                 w.put_usizes(clusters);
                 w.put_usize(*rounds_applied);
                 put_state(&mut w, models, clocks);
+                put_policies(&mut w, policies);
                 K_INIT
             }
             Msg::InitOk => K_INIT_OK,
-            Msg::BeginRound { round } => {
+            Msg::BeginRound { round, policies } => {
                 w.put_usize(*round);
+                put_policies(&mut w, policies);
                 K_BEGIN_ROUND
             }
             Msg::RoundBegun => K_ROUND_BEGUN,
@@ -331,17 +366,20 @@ impl Msg {
                 let clusters = r.get_usizes()?;
                 let rounds_applied = r.get_usize()?;
                 let (models, clocks) = get_state(&mut r)?;
+                let policies = get_policies(&mut r)?;
                 Msg::Init {
                     config_json,
                     clusters,
                     rounds_applied,
                     models,
                     clocks,
+                    policies,
                 }
             }
             K_INIT_OK => Msg::InitOk,
             K_BEGIN_ROUND => Msg::BeginRound {
                 round: r.get_usize()?,
+                policies: get_policies(&mut r)?,
             },
             K_ROUND_BEGUN => Msg::RoundBegun,
             K_RUN_PHASE => Msg::RunPhase {

@@ -1,0 +1,427 @@
+//! Control-plane equivalence suite — the pin for the adaptive controller
+//! subsystem (`rust/src/control/`).
+//!
+//! Three properties keep the control plane honest:
+//!
+//! * **Static is free.** A run under the explicit `static` controller is
+//!   bit-identical (history digest + CSV rows) to the plain interpreter
+//!   on all four canned plans, under both latency modes, across
+//!   `CFEL_THREADS` 1/4 and across the `ClusterExecutor` seam (1/2/4
+//!   local executors plus one real `cfel-cloud` + `cfel-edge` socket
+//!   run). The controller hook must cost nothing when it decides nothing.
+//! * **Adaptive is deterministic.** The `adaptive:<window>` and
+//!   `floating:<threshold>` controllers rewrite policies/plans from
+//!   telemetry, yet every run — single process at any thread count,
+//!   local-executor driver, real sockets — produces the same digest, the
+//!   same CSV rows and the same per-round `decision` log.
+//! * **Fits are total.** `cfel::control::fit` maps *any* sample set
+//!   (empty, NaN-laden, negative, infinite) to `1 <= k <= max(n,1)` and
+//!   a timeout that is finite-positive or `inf` (proptested).
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use cfel::config::{AggPolicyKind, AlgorithmKind, ControllerKind, ExperimentConfig, LatencyMode};
+use cfel::control::fit;
+use cfel::coordinator::executor::partition_clusters;
+use cfel::coordinator::{ClusterExecutor, Coordinator, DistRunner, LocalExecutor};
+use cfel::metrics::{history_digest, CsvWriter, History, ROUND_HEADER};
+use cfel::prop_assert;
+use cfel::scenario::{LinkKind, Scenario, TimelineEvent, WorldEvent};
+use cfel::util::proptest::{check, default_cases, int_biased};
+
+/// `CFEL_THREADS` is process-global; every test serializes on this lock.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn run_reference(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_local_dist(cfg: &ExperimentConfig, n_executors: usize) -> History {
+    let mut executors: Vec<Box<dyn ClusterExecutor>> = Vec::new();
+    for part in partition_clusters(cfg.n_clusters, n_executors) {
+        executors.push(Box::new(LocalExecutor::new(cfg, part).unwrap()));
+    }
+    let mut runner = DistRunner::new(cfg, executors).unwrap();
+    runner.run().unwrap()
+}
+
+/// Render a history to CSV text with the wall-clock column zeroed.
+fn csv_rows(series: &str, h: &History) -> String {
+    let path = std::env::temp_dir()
+        .join(format!("cfel_ctrl_equiv_{}_{series}.csv", std::process::id()));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            let mut r = rec.clone();
+            r.wall_time_s = 0.0;
+            w.round_row(series, &r).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+/// Zero the wall_time_s column (index 3) of a child-process CSV.
+fn zero_wall_column(csv: &str) -> String {
+    csv.lines()
+        .enumerate()
+        .map(|(i, line)| {
+            if i == 0 {
+                return line.to_string();
+            }
+            let mut fields: Vec<&str> = line.split(',').collect();
+            if fields.len() > 3 {
+                fields[3] = "0.000";
+            }
+            fields.join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n"
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+        assert_eq!(x.decision, y.decision, "{label} r{r} decision log");
+        assert_eq!(
+            x.report_p50_s.to_bits(),
+            y.report_p50_s.to_bits(),
+            "{label} r{r} report p50"
+        );
+        assert_eq!(
+            x.report_p99_s.to_bits(),
+            y.report_p99_s.to_bits(),
+            "{label} r{r} report p99"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static: the controller hook is bitwise invisible.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn static_controller_is_bit_identical_to_the_plain_interpreter() {
+    let _guard = env_guard();
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        for alg in AlgorithmKind::all() {
+            for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+                let mut plain = ExperimentConfig::quickstart();
+                plain.algorithm = alg;
+                plain.latency = latency;
+                plain.rounds = 3;
+                let mut pinned = plain.clone();
+                pinned.controller = ControllerKind::parse("static").unwrap();
+                assert_eq!(plain.run_label(), pinned.run_label(), "static adds no suffix");
+
+                let label = format!("{}-{}-t{threads}", alg.name(), latency.name());
+                let h_plain = run_reference(&plain);
+                let h_static = run_reference(&pinned);
+                assert_identical(&label, &h_plain, &h_static);
+                assert_eq!(
+                    history_digest(&h_plain),
+                    history_digest(&h_static),
+                    "{label}: digest diverged"
+                );
+                // Across the executor seam, under the same controller.
+                for n_ex in [1usize, 2, 4] {
+                    let h_dist = run_local_dist(&pinned, n_ex);
+                    assert_identical(&format!("{label}-x{n_ex}"), &h_plain, &h_dist);
+                }
+                assert_eq!(
+                    csv_rows("oracle", &h_plain),
+                    csv_rows("oracle", &run_local_dist(&pinned, 2)),
+                    "{label}: CSV rows diverged"
+                );
+            }
+        }
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive semi-sync: decisions replay identically everywhere.
+// ---------------------------------------------------------------------------
+
+fn adaptive_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.controller = ControllerKind::parse("adaptive:2").unwrap();
+    // Give the fit a straggler to cut off: one slow device per run.
+    cfg.heterogeneity = Some(0.3);
+    cfg.rounds = 4;
+    cfg
+}
+
+#[test]
+fn adaptive_controller_reproduces_across_threads_and_the_seam() {
+    let _guard = env_guard();
+    std::env::set_var("CFEL_THREADS", "1");
+    let cfg = adaptive_cfg();
+    let h_ref = run_reference(&cfg);
+    std::env::remove_var("CFEL_THREADS");
+
+    // The controller must actually decide something: from round 2 on the
+    // telemetry window is non-empty, so the decision log is non-trivial.
+    assert!(
+        h_ref.iter().any(|r| r.decision.starts_with("refit")),
+        "adaptive run never refitted; decisions: {:?}",
+        h_ref.iter().map(|r| r.decision.clone()).collect::<Vec<_>>()
+    );
+    // Every emitted decision note is comma-free (one CSV column).
+    for r in &h_ref {
+        assert!(!r.decision.contains(','), "round {}: {:?}", r.round, r.decision);
+    }
+    assert!(
+        cfg.run_label().ends_with("+adaptive:2"),
+        "run label must carry the controller: {}",
+        cfg.run_label()
+    );
+
+    let want_digest = history_digest(&h_ref);
+    let want_csv = csv_rows("oracle", &h_ref);
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        let h_same = run_reference(&cfg);
+        assert_identical(&format!("adaptive-t{threads}"), &h_ref, &h_same);
+        for n_ex in [1usize, 2, 4] {
+            let h_dist = run_local_dist(&cfg, n_ex);
+            let label = format!("adaptive-t{threads}-x{n_ex}");
+            assert_identical(&label, &h_ref, &h_dist);
+            assert_eq!(history_digest(&h_dist), want_digest, "{label}: digest");
+            assert_eq!(csv_rows("oracle", &h_dist), want_csv, "{label}: CSV");
+        }
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Floating aggregation: a degrading backhaul flips cloud -> gossip (and
+// back), reproducibly.
+// ---------------------------------------------------------------------------
+
+fn floating_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = AlgorithmKind::FedAvg; // canned plan: edge(4)@cloud; cloud
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.controller = ControllerKind::parse("floating:0.5").unwrap();
+    cfg.rounds = 6;
+    let mut s = Scenario::from_flat(&cfg);
+    s.name = "test-degrading-backhaul".into();
+    // Round 2: the cloud uplink collapses to 20% of the 1 Mbps default
+    // (below the 50% entry threshold). Round 4: it recovers fully (above
+    // the 75% exit threshold).
+    s.timeline.events.push(TimelineEvent {
+        round: 2,
+        event: WorldEvent::LinkChange { link: LinkKind::DeviceCloud, bps: 2e5 },
+    });
+    s.timeline.events.push(TimelineEvent {
+        round: 4,
+        event: WorldEvent::LinkChange { link: LinkKind::DeviceCloud, bps: 1e6 },
+    });
+    cfg.scenario = Some(s);
+    cfg
+}
+
+#[test]
+fn floating_controller_switches_plans_on_link_collapse() {
+    let _guard = env_guard();
+    std::env::set_var("CFEL_THREADS", "1");
+    let cfg = floating_cfg();
+    cfg.validate().unwrap();
+    let h_ref = run_reference(&cfg);
+    std::env::remove_var("CFEL_THREADS");
+
+    let decisions: Vec<&str> = h_ref.iter().map(|r| r.decision.as_str()).collect();
+    assert!(
+        decisions.iter().any(|d| d.contains("cloud->gossip")),
+        "link collapse never decentralized: {decisions:?}"
+    );
+    assert!(
+        decisions.iter().any(|d| d.contains("gossip->cloud")),
+        "link recovery never recentralized: {decisions:?}"
+    );
+
+    for threads in ["1", "4"] {
+        std::env::set_var("CFEL_THREADS", threads);
+        let h_same = run_reference(&cfg);
+        assert_identical(&format!("floating-t{threads}"), &h_ref, &h_same);
+        let h_dist = run_local_dist(&cfg, 2);
+        assert_identical(&format!("floating-t{threads}-x2"), &h_ref, &h_dist);
+        std::env::remove_var("CFEL_THREADS");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real processes: the decision loop stays cloud-side, the wire ships only
+// opaque policy specs, and the bits still match.
+// ---------------------------------------------------------------------------
+
+/// Spawn `cfel-cloud` (+2 `cfel-edge`s), run `cfg`, return (digest, CSV).
+fn run_socket_dist(cfg: &ExperimentConfig, cloud_threads: &str) -> (String, String) {
+    let tag = format!(
+        "{}_{}",
+        std::process::id(),
+        cfg.run_label().replace(['@', ':', '+'], "_")
+    );
+    let cfg_path = std::env::temp_dir().join(format!("cfel_ctrl_cfg_{tag}.json"));
+    let csv_path = std::env::temp_dir().join(format!("cfel_ctrl_csv_{tag}.csv"));
+    std::fs::write(&cfg_path, cfg.to_json().to_string()).unwrap();
+
+    let mut cloud = Command::new(env!("CARGO_BIN_EXE_cfel-cloud"))
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--edges")
+        .arg("2")
+        .arg("--csv")
+        .arg(&csv_path)
+        .arg("--digest")
+        .arg("--quiet")
+        .env("CFEL_THREADS", cloud_threads)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cfel-cloud");
+    let mut reader = BufReader::new(cloud.stdout.take().unwrap());
+
+    let mut addr = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read cloud stdout");
+        assert!(n > 0, "cfel-cloud exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("[cfel-cloud] listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+
+    let edges: Vec<Child> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_cfel-edge"))
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--quiet")
+                .env("CFEL_THREADS", "2")
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn cfel-edge")
+        })
+        .collect();
+
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("drain cloud stdout");
+    let status = cloud.wait().expect("wait cfel-cloud");
+    assert!(status.success(), "cfel-cloud failed; stdout:\n{rest}");
+    for mut e in edges {
+        assert!(e.wait().expect("wait cfel-edge").success(), "cfel-edge failed");
+    }
+
+    let digest = rest
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("history_digest: "))
+        .unwrap_or_else(|| panic!("no digest in cloud output:\n{rest}"))
+        .to_string();
+    let csv = std::fs::read_to_string(&csv_path).expect("child CSV");
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_file(&csv_path).ok();
+    (digest, csv)
+}
+
+#[test]
+fn controllers_reproduce_over_real_sockets() {
+    let _guard = env_guard();
+    let mut static_cfg = ExperimentConfig::quickstart();
+    static_cfg.latency = LatencyMode::EventDriven;
+    static_cfg.rounds = 3;
+    static_cfg.controller = ControllerKind::parse("static").unwrap();
+    for cfg in [static_cfg, adaptive_cfg()] {
+        std::env::set_var("CFEL_THREADS", "1");
+        let h_ref = run_reference(&cfg);
+        std::env::remove_var("CFEL_THREADS");
+        let label = cfg.controller.name();
+        let (digest, csv) = run_socket_dist(&cfg, "4");
+        assert_eq!(
+            digest,
+            format!("{:016x}", history_digest(&h_ref)),
+            "{label}: socket digest diverged"
+        );
+        // CSV rows carry the decision column, so this also pins the
+        // decision log across the process boundary.
+        assert_eq!(
+            zero_wall_column(&csv),
+            csv_rows(&cfg.run_label(), &h_ref),
+            "{label}: socket CSV diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fit totality (proptest).
+// ---------------------------------------------------------------------------
+
+/// Adversarial report-time sample: ordinary magnitudes mixed with the
+/// values a simulator bug would feed the fit.
+fn sample_adv(rng: &mut cfel::util::rng::Rng) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -1.0,
+        4 => 0.0,
+        5 => f64::MAX,
+        _ => (rng.normal() as f64).abs() * 10.0,
+    }
+}
+
+#[test]
+fn fit_always_emits_installable_semi_sync_specs() {
+    check("control-fit-total", 0xF17, default_cases(), |rng| {
+        let n = int_biased(rng, 0, 40);
+        let len = int_biased(rng, 0, 64);
+        let samples: Vec<f64> = (0..len).map(|_| sample_adv(rng)).collect();
+        let (k, timeout_s) = fit(&samples, n);
+        let n_eff = n.max(1);
+        prop_assert!(k >= 1 && k <= n_eff, "k={k} outside [1,{n_eff}] (n={n})");
+        prop_assert!(
+            timeout_s == f64::INFINITY || (timeout_s.is_finite() && timeout_s > 0.0),
+            "timeout {timeout_s} is neither finite-positive nor inf"
+        );
+        // The spec the controller would emit must parse back exactly.
+        let spec = AggPolicyKind::SemiSync { k, timeout_s }.name();
+        let parsed = AggPolicyKind::parse(&spec).map_err(|e| format!("{spec}: {e}"))?;
+        let AggPolicyKind::SemiSync { k: k2, timeout_s: t2 } = parsed else {
+            return Err(format!("{spec} parsed as a non-semi-sync policy"));
+        };
+        prop_assert!(k2 == k, "{spec}: k round-tripped to {k2}");
+        prop_assert!(
+            t2.to_bits() == timeout_s.to_bits(),
+            "{spec}: timeout round-tripped to {t2}"
+        );
+        Ok(())
+    });
+}

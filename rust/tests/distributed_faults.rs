@@ -191,8 +191,8 @@ impl ClusterExecutor for FlakyExecutor {
         self.inner.clusters()
     }
 
-    fn begin_round(&mut self, round: usize) -> Result<()> {
-        self.inner.begin_round(round)
+    fn begin_round(&mut self, round: usize, policies: &[(usize, String)]) -> Result<()> {
+        self.inner.begin_round(round, policies)
     }
 
     fn start_phase(&mut self, phase: u64, epochs: usize, channel: UploadChannel) -> Result<()> {
@@ -220,8 +220,9 @@ impl ClusterExecutor for FlakyExecutor {
         rounds_applied: usize,
         models: &[(usize, &[f32])],
         clocks: &[(usize, f64)],
+        policies: &[(usize, String)],
     ) -> Result<()> {
-        self.inner.reinit(rounds_applied, models, clocks)
+        self.inner.reinit(rounds_applied, models, clocks, policies)
     }
 
     fn shutdown(&mut self) -> Result<()> {

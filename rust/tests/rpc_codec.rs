@@ -86,6 +86,13 @@ fn gen_phase(rng: &mut Rng) -> ClusterPhase {
     }
 }
 
+fn gen_policies(rng: &mut Rng) -> Vec<(usize, String)> {
+    let specs = ["full", "deadline:12.5", "kofn:3:45.25", "kofn:1:inf"];
+    (0..int_biased(rng, 0, 4))
+        .map(|_| (rng.below(32), specs[rng.below(specs.len())].to_string()))
+        .collect()
+}
+
 fn gen_state(rng: &mut Rng) -> (Vec<(usize, Vec<f32>)>, Vec<(usize, f64)>) {
     let nm = int_biased(rng, 0, 4);
     let models = (0..nm)
@@ -110,10 +117,14 @@ fn gen_msg(rng: &mut Rng) -> Msg {
                 rounds_applied: rng.below(100),
                 models,
                 clocks,
+                policies: gen_policies(rng),
             }
         }
         2 => Msg::InitOk,
-        3 => Msg::BeginRound { round: rng.below(1 << 20) },
+        3 => Msg::BeginRound {
+            round: rng.below(1 << 20),
+            policies: gen_policies(rng),
+        },
         4 => Msg::RoundBegun,
         5 => Msg::RunPhase {
             phase: rng.next_u64(),
