@@ -1,0 +1,125 @@
+//! Secure aggregation on untrusted edge servers: what privacy costs.
+//!
+//! ```sh
+//! cargo run --release --example secure_aggregation
+//! ```
+//!
+//! The world is `examples/scenarios/untrusted_edge.json`, rebuilt in
+//! code: four third-party edge operators with uneven coverage (6/5/3/2
+//! devices) and U[0.5,1] compute heterogeneity. The operators run the
+//! CE-FedAvg aggregation but are *not* trusted to see any individual
+//! device's update, so every device→edge upload rides the pairwise-
+//! masked secure-aggregation channel (`edge(E)@masked`): each pair of
+//! participants derives a shared mask stream, one adds it and the other
+//! subtracts it, and the per-device masks cancel exactly in the edge's
+//! wrapping-integer sum — the edge only ever learns the aggregate.
+//!
+//! Four runs on the *same seed* compare the tiers:
+//!
+//! * **plain** (`--secagg off`) — the trusting baseline.
+//! * **lossless** (`--secagg lossless`) — masks and unmasks the raw f32
+//!   bit patterns; a protocol identity, so its history digest must equal
+//!   the plain run's bit for bit (the `secagg_equivalence` suite pins
+//!   this; here it is asserted end to end).
+//! * **mask:24 / mask:12** — real fixed-point masking. The event engine
+//!   charges every participant the PRG + encode compute before its
+//!   upload starts and inflates the payload to the dense 64-bit masked
+//!   encoding; both costs land in the new `secagg_mask_s` /
+//!   `secagg_extra_bits` CSV columns and stretch the simulated round.
+//!
+//! The JSON spelling of the same world:
+//!
+//! ```sh
+//! cfel train --scenario examples/scenarios/untrusted_edge.json \
+//!     --latency event --secagg mask:24
+//! cfel train --scenario examples/scenarios/untrusted_edge.json \
+//!     --latency event --dry-run
+//! ```
+
+use cfel::config::{ExperimentConfig, LatencyMode, SecaggMode};
+use cfel::coordinator::Coordinator;
+use cfel::metrics::{best_accuracy, history_digest, History};
+use cfel::scenario::Scenario;
+
+fn run(cfg: &ExperimentConfig) -> cfel::Result<History> {
+    let mut coord = Coordinator::from_config(cfg)?;
+    coord.run()
+}
+
+fn main() -> cfel::Result<()> {
+    let mut base = ExperimentConfig::quickstart();
+    base.name = "untrusted-edge".into();
+    base.rounds = 10;
+    base.latency = LatencyMode::EventDriven;
+    base.heterogeneity = Some(0.5);
+    let mut scenario = Scenario::from_flat(&base);
+    scenario.name = "untrusted-edge".into();
+    scenario.rosters = Scenario::contiguous_rosters(&[6, 5, 3, 2]);
+    base.scenario = Some(scenario);
+
+    let modes = [
+        ("plain", SecaggMode::Off),
+        ("lossless", SecaggMode::Lossless),
+        ("mask:24", SecaggMode::Mask(24)),
+        ("mask:12", SecaggMode::Mask(12)),
+    ];
+    let mut results: Vec<(&str, History)> = Vec::new();
+    for (label, secagg) in modes {
+        let mut cfg = base.clone();
+        cfg.secagg = secagg;
+        cfg.validate()?;
+        println!("== {label} — plan {} ==", cfg.resolved_plan());
+        results.push((label, run(&cfg)?));
+    }
+
+    println!("\nmode     | best acc | total sim | mask compute | extra traffic");
+    for (label, h) in &results {
+        println!(
+            "{:<8} | {:>8.4} | {:>8.3}s | {:>11.6}s | {:>10.2} Mbit",
+            label,
+            best_accuracy(h),
+            h.last().unwrap().sim_time_s,
+            h.iter().map(|r| r.secagg_mask_s).sum::<f64>(),
+            h.iter().map(|r| r.secagg_extra_bits).sum::<f64>() / 1e6,
+        );
+    }
+
+    let (plain, lossless) = (&results[0].1, &results[1].1);
+    let (mask24, mask12) = (&results[2].1, &results[3].1);
+
+    // Lossless is a bit-level identity: same digest, zero charged cost.
+    assert_eq!(
+        history_digest(plain),
+        history_digest(lossless),
+        "lossless secagg must reproduce the plain run bit for bit"
+    );
+    for h in [plain, lossless] {
+        assert!(h.iter().all(|r| r.secagg_mask_s == 0.0 && r.secagg_extra_bits == 0.0));
+    }
+
+    // Real masking charges real costs — and still learns (the CI smoke
+    // enforces both): crypto compute and inflated uploads every round,
+    // a strictly slower simulated run, accuracy far above the 10-class
+    // chance floor even at 12 fractional bits.
+    for (label, h) in [("mask:24", mask24), ("mask:12", mask12)] {
+        assert!(h.iter().all(|r| r.secagg_mask_s > 0.0 && r.secagg_extra_bits > 0.0));
+        assert!(
+            h.last().unwrap().sim_time_s > plain.last().unwrap().sim_time_s,
+            "{label}: masked uploads should stretch the simulated run"
+        );
+        let best = best_accuracy(h);
+        assert!(best > 0.25, "{label} failed to learn: {best}");
+    }
+
+    println!(
+        "\nThe edge operators never saw an individual update: uploads were \
+         pairwise-masked and only the sums decoded. Lossless mode proved \
+         the protocol is an exact identity (equal digests); mask mode \
+         paid its real compute and bandwidth price in the new \
+         secagg_mask_s / secagg_extra_bits columns. Try the JSON \
+         spelling: `cfel train --scenario \
+         examples/scenarios/untrusted_edge.json --latency event --secagg \
+         mask:24`."
+    );
+    Ok(())
+}

@@ -13,8 +13,10 @@ use cfel::data::synthetic::{Prototypes, SyntheticSpec};
 use cfel::data::{partition, Batch};
 use cfel::netsim::{EventDrivenEstimator, NetworkModel, UploadChannel};
 use cfel::runtime::{Manifest, MockBackend, PjrtBackend, TrainBackend};
+use cfel::secagg;
 use cfel::topology::{Graph, MixingMatrix};
 use cfel::util::bench::{header, Bench};
+use cfel::util::threadpool::parallel_map;
 use cfel::util::json::Json;
 use cfel::util::rng::Rng;
 
@@ -209,6 +211,30 @@ fn main() {
                     pt.devices.recycle();
                 }
                 total
+            },
+        );
+    }
+
+    // ---- secure-aggregation masking -------------------------------------
+    // Fixed-point encode + pairwise PRG masking of one 16-device cohort's
+    // uploads (femnist-CNN-sized model) — the per-participant crypto the
+    // estimators charge via `NetworkModel::mask_seconds`. Each device's
+    // upload is an independent pure function of the root RNG, so the lane
+    // sweeps the cohort over pool workers; values/sec here calibrate the
+    // `secagg_prg_flops`/`secagg_encode_flops` cost-model knobs.
+    let cohort: Vec<usize> = (0..16).collect();
+    let upload: Vec<f32> = (0..d).map(|j| ((j % 97) as f32 - 48.0) / 48.0).collect();
+    let mask_root = Rng::new(0x5ECA);
+    for t in [1usize, 2, 4] {
+        b.run_throughput(
+            &format!("secagg masked_upload 16x{d} mask:24 (threads={t})"),
+            (16 * d) as f64,
+            || {
+                let words: Vec<Vec<u64>> = parallel_map(cohort.len(), t, |dev| {
+                    secagg::masked_upload(&upload, 24, 600, &mask_root, 1, dev, &cohort)
+                });
+                // Fold a word back out so the masking can't be elided.
+                words.iter().fold(0u64, |a, w| a.wrapping_add(w[0]))
             },
         );
     }

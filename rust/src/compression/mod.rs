@@ -29,32 +29,35 @@ pub enum Compressor {
 
 impl Compressor {
     pub fn parse(s: &str) -> Result<Compressor> {
+        // Every rejection quotes the grammar — a bad `--compression`
+        // spec teaches its own syntax, whichever branch it died in.
+        let bad = |detail: String| {
+            CfelError::Config(format!(
+                "{detail} (none | topk:<frac> | quantize:<bits>)"
+            ))
+        };
         if s == "none" {
             return Ok(Compressor::None);
         }
         if let Some(f) = s.strip_prefix("topk:") {
             let fraction: f64 = f
                 .parse()
-                .map_err(|_| CfelError::Config(format!("bad topk fraction {f:?}")))?;
+                .map_err(|_| bad(format!("bad topk fraction {f:?}")))?;
             if !(0.0 < fraction && fraction <= 1.0) {
-                return Err(CfelError::Config(format!(
-                    "topk fraction {fraction} outside (0,1]"
-                )));
+                return Err(bad(format!("topk fraction {fraction} outside (0,1]")));
             }
             return Ok(Compressor::TopK { fraction });
         }
         if let Some(b) = s.strip_prefix("quantize:") {
             let bits: u32 = b
                 .parse()
-                .map_err(|_| CfelError::Config(format!("bad quantize bits {b:?}")))?;
+                .map_err(|_| bad(format!("bad quantize bits {b:?}")))?;
             if !(1..=16).contains(&bits) {
-                return Err(CfelError::Config(format!("quantize bits {bits} outside 1..=16")));
+                return Err(bad(format!("quantize bits {bits} outside 1..=16")));
             }
             return Ok(Compressor::Quantize { bits });
         }
-        Err(CfelError::Config(format!(
-            "unknown compressor {s:?} (none | topk:<frac> | quantize:<bits>)"
-        )))
+        Err(bad(format!("unknown compressor {s:?}")))
     }
 
     pub fn name(&self) -> String {
@@ -155,6 +158,20 @@ mod tests {
         assert!(Compressor::parse("quantize:0").is_err());
         assert!(Compressor::parse("quantize:33").is_err());
         assert!(Compressor::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn every_parse_error_quotes_the_grammar() {
+        // One probe per rejection branch: unparsable topk fraction,
+        // out-of-range topk fraction, unparsable quantize bits,
+        // out-of-range quantize bits, and an unknown compressor name.
+        for bad in ["topk:zero", "topk:0", "quantize:many", "quantize:99", "gzip"] {
+            let err = Compressor::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("(none | topk:<frac> | quantize:<bits>)"),
+                "error for {bad:?} should quote the grammar: {err}"
+            );
+        }
     }
 
     #[test]

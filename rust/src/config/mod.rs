@@ -250,6 +250,61 @@ impl ControllerKind {
     }
 }
 
+/// Secure-aggregation tier for device→edge uploads (`secagg`). Enabling
+/// it rewrites every plain `edge(E)` phase of the resolved plan to
+/// `edge(E)@masked` (see [`ExperimentConfig::resolved_plan`]); the
+/// trainer then runs the pairwise-masking protocol so the edge server
+/// only ever sees masked sums, never an individual device's update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SecaggMode {
+    /// No masking — plans and cost models are untouched (the default).
+    #[default]
+    Off,
+    /// Mask+unmask the raw f32 bit patterns in place: a protocol
+    /// identity that exercises the full pairwise-mask machinery with
+    /// zero quantization error and zero charged cost, pinned
+    /// bitwise-identical to `Off` (`rust/tests/secagg_equivalence.rs`).
+    Lossless,
+    /// Fixed-point encode device updates at `bits` fractional bits,
+    /// mask, and aggregate under wrapping integer arithmetic; mask
+    /// compute and upload inflation are charged in both latency
+    /// estimators. `bits` must lie in `1..=secagg::MAX_BITS`.
+    Mask(u32),
+}
+
+impl SecaggMode {
+    /// Parse `off` | `lossless` | `mask:<bits>`.
+    pub fn parse(s: &str) -> Result<SecaggMode> {
+        let bad = || {
+            CfelError::Config(format!(
+                "unknown secagg mode {s:?} (off | lossless | mask:<bits 1..={}>)",
+                crate::secagg::MAX_BITS
+            ))
+        };
+        match s {
+            "off" | "none" => return Ok(SecaggMode::Off),
+            "lossless" => return Ok(SecaggMode::Lossless),
+            _ => {}
+        }
+        if let Some(b) = s.strip_prefix("mask:") {
+            let bits: u32 = b.parse().map_err(|_| bad())?;
+            if !(1..=crate::secagg::MAX_BITS).contains(&bits) {
+                return Err(bad());
+            }
+            return Ok(SecaggMode::Mask(bits));
+        }
+        Err(bad())
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SecaggMode::Off => "off".into(),
+            SecaggMode::Lossless => "lossless".into(),
+            SecaggMode::Mask(bits) => format!("mask:{bits}"),
+        }
+    }
+}
+
 /// How the federated data is generated/partitioned (paper §6.1 + Fig. 5).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataScheme {
@@ -393,6 +448,12 @@ pub struct ExperimentConfig {
     /// Lossy codec applied to every model upload (device→edge and
     /// backhaul); Eq. 8 scales transmitted bits accordingly.
     pub compression: Compressor,
+    /// Secure-aggregation tier for device→edge uploads: off (default),
+    /// lossless (mask+unmask identity — bitwise equal to off), or
+    /// mask:<bits> (fixed-point pairwise masking with charged compute
+    /// and bandwidth costs). Sugar: rewrites every plain `edge(E)`
+    /// phase of the resolved plan to `edge(E)@masked`.
+    pub secagg: SecaggMode,
     /// Fraction of each cluster's devices sampled per edge round
     /// (classic FedAvg client sampling; 1.0 = full participation).
     pub participation: f64,
@@ -439,6 +500,7 @@ impl ExperimentConfig {
             data_noise: Some(3.0),
             writer_style: None,
             compression: Compressor::None,
+            secagg: SecaggMode::Off,
             participation: 1.0,
             eval_every: 1,
             fault: None,
@@ -479,6 +541,7 @@ impl ExperimentConfig {
             data_noise: Some(3.0),
             writer_style: None,
             compression: Compressor::None,
+            secagg: SecaggMode::Off,
             participation: 1.0,
             eval_every: 1,
             fault: None,
@@ -519,10 +582,19 @@ impl ExperimentConfig {
     /// The per-round schedule this config runs: the explicit `plan` if
     /// one is set, otherwise the canned plan `algorithm` names.
     /// (`validate` rejects setting both, mirroring `resolved_policy`.)
+    /// With secagg enabled, every plain device→edge phase is rewritten
+    /// to the masked channel ([`Plan::mask_edges`]) — the edge-phase
+    /// count is preserved, so the phase cursor and RNG streams match the
+    /// unmasked plan exactly.
     pub fn resolved_plan(&self) -> Plan {
-        match &self.plan {
+        let plan = match &self.plan {
             Some(p) => p.clone(),
             None => Plan::for_algorithm(self.algorithm, self),
+        };
+        if self.secagg == SecaggMode::Off {
+            plan
+        } else {
+            plan.mask_edges()
         }
     }
 
@@ -781,6 +853,49 @@ impl ExperimentConfig {
                  controller replays; use a scenario timeline instead",
             ));
         }
+        let masked_phases = self.resolved_plan().comms().masked_uploads;
+        if self.secagg == SecaggMode::Off && masked_phases > 0 {
+            return Err(CfelError::Config(
+                "the plan has edge(E)@masked phases but secagg is off; \
+                 enable it (--secagg lossless | mask:<bits>) so the \
+                 coordinator knows how to mask and cost the uploads"
+                    .into(),
+            ));
+        }
+        if self.secagg != SecaggMode::Off && masked_phases == 0 {
+            return Err(CfelError::Config(
+                "secagg is enabled but the resolved plan has no \
+                 device→edge report phases to mask (cloud uploads have \
+                 no pairwise-masking tier)"
+                    .into(),
+            ));
+        }
+        if let SecaggMode::Mask(bits) = self.secagg {
+            if !(1..=crate::secagg::MAX_BITS).contains(&bits) {
+                return Err(CfelError::Config(format!(
+                    "secagg mask bits {bits} outside 1..={}",
+                    crate::secagg::MAX_BITS
+                )));
+            }
+            if matches!(self.resolved_policy(), AggPolicyKind::SemiSync { .. }) {
+                return Err(CfelError::Config(
+                    "secagg mask mode cannot run under the semi-sync close \
+                     policy: a stale report merges after its phase's \
+                     pairwise masks were reconciled, so its mask shares \
+                     could never cancel; use full or deadline:<seconds>"
+                        .into(),
+                ));
+            }
+            if self.controller != ControllerKind::Static {
+                return Err(CfelError::Config(
+                    "secagg mask mode requires the static controller: \
+                     adaptive controllers rewrite per-cluster close \
+                     policies (and may introduce semi-sync merges), which \
+                     breaks the mask-reconciliation invariant"
+                        .into(),
+                ));
+            }
+        }
         if let Some(FaultSpec::KillCluster { cluster, .. }) = self.fault {
             if cluster >= self.n_clusters {
                 return Err(CfelError::Config(format!(
@@ -861,6 +976,9 @@ impl ExperimentConfig {
         }
         if self.compression != Compressor::None {
             o.set("compression", Json::from_str_val(&self.compression.name()));
+        }
+        if self.secagg != SecaggMode::Off {
+            o.set("secagg", Json::from_str_val(&self.secagg.name()));
         }
         if self.participation != 1.0 {
             o.set("participation", Json::from_f64(self.participation));
@@ -990,6 +1108,10 @@ impl ExperimentConfig {
             compression: match j.opt("compression") {
                 Some(v) => Compressor::parse(v.as_str()?)?,
                 None => Compressor::None,
+            },
+            secagg: match j.opt("secagg") {
+                Some(v) => SecaggMode::parse(v.as_str()?)?,
+                None => SecaggMode::Off,
             },
             participation: match j.opt("participation") {
                 Some(v) => v.as_f64()?,
@@ -1386,6 +1508,94 @@ mod tests {
         c.controller = ControllerKind::FloatingAggregation { threshold: 0.25 };
         let c3 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c3.controller, c.controller);
+    }
+
+    #[test]
+    fn secagg_parse_roundtrip() {
+        for m in [SecaggMode::Off, SecaggMode::Lossless, SecaggMode::Mask(16)] {
+            assert_eq!(SecaggMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(SecaggMode::parse("none").unwrap(), SecaggMode::Off);
+        assert!(SecaggMode::parse("mask:0").is_err(), "0 bits accepted");
+        assert!(SecaggMode::parse("mask:47").is_err(), "bits > MAX_BITS accepted");
+        assert!(SecaggMode::parse("mask:x").is_err());
+        assert!(SecaggMode::parse("mask:").is_err());
+        let err = SecaggMode::parse("homomorphic").unwrap_err().to_string();
+        assert!(err.contains("off | lossless | mask:<bits"), "{err}");
+    }
+
+    #[test]
+    fn secagg_sugar_masks_the_resolved_plan() {
+        let mut c = ExperimentConfig::quickstart();
+        c.secagg = SecaggMode::Mask(16);
+        c.validate().unwrap();
+        assert_eq!(c.resolved_plan().to_string(), "edge(2)@masked*2; gossip(10)");
+        // The edge-phase count (= phase-cursor stride) is unchanged.
+        assert_eq!(
+            c.resolved_plan().edge_phases(),
+            ExperimentConfig::quickstart().resolved_plan().edge_phases()
+        );
+        // run_label is untouched: the CSV series stays comparable.
+        assert_eq!(c.run_label(), "ce-fedavg");
+        // Lossless applies the same rewrite.
+        c.secagg = SecaggMode::Lossless;
+        assert!(c.resolved_plan().comms().masked_uploads > 0);
+        // Explicit plans are rewritten too (idempotent on @masked).
+        c.plan = Some(Plan::parse("edge(2)@masked; gossip(4)").unwrap());
+        c.validate().unwrap();
+        assert_eq!(c.resolved_plan().to_string(), "edge(2)@masked; gossip(4)");
+    }
+
+    #[test]
+    fn secagg_validation_rules() {
+        // A masked plan without secagg enabled is rejected...
+        let mut c = ExperimentConfig::quickstart();
+        c.plan = Some(Plan::parse("edge(2)@masked; gossip(4)").unwrap());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("secagg"), "{err}");
+        // ...and accepted once it is.
+        c.secagg = SecaggMode::Mask(16);
+        c.validate().unwrap();
+        // Secagg with nothing to mask is contradictory (cloud uploads
+        // have no masking tier).
+        let mut c = ExperimentConfig::quickstart();
+        c.algorithm = AlgorithmKind::FedAvg;
+        c.secagg = SecaggMode::Mask(16);
+        assert!(c.validate().is_err(), "secagg with a pure-cloud plan accepted");
+        // Mask mode rejects semi-sync (stale merges arrive after the
+        // phase's masks were reconciled) but lossless composes with it.
+        let mut c = ExperimentConfig::quickstart();
+        c.latency = LatencyMode::EventDriven;
+        c.agg_policy = AggPolicyKind::SemiSync { k: 3, timeout_s: 1.0 };
+        c.secagg = SecaggMode::Mask(16);
+        assert!(c.validate().is_err(), "mask mode accepted under semi-sync");
+        c.secagg = SecaggMode::Lossless;
+        c.validate().unwrap();
+        // Mask mode requires the static controller.
+        let mut c = ExperimentConfig::quickstart();
+        c.secagg = SecaggMode::Mask(16);
+        c.controller = ControllerKind::FloatingAggregation { threshold: 0.5 };
+        assert!(c.validate().is_err(), "mask mode accepted with a controller");
+        // Deadline-drop composes with mask mode (dropouts are recovered
+        // by deterministic seed reconstruction).
+        let mut c = ExperimentConfig::quickstart();
+        c.latency = LatencyMode::EventDriven;
+        c.deadline_s = Some(0.5);
+        c.secagg = SecaggMode::Mask(16);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_secagg() {
+        let mut c = ExperimentConfig::quickstart();
+        // Off stays implicit: no "secagg" key in the JSON.
+        assert!(c.to_json().opt("secagg").is_none());
+        c.secagg = SecaggMode::Mask(20);
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.secagg, c.secagg);
+        c.secagg = SecaggMode::Lossless;
+        let c3 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c3.secagg, c.secagg);
     }
 
     #[test]

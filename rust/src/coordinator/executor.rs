@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use crate::config::{ExperimentConfig, LatencyMode};
+use crate::config::{ExperimentConfig, LatencyMode, SecaggMode};
 use crate::coordinator::{ClusterPhase, Coordinator, RoundStats};
 use crate::error::{CfelError, Result};
 use crate::metrics::{report_quantiles, History, RoundRecord};
@@ -375,15 +375,43 @@ impl DistRunner {
                     }
                     for p in &mut phases {
                         let ci = p.cluster;
-                        if p.model.len() != self.coord.clusters[ci].model.len() {
-                            return Err(CfelError::Runtime(format!(
-                                "phase result for cluster {ci} carries {} params, \
-                                 expected {}",
-                                p.model.len(),
-                                self.coord.clusters[ci].model.len()
-                            )));
+                        if let Some(sum) = p.masked.take() {
+                            // Masked phase: the wire carried the encoded
+                            // sum instead of a plain model. Decode with
+                            // the same deterministic function the edge
+                            // used for its local mirror — both sides land
+                            // on the identical f32 model bit-for-bit.
+                            let SecaggMode::Mask(bits) = self.coord.cfg.secagg else {
+                                return Err(CfelError::Runtime(format!(
+                                    "phase result for cluster {ci} carries a masked \
+                                     sum, but secagg mask mode is not enabled"
+                                )));
+                            };
+                            if sum.words.len() != self.coord.clusters[ci].model.len()
+                                || !p.model.is_empty()
+                            {
+                                return Err(CfelError::Runtime(format!(
+                                    "masked phase result for cluster {ci} carries {} \
+                                     words + {} params, expected {} words and an \
+                                     empty model",
+                                    sum.words.len(),
+                                    p.model.len(),
+                                    self.coord.clusters[ci].model.len()
+                                )));
+                            }
+                            let decoded = crate::secagg::decode_sum(&sum, bits);
+                            self.coord.clusters[ci].model.copy_from_slice(&decoded);
+                        } else {
+                            if p.model.len() != self.coord.clusters[ci].model.len() {
+                                return Err(CfelError::Runtime(format!(
+                                    "phase result for cluster {ci} carries {} params, \
+                                     expected {}",
+                                    p.model.len(),
+                                    self.coord.clusters[ci].model.len()
+                                )));
+                            }
+                            self.coord.clusters[ci].model = std::mem::take(&mut p.model);
                         }
-                        self.coord.clusters[ci].model = std::mem::take(&mut p.model);
                         if p.timing.is_some() {
                             self.coord.cluster_clock_s[ci] = p.clock_s;
                         }
@@ -568,6 +596,8 @@ impl DistRunner {
                 report_p50_s,
                 report_p90_s,
                 report_p99_s,
+                secagg_mask_s: stats.timing.secagg_mask_s,
+                secagg_extra_bits: stats.timing.secagg_extra_bits,
                 decision: self.coord.take_decision_note(),
             };
             if self.verbose {

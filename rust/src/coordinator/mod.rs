@@ -29,6 +29,7 @@ use crate::aggregation;
 use crate::aggregation::policy::{AggregationPolicy, ReportVerdict};
 use crate::config::{
     AggPolicyKind, BackendKind, DataScheme, ExperimentConfig, FaultSpec, LatencyMode,
+    SecaggMode,
 };
 use crate::control::{ClusterTelemetry, Controller, Decision, RoundTelemetry};
 use crate::data::sampler::eval_batches;
@@ -261,6 +262,40 @@ impl Coordinator {
         );
         // Lossy upload compression shrinks every transmitted model.
         net.model_bits *= cfg.compression.ratio();
+        // Secure aggregation (mask mode): masked uploads are dense
+        // 64-bit words, one per parameter, regardless of compression,
+        // and every participant pays the PRG/encode compute. Lossless
+        // mode leaves `secagg_upload_bits` at 0, so the cost model stays
+        // bitwise equal to a plain run (docs/DETERMINISM.md).
+        if let SecaggMode::Mask(bits) = cfg.secagg {
+            net.secagg_upload_bits = 64.0 * param_count as f64;
+            // Closed-form group size: the largest per-cluster participant
+            // set (roster × participation, at least one device).
+            net.secagg_group_size = scenario
+                .rosters
+                .iter()
+                .map(|r| {
+                    ((r.len() as f64 * cfg.participation).ceil() as usize)
+                        .clamp(1, r.len().max(1))
+                })
+                .max()
+                .unwrap_or(0) as f64;
+            // Overflow headroom: each upload word is q·weight with
+            // |q| ≤ clip·2^bits (clip = 64 = 2^6) and weight ≤ the
+            // cluster's sample total; their wrapping sum must stay
+            // inside i64 (docs in `secagg`).
+            let max_samples = clusters.iter().map(|c| c.n_samples).max().unwrap_or(1).max(1);
+            let weight_bits = 64 - (max_samples as u64).leading_zeros();
+            if bits + 6 + weight_bits > 62 {
+                return Err(CfelError::Config(format!(
+                    "secagg mask:{bits} overflows the 64-bit accumulator: \
+                     mask bits + log2(clip 64) + log2(max cluster samples \
+                     {max_samples}) = {} > 62; lower the mask bits or \
+                     shrink the clusters",
+                    bits + 6 + weight_bits
+                )));
+            }
+        }
         // Capability profiles (the scenario's per-device world view; the
         // derived kind replays the flat heterogeneity/straggler draws
         // from the same root-RNG splits) and link overrides.
@@ -947,6 +982,8 @@ impl Coordinator {
                 report_p50_s,
                 report_p90_s,
                 report_p99_s,
+                secagg_mask_s: stats.timing.secagg_mask_s,
+                secagg_extra_bits: stats.timing.secagg_extra_bits,
                 decision: self.take_decision_note(),
             };
             if self.verbose {

@@ -2,6 +2,7 @@
 //! (paper Eqs. 4–5, epoch semantics following Reddi et al. [42]).
 
 use crate::aggregation::policy::{AggregationPolicy, ReportVerdict};
+use crate::config::SecaggMode;
 use crate::coordinator::{
     ClusterState, Coordinator, PendingReport, RoundContext, RoundStats, WeightedReport,
 };
@@ -11,6 +12,7 @@ use crate::error::Result;
 use crate::model::ModelState;
 use crate::netsim::{PhaseTiming, UploadChannel};
 use crate::runtime::TrainBackend;
+use crate::secagg::{self, MaskedSum};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_threads, parallel_map};
 
@@ -57,6 +59,19 @@ pub struct ClusterPhase {
     pub stale_merged: usize,
     /// Reports still parked in the cluster's pending queue afterwards.
     pub pending_after: usize,
+    /// The masked (still-encoded) aggregate sum, shipped instead of
+    /// `model` when the phase ran over the masked channel in mask mode
+    /// and the caller asked for models: the wire carries only masked
+    /// fixed-point words, and the consumer decodes with the same
+    /// deterministic [`crate::secagg::decode_sum`] the edge used for its
+    /// local mirror, so both sides land on the identical f32 model.
+    pub masked: Option<MaskedSum>,
+    /// Mask-generation + fixed-point-encode compute charged to this
+    /// phase's participants, seconds (mask mode only; zero otherwise).
+    pub secagg_mask_s: f64,
+    /// Upload inflation the masked encoding added over the plain
+    /// (post-compression) model payload, bits across all participants.
+    pub secagg_extra_bits: f64,
 }
 
 /// Train one device for `epochs` local epochs starting from `init_params`
@@ -86,6 +101,49 @@ pub fn train_device(
         loss_sum,
         n_samples: data.len(),
     })
+}
+
+/// Sum one cluster's surviving masked uploads (Bonawitz-style pairwise
+/// masking, [`crate::secagg`]). Each on-time device contributes its
+/// fixed-point-encoded, sample-weighted, masked upload; pair masks
+/// between two survivors cancel in the wrapping-u64 sum, and every
+/// participant that dropped between sampling and the phase close leaves
+/// dangling shares that [`secagg::recover_dropouts`] re-derives from the
+/// run RNG and subtracts. Wrapping addition is associative and
+/// commutative, so the sum is independent of accumulation order — the
+/// masked path inherits the engine's bit-determinism for free.
+fn masked_cluster_sum(
+    on_time: &[(usize, LocalOutcome)],
+    participants: &[usize],
+    bits: u32,
+    root: &Rng,
+    phase: u64,
+) -> MaskedSum {
+    let mut words: Vec<u64> = Vec::new();
+    let mut total_weight = 0u64;
+    for (dev, out) in on_time {
+        let upload = secagg::masked_upload(
+            &out.params,
+            bits,
+            out.n_samples as u64,
+            root,
+            phase,
+            *dev,
+            participants,
+        );
+        secagg::accumulate(&mut words, &upload);
+        total_weight += out.n_samples as u64;
+    }
+    let survivors: Vec<usize> = on_time.iter().map(|(dev, _)| *dev).collect();
+    let dropped: Vec<usize> = participants
+        .iter()
+        .copied()
+        .filter(|dev| !survivors.contains(dev))
+        .collect();
+    if !dropped.is_empty() {
+        secagg::recover_dropouts(&mut words, root, phase, &survivors, &dropped);
+    }
+    MaskedSum { words, total_weight }
 }
 
 impl RoundContext<'_> {
@@ -180,6 +238,11 @@ impl Coordinator {
                 stats.loss_sum += loss;
                 stats.step_count += steps;
             }
+            // Secagg overhead accumulates in both latency modes (the
+            // closed-form path has no `PhaseTiming`, so this sits outside
+            // the conditional below).
+            stats.timing.secagg_mask_s += p.secagg_mask_s;
+            stats.timing.secagg_extra_bits += p.secagg_extra_bits;
             if let Some(pt) = &p.timing {
                 stats.timing.record_phase(p.cluster, n_clusters, pt);
                 stats.timing.stale_merged += p.stale_merged;
@@ -215,6 +278,17 @@ impl Coordinator {
         }
         let parallel = self.backend.parallel_devices();
 
+        // Secure aggregation engages only on the masked channel (config
+        // validation guarantees a masked plan runs with secagg enabled
+        // and vice versa, so the two flags below are never both set and
+        // plain/cloud phases stay untouched bitwise).
+        let mask_bits = match self.cfg.secagg {
+            SecaggMode::Mask(b) if channel == UploadChannel::DeviceEdgeMasked => Some(b),
+            _ => None,
+        };
+        let lossless = self.cfg.secagg == SecaggMode::Lossless
+            && channel == UploadChannel::DeviceEdgeMasked;
+
         // ---- train: one flattened work item per (cluster, device) -----
         let ctx = self.round_ctx();
         let participants: Vec<Vec<usize>> = alive
@@ -244,6 +318,20 @@ impl Coordinator {
             )?;
             // Device -> edge upload: the server sees the lossy model.
             ctx.cfg.compression.roundtrip(&mut out.params);
+            if lossless {
+                // Degenerate secure aggregation: mask and unmask the raw
+                // f32 bit patterns in place — a protocol identity (pinned
+                // bitwise-equal to a plain run by
+                // tests/secagg_equivalence.rs) that still walks every
+                // pairwise seed derivation.
+                secagg::lossless_roundtrip(
+                    &mut out.params,
+                    ctx.rng,
+                    phase,
+                    dev,
+                    &participants[slot],
+                );
+            }
             Ok(out)
         });
 
@@ -263,6 +351,24 @@ impl Coordinator {
             let out = r?;
             phases[slot].reports.push((dev, out.steps, out.loss_sum));
             per_cluster[slot].push((dev, out));
+        }
+
+        // Charge the masking overhead (mask mode only — lossless leaves
+        // `secagg_upload_bits` at 0 and costs nothing): every participant
+        // pays the PRG + fixed-point-encode compute, and every upload
+        // inflates from the plain `model_bits` payload to the dense
+        // 64-bit masked encoding. The same costs flow into the latency
+        // estimates via `NetworkModel::mask_seconds` / `upload_bits`;
+        // these columns make the overhead visible in the round CSV.
+        if mask_bits.is_some() && self.net.secagg_upload_bits > 0.0 {
+            for (slot, devs) in participants.iter().enumerate() {
+                phases[slot].secagg_mask_s = devs
+                    .iter()
+                    .map(|&d| self.net.mask_seconds(d, devs.len()))
+                    .sum();
+                phases[slot].secagg_extra_bits =
+                    devs.len() as f64 * (self.net.secagg_upload_bits - self.net.model_bits);
+            }
         }
 
         // ---- simulate the phase close + aggregate (Eq. 6) -------------
@@ -302,12 +408,27 @@ impl Coordinator {
             // Closed-form: no close policy in play, everyone merges.
             for (slot, &ci) in alive.iter().enumerate() {
                 if !per_cluster[slot].is_empty() {
-                    ClusterState::aggregate_into(
-                        &per_cluster[slot],
-                        &mut self.clusters[ci].model,
-                    )?;
+                    if let Some(bits) = mask_bits {
+                        let sum = masked_cluster_sum(
+                            &per_cluster[slot],
+                            &participants[slot],
+                            bits,
+                            &self.rng,
+                            phase,
+                        );
+                        let decoded = secagg::decode_sum(&sum, bits);
+                        self.clusters[ci].model.copy_from_slice(&decoded);
+                        if collect_models {
+                            phases[slot].masked = Some(sum);
+                        }
+                    } else {
+                        ClusterState::aggregate_into(
+                            &per_cluster[slot],
+                            &mut self.clusters[ci].model,
+                        )?;
+                    }
                 }
-                if collect_models {
+                if collect_models && phases[slot].masked.is_none() {
                     phases[slot].model = self.clusters[ci].model.clone();
                 }
             }
@@ -340,6 +461,9 @@ impl Coordinator {
                 debug_assert_eq!(outcome.0, pt.devices.device[i]);
                 match pt.devices.verdict[i] {
                     ReportVerdict::OnTime => on_time.push(outcome),
+                    // Mask mode never sees Late: config validation
+                    // rejects the semi-sync policy (the only verdict
+                    // source) for `--secagg mask:<bits>`.
                     ReportVerdict::Late => self.pending[ci].push(PendingReport {
                         params: outcome.1.params,
                         n_samples: outcome.1.n_samples,
@@ -357,6 +481,25 @@ impl Coordinator {
             if on_time.is_empty() && stale.is_empty() {
                 // Timeout/deadline fired before any report (and nothing
                 // stale arrived): keep the previous edge model.
+            } else if let Some(bits) = mask_bits {
+                // Masked close: on-time devices are the survivors; every
+                // participant the policy dropped leaves dangling pair
+                // masks that `masked_cluster_sum` re-derives and cancels
+                // deterministically. Stale merges cannot occur here —
+                // validation excludes the only policy that parks reports.
+                debug_assert!(stale.is_empty(), "mask mode cannot stale-merge");
+                let sum = masked_cluster_sum(
+                    &on_time,
+                    &participants[slot],
+                    bits,
+                    &self.rng,
+                    phase,
+                );
+                let decoded = secagg::decode_sum(&sum, bits);
+                self.clusters[ci].model.copy_from_slice(&decoded);
+                if collect_models {
+                    phases[slot].masked = Some(sum);
+                }
             } else {
                 // Stale merges discount with the cluster's *effective*
                 // policy — the controller override when installed, the
@@ -381,7 +524,7 @@ impl Coordinator {
                     .collect();
                 ClusterState::aggregate_reports_into(&reports, &mut self.clusters[ci].model)?;
             }
-            if collect_models {
+            if collect_models && phases[slot].masked.is_none() {
                 phases[slot].model = self.clusters[ci].model.clone();
             }
             phases[slot].timing = Some(pt);

@@ -40,6 +40,7 @@ pub mod plan;
 pub mod rpc;
 pub mod runtime;
 pub mod scenario;
+pub mod secagg;
 pub mod topology;
 pub mod util;
 

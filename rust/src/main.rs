@@ -118,6 +118,12 @@ fn train_command() -> Command {
         .flag("csv", "write per-round history to this CSV file")
         .flag_default("eval-every", "1", "evaluate every k rounds")
         .flag_default("compression", "none", "none | topk:<frac> | quantize:<bits> (upload codec)")
+        .flag_default(
+            "secagg",
+            "off",
+            "off | lossless | mask:<bits> (pairwise-masked secure aggregation \
+             on device→edge uploads; rewrites edge phases to edge(E)@masked)",
+        )
         .flag_default("participation", "1.0", "fraction of devices sampled per edge round")
         .flag("save", "write the final global model to this checkpoint file")
         .bool_flag("quiet", "suppress per-round logging")
@@ -268,6 +274,8 @@ fn run_train(args: &cfel::util::cli::Args) -> cfel::Result<()> {
     };
     cfg.compression =
         cfel::compression::Compressor::parse(&args.get_or("compression", &cfg.compression.name()))?;
+    cfg.secagg =
+        cfel::config::SecaggMode::parse(&args.get_or("secagg", &cfg.secagg.name()))?;
     cfg.participation = args.get_f64("participation", cfg.participation);
     if let Some(path) = args.get("scenario") {
         // The scenario owns the world shape: it fixes the device/cluster
@@ -390,15 +398,17 @@ fn print_dry_run(cfg: &ExperimentConfig) {
     let scenario = cfg.resolved_scenario();
     println!("plan:       {plan}");
     println!(
-        "  per round: {} edge phase(s) ({} via edge uplink, {} via cloud uplink), \
-         {} gossip step(s), cloud aggregation: {}",
+        "  per round: {} edge phase(s) ({} via edge uplink, {} via masked edge uplink, \
+         {} via cloud uplink), {} gossip step(s), cloud aggregation: {}",
         plan.edge_phases(),
         comms.edge_uploads,
+        comms.masked_uploads,
         comms.cloud_uploads,
         comms.gossip_pi,
         if plan.has_cloud_aggregate() { "yes" } else { "no" }
     );
     println!("series:     {}", cfg.run_label());
+    println!("secagg:     {}", cfg.secagg.name());
     println!("rounds:     {}", cfg.rounds);
     println!("seed:       {}", cfg.seed);
     println!("scenario:   {}", scenario.name);

@@ -51,6 +51,13 @@ pub struct RoundRecord {
     pub report_p90_s: f64,
     /// 99th-percentile report time (nearest rank).
     pub report_p99_s: f64,
+    /// Mask-generation + fixed-point-encode compute the secure-
+    /// aggregation tier charged this round, seconds summed over all
+    /// masked-phase participants (0 when secagg is off or lossless).
+    pub secagg_mask_s: f64,
+    /// Upload inflation the masked encoding added over the plain model
+    /// payload this round, bits summed over all masked uploads.
+    pub secagg_extra_bits: f64,
     /// The controller decision applied at this round's boundary
     /// (comma-free provenance note; `"-"` when nothing was rewritten).
     pub decision: String,
@@ -102,9 +109,12 @@ pub fn history_digest(history: &History) -> u64 {
         eat(&r.test_loss.to_bits().to_le_bytes());
         eat(&r.consensus.to_bits().to_le_bytes());
         eat(&(r.steps as u64).to_le_bytes());
-        // report_p50/p90/p99_s and decision deliberately skipped: the
-        // digest is fed by the original columns only, so pins recorded
-        // before the control plane landed stay valid.
+        // report_p50/p90/p99_s, decision, and the secagg overhead
+        // columns deliberately skipped: the digest is fed by the
+        // original columns only, so pins recorded before the control
+        // plane / secure-aggregation tier landed stay valid. (Masking's
+        // *latency* effects flow through compute_s/upload_s/sim_time_s,
+        // which the digest does cover.)
     }
     h
 }
@@ -187,6 +197,8 @@ impl CsvWriter {
             quantile_field(r.report_p90_s),
             quantile_field(r.report_p99_s),
             r.decision.clone(),
+            format!("{:.6e}", r.secagg_mask_s),
+            format!("{:.6e}", r.secagg_extra_bits),
         ])
     }
 }
@@ -201,11 +213,13 @@ fn quantile_field(v: f64) -> String {
     }
 }
 
-/// Header matching [`CsvWriter::round_row`]. The controller columns sit
-/// at the end so field indices of the original columns are stable.
+/// Header matching [`CsvWriter::round_row`]. Columns added after the
+/// original set (controller, then secagg overhead) sit at the end so
+/// field indices of the earlier columns are stable.
 pub const ROUND_HEADER: &str = "series,round,sim_time_s,wall_time_s,train_loss,\
      test_accuracy,test_loss,consensus,steps,compute_s,upload_s,backhaul_s,dropped,\
-     on_time,late,stale,close_reason,report_p50_s,report_p90_s,report_p99_s,decision";
+     on_time,late,stale,close_reason,report_p50_s,report_p90_s,report_p99_s,decision,\
+     secagg_mask_s,secagg_extra_bits";
 
 /// Render a small aligned markdown table.
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -246,6 +260,8 @@ mod tests {
             report_p50_s: f64::NAN,
             report_p90_s: f64::NAN,
             report_p99_s: f64::NAN,
+            secagg_mask_s: 0.0,
+            secagg_extra_bits: 0.0,
             decision: "-".into(),
         }
     }
@@ -308,13 +324,34 @@ mod tests {
         }
         let text = std::fs::read_to_string(&tmp).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert!(lines[0].ends_with("report_p50_s,report_p90_s,report_p99_s,decision"));
-        assert!(lines[1].ends_with(",0.2500,0.5000,1.0000,refit 4 clusters k[2-5] t[0.8-1.2]"));
+        assert!(lines[0].ends_with(
+            "report_p50_s,report_p90_s,report_p99_s,decision,\
+             secagg_mask_s,secagg_extra_bits"
+        ));
+        assert!(lines[1].contains(",0.2500,0.5000,1.0000,refit 4 clusters k[2-5] t[0.8-1.2],"));
         assert_eq!(
             lines[1].split(',').count(),
             lines[0].split(',').count(),
             "decision notes must stay comma-free"
         );
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn round_row_appends_secagg_columns() {
+        let tmp = std::env::temp_dir()
+            .join(format!("cfel_csv_secagg_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&tmp, ROUND_HEADER).unwrap();
+            let mut r = rec(1, 0.5, 2.0);
+            r.secagg_mask_s = 0.125;
+            r.secagg_extra_bits = 4096.0;
+            w.round_row("masked", &r).unwrap();
+        }
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].ends_with("secagg_mask_s,secagg_extra_bits"), "{}", lines[0]);
+        assert!(lines[1].ends_with(",1.250000e-1,4.096000e3"), "{}", lines[1]);
         std::fs::remove_file(&tmp).ok();
     }
 
@@ -326,6 +363,8 @@ mod tests {
         adorned[0].report_p90_s = 0.5;
         adorned[0].report_p99_s = 1.0;
         adorned[0].decision = "cloud->gossip (d2c 100000 < 500000)".into();
+        adorned[0].secagg_mask_s = 0.5;
+        adorned[0].secagg_extra_bits = 1024.0;
         assert_eq!(
             history_digest(&base),
             history_digest(&adorned),

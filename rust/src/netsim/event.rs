@@ -234,29 +234,50 @@ pub enum UploadChannel {
     DeviceEdge,
     /// Device → cloud (FedAvg; Hier-FAvg's final round of a global round).
     DeviceCloud,
+    /// Device → edge server under secure aggregation (`edge(E)@masked`):
+    /// same radio as [`UploadChannel::DeviceEdge`], but the payload is the
+    /// fixed-point masked encoding (`net.secagg_upload_bits` on the air
+    /// when nonzero) and each device pays the mask-generation compute
+    /// ([`NetworkModel::mask_seconds`]) before its upload starts.
+    DeviceEdgeMasked,
 }
 
 impl UploadChannel {
     pub fn bandwidth(self, net: &NetworkModel) -> f64 {
         match self {
-            UploadChannel::DeviceEdge => net.b_d2e,
+            UploadChannel::DeviceEdge | UploadChannel::DeviceEdgeMasked => net.b_d2e,
             UploadChannel::DeviceCloud => net.b_d2c,
         }
     }
 
     /// Bandwidth the given device reports over: a per-device uplink
     /// override (scenario capability profiles) applies to the edge
-    /// channel; the cloud channel is always the shared `b_d2c`. With no
-    /// override this is exactly [`UploadChannel::bandwidth`].
+    /// channels (masked or not); the cloud channel is always the shared
+    /// `b_d2c`. With no override this is exactly
+    /// [`UploadChannel::bandwidth`].
     pub fn device_bandwidth(self, net: &NetworkModel, device: usize) -> f64 {
         match self {
-            UploadChannel::DeviceEdge => net
+            UploadChannel::DeviceEdge | UploadChannel::DeviceEdgeMasked => net
                 .device_uplink
                 .get(device)
                 .copied()
                 .flatten()
                 .unwrap_or(net.b_d2e),
             UploadChannel::DeviceCloud => net.b_d2c,
+        }
+    }
+
+    /// Bits one report puts on the air over this channel: the (possibly
+    /// compression-scaled) `model_bits`, except masked uploads ship the
+    /// secagg encoding when one is configured. Lossless secagg keeps
+    /// `secagg_upload_bits == 0`, so its masked phases charge exactly the
+    /// plain payload — the bit-identity the degenerate mode pins.
+    pub fn upload_bits(self, net: &NetworkModel) -> f64 {
+        match self {
+            UploadChannel::DeviceEdgeMasked if net.secagg_upload_bits > 0.0 => {
+                net.secagg_upload_bits
+            }
+            _ => net.model_bits,
         }
     }
 }
@@ -467,6 +488,15 @@ pub struct RoundTiming {
     pub close_reasons: [usize; 4],
     /// Total events processed this round (cohort-granular).
     pub events_processed: usize,
+    /// Virtual seconds of fixed-point encode + pairwise mask generation
+    /// charged to this round's secure-aggregation phases, summed over
+    /// participating devices. Folded by the coordinator's trainer (both
+    /// latency modes); exactly 0.0 for non-secagg and lossless runs.
+    pub secagg_mask_s: f64,
+    /// Extra bits this round's masked uploads put on the air versus the
+    /// plain payload (participants · (secagg bits − model bits)). Exactly
+    /// 0.0 for non-secagg and lossless runs.
+    pub secagg_extra_bits: f64,
 }
 
 impl RoundTiming {
@@ -609,10 +639,38 @@ impl LatencyEstimator for ClosedFormEstimator {
         _timing: &RoundTiming,
     ) -> RoundLatency {
         let comms = plan.comms();
+        if comms.masked_uploads == 0 || net.secagg_upload_bits == 0.0 {
+            // Plain runs — and lossless secagg, whose masked uploads ship
+            // the plain f32 payload and cost no mask compute: charge them
+            // as edge uploads in the same fold, so the degenerate mode is
+            // bit-identical to `--secagg off` (`masked_uploads` is 0 there,
+            // making the `+` an exact integer no-op).
+            return RoundLatency {
+                compute_s: net.compute_seconds(device_steps),
+                upload_s: (comms.edge_uploads + comms.masked_uploads) as f64 * net.model_bits
+                    / net.b_d2e
+                    + comms.cloud_uploads as f64 * net.model_bits / net.b_d2c,
+                backhaul_s: comms.gossip_pi as f64 * net.model_bits / net.b_e2e,
+            };
+        }
+        // Masked runs: every masked phase adds per-device mask compute
+        // inside the straggler max (the device must encode + mask before
+        // it can transmit) and ships the secagg payload on the d2e radio.
+        // The closed form has no per-phase participant sets, so it charges
+        // mask generation for the configured expected group size.
+        let group = net.secagg_group_size.max(0.0) as usize;
+        let compute_s = device_steps
+            .iter()
+            .map(|&(dev, steps)| {
+                steps as f64 * net.step_seconds(dev)
+                    + comms.masked_uploads as f64 * net.mask_seconds(dev, group)
+            })
+            .fold(0.0, f64::max);
         RoundLatency {
-            compute_s: net.compute_seconds(device_steps),
+            compute_s,
             upload_s: comms.edge_uploads as f64 * net.model_bits / net.b_d2e
-                + comms.cloud_uploads as f64 * net.model_bits / net.b_d2c,
+                + comms.cloud_uploads as f64 * net.model_bits / net.b_d2c
+                + comms.masked_uploads as f64 * net.secagg_upload_bits / net.b_d2e,
             backhaul_s: comms.gossip_pi as f64 * net.model_bits / net.b_e2e,
         }
     }
@@ -669,8 +727,15 @@ impl PreparedPhase {
         self.compute.reserve(work.len());
         self.upload.reserve(work.len());
         for &(dev, steps) in work {
-            let c = steps as f64 * net.step_seconds(dev);
-            let u = net.model_bits / channel.device_bandwidth(net, dev);
+            let mut c = steps as f64 * net.step_seconds(dev);
+            if channel == UploadChannel::DeviceEdgeMasked {
+                // Secure aggregation: the device encodes and masks its
+                // update before transmitting. Zero (so `c` is unchanged
+                // bitwise — compute seconds are never −0.0) when secagg
+                // is off or lossless.
+                c += net.mask_seconds(dev, work.len());
+            }
+            let u = channel.upload_bits(net) / channel.device_bandwidth(net, dev);
             self.compute.push(c);
             self.upload.push(u);
             // Cohort key: exact bit patterns, so members share *identical*
@@ -1003,12 +1068,16 @@ mod tests {
         }
         let upload: Vec<f64> = work
             .iter()
-            .map(|&(dev, _)| net.model_bits / channel.device_bandwidth(net, dev))
+            .map(|&(dev, _)| channel.upload_bits(net) / channel.device_bandwidth(net, dev))
             .collect();
         let mut queue = EventQueue::new();
         for (slot, &(dev, steps)) in work.iter().enumerate() {
+            let mut c = steps as f64 * net.step_seconds(dev);
+            if channel == UploadChannel::DeviceEdgeMasked {
+                c += net.mask_seconds(dev, work.len());
+            }
             queue.schedule(Event {
-                time_s: steps as f64 * net.step_seconds(dev),
+                time_s: c,
                 kind: EventKind::ComputeDone,
                 id: slot,
             });
@@ -1276,13 +1345,105 @@ mod tests {
             Box::new(SemiSync { k: 5, timeout_s: fast_finish * 3.0, staleness_exp: 1.0 }),
             Box::new(SemiSync { k: 3, timeout_s: f64::INFINITY, staleness_exp: 0.5 }),
         ];
-        for channel in [UploadChannel::DeviceEdge, UploadChannel::DeviceCloud] {
+        // With secagg unset, the masked channel degenerates to DeviceEdge.
+        for channel in [
+            UploadChannel::DeviceEdge,
+            UploadChannel::DeviceCloud,
+            UploadChannel::DeviceEdgeMasked,
+        ] {
             for policy in &policies {
                 let fast = EventDrivenEstimator::simulate_phase(&m, &work, channel, &**policy);
                 let oracle = reference_phase(&m, &work, channel, &**policy);
                 assert_same_phase(&fast, &oracle);
             }
         }
+        // And again with real secagg costs charged on the masked channel.
+        m.secagg_upload_bits = 64.0 * 1_000_000.0;
+        m.secagg_group_size = 9.0;
+        for policy in &policies {
+            let fast = EventDrivenEstimator::simulate_phase(
+                &m,
+                &work,
+                UploadChannel::DeviceEdgeMasked,
+                &**policy,
+            );
+            let oracle = reference_phase(&m, &work, UploadChannel::DeviceEdgeMasked, &**policy);
+            assert_same_phase(&fast, &oracle);
+        }
+    }
+
+    #[test]
+    fn masked_channel_charges_mask_compute_and_inflated_uploads() {
+        let mut m = net();
+        let work: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let plain = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdge,
+            &FullBarrier,
+        );
+        // Lossless secagg (no upload-bits override): the masked phase is
+        // bit-identical to the plain one.
+        let lossless = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdgeMasked,
+            &FullBarrier,
+        );
+        assert_same_phase(&plain, &lossless);
+        // Real masking: one u64 word per f32 parameter doubles the upload,
+        // and every device pays its mask compute before transmitting.
+        m.secagg_upload_bits = 2.0 * m.model_bits;
+        let masked = EventDrivenEstimator::simulate_phase(
+            &m,
+            &work,
+            UploadChannel::DeviceEdgeMasked,
+            &FullBarrier,
+        );
+        let mask_s = m.mask_seconds(0, work.len());
+        assert!(mask_s > 0.0);
+        for (p, q) in plain.devices.iter().zip(masked.devices.iter()) {
+            assert!((q.compute_s - (p.compute_s + mask_s)).abs() < 1e-18);
+            assert!((q.upload_s - 2.0 * p.upload_s).abs() < 1e-12);
+        }
+        assert!(masked.duration_s > plain.duration_s);
+    }
+
+    #[test]
+    fn closed_form_charges_masked_plans() {
+        let mut m = net();
+        let steps: Vec<(usize, usize)> = (0..4).map(|d| (d, 16)).collect();
+        let plain_plan = Plan::parse("edge(2)*8; gossip(10)").unwrap();
+        let masked_plan = Plan::parse("edge(2)@masked*8; gossip(10)").unwrap();
+        let plain = ClosedFormEstimator.round_latency(
+            &m,
+            &plain_plan,
+            &steps,
+            &RoundTiming::default(),
+        );
+        // Lossless secagg: bit-identical to the plain plan.
+        let lossless = ClosedFormEstimator.round_latency(
+            &m,
+            &masked_plan,
+            &steps,
+            &RoundTiming::default(),
+        );
+        assert_eq!(plain.compute_s.to_bits(), lossless.compute_s.to_bits());
+        assert_eq!(plain.upload_s.to_bits(), lossless.upload_s.to_bits());
+        assert_eq!(plain.backhaul_s.to_bits(), lossless.backhaul_s.to_bits());
+        // Real masking inflates uploads and adds mask compute to the max.
+        m.secagg_upload_bits = 2.0 * m.model_bits;
+        m.secagg_group_size = 4.0;
+        let masked = ClosedFormEstimator.round_latency(
+            &m,
+            &masked_plan,
+            &steps,
+            &RoundTiming::default(),
+        );
+        assert!((masked.upload_s - 2.0 * plain.upload_s).abs() < 1e-9);
+        let want_compute = 16.0 * m.step_seconds(0) + 8.0 * m.mask_seconds(0, 4);
+        assert!((masked.compute_s - want_compute).abs() < 1e-15);
+        assert_eq!(masked.backhaul_s.to_bits(), plain.backhaul_s.to_bits());
     }
 
     #[test]

@@ -74,6 +74,23 @@ pub struct NetworkModel {
     pub b_e2e: f64,
     /// Device→cloud uplink, bits/s (paper: 1 Mbps).
     pub b_d2c: f64,
+    /// Masked-upload size in bits over `@masked` channels (secure
+    /// aggregation ships one u64 word per parameter). 0 = lossless /
+    /// secagg off: masked uploads cost exactly `model_bits` and the
+    /// mask compute term vanishes — the degenerate mode the equivalence
+    /// tests pin bitwise.
+    pub secagg_upload_bits: f64,
+    /// FLOPs to draw + add one pairwise PRG mask word (per pair, per
+    /// word): one xoshiro step plus the wrapping add.
+    pub secagg_prg_flops: f64,
+    /// FLOPs to fixed-point-encode one parameter (clamp, scale, round,
+    /// widen, weight-multiply).
+    pub secagg_encode_flops: f64,
+    /// Participant-set size the *closed-form* estimator charges mask
+    /// generation for (the event engine uses each phase's actual
+    /// cohort size). Set by the coordinator from the expected
+    /// per-cluster participant count.
+    pub secagg_group_size: f64,
 }
 
 /// iPhone X processing capacity used by the paper (FLOP/s).
@@ -147,7 +164,27 @@ impl NetworkModel {
             b_d2e: 10.0 * MBPS,
             b_e2e: 50.0 * MBPS,
             b_d2c: 1.0 * MBPS,
+            secagg_upload_bits: 0.0,
+            secagg_prg_flops: 24.0,
+            secagg_encode_flops: 8.0,
+            secagg_group_size: 0.0,
         }
+    }
+
+    /// Seconds device `k` spends fixed-point-encoding and masking one
+    /// upload for a secure-aggregation phase with `group_size`
+    /// participants: every parameter word is encoded once and masked
+    /// once per *other* participant. Exactly 0 when secagg is off or
+    /// lossless (`secagg_upload_bits == 0`), so plain runs charge plain
+    /// costs bit for bit.
+    pub fn mask_seconds(&self, device: usize, group_size: usize) -> f64 {
+        if self.secagg_upload_bits == 0.0 {
+            return 0.0;
+        }
+        let words = self.secagg_upload_bits / 64.0;
+        let pairs = group_size.saturating_sub(1) as f64;
+        (self.secagg_encode_flops + pairs * self.secagg_prg_flops) * words
+            / self.device_flops[device]
     }
 
     /// Draw heterogeneous device capacities c_k ~ U[lo, 1]·capacity, in
@@ -351,6 +388,19 @@ mod tests {
         assert_eq!(slowed, 2); // ceil(0.5 * 4)
         let m2 = model().with_stragglers(spec, &Rng::new(7));
         assert_eq!(m.device_flops, m2.device_flops);
+    }
+
+    #[test]
+    fn mask_seconds_zero_when_off_and_scales_with_group() {
+        let mut m = model();
+        assert_eq!(m.mask_seconds(0, 10), 0.0, "secagg off must cost nothing");
+        m.secagg_upload_bits = 64.0 * 1_000_000.0; // one word per param
+        let solo = m.mask_seconds(0, 1);
+        let ten = m.mask_seconds(0, 10);
+        assert!(solo > 0.0 && ten > solo);
+        // encode once + 9 PRG pairs, 1e6 words, on the paper device.
+        let want = (8.0 + 9.0 * 24.0) * 1e6 / IPHONE_X_FLOPS;
+        assert!((ten - want).abs() < 1e-15, "ten {ten} want {want}");
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! step  := atom ('*' N)*            repetition, left-associative
 //! atom  := 'edge(' E ')'            E local epochs, report to the edge
 //!        | 'edge(' E ')@cloud'      E local epochs, report to the cloud
+//!        | 'edge(' E ')@masked'     E local epochs, masked (secure-agg) edge reports
 //!        | 'gossip(' P ')'          P backhaul gossip steps (Eq. 7)
 //!        | 'cloud'                  cloud aggregation over alive clusters
 //!        | '(' plan ')'             grouping
@@ -97,6 +98,9 @@ pub struct PlanComms {
     pub edge_uploads: usize,
     /// Edge phases reporting device→cloud (counted with repetition).
     pub cloud_uploads: usize,
+    /// Edge phases reporting device→edge under secure aggregation
+    /// (counted with repetition).
+    pub masked_uploads: usize,
     /// Total gossip steps Σπ over the round (counted with repetition).
     pub gossip_pi: usize,
 }
@@ -115,7 +119,7 @@ impl Plan {
     /// exactly as before.)
     pub fn edge_phases(&self) -> usize {
         let c = self.comms();
-        c.edge_uploads + c.cloud_uploads
+        c.edge_uploads + c.cloud_uploads + c.masked_uploads
     }
 
     /// Per-round communication totals (see [`PlanComms`]).
@@ -126,6 +130,7 @@ impl Plan {
                     Step::EdgePhase { channel, .. } => match channel {
                         UploadChannel::DeviceEdge => c.edge_uploads += mult,
                         UploadChannel::DeviceCloud => c.cloud_uploads += mult,
+                        UploadChannel::DeviceEdgeMasked => c.masked_uploads += mult,
                     },
                     Step::Gossip { pi } => c.gossip_pi += mult * *pi as usize,
                     Step::CloudAggregate => {}
@@ -259,10 +264,15 @@ impl Plan {
                 .iter()
                 .map(|s| match s {
                     Step::CloudAggregate => Step::Gossip { pi },
-                    Step::EdgePhase { epochs, .. } => Step::EdgePhase {
-                        epochs: *epochs,
-                        channel: UploadChannel::DeviceEdge,
-                    },
+                    // Only `@cloud` reports come back to the edge uplink;
+                    // a masked phase keeps its secure-aggregation channel
+                    // (the privacy property must survive controller moves).
+                    Step::EdgePhase { epochs, channel: UploadChannel::DeviceCloud } => {
+                        Step::EdgePhase {
+                            epochs: *epochs,
+                            channel: UploadChannel::DeviceEdge,
+                        }
+                    }
                     Step::Repeat { n, body } => {
                         Step::Repeat { n: *n, body: walk(body, pi) }
                     }
@@ -271,6 +281,30 @@ impl Plan {
                 .collect()
         }
         Plan { steps: walk(&self.steps, pi) }
+    }
+
+    /// Secure-aggregation rendering: every plain device→edge report phase
+    /// switches to the masked channel (`--secagg` sugar; `@cloud` phases
+    /// are left alone — the cloud uplink has no pairwise-masking tier).
+    /// Preserves the edge-phase count, so the phase cursor and every
+    /// per-(phase, device) RNG stream line up with the unmasked plan.
+    pub fn mask_edges(&self) -> Plan {
+        fn walk(steps: &[Step]) -> Vec<Step> {
+            steps
+                .iter()
+                .map(|s| match s {
+                    Step::EdgePhase { epochs, channel: UploadChannel::DeviceEdge } => {
+                        Step::EdgePhase {
+                            epochs: *epochs,
+                            channel: UploadChannel::DeviceEdgeMasked,
+                        }
+                    }
+                    Step::Repeat { n, body } => Step::Repeat { n: *n, body: walk(body) },
+                    other => other.clone(),
+                })
+                .collect()
+        }
+        Plan { steps: walk(&self.steps) }
     }
 
     /// Centralized rendering: every `gossip` step becomes a cloud
@@ -299,6 +333,9 @@ impl fmt::Display for Step {
             }
             Step::EdgePhase { epochs, channel: UploadChannel::DeviceCloud } => {
                 write!(f, "edge({epochs})@cloud")
+            }
+            Step::EdgePhase { epochs, channel: UploadChannel::DeviceEdgeMasked } => {
+                write!(f, "edge({epochs})@masked")
             }
             Step::Gossip { pi } => write!(f, "gossip({pi})"),
             Step::CloudAggregate => write!(f, "cloud"),
@@ -352,10 +389,32 @@ mod tests {
         let c = p.comms();
         assert_eq!(c.edge_uploads, 3);
         assert_eq!(c.cloud_uploads, 1);
+        assert_eq!(c.masked_uploads, 0);
         assert_eq!(c.gossip_pi, 12);
         assert_eq!(p.edge_phases(), 4);
         assert!(p.has_gossip());
         assert!(p.has_cloud_aggregate());
+    }
+
+    #[test]
+    fn masked_phases_count_into_comms_and_the_phase_cursor() {
+        let p = Plan::from_steps(vec![
+            Step::Repeat {
+                n: 2,
+                body: vec![Step::EdgePhase {
+                    epochs: 3,
+                    channel: UploadChannel::DeviceEdgeMasked,
+                }],
+            },
+            edge(1),
+        ]);
+        let c = p.comms();
+        assert_eq!(c.masked_uploads, 2);
+        assert_eq!(c.edge_uploads, 1);
+        // Masked phases consume per-phase RNG streams like any other edge
+        // phase — edge_phases() is the phase-cursor stride.
+        assert_eq!(p.edge_phases(), 3);
+        p.validate().unwrap();
     }
 
     #[test]
@@ -421,6 +480,27 @@ mod tests {
         assert_eq!(c.centralize(), c);
         // pi 0 is clamped, never emitting an invalid gossip step.
         assert_eq!(p.decentralize(0).to_string(), "edge(4); gossip(1)");
+        // Masked phases keep their channel through both rewrites.
+        let m = Plan::parse("edge(2)@masked; cloud").unwrap();
+        assert_eq!(m.decentralize(5).to_string(), "edge(2)@masked; gossip(5)");
+        assert_eq!(m.centralize().to_string(), "edge(2)@masked; cloud");
+    }
+
+    #[test]
+    fn mask_edges_rewrites_only_plain_edge_phases() {
+        let p = Plan::parse("edge(2)*2; edge(1)@cloud; gossip(3); cloud").unwrap();
+        let m = p.mask_edges();
+        assert_eq!(
+            m.to_string(),
+            "edge(2)@masked*2; edge(1)@cloud; gossip(3); cloud"
+        );
+        assert_eq!(m.edge_phases(), p.edge_phases());
+        m.validate().unwrap();
+        // Idempotent: already-masked phases are untouched.
+        assert_eq!(m.mask_edges(), m);
+        // A pure-cloud plan has nothing to mask.
+        let cloudy = Plan::parse("edge(4)@cloud; cloud").unwrap();
+        assert_eq!(cloudy.mask_edges(), cloudy);
     }
 
     #[test]
@@ -432,9 +512,13 @@ mod tests {
                 body: vec![edge(1), Step::Gossip { pi: 4 }],
             },
             Step::EdgePhase { epochs: 5, channel: UploadChannel::DeviceCloud },
+            Step::EdgePhase { epochs: 2, channel: UploadChannel::DeviceEdgeMasked },
             Step::CloudAggregate,
         ]);
-        assert_eq!(p.to_string(), "edge(2)*2; (edge(1); gossip(4))*3; edge(5)@cloud; cloud");
+        assert_eq!(
+            p.to_string(),
+            "edge(2)*2; (edge(1); gossip(4))*3; edge(5)@cloud; edge(2)@masked; cloud"
+        );
         // Nested single-step repeats chain with `*`.
         let nested = Plan::from_steps(vec![Step::Repeat {
             n: 3,

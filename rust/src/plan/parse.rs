@@ -11,9 +11,10 @@ use crate::plan::{Plan, Step};
 pub const GRAMMAR: &str = "plan grammar:\n\
     \x20 plan  := step (';' step)*\n\
     \x20 step  := atom ('*' N)*\n\
-    \x20 atom  := edge(E) | edge(E)@cloud | gossip(P) | cloud | (plan)\n\
+    \x20 atom  := edge(E) | edge(E)@cloud | edge(E)@masked | gossip(P) | cloud | (plan)\n\
     examples: \"edge(2)*2; gossip(10)\" (CE-FedAvg), \
     \"edge(4)@cloud; cloud\" (FedAvg), \
+    \"edge(2)@masked*2; gossip(10)\" (secure-aggregation CE-FedAvg), \
     \"(edge(2); gossip(3))*2; cloud\" (a hybrid)";
 
 pub fn parse(spec: &str) -> Result<Plan> {
@@ -129,10 +130,12 @@ impl Parser<'_> {
                     self.pos += 1;
                     if self.eat_keyword("cloud") {
                         UploadChannel::DeviceCloud
+                    } else if self.eat_keyword("masked") {
+                        UploadChannel::DeviceEdgeMasked
                     } else if self.eat_keyword("edge") {
                         UploadChannel::DeviceEdge
                     } else {
-                        return Err(self.err("expected 'edge' or 'cloud' after '@'"));
+                        return Err(self.err("expected 'edge', 'cloud' or 'masked' after '@'"));
                     }
                 } else {
                     UploadChannel::DeviceEdge
@@ -184,6 +187,19 @@ mod tests {
                 Step::CloudAggregate,
             ])
         );
+        assert_eq!(
+            parse("edge(2)@masked*2; gossip(10)").unwrap(),
+            Plan::from_steps(vec![
+                Step::Repeat {
+                    n: 2,
+                    body: vec![Step::EdgePhase {
+                        epochs: 2,
+                        channel: UploadChannel::DeviceEdgeMasked,
+                    }],
+                },
+                Step::Gossip { pi: 10 },
+            ])
+        );
     }
 
     #[test]
@@ -226,6 +242,7 @@ mod tests {
             "edge()",
             "edge(2);;",
             "warp(9)",
+            "edge(2)@warp",
             "edge(2) extra",
             "gossip(2)",      // valid syntax, but never trains
             "edge(0)",        // degenerate epoch count
@@ -251,6 +268,8 @@ mod tests {
             "(edge(1); gossip(2))*3; cloud",
             "edge(2)*2*3",
             "edge(1)*0; edge(3)",
+            "edge(2)@masked; gossip(10)",
+            "edge(2)@masked*2; cloud",
         ] {
             let p = parse(spec).unwrap();
             assert_eq!(p.to_string(), spec);

@@ -150,9 +150,12 @@ impl ClusterExecutor for RemoteExecutor {
         // frame was consumed; on a transport error this executor is dead
         // and gets replaced by one with a fresh count.
         self.inflight = self.inflight.saturating_sub(1);
-        match self.expect("phase-done")? {
-            Msg::PhaseDone { phases } => Ok(phases),
-            _ => unreachable!("expect() returned a non-phase-done message"),
+        match self.recv()? {
+            Msg::Error { message } => Err(CfelError::Runtime(format!("edge: {message}"))),
+            // Plain and masked phase results are the same call outcome;
+            // the driver branches on `ClusterPhase::masked` itself.
+            Msg::PhaseDone { phases } | Msg::MaskedPhaseDone { phases } => Ok(phases),
+            m => Err(self.transport(format!("expected phase-done, got {}", m.name()))),
         }
     }
 

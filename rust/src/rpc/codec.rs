@@ -17,8 +17,9 @@ use crate::error::{CfelError, Result};
 
 /// Frame preamble, first bytes on every frame.
 pub const MAGIC: [u8; 4] = *b"CFRP";
-/// Protocol version; bumped on any wire-format change.
-pub const PROTO_VERSION: u16 = 2;
+/// Protocol version; bumped on any wire-format change (v3: masked
+/// secure-aggregation phase payloads + per-phase secagg overhead).
+pub const PROTO_VERSION: u16 = 3;
 /// Upper bound on a frame payload: 256 MiB holds a 64M-parameter f32
 /// model, far above anything the MLP zoo here ships per cluster.
 pub const MAX_FRAME: usize = 256 << 20;
@@ -178,6 +179,13 @@ impl WireWriter {
             self.put_usize(v);
         }
     }
+
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
 }
 
 /// Checked cursor over a frame payload. Every read validates the
@@ -298,6 +306,15 @@ impl<'a> WireReader<'a> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u64()?);
         }
         Ok(out)
     }

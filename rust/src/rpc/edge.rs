@@ -104,7 +104,13 @@ fn handle(msg: Msg, world: &mut Option<EdgeWorld>, verbose: bool) -> Result<Msg>
             let w = need_world(world)?;
             let owned = w.owned.clone();
             let phases = w.coord.edge_phase_on(&owned, epochs, phase, channel, true)?;
-            Ok(Msg::PhaseDone { phases })
+            // Masked aggregates ride their own frame kind so the payload
+            // layout is unambiguous on both sides of the wire.
+            if phases.iter().any(|p| p.masked.is_some()) {
+                Ok(Msg::MaskedPhaseDone { phases })
+            } else {
+                Ok(Msg::PhaseDone { phases })
+            }
         }
         Msg::SetState { models, clocks } => {
             let w = need_world(world)?;

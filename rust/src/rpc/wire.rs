@@ -14,6 +14,7 @@ use crate::coordinator::ClusterPhase;
 use crate::error::{CfelError, Result};
 use crate::netsim::{DeviceTimings, PhaseTiming, UploadChannel};
 use crate::rpc::codec::{read_frame, read_frame_opt, write_frame, WireReader, WireWriter};
+use crate::secagg::MaskedSum;
 
 /// Everything that can travel between `cfel-cloud` and `cfel-edge`.
 #[derive(Debug, Clone)]
@@ -55,7 +56,16 @@ pub enum Msg {
         channel: UploadChannel,
     },
     /// Edge → cloud: the phase results, owned clusters ascending.
+    /// Every phase's `masked` is `None` — plain models only (the encoder
+    /// debug-asserts it); masked phases travel as [`Msg::MaskedPhaseDone`].
     PhaseDone { phases: Vec<ClusterPhase> },
+    /// Edge → cloud: phase results where at least one cluster aggregated
+    /// under secure aggregation — the wire carries the still-encoded
+    /// masked sum (`ClusterPhase::masked`) instead of a plain f32 model,
+    /// and the cloud decodes it itself. A separate frame kind (rather
+    /// than a flag inside `PhaseDone`) so a pre-secagg peer fails loudly
+    /// on the kind tag instead of misparsing the payload.
+    MaskedPhaseDone { phases: Vec<ClusterPhase> },
     /// Cloud → edge: install models/clocks rewritten cloud-side
     /// (gossip, cloud aggregation).
     SetState {
@@ -82,11 +92,13 @@ const K_STATE_SET: u16 = 9;
 const K_SHUTDOWN: u16 = 10;
 const K_BYE: u16 = 11;
 const K_ERROR: u16 = 12;
+const K_MASKED_PHASE_DONE: u16 = 13;
 
 fn put_channel(w: &mut WireWriter, c: UploadChannel) {
     w.put_u8(match c {
         UploadChannel::DeviceEdge => 0,
         UploadChannel::DeviceCloud => 1,
+        UploadChannel::DeviceEdgeMasked => 2,
     });
 }
 
@@ -94,6 +106,7 @@ fn get_channel(r: &mut WireReader) -> Result<UploadChannel> {
     match r.get_u8()? {
         0 => Ok(UploadChannel::DeviceEdge),
         1 => Ok(UploadChannel::DeviceCloud),
+        2 => Ok(UploadChannel::DeviceEdgeMasked),
         t => Err(CfelError::Codec(format!("unknown upload channel tag {t}"))),
     }
 }
@@ -189,6 +202,8 @@ fn put_phase(w: &mut WireWriter, p: &ClusterPhase) {
     }
     w.put_usize(p.stale_merged);
     w.put_usize(p.pending_after);
+    w.put_f64(p.secagg_mask_s);
+    w.put_f64(p.secagg_extra_bits);
 }
 
 fn get_phase(r: &mut WireReader) -> Result<ClusterPhase> {
@@ -210,6 +225,8 @@ fn get_phase(r: &mut WireReader) -> Result<ClusterPhase> {
     };
     let stale_merged = r.get_usize()?;
     let pending_after = r.get_usize()?;
+    let secagg_mask_s = r.get_f64()?;
+    let secagg_extra_bits = r.get_f64()?;
     Ok(ClusterPhase {
         cluster,
         reports,
@@ -218,7 +235,29 @@ fn get_phase(r: &mut WireReader) -> Result<ClusterPhase> {
         timing,
         stale_merged,
         pending_after,
+        masked: None,
+        secagg_mask_s,
+        secagg_extra_bits,
     })
+}
+
+/// The optional masked-sum suffix a [`Msg::MaskedPhaseDone`] phase
+/// carries after the common [`put_phase`] layout.
+fn put_masked(w: &mut WireWriter, masked: &Option<MaskedSum>) {
+    w.put_bool(masked.is_some());
+    if let Some(sum) = masked {
+        w.put_u64s(&sum.words);
+        w.put_u64(sum.total_weight);
+    }
+}
+
+fn get_masked(r: &mut WireReader) -> Result<Option<MaskedSum>> {
+    if !r.get_bool()? {
+        return Ok(None);
+    }
+    let words = r.get_u64s()?;
+    let total_weight = r.get_u64()?;
+    Ok(Some(MaskedSum { words, total_weight }))
 }
 
 fn put_policies(w: &mut WireWriter, policies: &[(usize, String)]) {
@@ -284,6 +323,7 @@ impl Msg {
             Msg::RoundBegun => "round-begun",
             Msg::RunPhase { .. } => "run-phase",
             Msg::PhaseDone { .. } => "phase-done",
+            Msg::MaskedPhaseDone { .. } => "masked-phase-done",
             Msg::SetState { .. } => "set-state",
             Msg::StateSet => "state-set",
             Msg::Shutdown => "shutdown",
@@ -335,9 +375,21 @@ impl Msg {
             Msg::PhaseDone { phases } => {
                 w.put_usize(phases.len());
                 for p in phases {
+                    debug_assert!(
+                        p.masked.is_none(),
+                        "masked phases must travel as MaskedPhaseDone"
+                    );
                     put_phase(&mut w, p);
                 }
                 K_PHASE_DONE
+            }
+            Msg::MaskedPhaseDone { phases } => {
+                w.put_usize(phases.len());
+                for p in phases {
+                    put_phase(&mut w, p);
+                    put_masked(&mut w, &p.masked);
+                }
+                K_MASKED_PHASE_DONE
             }
             Msg::SetState { models, clocks } => {
                 put_state(&mut w, models, clocks);
@@ -394,6 +446,16 @@ impl Msg {
                     phases.push(get_phase(&mut r)?);
                 }
                 Msg::PhaseDone { phases }
+            }
+            K_MASKED_PHASE_DONE => {
+                let n = r.get_len(1)?;
+                let mut phases = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut p = get_phase(&mut r)?;
+                    p.masked = get_masked(&mut r)?;
+                    phases.push(p);
+                }
+                Msg::MaskedPhaseDone { phases }
             }
             K_SET_STATE => {
                 let (models, clocks) = get_state(&mut r)?;

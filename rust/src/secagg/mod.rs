@@ -1,0 +1,440 @@
+//! Deterministic Bonawitz-style pairwise-masking secure aggregation.
+//!
+//! Devices upload fixed-point-encoded, additively masked updates; the edge
+//! sums them under wrapping `u64` arithmetic and never sees an individual
+//! model. Every unordered device pair `(lo, hi)` of a phase's participant
+//! set shares a PRG stream derived from the run's root seed
+//! (`root.split(0x5ECA_6600).split(phase).split(lo).split(hi)`): `lo` adds
+//! the stream to its upload, `hi` subtracts it, so the pair contributes
+//! exactly zero to the sum. Devices dropped by the close policy leave
+//! dangling shares in the survivors' uploads; the aggregator reconstructs
+//! those shares from the same seeds ([`recover_dropouts`]) so the unmasked
+//! sum equals the plain weighted sum over the survivors, bit for bit.
+//!
+//! The simulator trusts itself with the seeds (both "ends" live in one
+//! address space), so there is no key agreement or Shamir recovery phase —
+//! what is modelled faithfully is the *arithmetic* (masks cancel exactly,
+//! dropout recovery is exact) and the *cost* (mask generation compute and
+//! message inflation, charged by `netsim`). Determinism: masks are pure
+//! functions of `(seed, phase, device pair)`, and wrapping addition is
+//! associative and commutative, so the aggregate is independent of thread
+//! count and summation order (docs/DETERMINISM.md).
+//!
+//! ## Fixed-point encoding
+//!
+//! With `mask:<bits>`, parameter `x` is clamped to ±[`CLIP`] and encoded as
+//! `q = round(x · 2^bits)`; a device of sample weight `n` uploads
+//! `n · q mod 2^64` per parameter (plus masks). Decoding divides the summed
+//! words by `2^bits · Σn`, so the result differs from the exact clamped
+//! weighted mean by at most `2^-(bits+1)` per parameter (each device's
+//! rounding error is ≤ n/2 words) plus one f32 rounding step. Overflow
+//! headroom requires `bits + 6 + ceil(log2 Σn) ≤ 62` (|q| ≤ 2^(bits+6)),
+//! validated at coordinator construction.
+//!
+//! In `lossless` mode the raw f32 bit patterns ride the masked channel and
+//! are unmasked back verbatim ([`lossless_roundtrip`]) — a degenerate mode
+//! pinning that masking alone cannot perturb a single bit of history.
+
+use crate::util::rng::Rng;
+
+/// RNG stream label for pairwise mask seeds (docs/DETERMINISM.md §3).
+pub const SECAGG_STREAM: u64 = 0x5ECA_6600;
+
+/// Fixed-point clip range: parameters are clamped to ±CLIP before
+/// quantization. Model weights in this codebase live well inside ±64.
+pub const CLIP: f64 = 64.0;
+
+/// Largest supported `mask:<bits>` precision. 46 + 6 clip bits + 10 bits
+/// of weight headroom stays within the 62-bit overflow budget for any
+/// cluster of ≤ 1024 total samples; larger fleets need fewer bits, which
+/// the coordinator's headroom check enforces per run.
+pub const MAX_BITS: u32 = 46;
+
+/// `2^bits` as f64 — the fixed-point scale factor.
+pub fn scale(bits: u32) -> f64 {
+    (1u64 << bits) as f64
+}
+
+/// A cluster phase's aggregated-but-encoded upload: the wrapping sum of
+/// the survivors' masked words (dangling dropout shares already removed)
+/// and the survivors' total sample weight. [`decode_sum`] turns it back
+/// into a plain model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskedSum {
+    /// One wrapping-u64 accumulator per model parameter.
+    pub words: Vec<u64>,
+    /// Σ n_i over the surviving (on-time) devices.
+    pub total_weight: u64,
+}
+
+/// The shared PRG for the unordered pair `{a, b}` in `phase`, derived from
+/// the run's root RNG. Symmetric in its device arguments.
+fn pair_stream(root: &Rng, phase: u64, a: usize, b: usize) -> Rng {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    root.split(SECAGG_STREAM)
+        .split(phase)
+        .split(lo as u64)
+        .split(hi as u64)
+}
+
+/// Apply (or, with `apply = false`, remove) device `i`'s mask share toward
+/// its pair with `j`: the lower-numbered device adds the pair's PRG words,
+/// the higher-numbered one subtracts them, so `i`'s and `j`'s shares cancel
+/// in any wrapping sum containing both.
+pub fn mask_share(words: &mut [u64], root: &Rng, phase: u64, i: usize, j: usize, apply: bool) {
+    debug_assert_ne!(i, j, "a device has no mask pair with itself");
+    let mut prg = pair_stream(root, phase, i, j);
+    let positive = (i < j) == apply;
+    for w in words.iter_mut() {
+        let m = prg.next_u64();
+        *w = if positive { w.wrapping_add(m) } else { w.wrapping_sub(m) };
+    }
+}
+
+/// Fixed-point encode a model with sample weight `weight`:
+/// `word[k] = (round(clamp(x_k) · 2^bits) as i64 as u64) · weight mod 2^64`.
+pub fn encode_weighted(params: &[f32], bits: u32, weight: u64) -> Vec<u64> {
+    let s = scale(bits);
+    params
+        .iter()
+        .map(|&x| {
+            let q = ((x as f64).clamp(-CLIP, CLIP) * s).round() as i64;
+            (q as u64).wrapping_mul(weight)
+        })
+        .collect()
+}
+
+/// One device's complete upload: its weighted fixed-point encoding plus its
+/// mask shares toward every other participant of the phase.
+pub fn masked_upload(
+    params: &[f32],
+    bits: u32,
+    weight: u64,
+    root: &Rng,
+    phase: u64,
+    device: usize,
+    participants: &[usize],
+) -> Vec<u64> {
+    let mut words = encode_weighted(params, bits, weight);
+    for &j in participants {
+        if j != device {
+            mask_share(&mut words, root, phase, device, j, true);
+        }
+    }
+    words
+}
+
+/// Wrapping elementwise accumulation of one upload into the running sum.
+/// The accumulator adopts the upload's length on first use.
+pub fn accumulate(acc: &mut Vec<u64>, upload: &[u64]) {
+    if acc.is_empty() {
+        acc.resize(upload.len(), 0);
+    }
+    debug_assert_eq!(acc.len(), upload.len(), "uploads must agree on model size");
+    for (a, u) in acc.iter_mut().zip(upload) {
+        *a = a.wrapping_add(*u);
+    }
+}
+
+/// Deterministic dropout recovery: every survivor `i` carries a dangling
+/// share toward each dropped device `j` (whose own upload never arrived).
+/// Re-derive those shares from the seeds and remove them, leaving the sum
+/// equal to the plain weighted encoded sum over the survivors alone.
+pub fn recover_dropouts(
+    words: &mut [u64],
+    root: &Rng,
+    phase: u64,
+    survivors: &[usize],
+    dropped: &[usize],
+) {
+    for &i in survivors {
+        for &j in dropped {
+            mask_share(words, root, phase, i, j, false);
+        }
+    }
+}
+
+/// Decode an unmasked sum back to a plain model: reinterpret each word as
+/// two's-complement and divide by `2^bits · total_weight`. With a zero
+/// total weight there is nothing to average; callers keep the previous
+/// model instead (mirroring the plain path's empty-cluster skip).
+pub fn decode_sum(sum: &MaskedSum, bits: u32) -> Vec<f32> {
+    debug_assert!(sum.total_weight > 0, "decode_sum needs survivors");
+    let denom = scale(bits) * sum.total_weight as f64;
+    sum.words
+        .iter()
+        .map(|&w| ((w as i64) as f64 / denom) as f32)
+        .collect()
+}
+
+/// The `lossless` degenerate mode: the raw f32 bit patterns ride the masked
+/// channel — mask with the device's shares over the participant set, then
+/// immediately unmask with the identically re-derived shares. Exercises the
+/// full mask machinery while returning every parameter bit-identically,
+/// including NaN payloads, −0.0 and subnormals.
+pub fn lossless_roundtrip(
+    params: &mut [f32],
+    root: &Rng,
+    phase: u64,
+    device: usize,
+    participants: &[usize],
+) {
+    let mut words: Vec<u64> = params.iter().map(|&x| x.to_bits() as u64).collect();
+    for &j in participants {
+        if j != device {
+            mask_share(&mut words, root, phase, device, j, true);
+        }
+    }
+    for &j in participants {
+        if j != device {
+            mask_share(&mut words, root, phase, device, j, false);
+        }
+    }
+    for (p, w) in params.iter_mut().zip(&words) {
+        *p = f32::from_bits(*w as u32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest;
+
+    fn root() -> Rng {
+        Rng::new(0xC0FFEE)
+    }
+
+    /// Plain (mask-free) weighted encoded sum — the oracle the masked
+    /// pipeline must match bit for bit.
+    fn plain_sum(models: &[(usize, u64, Vec<f32>)], bits: u32) -> Vec<u64> {
+        let mut acc = Vec::new();
+        for (_, w, m) in models {
+            accumulate(&mut acc, &encode_weighted(m, bits, *w));
+        }
+        acc
+    }
+
+    fn gen_models(rng: &mut Rng, n: usize, len: usize) -> Vec<(usize, u64, Vec<f32>)> {
+        (0..n)
+            .map(|d| {
+                let w = 1 + rng.below(50) as u64;
+                (d, w, proptest::vec_f32(rng, len))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pair_shares_cancel_exactly() {
+        let root = root();
+        let mut a = vec![0u64; 16];
+        let mut b = vec![0u64; 16];
+        mask_share(&mut a, &root, 7, 3, 9, true);
+        mask_share(&mut b, &root, 7, 9, 3, true);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.wrapping_add(*y), 0, "pair shares must sum to zero");
+        }
+    }
+
+    #[test]
+    fn masks_cancel_over_the_full_participant_set() {
+        let root = root();
+        let mut rng = Rng::new(11);
+        let models = gen_models(&mut rng, 7, 33);
+        let participants: Vec<usize> = models.iter().map(|(d, _, _)| *d).collect();
+        let bits = 16;
+        let mut masked = Vec::new();
+        for (d, w, m) in &models {
+            accumulate(
+                &mut masked,
+                &masked_upload(m, bits, *w, &root, 42, *d, &participants),
+            );
+        }
+        assert_eq!(masked, plain_sum(&models, bits), "masks must cancel bitwise");
+    }
+
+    #[test]
+    fn dropout_recovery_matches_the_survivor_only_sum() {
+        let root = root();
+        let mut rng = Rng::new(13);
+        let models = gen_models(&mut rng, 9, 21);
+        let participants: Vec<usize> = models.iter().map(|(d, _, _)| *d).collect();
+        let bits = 20;
+        let dropped = [2usize, 5, 8];
+        let survivors: Vec<usize> = participants
+            .iter()
+            .copied()
+            .filter(|d| !dropped.contains(d))
+            .collect();
+        // Every participant computed its upload over the FULL set, but the
+        // dropped devices' uploads never arrive.
+        let mut sum = Vec::new();
+        for (d, w, m) in &models {
+            if survivors.contains(d) {
+                accumulate(
+                    &mut sum,
+                    &masked_upload(m, bits, *w, &root, 3, *d, &participants),
+                );
+            }
+        }
+        recover_dropouts(&mut sum, &root, 3, &survivors, &dropped);
+        let expected = plain_sum(
+            &models
+                .iter()
+                .filter(|(d, _, _)| survivors.contains(d))
+                .cloned()
+                .collect::<Vec<_>>(),
+            bits,
+        );
+        assert_eq!(sum, expected, "dropout recovery must be exact");
+    }
+
+    #[test]
+    fn decode_is_within_the_documented_quantization_bound() {
+        let root = root();
+        let mut rng = Rng::new(17);
+        let models = gen_models(&mut rng, 5, 40);
+        let participants: Vec<usize> = models.iter().map(|(d, _, _)| *d).collect();
+        let bits = 24;
+        let mut sum = MaskedSum { words: Vec::new(), total_weight: 0 };
+        for (d, w, m) in &models {
+            accumulate(
+                &mut sum.words,
+                &masked_upload(m, bits, *w, &root, 1, *d, &participants),
+            );
+            sum.total_weight += w;
+        }
+        let decoded = decode_sum(&sum, bits);
+        let total = sum.total_weight as f64;
+        for k in 0..decoded.len() {
+            let exact: f64 = models
+                .iter()
+                .map(|(_, w, m)| *w as f64 * (m[k] as f64).clamp(-CLIP, CLIP))
+                .sum::<f64>()
+                / total;
+            let bound = 0.5 / scale(bits) + (exact.abs() + 1.0) * f32::EPSILON as f64;
+            assert!(
+                (decoded[k] as f64 - exact).abs() <= bound,
+                "param {k}: decoded {} vs exact {exact}",
+                decoded[k]
+            );
+        }
+    }
+
+    #[test]
+    fn lossless_roundtrip_preserves_exotic_bit_patterns() {
+        let root = root();
+        let original = vec![
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 64.0, // subnormal
+            -f32::MIN_POSITIVE / 2.0, // negative subnormal
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7FC0_1234), // NaN payload
+        ];
+        let mut params = original.clone();
+        lossless_roundtrip(&mut params, &root, 5, 2, &[0, 2, 4, 7]);
+        for (a, b) in original.iter().zip(&params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "lossless mode must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn prop_encode_mask_unmask_decode_roundtrips() {
+        // ISSUE satellite: fixed-point encode → mask → unmask → decode
+        // round-trips models (incl. −0.0, subnormals, extreme magnitudes)
+        // within the documented quantization bound.
+        proptest::check("secagg-roundtrip", 0x5ECA66, proptest::default_cases(), |rng| {
+            let root = Rng::new(rng.next_u64());
+            let phase = rng.next_u64();
+            let n = 2 + rng.below(6);
+            let len = 1 + rng.below(48);
+            let bits = 8 + rng.below((MAX_BITS - 8) as usize + 1) as u32;
+            let exotics = [
+                -0.0f32,
+                f32::MIN_POSITIVE / 8.0,
+                -f32::MIN_POSITIVE,
+                1e30,
+                -1e30,
+                1e-30,
+            ];
+            let models: Vec<(usize, u64, Vec<f32>)> = (0..n)
+                .map(|d| {
+                    let w = 1 + rng.below(20) as u64;
+                    let m: Vec<f32> = (0..len)
+                        .map(|_| {
+                            if rng.below(4) == 0 {
+                                exotics[rng.below(exotics.len())]
+                            } else {
+                                rng.normal()
+                            }
+                        })
+                        .collect();
+                    (d, w, m)
+                })
+                .collect();
+            let participants: Vec<usize> = models.iter().map(|(d, _, _)| *d).collect();
+            let mut sum = MaskedSum { words: Vec::new(), total_weight: 0 };
+            for (d, w, m) in &models {
+                accumulate(
+                    &mut sum.words,
+                    &masked_upload(m, bits, *w, &root, phase, *d, &participants),
+                );
+                sum.total_weight += w;
+            }
+            let decoded = decode_sum(&sum, bits);
+            let total = sum.total_weight as f64;
+            for k in 0..len {
+                let exact: f64 = models
+                    .iter()
+                    .map(|(_, w, m)| *w as f64 * (m[k] as f64).clamp(-CLIP, CLIP))
+                    .sum::<f64>()
+                    / total;
+                let bound = 0.5 / scale(bits) + (exact.abs() + 1.0) * f32::EPSILON as f64;
+                prop_assert!(
+                    (decoded[k] as f64 - exact).abs() <= bound,
+                    "param {k}: decoded {} vs exact {exact} (bits {bits})",
+                    decoded[k]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lossless_mode_is_exact() {
+        proptest::check("secagg-lossless", 0x10551E55, proptest::default_cases(), |rng| {
+            let root = Rng::new(rng.next_u64());
+            let phase = rng.next_u64();
+            let len = 1 + rng.below(64);
+            let device = rng.below(10);
+            let participants: Vec<usize> = (0..10).collect();
+            let original: Vec<f32> = (0..len)
+                .map(|_| match rng.below(8) {
+                    0 => -0.0,
+                    1 => f32::from_bits(rng.next_u64() as u32), // any pattern
+                    2 => f32::MIN_POSITIVE / 16.0,
+                    _ => rng.normal() * 1e3,
+                })
+                .collect();
+            let mut params = original.clone();
+            lossless_roundtrip(&mut params, &root, phase, device, &participants);
+            for (a, b) in original.iter().zip(&params) {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "bit pattern changed: {:#x} -> {:#x}",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -359,10 +359,10 @@ fn random_plan(rng: &mut Rng) -> Plan {
         match pick {
             0 => Step::EdgePhase {
                 epochs: int_biased(rng, 1, 8),
-                channel: if rng.below(2) == 0 {
-                    UploadChannel::DeviceEdge
-                } else {
-                    UploadChannel::DeviceCloud
+                channel: match rng.below(3) {
+                    0 => UploadChannel::DeviceEdge,
+                    1 => UploadChannel::DeviceCloud,
+                    _ => UploadChannel::DeviceEdgeMasked,
                 },
             },
             1 => Step::Gossip { pi: int_biased(rng, 1, 12) as u32 },

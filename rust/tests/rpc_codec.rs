@@ -14,6 +14,7 @@ use cfel::netsim::{DeviceTimings, PhaseTiming, UploadChannel};
 use cfel::prop_assert;
 use cfel::rpc::codec::{read_frame, write_frame, MAGIC, MAX_FRAME, PROTO_VERSION};
 use cfel::rpc::wire::Msg;
+use cfel::secagg::MaskedSum;
 use cfel::util::proptest::{check, default_cases, int_biased};
 use cfel::util::rng::Rng;
 use cfel::CfelError;
@@ -83,7 +84,25 @@ fn gen_phase(rng: &mut Rng) -> ClusterPhase {
         },
         stale_merged: rng.below(100),
         pending_after: rng.below(100),
+        masked: None,
+        secagg_mask_s: f64_adv(rng),
+        secagg_extra_bits: f64_adv(rng),
     }
+}
+
+/// A phase as a masked edge ships it: empty plain model, the aggregate
+/// carried as wrapped fixed-point words (any u64 is a legal word — masks
+/// make the payload uniform noise).
+fn gen_masked_phase(rng: &mut Rng) -> ClusterPhase {
+    let mut p = gen_phase(rng);
+    if rng.below(4) > 0 {
+        p.model.clear();
+        p.masked = Some(MaskedSum {
+            words: (0..int_biased(rng, 0, 32)).map(|_| rng.next_u64()).collect(),
+            total_weight: rng.next_u64(),
+        });
+    }
+    p
 }
 
 fn gen_policies(rng: &mut Rng) -> Vec<(usize, String)> {
@@ -107,7 +126,7 @@ fn gen_state(rng: &mut Rng) -> (Vec<(usize, Vec<f32>)>, Vec<(usize, f64)>) {
 }
 
 fn gen_msg(rng: &mut Rng) -> Msg {
-    match rng.below(12) {
+    match rng.below(13) {
         0 => Msg::Hello { proto: rng.next_u64() as u16 },
         1 => {
             let (models, clocks) = gen_state(rng);
@@ -129,10 +148,10 @@ fn gen_msg(rng: &mut Rng) -> Msg {
         5 => Msg::RunPhase {
             phase: rng.next_u64(),
             epochs: rng.below(16),
-            channel: if rng.below(2) == 0 {
-                UploadChannel::DeviceEdge
-            } else {
-                UploadChannel::DeviceCloud
+            channel: match rng.below(3) {
+                0 => UploadChannel::DeviceEdge,
+                1 => UploadChannel::DeviceCloud,
+                _ => UploadChannel::DeviceEdgeMasked,
             },
         },
         6 => Msg::PhaseDone {
@@ -145,6 +164,9 @@ fn gen_msg(rng: &mut Rng) -> Msg {
         8 => Msg::StateSet,
         9 => Msg::Shutdown,
         10 => Msg::Bye,
+        11 => Msg::MaskedPhaseDone {
+            phases: (0..int_biased(rng, 0, 3)).map(|_| gen_masked_phase(rng)).collect(),
+        },
         _ => Msg::Error { message: "edge exploded: \u{2620} non-ascii".into() },
     }
 }
@@ -258,6 +280,9 @@ fn exotic_floats_survive_a_full_message() {
         timing: None,
         stale_merged: 0,
         pending_after: 0,
+        masked: None,
+        secagg_mask_s: -0.0,
+        secagg_extra_bits: f64::from_bits(1),
     }];
     let msg = Msg::PhaseDone { phases };
     let (kind, payload) = msg.encode();
@@ -273,4 +298,59 @@ fn exotic_floats_survive_a_full_message() {
     assert_eq!(phases[0].model[0].to_bits(), f32::NAN.to_bits());
     assert_eq!(phases[0].model[1].to_bits(), (-0.0f32).to_bits());
     assert_eq!(phases[0].model[2].to_bits(), 1);
+    assert_eq!(phases[0].secagg_mask_s.to_bits(), (-0.0f64).to_bits());
+    assert_eq!(phases[0].secagg_extra_bits.to_bits(), 1);
+}
+
+#[test]
+fn masked_phase_payloads_roundtrip_word_exactly() {
+    let words = vec![0u64, u64::MAX, 0x8000_0000_0000_0000, 1, 0xDEAD_BEEF_CAFE_F00D];
+    let phases = vec![ClusterPhase {
+        cluster: 7,
+        reports: vec![(0, 3, 0.5), (2, 3, 0.25)],
+        model: Vec::new(),
+        clock_s: 1.5,
+        timing: None,
+        stale_merged: 0,
+        pending_after: 0,
+        masked: Some(MaskedSum { words: words.clone(), total_weight: 96 }),
+        secagg_mask_s: 0.125,
+        secagg_extra_bits: 2048.0,
+    }];
+    let msg = Msg::MaskedPhaseDone { phases };
+    let (kind, payload) = msg.encode();
+    let decoded = Msg::decode(kind, &payload).unwrap();
+    let Msg::MaskedPhaseDone { phases } = decoded else {
+        panic!("decoded as {}", decoded.name());
+    };
+    let sum = phases[0].masked.as_ref().expect("masked sum survived");
+    assert_eq!(sum.words, words);
+    assert_eq!(sum.total_weight, 96);
+    assert!(phases[0].model.is_empty());
+
+    // Truncating inside the masked suffix must fail typed, not panic.
+    for cut in payload.len() - 20..payload.len() {
+        assert!(
+            Msg::decode(kind, &payload[..cut]).is_err(),
+            "masked payload cut to {cut}/{} bytes still decoded",
+            payload.len()
+        );
+    }
+}
+
+#[test]
+fn version_mismatch_is_rejected_with_both_versions_named() {
+    // A frame stamped with a different protocol version — e.g. a
+    // pre-secagg peer — must be refused at the header, naming both sides.
+    let mut framed = Vec::new();
+    write_frame(&mut framed, 1, b"x").unwrap();
+    let old = PROTO_VERSION - 1;
+    framed[4..6].copy_from_slice(&old.to_le_bytes());
+    let err = read_frame(&mut &framed[..]).unwrap_err();
+    let text = err.to_string();
+    assert!(matches!(err, CfelError::Codec(_)), "{text}");
+    assert!(
+        text.contains(&format!("version {old}")) && text.contains(&PROTO_VERSION.to_string()),
+        "both versions should be named: {text}"
+    );
 }

@@ -1,0 +1,423 @@
+//! Secure-aggregation equivalence suite — the pin for the secagg tier.
+//!
+//! Three contracts, all bitwise (docs/DETERMINISM.md):
+//!
+//! * **Lossless is a protocol identity.** `--secagg lossless` walks every
+//!   pairwise seed derivation, masks and unmasks each upload's raw f32
+//!   bit patterns — and must reproduce the plain run's history, digest
+//!   and CSV bytes exactly, including under deadline drops.
+//! * **Masked runs are deterministic.** `--secagg mask:<bits>` changes
+//!   the trajectory (fixed-point quantization) but the masked trajectory
+//!   itself is pinned across `CFEL_THREADS`, the executor seam
+//!   ([`DistRunner`] over 1/2/4 [`LocalExecutor`]s), real cloud + edge
+//!   processes on localhost TCP, and — with a reporting deadline —
+//!   dropout recovery, where every dropped participant leaves dangling
+//!   pair masks that the unmask step must re-derive and cancel.
+//! * **Crypto costs are visible.** Mask mode charges nonzero mask
+//!   compute and upload inflation in both latency estimators (the new
+//!   `secagg_mask_s` / `secagg_extra_bits` CSV columns); lossless and
+//!   plain runs charge exactly zero.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use cfel::config::{AlgorithmKind, ExperimentConfig, LatencyMode, SecaggMode};
+use cfel::coordinator::executor::partition_clusters;
+use cfel::coordinator::{ClusterExecutor, Coordinator, DistRunner, LocalExecutor};
+use cfel::metrics::{history_digest, CsvWriter, History, ROUND_HEADER};
+use cfel::netsim::StragglerSpec;
+
+/// `CFEL_THREADS` is process-global and the CSV helper reuses temp
+/// paths, so every test serializes on this lock.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn base_cfg(alg: AlgorithmKind, latency: LatencyMode, secagg: SecaggMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.algorithm = alg;
+    cfg.latency = latency;
+    cfg.secagg = secagg;
+    cfg.rounds = 3;
+    cfg
+}
+
+/// The determinism-suite straggler scenario: a 0.1 s deadline with a
+/// quarter of the fleet slowed 10^6× guarantees drops every edge phase.
+fn with_deadline_drops(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.latency = LatencyMode::EventDriven;
+    cfg.heterogeneity = Some(0.5);
+    cfg.stragglers = Some(StragglerSpec { fraction: 0.25, slowdown: 1e6 });
+    cfg.deadline_s = Some(0.1);
+    cfg
+}
+
+fn run_reference(cfg: &ExperimentConfig) -> History {
+    let mut coord = Coordinator::from_config(cfg).unwrap();
+    coord.run().unwrap()
+}
+
+fn run_with_threads(cfg: &ExperimentConfig, threads: &str) -> History {
+    std::env::set_var("CFEL_THREADS", threads);
+    let h = run_reference(cfg);
+    std::env::remove_var("CFEL_THREADS");
+    h
+}
+
+fn run_local_dist(cfg: &ExperimentConfig, n_executors: usize) -> History {
+    let mut executors: Vec<Box<dyn ClusterExecutor>> = Vec::new();
+    for part in partition_clusters(cfg.n_clusters, n_executors) {
+        executors.push(Box::new(LocalExecutor::new(cfg, part).unwrap()));
+    }
+    let mut runner = DistRunner::new(cfg, executors).unwrap();
+    runner.run().unwrap()
+}
+
+/// Render a history to CSV text with the wall-clock column zeroed.
+fn csv_rows(series: &str, h: &History) -> String {
+    let path = std::env::temp_dir()
+        .join(format!("cfel_secagg_equiv_{}_{series}.csv", std::process::id()));
+    {
+        let mut w = CsvWriter::create(&path, ROUND_HEADER).unwrap();
+        for rec in h {
+            let mut r = rec.clone();
+            r.wall_time_s = 0.0;
+            w.round_row(series, &r).unwrap();
+        }
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+/// Zero the wall_time_s column (index 3) of a CSV produced by a child
+/// process, so it compares against [`csv_rows`] output.
+fn zero_wall_column(csv: &str) -> String {
+    csv.lines()
+        .enumerate()
+        .map(|(i, line)| {
+            if i == 0 {
+                return line.to_string();
+            }
+            let mut fields: Vec<&str> = line.split(',').collect();
+            if fields.len() > 3 {
+                fields[3] = "0.000";
+            }
+            fields.join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n"
+}
+
+fn assert_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(a.len(), b.len(), "{label}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r} loss");
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits(), "{label} r{r} acc");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label} r{r} tloss");
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{label} r{r} consensus");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r} sim");
+        assert_eq!(x.compute_s.to_bits(), y.compute_s.to_bits(), "{label} r{r} compute");
+        assert_eq!(x.upload_s.to_bits(), y.upload_s.to_bits(), "{label} r{r} upload");
+        assert_eq!(x.backhaul_s.to_bits(), y.backhaul_s.to_bits(), "{label} r{r} backhaul");
+        assert_eq!(
+            x.secagg_mask_s.to_bits(),
+            y.secagg_mask_s.to_bits(),
+            "{label} r{r} mask_s"
+        );
+        assert_eq!(
+            x.secagg_extra_bits.to_bits(),
+            y.secagg_extra_bits.to_bits(),
+            "{label} r{r} extra_bits"
+        );
+        assert_eq!(x.dropped_devices, y.dropped_devices, "{label} r{r} dropped");
+        assert_eq!(x.on_time_devices, y.on_time_devices, "{label} r{r} on-time");
+        assert_eq!(x.late_devices, y.late_devices, "{label} r{r} late");
+        assert_eq!(x.stale_merged, y.stale_merged, "{label} r{r} stale");
+        assert_eq!(x.close_reason, y.close_reason, "{label} r{r} close");
+        assert_eq!(x.steps, y.steps, "{label} r{r} steps");
+    }
+}
+
+fn assert_zero_overhead(label: &str, h: &History) {
+    for r in h {
+        assert_eq!(r.secagg_mask_s, 0.0, "{label} r{}: mask compute charged", r.round);
+        assert_eq!(r.secagg_extra_bits, 0.0, "{label} r{}: inflation charged", r.round);
+    }
+}
+
+/// Lossless secagg masks and unmasks every device→edge upload in place —
+/// a bit-level identity that must leave the whole run untouched: same
+/// history, same digest, same CSV bytes, zero charged overhead.
+#[test]
+fn lossless_secagg_is_bitwise_identical_to_a_plain_run() {
+    let _guard = env_guard();
+    for threads in ["1", "4"] {
+        for alg in [AlgorithmKind::CeFedAvg, AlgorithmKind::HierFAvg] {
+            for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+                let plain = base_cfg(alg, latency, SecaggMode::Off);
+                let lossless = base_cfg(alg, latency, SecaggMode::Lossless);
+                let label = format!("{}-{}-t{threads}", alg.name(), latency.name());
+                let h_plain = run_with_threads(&plain, threads);
+                let h_lossless = run_with_threads(&lossless, threads);
+                assert_identical(&label, &h_plain, &h_lossless);
+                assert_eq!(
+                    history_digest(&h_plain),
+                    history_digest(&h_lossless),
+                    "{label}: digest diverged"
+                );
+                assert_eq!(
+                    csv_rows("oracle", &h_plain),
+                    csv_rows("oracle", &h_lossless),
+                    "{label}: CSV rows diverged"
+                );
+                assert_zero_overhead(&label, &h_lossless);
+            }
+        }
+    }
+}
+
+/// The identity must survive deadline drops: masking cannot perturb
+/// which devices a close policy drops, and an upload that never merges
+/// must not leave residue in anyone else's aggregate.
+#[test]
+fn lossless_identity_holds_under_deadline_drops() {
+    let _guard = env_guard();
+    let plain = with_deadline_drops(base_cfg(
+        AlgorithmKind::CeFedAvg,
+        LatencyMode::EventDriven,
+        SecaggMode::Off,
+    ));
+    let lossless = with_deadline_drops(base_cfg(
+        AlgorithmKind::CeFedAvg,
+        LatencyMode::EventDriven,
+        SecaggMode::Lossless,
+    ));
+    let h_plain = run_with_threads(&plain, "1");
+    let h_lossless = run_with_threads(&lossless, "1");
+    assert!(
+        h_plain.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
+        "the deadline scenario should actually drop devices"
+    );
+    assert_identical("lossless-drops", &h_plain, &h_lossless);
+    assert_eq!(
+        history_digest(&h_plain),
+        history_digest(&h_lossless),
+        "lossless-drops: digest diverged"
+    );
+}
+
+/// Mask mode quantizes, so it is *not* plain-equivalent — instead its
+/// trajectory is pinned across thread counts and the executor seam, and
+/// both latency estimators must charge nonzero, identical crypto costs.
+#[test]
+fn masked_runs_are_bit_deterministic_across_threads_and_executors() {
+    let _guard = env_guard();
+    for latency in [LatencyMode::ClosedForm, LatencyMode::EventDriven] {
+        let plain = base_cfg(AlgorithmKind::CeFedAvg, latency, SecaggMode::Off);
+        let cfg = base_cfg(AlgorithmKind::CeFedAvg, latency, SecaggMode::Mask(24));
+        let label = format!("mask24-{}", latency.name());
+        let h_ref = run_with_threads(&cfg, "1");
+        let h_t4 = run_with_threads(&cfg, "4");
+        assert_identical(&format!("{label}-t4"), &h_ref, &h_t4);
+        for n_ex in [1usize, 2, 4] {
+            let h_dist = run_local_dist(&cfg, n_ex);
+            let l = format!("{label}-x{n_ex}");
+            assert_identical(&l, &h_ref, &h_dist);
+            assert_eq!(
+                history_digest(&h_ref),
+                history_digest(&h_dist),
+                "{l}: digest diverged"
+            );
+        }
+        assert_eq!(
+            csv_rows("oracle", &h_ref),
+            csv_rows("oracle", &run_local_dist(&cfg, 2)),
+            "{label}: CSV rows diverged"
+        );
+
+        // Both estimators charge the crypto: every round pays mask
+        // compute and upload inflation, and the simulated round is
+        // strictly slower than the plain run's (same workload, bigger
+        // payload + PRG time).
+        let h_plain = run_with_threads(&plain, "1");
+        for (r, p) in h_ref.iter().zip(&h_plain) {
+            assert!(
+                r.secagg_mask_s > 0.0,
+                "{label} r{}: mask compute not charged",
+                r.round
+            );
+            assert!(
+                r.secagg_extra_bits > 0.0,
+                "{label} r{}: upload inflation not charged",
+                r.round
+            );
+            assert!(
+                r.sim_time_s > p.sim_time_s,
+                "{label} r{}: masked round not slower ({} vs {})",
+                r.round,
+                r.sim_time_s,
+                p.sim_time_s
+            );
+        }
+        assert_zero_overhead(&format!("plain-{}", latency.name()), &h_plain);
+    }
+}
+
+/// Dropout recovery: a reporting deadline drops stragglers after their
+/// pair masks are already woven into the survivors' uploads. The unmask
+/// step re-derives every dangling share deterministically, so the run
+/// stays pinned across threads and the executor seam.
+#[test]
+fn dropout_recovery_is_deterministic_across_threads_and_executors() {
+    let _guard = env_guard();
+    let cfg = with_deadline_drops(base_cfg(
+        AlgorithmKind::CeFedAvg,
+        LatencyMode::EventDriven,
+        SecaggMode::Mask(24),
+    ));
+    let h_ref = run_with_threads(&cfg, "1");
+    assert!(
+        h_ref.iter().map(|r| r.dropped_devices).sum::<usize>() > 0,
+        "the deadline scenario should actually drop devices"
+    );
+    let h_t4 = run_with_threads(&cfg, "4");
+    assert_identical("mask24-drops-t4", &h_ref, &h_t4);
+    for n_ex in [1usize, 2, 4] {
+        let h_dist = run_local_dist(&cfg, n_ex);
+        assert_identical(&format!("mask24-drops-x{n_ex}"), &h_ref, &h_dist);
+    }
+}
+
+/// Spawn `cfel-cloud` (+2 `cfel-edge`s) on `listen`, run `cfg`, and
+/// return (digest hex, CSV text) from the child processes.
+fn run_socket_dist(cfg: &ExperimentConfig, listen: &str, cloud_threads: &str) -> (String, String) {
+    let tag = format!(
+        "{}_{}_{}",
+        std::process::id(),
+        cfg.run_label().replace('@', "_"),
+        cfg.secagg.name().replace(':', "_")
+    );
+    let cfg_path = std::env::temp_dir().join(format!("cfel_secagg_cfg_{tag}.json"));
+    let csv_path = std::env::temp_dir().join(format!("cfel_secagg_csv_{tag}.csv"));
+    std::fs::write(&cfg_path, cfg.to_json().to_string()).unwrap();
+
+    let mut cloud = Command::new(env!("CARGO_BIN_EXE_cfel-cloud"))
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--listen")
+        .arg(listen)
+        .arg("--edges")
+        .arg("2")
+        .arg("--csv")
+        .arg(&csv_path)
+        .arg("--digest")
+        .arg("--quiet")
+        .env("CFEL_THREADS", cloud_threads)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cfel-cloud");
+    let mut reader = BufReader::new(cloud.stdout.take().unwrap());
+
+    let mut addr = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read cloud stdout");
+        assert!(n > 0, "cfel-cloud exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("[cfel-cloud] listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+
+    let edges: Vec<Child> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_cfel-edge"))
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--quiet")
+                .env("CFEL_THREADS", "2")
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn cfel-edge")
+        })
+        .collect();
+
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("drain cloud stdout");
+    let status = cloud.wait().expect("wait cfel-cloud");
+    assert!(status.success(), "cfel-cloud failed; stdout:\n{rest}");
+    for mut e in edges {
+        let st = e.wait().expect("wait cfel-edge");
+        assert!(st.success(), "cfel-edge failed");
+    }
+
+    let digest = rest
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("history_digest: "))
+        .unwrap_or_else(|| panic!("no digest in cloud output:\n{rest}"))
+        .to_string();
+    let csv = std::fs::read_to_string(&csv_path).expect("child CSV");
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_file(&csv_path).ok();
+    (digest, csv)
+}
+
+/// Masked payloads over real sockets: the edge ships the encoded
+/// [`MaskedPhaseDone`] sum, decodes it into its own mirror, and the
+/// cloud's decode must land on the same bits — digest and CSV equal to
+/// the in-process reference, in both latency modes and under drops.
+#[test]
+fn socket_processes_carry_masked_payloads_bit_identically() {
+    let _guard = env_guard();
+    let mut cfgs = vec![
+        base_cfg(AlgorithmKind::CeFedAvg, LatencyMode::ClosedForm, SecaggMode::Mask(24)),
+        base_cfg(AlgorithmKind::CeFedAvg, LatencyMode::EventDriven, SecaggMode::Mask(24)),
+        with_deadline_drops(base_cfg(
+            AlgorithmKind::CeFedAvg,
+            LatencyMode::EventDriven,
+            SecaggMode::Mask(24),
+        )),
+    ];
+    for (i, cfg) in cfgs.drain(..).enumerate() {
+        let h_ref = run_with_threads(&cfg, "1");
+        let label = format!("socket-mask24-{i}-{}", cfg.latency.name());
+        let (digest, csv) = run_socket_dist(&cfg, "127.0.0.1:0", "4");
+        assert_eq!(
+            digest,
+            format!("{:016x}", history_digest(&h_ref)),
+            "{label}: history digest diverged"
+        );
+        assert_eq!(
+            zero_wall_column(&csv),
+            csv_rows(&cfg.run_label(), &h_ref),
+            "{label}: CSV rows diverged"
+        );
+    }
+
+    // And the lossless identity end-to-end: a lossless socket run must
+    // reproduce the *plain in-process* digest — masked channel on the
+    // wire, plain bits in the history.
+    let plain = base_cfg(AlgorithmKind::CeFedAvg, LatencyMode::EventDriven, SecaggMode::Off);
+    let lossless = base_cfg(AlgorithmKind::CeFedAvg, LatencyMode::EventDriven, SecaggMode::Lossless);
+    let h_plain = run_with_threads(&plain, "1");
+    let (digest, csv) = run_socket_dist(&lossless, "127.0.0.1:0", "4");
+    assert_eq!(
+        digest,
+        format!("{:016x}", history_digest(&h_plain)),
+        "socket-lossless: digest diverged from the plain run"
+    );
+    assert_eq!(
+        zero_wall_column(&csv),
+        csv_rows(&lossless.run_label(), &h_plain),
+        "socket-lossless: CSV rows diverged from the plain run"
+    );
+}
